@@ -1,0 +1,55 @@
+//! Cluster-planning walkthrough of the Section-5 cost model: for a
+//! ResNet-50-scale model on commodity 1GbE vs InfiniBand, how much
+//! compression is needed before communication stops being the
+//! bottleneck — the paper's "enables distributed deep learning on
+//! commodity environments" argument, reproduced as a tool.
+//!
+//! ```text
+//! cargo run --release --example costmodel_analysis
+//! ```
+
+use vgc::comm::costmodel::{CostModel, LinkModel};
+
+fn main() {
+    let n: u64 = 25_500_000; // ResNet-50
+    // The paper's motivating number: fwd+bwd of ResNet-50 per iteration.
+    let compute_s = 0.23;
+
+    println!("Section-5 planning: ResNet-50 ({n} params), compute {compute_s}s/iter\n");
+
+    for (link_name, link) in [("1GbE", LinkModel::gige()), ("InfiniBand", LinkModel::infiniband())] {
+        println!("--- {link_name} ---");
+        println!(
+            "{:>4} {:>12} {:>14} {:>16} {:>10}",
+            "p", "c needed", "T_r (ms)", "T_v@c (ms)", "util %"
+        );
+        for p in [4usize, 8, 16, 64] {
+            let model = CostModel::new(p, n, link);
+            let t_r = model.t_allreduce();
+            // Smallest compression ratio (power of 2) that brings the
+            // modeled allgatherv under 10% of compute.
+            let mut c = 1.0f64;
+            while model.t_allgatherv_ratio(c) > 0.1 * compute_s && c < 1e7 {
+                c *= 2.0;
+            }
+            let t_v = model.t_allgatherv_ratio(c);
+            let util = compute_s / (compute_s + t_v) * 100.0;
+            println!(
+                "{p:>4} {c:>12.0} {:>14.1} {:>16.2} {util:>9.1}%",
+                t_r * 1e3,
+                t_v * 1e3
+            );
+        }
+        println!();
+    }
+
+    println!(
+        "Reading: on 1GbE an uncompressed ring allreduce costs ~2x the\n\
+         compute budget per iteration, while the paper's measured VGC/hybrid\n\
+         ratios (10^2..10^4) push communication under 10% of compute -- the\n\
+         linear-speedup regime c > p/2 of Sec. 5. InfiniBand reaches the same\n\
+         point without compression, which is exactly the paper's framing:\n\
+         compression buys commodity hardware the expensive interconnect's\n\
+         scaling."
+    );
+}

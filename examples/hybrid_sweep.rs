@@ -1,0 +1,77 @@
+//! Hybrid-algorithm ablation (paper Sec. 4.5 / 6.1): sweep the (τ, α)
+//! grid of Algorithm 2 on the Table-1 workload and print the
+//! accuracy/compression matrix, alongside plain Strom at the same τ
+//! values.
+//!
+//! This regenerates the paper's key qualitative claims:
+//!   * the hybrid compresses further than either method alone;
+//!   * plain Strom is brittle in τ (good at one value, bad at others)
+//!     while the hybrid's variance gate stabilizes it.
+//!
+//! ```text
+//! cargo run --release --example hybrid_sweep [-- STEPS]
+//! ```
+
+use vgc::compress::CodecSpec;
+use vgc::config::TrainConfig;
+use vgc::coordinator::Trainer;
+use vgc::runtime::{Client, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    let steps: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(150);
+
+    let manifest = Manifest::load("artifacts")?;
+    let client = Client::cpu()?;
+
+    let taus = [0.001f32, 0.01, 0.1];
+    let alphas = [1.0f32, 2.0];
+
+    let mut rows: Vec<(String, CodecSpec)> = Vec::new();
+    for &tau in &taus {
+        rows.push((format!("strom  τ={tau:<5}"), CodecSpec::Strom { tau }));
+    }
+    for &tau in &taus {
+        for &alpha in &alphas {
+            rows.push((
+                format!("hybrid τ={tau:<5} α={alpha}"),
+                CodecSpec::Hybrid {
+                    tau,
+                    alpha,
+                    zeta: 0.999,
+                },
+            ));
+        }
+    }
+
+    println!(
+        "{:<24} {:>10} {:>12} {:>12}",
+        "method", "accuracy", "compression", "final loss"
+    );
+    for (label, codec) in rows {
+        let mut cfg = TrainConfig::defaults("vgg_tiny");
+        cfg.codec = codec;
+        cfg.steps = steps;
+        cfg.eval_every = steps;
+        cfg.log_every = 0;
+        let mut t = Trainer::new(&client, &manifest, cfg)?;
+        t.run(true)?;
+        let m = &t.metrics;
+        let comp = if m.compression_ratio().is_infinite() {
+            "inf".to_string()
+        } else {
+            format!("{:.1}", m.compression_ratio())
+        };
+        println!(
+            "{:<24} {:>9.1}% {:>12} {:>12.4}",
+            label,
+            m.final_accuracy() * 100.0,
+            comp,
+            m.final_loss()
+        );
+    }
+    Ok(())
+}

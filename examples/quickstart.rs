@@ -1,0 +1,47 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! Loads the AOT artifacts, trains the small MLP for 60 distributed
+//! steps with variance-based gradient compression (Algorithm 1), and
+//! prints the numbers the paper cares about: accuracy and compression
+//! ratio.
+//!
+//! Run with:
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use vgc::compress::CodecSpec;
+use vgc::config::TrainConfig;
+use vgc::coordinator::Trainer;
+use vgc::runtime::{Client, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    // 1. The runtime: PJRT CPU client + the artifact manifest written by
+    //    `make artifacts` (python is never on this path).
+    let manifest = Manifest::load("artifacts")?;
+    let client = Client::cpu()?;
+
+    // 2. An experiment config: model + codec + optimizer. Everything has
+    //    per-model defaults; here we pick Algorithm 1 with α = 1.5.
+    let mut cfg = TrainConfig::defaults("mlp");
+    cfg.codec = CodecSpec::Vgc {
+        alpha: 1.5,
+        zeta: 0.999,
+    };
+    cfg.steps = 60;
+    cfg.eval_every = 30;
+
+    // 3. The coordinator: simulated data-parallel workers, byte-accurate
+    //    ring allgatherv, local optimizer updates.
+    let mut trainer = Trainer::new(&client, &manifest, cfg)?;
+    trainer.run(false)?;
+
+    // 4. Results.
+    let m = &trainer.metrics;
+    println!("\nquickstart summary");
+    println!("  workers            {}", trainer.workers());
+    println!("  parameters         {}", trainer.n_params());
+    println!("  final accuracy     {:.1}%", m.final_accuracy() * 100.0);
+    println!("  compression ratio  {:.1}x (paper metric: N / avg elements sent)", m.compression_ratio());
+    Ok(())
+}

@@ -1,0 +1,202 @@
+"""AOT compile path: lower L2/L1 to HLO text artifacts for the Rust runtime.
+
+Run once via ``make artifacts``. For every selected model this writes:
+
+  * ``<model>.grad.hlo.txt``   — grad_moments step (see model.py)
+  * ``<model>.fwd.hlo.txt``    — batched logits (classifiers) or
+    ``<model>.evloss.hlo.txt`` — mean eval loss (LMs)
+  * ``<model>.params.bin``     — initial flat parameters, little-endian f32
+  * plus shared micro-bench artifacts (standalone moments kernel) and the
+    XLA-offload criterion, and a ``manifest.json`` describing everything.
+
+Interchange format is HLO **text**, never ``.serialize()``: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/gen_hlo.py and its README.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+DEFAULT_MODELS = ["mlp", "vgg_tiny", "resnet_mini", "transformer"]
+FULL_MODELS = DEFAULT_MODELS + ["vgg_cifar"]
+
+# Standalone kernel micro-bench shapes (B, N).
+MOMENTS_BENCH_SHAPES = [(64, 65536)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the Rust-loadable form)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def _dtype_name(dt):
+    return np.dtype(dt).name
+
+
+def lower_model(spec, out_dir, workers, batch, chunk, eval_batch, seed):
+    """Lower one model's grad + eval artifacts; return its manifest entry."""
+    print(f"[{spec.name}] init (seed={seed})")
+    flat0, unravel, groups = M.init_flat(spec, seed=seed)
+    n = int(flat0.shape[0])
+    print(f"[{spec.name}] N={n} params, P={workers}, B={batch}, C={chunk}")
+
+    params_path = os.path.join(out_dir, f"{spec.name}.params.bin")
+    np.asarray(flat0, dtype="<f4").tofile(params_path)
+
+    sample_shape = tuple(spec.sample_shape)
+    p_spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    xs_spec = jax.ShapeDtypeStruct((workers, batch) + sample_shape, spec.sample_dtype)
+    ys_spec = jax.ShapeDtypeStruct((workers, batch), spec.label_dtype)
+
+    step = M.make_grad_moments(spec, unravel, workers, batch, chunk)
+    grad_file = f"{spec.name}.grad.hlo.txt"
+    print(f"[{spec.name}] lowering grad_moments ...")
+    _write(
+        os.path.join(out_dir, grad_file),
+        to_hlo_text(jax.jit(step, keep_unused=True).lower(p_spec, xs_spec, ys_spec)),
+    )
+
+    xe_spec = jax.ShapeDtypeStruct((eval_batch,) + sample_shape, spec.sample_dtype)
+    if spec.kind == "classifier":
+        fwd = M.make_forward(spec, unravel)
+        eval_file = f"{spec.name}.fwd.hlo.txt"
+        eval_kind = "logits"
+    else:
+        fwd = M.make_eval_loss(spec, unravel)
+        eval_file = f"{spec.name}.evloss.hlo.txt"
+        eval_kind = "loss"
+    print(f"[{spec.name}] lowering eval ({eval_kind}) ...")
+    _write(
+        os.path.join(out_dir, eval_file),
+        to_hlo_text(jax.jit(fwd, keep_unused=True).lower(p_spec, xe_spec)),
+    )
+
+    return {
+        "name": spec.name,
+        "kind": spec.kind,
+        "n_params": n,
+        "workers": workers,
+        "batch": batch,
+        "chunk": chunk,
+        "eval_batch": eval_batch,
+        "n_classes": spec.n_classes,
+        "sample_shape": list(sample_shape),
+        "sample_dtype": _dtype_name(spec.sample_dtype),
+        "label_dtype": _dtype_name(spec.label_dtype),
+        "grad_hlo": grad_file,
+        "eval_hlo": eval_file,
+        "eval_kind": eval_kind,
+        "params_bin": f"{spec.name}.params.bin",
+        "groups": groups,
+        "seed": seed,
+    }
+
+
+def lower_shared(out_dir, criterion_sizes):
+    """Kernel micro-bench + criterion-offload artifacts."""
+    shared = {"moments_bench": [], "criterion": []}
+    mom = M.make_moments_bench()
+    for b, n in MOMENTS_BENCH_SHAPES:
+        fname = f"moments_b{b}_n{n}.hlo.txt"
+        print(f"[shared] lowering moments bench b={b} n={n} ...")
+        g_spec = jax.ShapeDtypeStruct((b, n), jnp.float32)
+        _write(os.path.join(out_dir, fname), to_hlo_text(jax.jit(mom).lower(g_spec)))
+        shared["moments_bench"].append({"b": b, "n": n, "hlo": fname})
+
+    crit = M.make_criterion()
+    for n in criterion_sizes:
+        fname = f"criterion_n{n}.hlo.txt"
+        print(f"[shared] lowering criterion n={n} ...")
+        v_spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+        a_spec = jax.ShapeDtypeStruct((), jnp.float32)
+        _write(
+            os.path.join(out_dir, fname),
+            to_hlo_text(jax.jit(crit).lower(v_spec, v_spec, a_spec)),
+        )
+        shared["criterion"].append({"n": n, "hlo": fname})
+    return shared
+
+
+def input_fingerprint():
+    """Hash of the compile-path sources, recorded for staleness checks."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(dirpath, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=None, help="comma-separated subset")
+    ap.add_argument("--full", action="store_true", help="include vgg_cifar")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    names = (
+        args.models.split(",")
+        if args.models
+        else (FULL_MODELS if args.full else DEFAULT_MODELS)
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    for name in names:
+        spec = M.REGISTRY[name]
+        entries.append(
+            lower_model(
+                spec,
+                args.out_dir,
+                workers=spec.default_workers,
+                batch=spec.default_batch,
+                chunk=spec.default_chunk,
+                eval_batch=spec.default_eval_batch,
+                seed=args.seed,
+            )
+        )
+
+    crit_sizes = sorted({e["n_params"] for e in entries if e["name"] == "vgg_tiny"})
+    if not crit_sizes:
+        crit_sizes = [entries[0]["n_params"]]
+    shared = lower_shared(args.out_dir, crit_sizes)
+
+    manifest = {
+        "format_version": 1,
+        "fingerprint": input_fingerprint(),
+        "models": entries,
+        "shared": shared,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

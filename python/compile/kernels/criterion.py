@@ -1,0 +1,69 @@
+"""Element-wise variance-criterion kernel (Eq. 3 of the paper).
+
+Decides, per parameter, whether the accumulated gradient is unambiguous
+enough to send: ``send_i ⇔ r_i² > α v_i``. Appendix A shows this efficient
+form is algebraically equivalent to the variance criterion (Eq. 1), so the
+kernel needs only the two running sums maintained by `moments.py` — no
+explicit variance is ever materialised.
+
+The coordinator evaluates this criterion natively in Rust on the hot path
+(the r/v state lives in L3); this kernel exists as the XLA-offload variant
+(`repro train --xla-criterion`) and as the ablation point for the
+native-vs-XLA decision bench. Same TPU mapping rationale as `moments.py`:
+1-D grid over N tiles, pure VPU work.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_N = 512
+
+
+def _criterion_kernel(alpha_ref, r_ref, v_ref, mask_ref):
+    r = r_ref[...]
+    v = v_ref[...]
+    alpha = alpha_ref[0]
+    mask_ref[...] = (r * r > alpha * v).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def criterion(r, v, alpha, tile_n=None):
+    """Send mask for the accumulated state: 1.0 where ``r² > α v``.
+
+    Args:
+      r: f32 ``[N]`` accumulated mean-gradient vector.
+      v: f32 ``[N]`` accumulated squared-mean vector.
+      alpha: scalar (python float or 0-d array) unambiguity requirement.
+      tile_n: block width; ``None`` = single block (see
+        ``moments.moments`` for the interpret-mode rationale; 512 is the
+        real-TPU BlockSpec).
+
+    Returns:
+      f32 ``[N]`` mask.
+    """
+    (n,) = r.shape
+    tile_n = min(tile_n if tile_n is not None else n, max(n, 1))
+    n_pad = (-n) % tile_n
+    if n_pad:
+        # Pad v with 1s and r with 0s: 0² > α·1 is false, pad never sends.
+        r = jnp.pad(r, (0, n_pad))
+        v = jnp.pad(v, (0, n_pad), constant_values=1.0)
+    n_full = n + n_pad
+    alpha_arr = jnp.asarray(alpha, jnp.float32).reshape((1,))
+
+    mask = pl.pallas_call(
+        _criterion_kernel,
+        grid=(n_full // tile_n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_full,), jnp.float32),
+        interpret=True,
+    )(alpha_arr, r.astype(jnp.float32), v.astype(jnp.float32))
+    return mask[:n]

@@ -1,0 +1,94 @@
+"""Fused per-sample gradient moment kernel (the paper's hot-spot).
+
+Algorithm 1 of the paper maintains, per parameter i, two running sums over
+per-sample gradients: ``r_i += Σ_z ∇_i f_z / B`` and
+``v_i += Σ_z (∇_i f_z / B)^2``. The additional compute the method costs is
+exactly these ``2 N |B|`` multiply-adds (Sec. 5). This kernel performs the
+inner reduction — raw ``Σ_z g`` and ``Σ_z g²`` over a ``[B, N]`` block of
+per-sample gradients — in a single fused pass.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is 1-D over N tiles;
+each grid step streams one ``[B, TILE_N]`` block HBM→VMEM once and reduces
+both moments in VMEM over the sublane (batch) axis, keeping the VPU lanes
+full and the MXU idle (element-wise work must not occupy the MXU). With
+B=64 and TILE_N=512 the block is 128 KiB — far below VMEM; the kernel is
+memory-bound at 2 FLOPs per 4-byte load, i.e. it runs at the HBM roofline.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and these artifacts run on the Rust CPU client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane-aligned TPU tile. 512 f32 = 4 sublane registers of 128 lanes.
+# This is the production BlockSpec for real-TPU lowering (DESIGN.md
+# §Perf: B=64 × 512 × 4B = 128 KiB per block, far under VMEM).
+DEFAULT_TILE_N = 512
+
+
+def _moments_kernel(g_ref, sum_ref, sumsq_ref):
+    """One grid step: reduce a [B, TILE_N] block over the batch axis."""
+    g = g_ref[...].astype(jnp.float32)
+    sum_ref[...] = jnp.sum(g, axis=0)
+    sumsq_ref[...] = jnp.sum(g * g, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def moments(g, tile_n=None):
+    """Fused ``(Σ_z g, Σ_z g²)`` over the sample axis of ``g: [B, N]``.
+
+    N is padded to a multiple of ``tile_n`` with zeros (zeros contribute
+    nothing to either sum) and the pad is stripped from the outputs.
+
+    ``tile_n=None`` (default) uses a single block covering all of N.
+    Rationale (EXPERIMENTS.md §Perf L1): in ``interpret=True`` mode each
+    grid step is *emulated* at HLO level; on this single-core CPU
+    testbed a 143-step grid costs ~16× the whole remaining step. VMEM
+    does not constrain the interpret path, so the AOT artifacts use one
+    block; on a real TPU the same kernel lowers with
+    ``tile_n=DEFAULT_TILE_N`` to respect VMEM (the tiled path stays
+    covered by the hypothesis suite).
+
+    Returns:
+      ``(sum, sumsq)``, both f32 ``[N]``.
+    """
+    b, n = g.shape
+    tile_n = min(tile_n if tile_n is not None else n, max(n, 1))
+    n_pad = (-n) % tile_n
+    if n_pad:
+        g = jnp.pad(g, ((0, 0), (0, n_pad)))
+    n_full = n + n_pad
+    grid = (n_full // tile_n,)
+
+    out_shape = (
+        jax.ShapeDtypeStruct((n_full,), jnp.float32),
+        jax.ShapeDtypeStruct((n_full,), jnp.float32),
+    )
+    s, ss = pl.pallas_call(
+        _moments_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((b, tile_n), lambda i: (0, i))],
+        out_specs=(
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
+        ),
+        out_shape=out_shape,
+        interpret=True,
+    )(g)
+    return s[:n], ss[:n]
+
+
+def scaled_moments(g, batch_size):
+    """Algorithm-1 scaled moments of a per-sample gradient block.
+
+    Returns ``(Σ_z g / B, Σ_z (g / B)²) = (sum / B, sumsq / B²)`` — the
+    exact per-step increments of the paper's ``r`` and ``v`` accumulators
+    when ``B = batch_size`` (the block may be a microbatch chunk of B).
+    """
+    s, ss = moments(g)
+    inv_b = 1.0 / float(batch_size)
+    return s * inv_b, ss * (inv_b * inv_b)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth used by pytest/hypothesis to validate the
+Pallas implementations in `moments.py` and `criterion.py`. They are also
+what the kernels must lower to semantically: one pass over the per-sample
+gradient block producing the two running sums the paper's Algorithm 1
+maintains (r_i += sum_z grad_i f_z / B, v_i += sum_z (grad_i f_z / B)^2).
+"""
+
+import jax.numpy as jnp
+
+
+def moments_ref(g):
+    """Raw first and second moment sums over the sample axis.
+
+    Args:
+      g: ``[B, N]`` per-sample gradient block.
+
+    Returns:
+      ``(sum, sumsq)`` where ``sum[i] = Σ_z g[z, i]`` and
+      ``sumsq[i] = Σ_z g[z, i]^2``, both ``[N]`` and in f32.
+    """
+    g = g.astype(jnp.float32)
+    return g.sum(axis=0), (g * g).sum(axis=0)
+
+
+def criterion_ref(r, v, alpha):
+    """The paper's efficient send criterion (Eq. 3): ``r_i^2 > α v_i``.
+
+    Args:
+      r: ``[N]`` accumulated mean-gradient (delayed update) vector.
+      v: ``[N]`` accumulated squared-mean vector.
+      alpha: scalar unambiguity requirement (1..2 per the paper).
+
+    Returns:
+      ``[N]`` float32 mask, 1.0 where the element should be sent.
+    """
+    r = r.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    return (r * r > alpha * v).astype(jnp.float32)

@@ -1,0 +1,237 @@
+"""L2: model registry and AOT step-function builders.
+
+This module turns each registered model into the two jitted functions the
+Rust coordinator executes through PJRT:
+
+  * ``grad_moments`` — one synchronous data-parallel training step's
+    *compute* half: for P workers with per-worker batch B, returns
+    ``(loss[P], gsum[P,N], gsumsq[P,N])`` where ``gsum = Σ_z ∇f_z / B``
+    and ``gsumsq = Σ_z (∇f_z / B)²`` — exactly the per-step increments of
+    Algorithm 1's ``r`` and ``v`` accumulators. Per-sample gradients come
+    from ``vmap(value_and_grad)`` over microbatch chunks (scanned, so peak
+    memory is ``P × C × N``), reduced by the fused Pallas moments kernel
+    (L1), and the whole thing is vmapped over the worker axis so one XLA
+    call computes every worker's moments.
+
+  * ``forward`` / ``eval_loss`` — the evaluation half (logits for
+    classifiers, mean next-token loss for the LM).
+
+Everything here is build-time only; the lowered HLO text is the interface
+to Rust (see ``aot.py``). The flat parameter layout (and hence the
+quantization groups — the paper's per-matrix ``M_k`` scopes) is defined by
+``ravel_pytree`` order and exported via the manifest.
+"""
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from .kernels.moments import moments
+from .models import mlp, resnet, transformer, vgg
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A registered model: init + per-sample loss + batched forward."""
+
+    name: str
+    init: Callable[[jax.Array], Any]
+    # per_sample_loss(params, x_z, y_z) -> scalar loss for ONE sample.
+    per_sample_loss: Callable[[Any, jax.Array, jax.Array], jax.Array]
+    # batched_apply(params, x[B,...]) -> logits [B, K]; None for LMs.
+    batched_apply: Any
+    sample_shape: tuple  # shape of one input sample (no batch dim)
+    sample_dtype: Any
+    label_dtype: Any
+    n_classes: int
+    kind: str  # "classifier" | "lm"
+    # Default reproduction-scale launch config (overridable in aot.py).
+    default_workers: int = 4
+    default_batch: int = 16
+    default_chunk: int = 8
+    default_eval_batch: int = 256
+
+
+def _image_spec(name, init_fn, apply_fn, loss_fn, img, workers, batch, chunk):
+    return ModelSpec(
+        name=name,
+        init=init_fn,
+        per_sample_loss=lambda p, x, y: loss_fn(p, x[None], y[None]),
+        batched_apply=apply_fn,
+        sample_shape=(img, img, 3),
+        sample_dtype=jnp.float32,
+        label_dtype=jnp.int32,
+        n_classes=10,
+        kind="classifier",
+        default_workers=workers,
+        default_batch=batch,
+        default_chunk=chunk,
+    )
+
+
+def _make_registry():
+    reg = {}
+    reg["mlp"] = ModelSpec(
+        name="mlp",
+        init=lambda key: mlp.init(key),
+        per_sample_loss=lambda p, x, y: mlp.loss(p, x[None], y[None]),
+        batched_apply=mlp.apply,
+        sample_shape=(64,),
+        sample_dtype=jnp.float32,
+        label_dtype=jnp.int32,
+        n_classes=10,
+        kind="classifier",
+        default_workers=4,
+        default_batch=16,
+        default_chunk=16,
+    )
+    # Table-1 workload (paper: 8 workers, B=64, 32x32; scaled to 16x16,
+    # B=8 for the single-core CPU testbed — DESIGN.md §Substitutions).
+    reg["vgg_tiny"] = _image_spec(
+        "vgg_tiny", vgg.init_tiny, vgg.apply_tiny, vgg.loss_tiny, 16, 8, 8, 8
+    )
+    # Full-width-scaled Table-3 topology on 32x32 (optional, --full).
+    reg["vgg_cifar"] = _image_spec(
+        "vgg_cifar", vgg.init_cifar, vgg.apply_cifar, vgg.loss_cifar, 32, 2, 8, 4
+    )
+    # Table-2 workload (paper: 16 workers, B=32, ResNet-50; scaled to
+    # B=4 — the 16-worker axis is the part Table 2 adds over Table 1).
+    reg["resnet_mini"] = _image_spec(
+        "resnet_mini", resnet.init_mini, resnet.apply_mini, resnet.loss_mini,
+        16, 16, 4, 4,
+    )
+    # End-to-end driver workload: causal LM on a synthetic token stream.
+    seq_len = 64
+    reg["transformer"] = ModelSpec(
+        name="transformer",
+        init=lambda key: transformer.init(key, max_len=seq_len),
+        per_sample_loss=lambda p, x, y: transformer.loss(p, x),
+        batched_apply=None,
+        sample_shape=(seq_len,),
+        sample_dtype=jnp.int32,
+        label_dtype=jnp.int32,
+        n_classes=256,  # vocab
+        kind="lm",
+        default_workers=4,
+        default_batch=8,
+        default_chunk=4,
+        default_eval_batch=32,
+    )
+    return reg
+
+
+REGISTRY = _make_registry()
+
+
+def init_flat(spec, seed=0):
+    """Initial flat parameter vector, its unravel fn, and group layout.
+
+    Returns ``(flat0, unravel, groups)`` where ``groups`` is a list of
+    ``{"name", "offset", "len"}`` dicts in flat-vector order — the
+    quantization group table exported to the coordinator (Sec. 4.2's
+    per-weight-matrix ``M_k`` scopes).
+    """
+    params0 = spec.init(jax.random.PRNGKey(seed))
+    flat0, unravel = ravel_pytree(params0)
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(params0)[0]
+    groups = []
+    offset = 0
+    for path, leaf in leaves_with_path:
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        name = jax.tree_util.keystr(path)
+        groups.append({"name": name, "offset": offset, "len": size})
+        offset += size
+    assert offset == flat0.shape[0]
+    return flat0, unravel, groups
+
+
+def make_grad_moments(spec, unravel, workers, batch, chunk):
+    """Build the multi-worker training-step compute function.
+
+    Signature of the returned function (the grad artifact's interface):
+      ``f(params[N] f32, xs[P,B,*sample], ys[P,B] int32)
+        -> (loss[P] f32, gsum[P,N] f32, gsumsq[P,N] f32)``
+    """
+    assert batch % chunk == 0, "batch must be divisible by chunk"
+    n_chunks = batch // chunk
+
+    def per_sample_value_and_grad(params_flat, x_z, y_z):
+        def loss_flat(pf):
+            return spec.per_sample_loss(unravel(pf), x_z, y_z)
+
+        return jax.value_and_grad(loss_flat)(params_flat)
+
+    def worker(params_flat, xw, yw):
+        n = params_flat.shape[0]
+        xc = xw.reshape((n_chunks, chunk) + xw.shape[1:])
+        yc = yw.reshape((n_chunks, chunk))
+
+        def body(carry, xy):
+            loss_acc, s_acc, ss_acc = carry
+            x_i, y_i = xy
+            losses, g = jax.vmap(per_sample_value_and_grad, in_axes=(None, 0, 0))(
+                params_flat, x_i, y_i
+            )  # losses [C], g [C, N]
+            s, ss = moments(g)  # L1 fused kernel: Σg, Σg² over the chunk
+            return (loss_acc + losses.sum(), s_acc + s, ss_acc + ss), None
+
+        init = (
+            jnp.zeros((), jnp.float32),
+            jnp.zeros((n,), jnp.float32),
+            jnp.zeros((n,), jnp.float32),
+        )
+        (loss_sum, s_tot, ss_tot), _ = jax.lax.scan(body, init, (xc, yc))
+        inv_b = 1.0 / float(batch)
+        # Algorithm-1 increments: r += Σg/B, v += Σ(g/B)² = Σg²/B².
+        return loss_sum * inv_b, s_tot * inv_b, ss_tot * (inv_b * inv_b)
+
+    def step(params_flat, xs, ys):
+        return jax.vmap(worker, in_axes=(None, 0, 0))(params_flat, xs, ys)
+
+    return step
+
+
+def make_forward(spec, unravel):
+    """Batched logits function ``f(params[N], x[Be,*sample]) -> [Be, K]``."""
+    assert spec.kind == "classifier"
+
+    def forward(params_flat, x):
+        return spec.batched_apply(unravel(params_flat), x)
+
+    return forward
+
+
+def make_eval_loss(spec, unravel):
+    """Mean loss over an eval batch ``f(params[N], x[Be,*]) -> scalar``."""
+
+    def eval_loss(params_flat, x):
+        params = unravel(params_flat)
+        losses = jax.vmap(
+            lambda xz, yz: spec.per_sample_loss(params, xz, yz), in_axes=(0, 0)
+        )(x, jnp.zeros(x.shape[0], spec.label_dtype))
+        return losses.mean()
+
+    return eval_loss
+
+
+def make_criterion():
+    """Standalone Eq.-3 decision function over an N-vector (XLA offload)."""
+    from .kernels.criterion import criterion
+
+    def fn(r, v, alpha):
+        return criterion(r, v, alpha)
+
+    return fn
+
+
+def make_moments_bench():
+    """Standalone fused-moments function (kernel micro-bench artifact)."""
+
+    def fn(g):
+        return moments(g)
+
+    return fn

@@ -1,0 +1,109 @@
+"""Minimal pure-jnp layer library shared by the L2 models.
+
+Parameters are plain pytrees (nested dicts of jnp arrays) so that
+``jax.flatten_util.ravel_pytree`` gives a stable flat-vector layout; the
+flat layout (offsets per named tensor) is exported to the Rust coordinator
+through ``artifacts/manifest.json`` and defines the quantization groups
+(the paper's per-weight-matrix ``M_k`` scopes, Sec. 4.2).
+
+Design constraints:
+  * No batch normalization and no dropout: the paper's Algorithm 1 needs
+    per-sample gradients, and BN couples samples within a batch (and
+    dropout would need a threaded PRNG through the AOT interface). The
+    paper's VGG-like net uses BN+dropout; we substitute parameter-free
+    scaled initialization (documented in DESIGN.md). Per-sample gradient
+    semantics are exact for every layer used here.
+  * Everything f32; shapes NHWC for images.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in, d_out):
+    """He-initialized dense layer ``{w: [d_in, d_out], b: [d_out]}``."""
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * math.sqrt(2.0 / d_in)
+    return {"w": w, "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def head_init(_key, d_in, d_out):
+    """Zero-initialized classifier head.
+
+    Without batch norm the deep conv stacks produce hot logits under He
+    init (initial CE ≫ ln K, gradient norms in the hundreds), which
+    blows up momentum training. A zero head gives exactly ln K initial
+    loss and well-scaled first gradients.
+    """
+    return {
+        "w": jnp.zeros((d_in, d_out), jnp.float32),
+        "b": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def conv_init(key, c_in, c_out, k=3):
+    """He-initialized conv ``{w: [k, k, c_in, c_out], b: [c_out]}`` (HWIO)."""
+    fan_in = k * k * c_in
+    w = jax.random.normal(key, (k, k, c_in, c_out), jnp.float32) * math.sqrt(
+        2.0 / fan_in
+    )
+    return {"w": w, "b": jnp.zeros((c_out,), jnp.float32)}
+
+
+def conv(p, x, stride=1):
+    """3x3 SAME conv over NHWC input."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        p["w"],
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def max_pool(x):
+    """2x2 stride-2 max pool over NHWC."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def global_avg_pool(x):
+    """NHWC -> NC mean over spatial dims."""
+    return x.mean(axis=(1, 2))
+
+
+def relu(x):
+    return jax.nn.relu(x)
+
+
+def layer_norm_init(d):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(p, x, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+def cross_entropy(logits, labels):
+    """Mean cross-entropy of ``logits [.., K]`` vs int ``labels [..]``."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def accuracy(logits, labels):
+    return (logits.argmax(axis=-1) == labels).astype(jnp.float32).mean()

@@ -1,0 +1,33 @@
+"""Quickstart MLP classifier (flat-vector inputs).
+
+The smallest model in the registry; used by ``examples/quickstart.rs`` and
+by the Python test-suite as a fast correctness workload.
+"""
+
+import jax
+
+from .common import cross_entropy, dense, dense_init, relu
+
+
+def init(key, d_in=64, d_hidden=128, n_classes=10, depth=2):
+    """Parameter pytree for a ``depth``-hidden-layer ReLU MLP."""
+    keys = jax.random.split(key, depth + 1)
+    params = {"layers": []}
+    d = d_in
+    for i in range(depth):
+        params["layers"].append(dense_init(keys[i], d, d_hidden))
+        d = d_hidden
+    params["head"] = dense_init(keys[depth], d, n_classes)
+    return params
+
+
+def apply(params, x):
+    """Logits for ``x: [B, d_in]``."""
+    h = x
+    for layer in params["layers"]:
+        h = relu(dense(layer, h))
+    return dense(params["head"], h)
+
+
+def loss(params, x, y):
+    return cross_entropy(apply(params, x), y)

@@ -1,0 +1,82 @@
+"""Residual network for the scaled Table-2 (ImageNet/ResNet-50) workload.
+
+The paper's second evaluation trains ResNet-50 on ImageNet with 16
+workers. We substitute ``resnet_mini`` — a 3-stage pre-activation-style
+residual net on 16x16 synthetic images (DESIGN.md §Substitutions). It
+preserves the properties Table 2 exercises relative to Table 1: deeper
+topology, residual gradient flow, and a larger worker count.
+
+Normalization-free residual blocks: each residual branch is scaled by a
+learnable per-block scalar initialised at 0 (SkipInit), which reproduces
+BN's trainability benefit without coupling samples — required for exact
+per-sample gradients.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    conv,
+    conv_init,
+    cross_entropy,
+    dense,
+    dense_init,
+    head_init,
+    global_avg_pool,
+    relu,
+)
+
+# (width, n_blocks) per stage; stride-2 transition between stages.
+# Widths/depth sized for the single-core CPU testbed (DESIGN.md
+# §Substitutions): per-sample-gradient convs are ~5× batched convs, and
+# Table 2 needs 16 workers; this plan keeps a 3-stage residual topology
+# at ~0.7 s/step.
+_MINI_PLAN = [(12, 1), (24, 1), (48, 1)]
+
+
+def _block_init(key, c):
+    k1, k2 = jax.random.split(key)
+    return {
+        "conv1": conv_init(k1, c, c),
+        "conv2": conv_init(k2, c, c),
+        # SkipInit residual scale: blocks start as identity.
+        "scale": jnp.zeros((), jnp.float32),
+    }
+
+
+def _block_apply(p, x):
+    h = relu(conv(p["conv1"], x))
+    h = conv(p["conv2"], h)
+    return relu(x + p["scale"] * h)
+
+
+def init_mini(key, c_in=3, n_classes=10):
+    """~200k-param residual net for 16x16 inputs (Table-2 workload)."""
+    n_keys = 1 + sum(n + 1 for _, n in _MINI_PLAN) + 1
+    keys = iter(jax.random.split(key, n_keys))
+    params = {"stem": conv_init(next(keys), c_in, _MINI_PLAN[0][0])}
+    params["stages"] = []
+    c_prev = _MINI_PLAN[0][0]
+    for width, n_blocks in _MINI_PLAN:
+        stage = {"transition": conv_init(next(keys), c_prev, width)}
+        stage["blocks"] = [_block_init(next(keys), width) for _ in range(n_blocks)]
+        params["stages"].append(stage)
+        c_prev = width
+    params["head"] = head_init(next(keys), c_prev, n_classes)
+    return params
+
+
+def apply_mini(params, x):
+    """Logits for ``x: [B, 16, 16, 3]``."""
+    h = relu(conv(params["stem"], x))
+    for i, (width, _) in enumerate(_MINI_PLAN):
+        stage = params["stages"][i]
+        stride = 1 if i == 0 else 2
+        h = relu(conv(stage["transition"], h, stride=stride))
+        for block in stage["blocks"]:
+            h = _block_apply(block, h)
+    return dense(params["head"], global_avg_pool(h))
+
+
+def loss_mini(params, x, y):
+    return cross_entropy(apply_mini(params, x), y)

@@ -1,0 +1,89 @@
+"""Decoder-only transformer LM for the end-to-end training driver.
+
+``examples/train_e2e.rs`` trains this model for a few hundred distributed
+steps on a synthetic Markov token stream with VGC compression and logs the
+loss curve (EXPERIMENTS.md §E2E). The model is a standard pre-LN causal
+transformer; per-sample (= per-sequence) gradients are exact because
+normalization is LayerNorm over features, never over the batch.
+
+Scale is CPU-budgeted (~0.9M params by default — DESIGN.md
+§Substitutions); depth/width are init-time arguments so the same code
+lowers larger variants.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense, dense_init, layer_norm, layer_norm_init
+
+
+def init(key, vocab=256, d_model=128, n_heads=4, n_layers=4, max_len=64):
+    keys = iter(jax.random.split(key, 2 + 6 * n_layers))
+    params = {
+        "tok_embed": jax.random.normal(next(keys), (vocab, d_model), jnp.float32)
+        * 0.02,
+        "pos_embed": jax.random.normal(next(keys), (max_len, d_model), jnp.float32)
+        * 0.02,
+        "blocks": [],
+        "final_ln": layer_norm_init(d_model),
+    }
+    for _ in range(n_layers):
+        params["blocks"].append(
+            {
+                "ln1": layer_norm_init(d_model),
+                "qkv": dense_init(next(keys), d_model, 3 * d_model),
+                "proj": dense_init(next(keys), d_model, d_model),
+                "ln2": layer_norm_init(d_model),
+                "fc1": dense_init(next(keys), d_model, 4 * d_model),
+                "fc2": dense_init(next(keys), 4 * d_model, d_model),
+            }
+        )
+    # n_heads is static model config, NOT a parameter: it must not enter the
+    # flat vector the coordinator compresses. The registry threads it.
+    return params
+
+
+def _attention(block, x, n_heads):
+    t, d = x.shape
+    qkv = dense(block["qkv"], x)  # [T, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    hd = d // n_heads
+
+    def heads(a):
+        return a.reshape(t, n_heads, hd).transpose(1, 0, 2)  # [H, T, hd]
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scores = (q @ k.transpose(0, 2, 1)) / math.sqrt(hd)  # [H, T, T]
+    mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+    scores = jnp.where(mask == 0, -1e9, scores)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = (attn @ v).transpose(1, 0, 2).reshape(t, d)
+    return dense(block["proj"], out)
+
+
+def apply(params, tokens, n_heads=4):
+    """Logits ``[T, vocab]`` for one sequence ``tokens: [T] int32``.
+
+    Single-sequence on purpose: the L2 step function vmaps this over the
+    per-sample axis, which is exactly the per-sample gradient axis.
+    """
+    t = tokens.shape[0]
+    h = params["tok_embed"][tokens] + params["pos_embed"][:t]
+    for block in params["blocks"]:
+        h = h + _attention(block, layer_norm(block["ln1"], h), n_heads)
+        ff = layer_norm(block["ln2"], h)
+        ff = dense(block["fc2"], jax.nn.gelu(dense(block["fc1"], ff)))
+        h = h + ff
+    h = layer_norm(params["final_ln"], h)
+    return h @ params["tok_embed"].T  # weight-tied head
+
+
+def loss(params, tokens, _unused_label=None, n_heads=4):
+    """Next-token cross-entropy over one sequence."""
+    logits = apply(params, tokens[:-1], n_heads=n_heads)
+    targets = tokens[1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[:, None], axis=-1)[:, 0]
+    return nll.mean()

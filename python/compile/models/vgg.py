@@ -1,0 +1,88 @@
+"""VGG-like convolutional networks (paper Table 3, scaled).
+
+The paper's CIFAR-10 network (Appendix D / Table 3) is a VGG-like stack:
+``conv3-64 ×2, M, conv3-128 ×2, M, conv3-256 ×3, M, conv3-512 ×3, M,
+conv3-512 ×3, M, fc-512, fc-10`` with BN+dropout (~15M parameters).
+
+We provide two scaled variants (DESIGN.md §Substitutions — CPU-only
+budget; BN/dropout dropped because Algorithm 1 requires per-sample
+gradient semantics):
+
+  * ``vgg_cifar`` — the Table-3 topology with channel widths divided by 4
+    (16/32/64/128/128) and the two 512-fc head replaced by GAP + fc.
+    Preserves the 5-stage, 13-conv structure.
+  * ``vgg_tiny``  — a 3-stage 6-conv variant for 16x16 synthetic CIFAR;
+    the default Table-1 reproduction workload (~150k params).
+"""
+
+import jax
+
+from .common import (
+    conv,
+    conv_init,
+    cross_entropy,
+    dense,
+    dense_init,
+    head_init,
+    global_avg_pool,
+    max_pool,
+    relu,
+)
+
+# Stage plans: list of stages; each stage is a list of conv output widths,
+# followed by a max-pool.
+_TINY_PLAN = [[16, 16], [32, 32], [64, 64]]
+_CIFAR_PLAN = [[16, 16], [32, 32], [64, 64, 64], [128, 128, 128], [128, 128, 128]]
+
+
+def _init_plan(key, plan, c_in, n_classes):
+    params = {"convs": []}
+    keys = jax.random.split(key, sum(len(s) for s in plan) + 1)
+    k = 0
+    c = c_in
+    for stage in plan:
+        for width in stage:
+            params["convs"].append(conv_init(keys[k], c, width))
+            c = width
+            k += 1
+    params["head"] = head_init(keys[k], c, n_classes)
+    return params
+
+
+def _apply_plan(plan, params, x):
+    i = 0
+    h = x
+    for stage in plan:
+        for _ in stage:
+            h = relu(conv(params["convs"][i], h))
+            i += 1
+        h = max_pool(h)
+    return dense(params["head"], global_avg_pool(h))
+
+
+def init_tiny(key, c_in=3, n_classes=10):
+    """~150k-param 3-stage VGG for 16x16 inputs (Table-1 workload)."""
+    return _init_plan(key, _TINY_PLAN, c_in, n_classes)
+
+
+def apply_tiny(params, x):
+    """Logits for ``x: [B, 16, 16, 3]``."""
+    return _apply_plan(_TINY_PLAN, params, x)
+
+
+def init_cifar(key, c_in=3, n_classes=10):
+    """Width-scaled Table-3 topology for 32x32 inputs."""
+    return _init_plan(key, _CIFAR_PLAN, c_in, n_classes)
+
+
+def apply_cifar(params, x):
+    """Logits for ``x: [B, 32, 32, 3]``."""
+    return _apply_plan(_CIFAR_PLAN, params, x)
+
+
+def loss_tiny(params, x, y):
+    return cross_entropy(apply_tiny(params, x), y)
+
+
+def loss_cifar(params, x, y):
+    return cross_entropy(apply_cifar(params, x), y)

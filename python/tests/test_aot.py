@@ -1,0 +1,91 @@
+"""AOT path: HLO text generation and manifest integrity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+class TestHloText:
+    def test_simple_fn_lowers_to_hlo_text(self):
+        def fn(x):
+            return (x * 2.0 + 1.0,)
+
+        spec = jax.ShapeDtypeStruct((4,), jnp.float32)
+        text = aot.to_hlo_text(jax.jit(fn).lower(spec))
+        assert "ENTRY" in text and "HloModule" in text
+
+    def test_grad_artifact_lowers(self):
+        spec = M.REGISTRY["mlp"]
+        _, unravel, _ = M.init_flat(spec)
+        step = M.make_grad_moments(spec, unravel, 2, 4, 2)
+        flat0, _, _ = M.init_flat(spec)
+        n = flat0.shape[0]
+        lowered = jax.jit(step).lower(
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((2, 4, 64), jnp.float32),
+            jax.ShapeDtypeStruct((2, 4), jnp.int32),
+        )
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text
+        # Output tuple carries loss[P] + the two [P, N] moment tensors.
+        assert f"f32[2,{n}]" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(
+        os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    ),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        path = os.path.join(
+            os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json"
+        )
+        with open(path) as f:
+            return json.load(f), os.path.dirname(path)
+
+    def test_models_listed(self, manifest):
+        man, _ = manifest
+        names = {m["name"] for m in man["models"]}
+        assert {"mlp", "vgg_tiny", "resnet_mini", "transformer"} <= names
+
+    def test_artifact_files_exist(self, manifest):
+        man, art_dir = manifest
+        for m in man["models"]:
+            for key in ("grad_hlo", "eval_hlo", "params_bin"):
+                assert os.path.exists(os.path.join(art_dir, m[key])), m[key]
+
+    def test_params_bin_size_matches(self, manifest):
+        man, art_dir = manifest
+        for m in man["models"]:
+            size = os.path.getsize(os.path.join(art_dir, m["params_bin"]))
+            assert size == 4 * m["n_params"]
+
+    def test_groups_partition_param_vector(self, manifest):
+        man, _ = manifest
+        for m in man["models"]:
+            off = 0
+            for g in m["groups"]:
+                assert g["offset"] == off
+                assert g["len"] > 0
+                off += g["len"]
+            assert off == m["n_params"]
+
+    def test_params_bin_matches_reinit(self, manifest):
+        """The exported initial params must be reproducible from the seed."""
+        man, art_dir = manifest
+        entry = next(m for m in man["models"] if m["name"] == "mlp")
+        flat0, _, _ = M.init_flat(M.REGISTRY["mlp"], seed=entry["seed"])
+        on_disk = np.fromfile(
+            os.path.join(art_dir, entry["params_bin"]), dtype="<f4"
+        )
+        np.testing.assert_array_equal(on_disk, np.asarray(flat0))

@@ -1,0 +1,150 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (hypothesis sweeps).
+
+This is the CORE correctness signal for the compile path: everything the
+Rust coordinator consumes flows through these kernels.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.criterion import criterion
+from compile.kernels.moments import moments, scaled_moments
+from compile.kernels.ref import criterion_ref, moments_ref
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+class TestMoments:
+    @given(
+        b=st.integers(1, 33),
+        n=st.integers(1, 2000),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref_f32(self, b, n, seed):
+        g = _rand((b, n), np.float32, seed)
+        s, ss = moments(g)
+        rs, rss = moments_ref(g)
+        np.testing.assert_allclose(s, rs, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(ss, rss, rtol=1e-5, atol=1e-5)
+
+    @given(
+        b=st.integers(1, 8),
+        n=st.integers(1, 700),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref_bf16_input(self, b, n, seed):
+        g = jnp.asarray(_rand((b, n), np.float32, seed), jnp.bfloat16)
+        s, ss = moments(g)
+        rs, rss = moments_ref(g)
+        np.testing.assert_allclose(s, rs, rtol=1e-2, atol=1e-2)
+        np.testing.assert_allclose(ss, rss, rtol=1e-2, atol=1e-2)
+
+    @pytest.mark.parametrize("n", [1, 511, 512, 513, 1024, 4096])
+    def test_tile_boundaries(self, n):
+        g = _rand((4, n), np.float32, n)
+        s, ss = moments(g)
+        rs, rss = moments_ref(g)
+        np.testing.assert_allclose(s, rs, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(ss, rss, rtol=1e-5, atol=1e-6)
+
+    def test_outputs_f32(self):
+        g = _rand((2, 10), np.float32, 0)
+        s, ss = moments(g)
+        assert s.dtype == jnp.float32 and ss.dtype == jnp.float32
+
+    def test_zero_input(self):
+        g = np.zeros((5, 100), np.float32)
+        s, ss = moments(g)
+        assert np.all(np.asarray(s) == 0) and np.all(np.asarray(ss) == 0)
+
+    def test_sumsq_nonnegative(self):
+        g = _rand((16, 333), np.float32, 7)
+        _, ss = moments(g)
+        assert np.all(np.asarray(ss) >= 0)
+
+    def test_single_sample(self):
+        g = _rand((1, 77), np.float32, 3)
+        s, ss = moments(g)
+        np.testing.assert_allclose(s, g[0], rtol=1e-6)
+        np.testing.assert_allclose(ss, g[0] ** 2, rtol=1e-6)
+
+    @given(
+        b=st.integers(1, 16),
+        n=st.integers(1, 600),
+        batch=st.integers(1, 256),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(**SETTINGS)
+    def test_scaled_moments_algorithm1_increments(self, b, n, batch, seed):
+        """scaled_moments == (Σg/B, Σg²/B²) — the exact Alg.-1 increments."""
+        g = _rand((b, n), np.float32, seed)
+        s, ss = scaled_moments(g, batch)
+        np.testing.assert_allclose(s, g.sum(0) / batch, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(
+            ss, (g**2).sum(0) / batch**2, rtol=1e-5, atol=1e-7
+        )
+
+    @pytest.mark.parametrize("tile", [8, 128, 512, 2048])
+    def test_tile_size_invariance(self, tile):
+        """The BlockSpec tiling must not change the result."""
+        g = _rand((8, 1000), np.float32, 11)
+        s, ss = moments(g, tile_n=tile)
+        rs, rss = moments_ref(g)
+        np.testing.assert_allclose(s, rs, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(ss, rss, rtol=1e-5, atol=1e-6)
+
+
+class TestCriterion:
+    @given(
+        n=st.integers(1, 3000),
+        alpha=st.floats(0.5, 4.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref(self, n, alpha, seed):
+        rng = np.random.default_rng(seed)
+        r = rng.standard_normal(n).astype(np.float32)
+        v = np.abs(rng.standard_normal(n)).astype(np.float32) * 0.1
+        m = criterion(r, v, alpha)
+        mr = criterion_ref(r, v, alpha)
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(mr))
+
+    def test_zero_variance_always_sends_nonzero_r(self):
+        r = np.array([1.0, -2.0, 0.0], np.float32)
+        v = np.zeros(3, np.float32)
+        m = np.asarray(criterion(r, v, 2.0))
+        # r² > 0 sends; r == 0 gives 0 > 0 == False.
+        np.testing.assert_array_equal(m, [1.0, 1.0, 0.0])
+
+    def test_alpha_monotonicity(self):
+        """Larger α can only send a subset of what smaller α sends."""
+        rng = np.random.default_rng(0)
+        r = rng.standard_normal(2048).astype(np.float32)
+        v = np.abs(rng.standard_normal(2048)).astype(np.float32)
+        m1 = np.asarray(criterion(r, v, 1.0))
+        m2 = np.asarray(criterion(r, v, 2.0))
+        assert np.all(m2 <= m1)
+
+    def test_boundary_strict_inequality(self):
+        """Criterion is strict: r² == αv must NOT send (paper Eq. 3)."""
+        r = np.array([2.0], np.float32)
+        v = np.array([4.0], np.float32)
+        assert np.asarray(criterion(r, v, 1.0))[0] == 0.0
+
+    def test_padding_never_sends(self):
+        """N far from a tile multiple: pad lanes must not leak into output."""
+        n = 513
+        r = np.ones(n, np.float32)
+        v = np.zeros(n, np.float32)
+        m = np.asarray(criterion(r, v, 1.0))
+        assert m.shape == (n,) and np.all(m == 1.0)

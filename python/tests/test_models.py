@@ -1,0 +1,184 @@
+"""L2 model correctness: shapes, gradient-moment semantics, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def _fake_batch(spec, workers, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = (workers, batch) + tuple(spec.sample_shape)
+    if np.dtype(spec.sample_dtype) == np.int32:
+        xs = rng.integers(0, spec.n_classes, size=shape).astype(np.int32)
+    else:
+        xs = rng.standard_normal(shape).astype(np.float32)
+    ys = rng.integers(0, spec.n_classes, size=(workers, batch)).astype(np.int32)
+    return jnp.asarray(xs), jnp.asarray(ys)
+
+
+class TestRegistry:
+    def test_all_models_present(self):
+        assert set(M.REGISTRY) == {
+            "mlp",
+            "vgg_tiny",
+            "vgg_cifar",
+            "resnet_mini",
+            "transformer",
+        }
+
+    @pytest.mark.parametrize("name", ["mlp", "vgg_tiny", "resnet_mini", "transformer"])
+    def test_init_flat_groups_cover_params(self, name):
+        spec = M.REGISTRY[name]
+        flat0, _, groups = M.init_flat(spec)
+        total = sum(g["len"] for g in groups)
+        assert total == flat0.shape[0]
+        # Groups are contiguous and ordered.
+        off = 0
+        for g in groups:
+            assert g["offset"] == off
+            off += g["len"]
+
+    def test_init_deterministic(self):
+        spec = M.REGISTRY["mlp"]
+        a, _, _ = M.init_flat(spec, seed=0)
+        b, _, _ = M.init_flat(spec, seed=0)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        c, _, _ = M.init_flat(spec, seed=1)
+        assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+class TestGradMoments:
+    def test_mlp_matches_direct_per_sample_grads(self):
+        """step() must equal naive per-sample value_and_grad moments."""
+        spec = M.REGISTRY["mlp"]
+        flat0, unravel, _ = M.init_flat(spec)
+        p, b, c = 2, 4, 2
+        step = M.make_grad_moments(spec, unravel, p, b, c)
+        xs, ys = _fake_batch(spec, p, b)
+        loss, gsum, gsumsq = jax.jit(step)(flat0, xs, ys)
+
+        for w in range(p):
+            gs = []
+            ls = []
+            for z in range(b):
+                def loss_flat(pf, xz=xs[w, z], yz=ys[w, z]):
+                    return spec.per_sample_loss(unravel(pf), xz, yz)
+
+                lz, gz = jax.value_and_grad(loss_flat)(flat0)
+                gs.append(np.asarray(gz))
+                ls.append(float(lz))
+            gstack = np.stack(gs)
+            np.testing.assert_allclose(float(loss[w]), np.mean(ls), rtol=1e-5)
+            np.testing.assert_allclose(
+                np.asarray(gsum[w]), gstack.sum(0) / b, rtol=2e-4, atol=1e-6
+            )
+            np.testing.assert_allclose(
+                np.asarray(gsumsq[w]), (gstack**2).sum(0) / b**2,
+                rtol=2e-4, atol=1e-8,
+            )
+
+    def test_chunking_invariance(self):
+        """Microbatch chunk size must not change the moments."""
+        spec = M.REGISTRY["mlp"]
+        flat0, unravel, _ = M.init_flat(spec)
+        xs, ys = _fake_batch(spec, 2, 8)
+        out_c2 = jax.jit(M.make_grad_moments(spec, unravel, 2, 8, 2))(flat0, xs, ys)
+        out_c8 = jax.jit(M.make_grad_moments(spec, unravel, 2, 8, 8))(flat0, xs, ys)
+        for a, b_ in zip(out_c2, out_c8):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b_), rtol=2e-4, atol=1e-7
+            )
+
+    @pytest.mark.parametrize("name", ["vgg_tiny", "resnet_mini", "transformer"])
+    def test_shapes_and_finiteness(self, name):
+        spec = M.REGISTRY[name]
+        flat0, unravel, _ = M.init_flat(spec)
+        p, b, c = 2, 4, 2
+        step = M.make_grad_moments(spec, unravel, p, b, c)
+        xs, ys = _fake_batch(spec, p, b)
+        loss, gsum, gsumsq = jax.jit(step)(flat0, xs, ys)
+        n = flat0.shape[0]
+        assert loss.shape == (p,)
+        assert gsum.shape == (p, n)
+        assert gsumsq.shape == (p, n)
+        assert np.all(np.isfinite(np.asarray(loss)))
+        assert np.all(np.isfinite(np.asarray(gsum)))
+        assert np.all(np.asarray(gsumsq) >= 0)
+
+    def test_workers_see_different_data(self):
+        """Different shards must give different moments (no aliasing)."""
+        spec = M.REGISTRY["mlp"]
+        flat0, unravel, _ = M.init_flat(spec)
+        step = M.make_grad_moments(spec, unravel, 2, 4, 4)
+        xs, ys = _fake_batch(spec, 2, 4)
+        _, gsum, _ = jax.jit(step)(flat0, xs, ys)
+        assert not np.allclose(np.asarray(gsum[0]), np.asarray(gsum[1]))
+
+    def test_identical_shards_give_identical_moments(self):
+        spec = M.REGISTRY["mlp"]
+        flat0, unravel, _ = M.init_flat(spec)
+        step = M.make_grad_moments(spec, unravel, 2, 4, 2)
+        xs, ys = _fake_batch(spec, 1, 4)
+        xs2 = jnp.concatenate([xs, xs], axis=0)
+        ys2 = jnp.concatenate([ys, ys], axis=0)
+        loss, gsum, gsumsq = jax.jit(step)(flat0, xs2, ys2)
+        np.testing.assert_allclose(
+            np.asarray(gsum[0]), np.asarray(gsum[1]), rtol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(gsumsq[0]), np.asarray(gsumsq[1]), rtol=1e-6
+        )
+
+
+class TestTrainability:
+    def test_mlp_loss_decreases_under_sgd(self):
+        """Sanity: the lowered step's gsum is a usable descent direction."""
+        spec = M.REGISTRY["mlp"]
+        flat0, unravel, _ = M.init_flat(spec)
+        p, b = 2, 16
+        step = jax.jit(M.make_grad_moments(spec, unravel, p, b, 16))
+        xs, ys = _fake_batch(spec, p, b, seed=42)
+        params = flat0
+        losses = []
+        for _ in range(30):
+            loss, gsum, _ = step(params, xs, ys)
+            losses.append(float(loss.mean()))
+            grad = gsum.mean(axis=0)  # allreduce-mean equivalent
+            params = params - 0.5 * grad
+        assert losses[-1] < losses[0] * 0.5, losses
+
+    def test_transformer_loss_decreases(self):
+        spec = M.REGISTRY["transformer"]
+        flat0, unravel, _ = M.init_flat(spec)
+        step = jax.jit(M.make_grad_moments(spec, unravel, 1, 4, 2))
+        xs, ys = _fake_batch(spec, 1, 4, seed=3)
+        params = flat0
+        first = last = None
+        for i in range(10):
+            loss, gsum, _ = step(params, xs, ys)
+            if i == 0:
+                first = float(loss.mean())
+            last = float(loss.mean())
+            params = params - 0.5 * gsum.mean(axis=0)
+        assert last < first
+
+
+class TestEval:
+    def test_forward_logits_shape(self):
+        spec = M.REGISTRY["mlp"]
+        flat0, unravel, _ = M.init_flat(spec)
+        fwd = jax.jit(M.make_forward(spec, unravel))
+        x = jnp.zeros((8,) + tuple(spec.sample_shape), spec.sample_dtype)
+        logits = fwd(flat0, x)
+        assert logits.shape == (8, spec.n_classes)
+
+    def test_eval_loss_scalar(self):
+        spec = M.REGISTRY["transformer"]
+        flat0, unravel, _ = M.init_flat(spec)
+        ev = jax.jit(M.make_eval_loss(spec, unravel))
+        x = jnp.zeros((4,) + tuple(spec.sample_shape), spec.sample_dtype)
+        val = ev(flat0, x)
+        assert val.shape == () and np.isfinite(float(val))

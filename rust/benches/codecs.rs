@@ -1,0 +1,55 @@
+//! Hot-path bench: encode/decode throughput of every codec over a
+//! gradient-realistic 1M-element vector (ResNet-50-scale stream slice).
+//!
+//! This is the L3 cost the paper's Sec. 5 argues must stay negligible
+//! next to CalcGrad — the numbers here feed EXPERIMENTS.md §Perf.
+
+use vgc::bench::Bencher;
+use vgc::compress::CodecSpec;
+use vgc::model::Layout;
+use vgc::testkit;
+use vgc::util::rng::Pcg32;
+
+fn main() {
+    let n = 1_000_000usize;
+    let layout = Layout::uniform(n, 4096);
+    let mut rng = Pcg32::new(42, 1);
+    let gsum = testkit::gradient_vec(&mut rng, n);
+    let gsumsq: Vec<f32> = gsum.iter().map(|g| g * g * 1.5).collect();
+
+    let specs = [
+        CodecSpec::None,
+        CodecSpec::Vgc { alpha: 1.5, zeta: 0.999 },
+        CodecSpec::Strom { tau: 0.01 },
+        CodecSpec::Hybrid { tau: 0.01, alpha: 2.0, zeta: 0.999 },
+        CodecSpec::Qsgd { bits: 2, bucket: 128 },
+        CodecSpec::TernGrad,
+    ];
+
+    let b = Bencher::default();
+    println!("# codec encode/decode over N = {n} gradient elements");
+    for spec in &specs {
+        let mut codec = spec.build(&layout, 0);
+        // Steady-state: warm the residual state before measuring.
+        let msg0 = codec.encode_step(&gsum, &gsumsq);
+        b.report_throughput(
+            &format!("encode/{}", spec.label()),
+            n as f64,
+            "elem",
+            || {
+                let msg = codec.encode_step(&gsum, &gsumsq);
+                std::hint::black_box(msg.elements);
+            },
+        );
+        let mut out = vec![0.0f32; n];
+        b.report_throughput(
+            &format!("decode/{}", spec.label()),
+            n as f64,
+            "elem",
+            || {
+                codec.decode_into(&msg0.bytes, &mut out).unwrap();
+                std::hint::black_box(out[0]);
+            },
+        );
+    }
+}

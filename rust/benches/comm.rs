@@ -1,0 +1,59 @@
+//! Communication-fabric bench: ring allgatherv vs ring allreduce at the
+//! byte-movement level, over realistic message-size mixes, plus the
+//! Section-5 modeled times for the same traffic.
+
+use vgc::bench::Bencher;
+use vgc::comm::allgatherv::ring_allgatherv;
+use vgc::comm::allreduce::ring_allreduce;
+use vgc::comm::costmodel::{CostModel, LinkModel};
+use vgc::util::rng::Pcg32;
+
+fn main() {
+    let b = Bencher::default();
+    let n = 250_000usize; // f32 elements per worker (1 MB)
+
+    for p in [4usize, 8, 16] {
+        // Uncompressed baseline: full f32 vectors through allreduce.
+        let inputs: Vec<Vec<f32>> = (0..p)
+            .map(|w| {
+                let mut rng = Pcg32::new(w as u64, 7);
+                (0..n).map(|_| rng.next_f32()).collect()
+            })
+            .collect();
+        b.report_throughput(
+            &format!("ring_allreduce/p={p}/n={n}"),
+            (n * p) as f64,
+            "elem",
+            || {
+                let r = ring_allreduce(&inputs);
+                std::hint::black_box(r.traffic.rounds);
+            },
+        );
+
+        // Compressed: sparse messages at ratio ~100 (c=100).
+        let msgs: Vec<Vec<u8>> = (0..p)
+            .map(|w| {
+                let mut rng = Pcg32::new(w as u64, 9);
+                (0..n * 4 / 100).map(|_| rng.next_u32() as u8).collect()
+            })
+            .collect();
+        b.report_throughput(
+            &format!("ring_allgatherv/p={p}/c=100"),
+            msgs.iter().map(|m| m.len()).sum::<usize>() as f64,
+            "B",
+            || {
+                let r = ring_allgatherv(&msgs);
+                std::hint::black_box(r.traffic.rounds);
+            },
+        );
+
+        // The Section-5 modeled wall-clock for the same geometry.
+        let model = CostModel::new(p, n as u64, LinkModel::gige());
+        println!(
+            "  modeled 1GbE: T_r = {:.3} ms, T_v(c=100) = {:.3} ms, speedup {:.1}x",
+            model.t_allreduce() * 1e3,
+            model.t_allgatherv_ratio(100.0) * 1e3,
+            model.speedup(100.0)
+        );
+    }
+}

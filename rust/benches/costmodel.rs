@@ -1,0 +1,24 @@
+//! A5 bench: emit the Section-5 speedup series (the paper's analytic
+//! "figure") and measure the cost-model evaluation itself.
+
+use vgc::bench::Bencher;
+use vgc::comm::costmodel::{speedup_series, LinkModel};
+use vgc::experiments;
+
+fn main() {
+    // The series itself IS the experiment artifact — print it.
+    print!("{}", experiments::costmodel_report());
+
+    // And the evaluation cost (trivially cheap; tracked so nobody
+    // accidentally turns the closed form into something expensive).
+    let b = Bencher::default();
+    b.report("costmodel/speedup_series 4x8 grid", || {
+        let rows = speedup_series(
+            25_500_000,
+            &[2, 4, 8, 16],
+            &[1.0, 10.0, 100.0, 1000.0, 10000.0, 100000.0, 1e6, 1e7],
+            LinkModel::gige(),
+        );
+        std::hint::black_box(rows.len());
+    });
+}

@@ -1,0 +1,49 @@
+//! Quantizer micro-bench: the Sec.-4.4 bit-twiddled 4-bit encode and
+//! decode, plus the Eq.-3 criterion sweep — the innermost loops of the
+//! VGC hot path.
+
+use vgc::bench::Bencher;
+use vgc::compress::quant4;
+use vgc::compress::vgc::VgcCodec;
+use vgc::testkit;
+use vgc::util::rng::Pcg32;
+
+fn main() {
+    let b = Bencher::default();
+    let n = 1_000_000usize;
+    let mut rng = Pcg32::new(1, 1);
+    let g = testkit::gradient_vec(&mut rng, n);
+    let m = g.iter().fold(0f32, |a, x| a.max(x.abs()));
+    let mexp = quant4::floor_log2_exp(m);
+
+    b.report_throughput("quant4/encode", n as f64, "elem", || {
+        let mut kept = 0u32;
+        for &x in &g {
+            if let Some((neg, d)) = quant4::quantize(x, mexp) {
+                kept += (neg as u32) + d as u32;
+            }
+        }
+        std::hint::black_box(kept);
+    });
+
+    b.report_throughput("quant4/decode", n as f64, "elem", || {
+        let mut acc = 0f32;
+        for i in 0..n {
+            acc += quant4::dequantize(i & 1 == 0, (i % 8) as u8, mexp);
+        }
+        std::hint::black_box(acc);
+    });
+
+    // The Eq.-3 send decision over accumulated state (branch-heavy).
+    let r: Vec<f32> = g.clone();
+    let v: Vec<f32> = g.iter().map(|x| x * x * 1.3).collect();
+    b.report_throughput("criterion/native", n as f64, "elem", || {
+        let mut sent = 0u32;
+        for i in 0..n {
+            if VgcCodec::criterion(r[i], v[i], 1.5) {
+                sent += 1;
+            }
+        }
+        std::hint::black_box(sent);
+    });
+}

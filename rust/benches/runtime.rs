@@ -1,0 +1,94 @@
+//! Runtime + end-to-end benches over real artifacts:
+//!
+//! * the L1 fused moments kernel through PJRT (the paper's 2N|B| madds);
+//! * the Eq.-3 criterion: native Rust loop vs the XLA-offload artifact
+//!   (the DESIGN.md ablation);
+//! * one full coordinated training step per table workload — the
+//!   end-to-end rows for Tables 1 and 2 in EXPERIMENTS.md §Perf.
+
+use vgc::bench::Bencher;
+use vgc::compress::vgc::VgcCodec;
+use vgc::config::TrainConfig;
+use vgc::coordinator::Trainer;
+use vgc::runtime::{literal_f32, Client, Manifest};
+use vgc::testkit;
+use vgc::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP runtime bench: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let man = Manifest::load(&dir)?;
+    let client = Client::cpu()?;
+    let b = Bencher::default();
+
+    // L1 moments kernel through PJRT.
+    for e in &man.moments_bench {
+        let exe = client.load_hlo(man.path_of(&e.hlo))?;
+        let mut rng = Pcg32::new(3, 3);
+        let g: Vec<f32> = (0..e.b * e.n).map(|_| rng.next_normal()).collect();
+        let lit = literal_f32(&g, &[e.b as i64, e.n as i64])?;
+        b.report_throughput(
+            &format!("pjrt/moments b={} n={}", e.b, e.n),
+            (e.b * e.n) as f64,
+            "elem",
+            || {
+                let out = exe.execute(&[lit.clone()]).unwrap();
+                std::hint::black_box(out.len());
+            },
+        );
+    }
+
+    // Criterion: native loop vs XLA artifact (ablation).
+    for e in &man.criterion {
+        let n = e.n;
+        let mut rng = Pcg32::new(5, 5);
+        let r = testkit::gradient_vec(&mut rng, n);
+        let v: Vec<f32> = r.iter().map(|x| x * x * 1.2).collect();
+        b.report_throughput(&format!("criterion/native n={n}"), n as f64, "elem", || {
+            let mut sent = 0u32;
+            for i in 0..n {
+                sent += VgcCodec::criterion(r[i], v[i], 1.5) as u32;
+            }
+            std::hint::black_box(sent);
+        });
+        let exe = client.load_hlo(man.path_of(&e.hlo))?;
+        let r_lit = literal_f32(&r, &[n as i64])?;
+        let v_lit = literal_f32(&v, &[n as i64])?;
+        let a_lit = xla::Literal::scalar(1.5f32);
+        b.report_throughput(&format!("criterion/xla n={n}"), n as f64, "elem", || {
+            let out = exe
+                .execute(&[r_lit.clone(), v_lit.clone(), a_lit.clone()])
+                .unwrap();
+            std::hint::black_box(out.len());
+        });
+    }
+
+    // End-to-end steps: one bench per paper table's workload.
+    for (table, model) in [("table1", "vgg_tiny"), ("table2", "resnet_mini")] {
+        let mut cfg = TrainConfig::defaults(model);
+        cfg.codec = vgc::compress::CodecSpec::Vgc {
+            alpha: 1.5,
+            zeta: 0.999,
+        };
+        cfg.eval_every = 0;
+        cfg.log_every = 0;
+        let mut t = Trainer::new(&client, &man, cfg)?;
+        t.train_step()?; // warm the executable
+        b.report(&format!("e2e/{table} step ({model})"), || {
+            t.train_step().unwrap();
+        });
+        let ph = t.phases;
+        let total = ph.compute_s + ph.encode_s + ph.comm_decode_s + ph.update_s;
+        println!(
+            "  phase split: compute {:.1}% encode {:.1}% comm+decode {:.1}% update {:.1}%",
+            ph.compute_s / total * 100.0,
+            ph.encode_s / total * 100.0,
+            ph.comm_decode_s / total * 100.0,
+            ph.update_s / total * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Table-1/Table-2 bench: a short-horizon run of every paper codec row
+//! on both workloads, printing the same columns the paper reports
+//! (accuracy is meaningless at this horizon — the full-horizon runs
+//! live in `repro table1`/`table2`; this bench tracks the *ratio*
+//! ordering and per-row step cost so regressions show up in
+//! `cargo bench`).
+
+use vgc::bench::Bencher;
+use vgc::coordinator::Trainer;
+use vgc::experiments;
+use vgc::runtime::{Client, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP tables bench: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let man = Manifest::load(&dir)?;
+    let client = Client::cpu()?;
+    let b = Bencher {
+        min_iters: 3,
+        budget: std::time::Duration::from_millis(1),
+        warmup: 0,
+    };
+
+    let steps = 12u64;
+    for (title, rows) in [
+        ("table1 (vgg_tiny, momentum)", experiments::table1_rows("momentum", steps)),
+        ("table2 (resnet_mini, momentum)", experiments::table2_rows("momentum", steps)),
+    ] {
+        println!("\n# {title}, {steps}-step probes");
+        for row in rows {
+            let mut cfg = row.cfg.clone();
+            cfg.eval_every = 0;
+            cfg.log_every = 0;
+            let mut t = Trainer::new(&client, &man, cfg)?;
+            t.train_step()?; // warm
+            let r = b.run(&format!("{title}/{}", row.label), || {
+                t.train_step().unwrap();
+            });
+            // Finish the probe horizon for a stable ratio estimate.
+            while t.step_count() < steps {
+                t.train_step()?;
+            }
+            println!(
+                "bench {:<52} step={:>9.1?} ratio={:>10.1} loss={:.3}",
+                format!("{title}/{}", row.label),
+                r.mean,
+                t.metrics.compression_ratio(),
+                t.metrics.final_loss()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Benchmark harness (the offline crate set has no `criterion`;
+//! DESIGN.md §Substitutions).
+//!
+//! Bench binaries under `rust/benches/` are built with `harness = false`
+//! and drive this module: warmup, timed iterations until a target wall
+//! budget, then mean / p50 / p95 / throughput reporting in a stable
+//! one-line-per-bench format that `EXPERIMENTS.md` quotes directly.
+
+use std::time::{Duration, Instant};
+
+use crate::util::percentile;
+
+pub struct Bencher {
+    /// Minimum measured iterations per bench.
+    pub min_iters: u32,
+    /// Target wall time per bench.
+    pub budget: Duration,
+    /// Warmup iterations.
+    pub warmup: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // VGC_BENCH_FAST=1 shrinks budgets so `cargo bench` smoke-runs
+        // quickly in CI; default budgets give stable medians locally.
+        let fast = std::env::var("VGC_BENCH_FAST").is_ok();
+        Bencher {
+            min_iters: if fast { 3 } else { 10 },
+            budget: Duration::from_millis(if fast { 200 } else { 2000 }),
+            warmup: if fast { 1 } else { 3 },
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    /// items/sec given `items` work units per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean.as_secs_f64()
+    }
+}
+
+impl Bencher {
+    /// Measure `f`, which performs one full iteration per call.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters as usize || start.elapsed() < self.budget {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len() as u32,
+            mean: Duration::from_secs_f64(mean),
+            p50: Duration::from_secs_f64(percentile(&samples, 0.5)),
+            p95: Duration::from_secs_f64(percentile(&samples, 0.95)),
+        }
+    }
+
+    /// Run and print in the standard report format.
+    pub fn report<F: FnMut()>(&self, name: &str, f: F) -> BenchResult {
+        let r = self.run(name, f);
+        println!("{}", format_result(&r, None));
+        r
+    }
+
+    /// Run and print with a throughput figure (`items` per iteration,
+    /// `unit` e.g. "elem", "MB").
+    pub fn report_throughput<F: FnMut()>(
+        &self,
+        name: &str,
+        items: f64,
+        unit: &str,
+        f: F,
+    ) -> BenchResult {
+        let r = self.run(name, f);
+        println!("{}", format_result(&r, Some((items, unit))));
+        r
+    }
+}
+
+fn human_time(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+fn human_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2} G", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2} M", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2} k", r / 1e3)
+    } else {
+        format!("{r:.2} ")
+    }
+}
+
+fn format_result(r: &BenchResult, thr: Option<(f64, &str)>) -> String {
+    let mut line = format!(
+        "bench {:<44} iters={:<5} mean={:<12} p50={:<12} p95={}",
+        r.name,
+        r.iters,
+        human_time(r.mean),
+        human_time(r.p50),
+        human_time(r.p95),
+    );
+    if let Some((items, unit)) = thr {
+        line.push_str(&format!("  thr={}{}/s", human_rate(r.throughput(items)), unit));
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let b = Bencher {
+            min_iters: 5,
+            budget: Duration::from_millis(10),
+            warmup: 1,
+        };
+        let r = b.run("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean.as_secs_f64() >= 0.0);
+        assert!(r.p95 >= r.p50);
+    }
+
+    #[test]
+    fn throughput_is_items_over_mean() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_secs(2),
+            p50: Duration::from_secs(2),
+            p95: Duration::from_secs(2),
+        };
+        assert!((r.throughput(10.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn humanizes_times() {
+        assert_eq!(human_time(Duration::from_secs(2)), "2.000 s");
+        assert_eq!(human_time(Duration::from_millis(5)), "5.000 ms");
+        assert!(human_time(Duration::from_nanos(50)).ends_with("ns"));
+    }
+}

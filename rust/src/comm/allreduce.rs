@@ -1,0 +1,163 @@
+//! Ring allreduce (sum) — the uncompressed baseline collective.
+//!
+//! Classic two-phase ring: reduce-scatter (p−1 rounds over N/p chunks,
+//! each node ends owning the full sum of one chunk) followed by
+//! allgather (p−1 rounds circulating the reduced chunks). Total bytes
+//! per node ≈ 2·(p−1)·N·s/p — exactly the paper's `T_r` bandwidth term.
+
+use super::Traffic;
+
+/// Result: every node's reduced vector plus traffic accounting.
+pub struct ReduceResult {
+    pub reduced: Vec<Vec<f32>>,
+    pub traffic: Traffic,
+}
+
+/// Elementwise-sum ring allreduce over per-node vectors (equal length).
+pub fn ring_allreduce(inputs: &[Vec<f32>]) -> ReduceResult {
+    let p = inputs.len();
+    assert!(p > 0);
+    let n = inputs[0].len();
+    assert!(inputs.iter().all(|v| v.len() == n), "length mismatch");
+    if p == 1 {
+        return ReduceResult {
+            reduced: vec![inputs[0].clone()],
+            traffic: Traffic {
+                bytes_sent_per_node: vec![0],
+                rounds: 0,
+            },
+        };
+    }
+
+    // Chunk boundaries: chunk c covers [start(c), start(c+1)).
+    let start = |c: usize| c * n / p;
+    let chunk_range = |c: usize| start(c % p)..start(c % p + 1);
+
+    let mut state: Vec<Vec<f32>> = inputs.to_vec();
+    let mut bytes_sent = vec![0u64; p];
+
+    // Phase 1: reduce-scatter. In round t node i sends chunk (i - t)
+    // and accumulates the chunk it receives into its copy.
+    for t in 0..p - 1 {
+        let mut in_flight: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(p);
+        for i in 0..p {
+            let c = (i + p - t) % p;
+            let payload: Vec<f32> = state[i][chunk_range(c)].to_vec();
+            bytes_sent[i] += payload.len() as u64 * 4;
+            in_flight.push((c, (i + 1) % p, payload));
+        }
+        for (c, dst, payload) in in_flight {
+            let r = chunk_range(c);
+            for (k, v) in payload.into_iter().enumerate() {
+                state[dst][r.start + k] += v;
+            }
+        }
+    }
+
+    // Phase 2: allgather of the reduced chunks. After phase 1 node i
+    // owns the fully-reduced chunk (i + 1) mod p.
+    for t in 0..p - 1 {
+        let mut in_flight: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(p);
+        for i in 0..p {
+            let c = (i + 1 + p - t) % p;
+            let payload: Vec<f32> = state[i][chunk_range(c)].to_vec();
+            bytes_sent[i] += payload.len() as u64 * 4;
+            in_flight.push((c, (i + 1) % p, payload));
+        }
+        for (c, dst, payload) in in_flight {
+            let r = chunk_range(c);
+            state[dst][r.clone()].copy_from_slice(&payload);
+        }
+    }
+
+    ReduceResult {
+        reduced: state,
+        traffic: Traffic {
+            bytes_sent_per_node: bytes_sent,
+            rounds: 2 * (p as u32 - 1),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn result_is_elementwise_sum_on_all_nodes() {
+        let inputs = vec![
+            vec![1.0f32, 2.0, 3.0, 4.0, 5.0],
+            vec![10.0, 20.0, 30.0, 40.0, 50.0],
+            vec![-1.0, -2.0, -3.0, -4.0, -5.0],
+        ];
+        let want = vec![10.0f32, 20.0, 30.0, 40.0, 50.0];
+        let res = ring_allreduce(&inputs);
+        for node in 0..3 {
+            assert_eq!(res.reduced[node], want, "node {node}");
+        }
+    }
+
+    #[test]
+    fn traffic_matches_2_p_minus_1_over_p() {
+        // N divisible by p: every node sends exactly 2(p-1)N/p elements.
+        let p = 4;
+        let n = 100;
+        let inputs: Vec<Vec<f32>> = (0..p).map(|i| vec![i as f32; n]).collect();
+        let res = ring_allreduce(&inputs);
+        for i in 0..p {
+            assert_eq!(
+                res.traffic.bytes_sent_per_node[i],
+                (2 * (p - 1) * n / p * 4) as u64
+            );
+        }
+        assert_eq!(res.traffic.rounds, 2 * (p as u32 - 1));
+    }
+
+    #[test]
+    fn property_sum_for_random_p_and_n() {
+        testkit::for_all(
+            "ring allreduce == sum",
+            |rng: &mut Pcg32| {
+                let p = testkit::usize_in(rng, 1, 9);
+                let n = testkit::usize_in(rng, 1, 97); // often not divisible by p
+                (0..p)
+                    .map(|_| testkit::gradient_vec(rng, n))
+                    .collect::<Vec<_>>()
+            },
+            |inputs| {
+                let n = inputs[0].len();
+                let res = ring_allreduce(inputs);
+                for i in 0..n {
+                    let want: f64 = inputs.iter().map(|v| v[i] as f64).sum();
+                    for node in 0..inputs.len() {
+                        let got = res.reduced[node][i] as f64;
+                        if (got - want).abs() > 1e-4 * (1.0 + want.abs()) {
+                            return Err(format!("node {node} i={i}: {got} != {want}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn single_node_identity() {
+        let inputs = vec![vec![1.0f32, 2.0]];
+        let res = ring_allreduce(&inputs);
+        assert_eq!(res.reduced[0], vec![1.0, 2.0]);
+        assert_eq!(res.traffic.total_bytes(), 0);
+    }
+
+    #[test]
+    fn n_smaller_than_p() {
+        // Degenerate chunking (empty chunks) must still be correct.
+        let inputs: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32, 1.0]).collect();
+        let res = ring_allreduce(&inputs);
+        for node in 0..5 {
+            assert_eq!(res.reduced[node], vec![10.0, 5.0]);
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Section-5 communication cost model.
+//!
+//! The paper analyzes iteration speedup analytically:
+//!
+//! * ring allreduce of uncompressed gradients:
+//!   `T_r = 2(p−1)·N·s·β / p`
+//! * pipelined ring allgatherv (Träff et al. 2008) with block size m:
+//!   `T_v ≤ (Σ_i n_i + (p−1)·m)·β`, with `Σ n_i = N·s·p/c` for average
+//!   compression ratio c
+//! * hence relative speedup `T_r/T_v ≥ 2(p−1)c / p²` (small m), giving
+//!   linear speedup in the `c > p/2` regime.
+//!
+//! This module reproduces those formulas exactly (experiment A5) and
+//! also evaluates `T_v` from *measured* per-node message sizes, which is
+//! how the training harness converts its byte accounting into modeled
+//! iteration times.
+
+/// Link/interconnect parameters. `beta` is transfer time per BIT.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// Seconds per bit (e.g. 1GbE: 1e-9 s/bit).
+    pub beta: f64,
+    /// Per-message latency in seconds (ignored by the paper for large N;
+    /// kept so the harness can show when that assumption breaks).
+    pub latency: f64,
+}
+
+impl LinkModel {
+    /// 1000BASE-T Ethernet — the paper's "commodity interconnect".
+    pub fn gige() -> LinkModel {
+        LinkModel {
+            beta: 1e-9,
+            latency: 50e-6,
+        }
+    }
+
+    /// InfiniBand-class link (the "order of magnitude more expensive"
+    /// comparison point; ~100 Gb/s).
+    pub fn infiniband() -> LinkModel {
+        LinkModel {
+            beta: 1e-11,
+            latency: 2e-6,
+        }
+    }
+}
+
+/// Fixed experiment geometry for the analytic formulas.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Workers.
+    pub p: usize,
+    /// Parameters.
+    pub n: u64,
+    /// Bits per parameter in the uncompressed baseline (32).
+    pub s: u64,
+    /// Pipelining block size in bits (m in the paper).
+    pub m_bits: u64,
+    pub link: LinkModel,
+}
+
+impl CostModel {
+    pub fn new(p: usize, n: u64, link: LinkModel) -> CostModel {
+        CostModel {
+            p,
+            n,
+            s: 32,
+            // MVAPICH-style pipelining block: 8 KiB.
+            m_bits: 8 * 1024 * 8,
+            link,
+        }
+    }
+
+    /// `T_r`: ring allreduce time for the uncompressed gradient.
+    pub fn t_allreduce(&self) -> f64 {
+        let p = self.p as f64;
+        2.0 * (p - 1.0) * (self.n * self.s) as f64 * self.link.beta / p
+            + 2.0 * (p - 1.0) * self.link.latency
+    }
+
+    /// `T_v` upper bound from the average compression ratio c
+    /// (`Σ n_i = N·s·p/c`).
+    pub fn t_allgatherv_ratio(&self, c: f64) -> f64 {
+        assert!(c > 0.0);
+        let total_bits = (self.n * self.s) as f64 * self.p as f64 / c;
+        self.t_allgatherv_bits(&vec![
+            (total_bits / self.p as f64) as u64;
+            self.p
+        ])
+    }
+
+    /// `T_v` from measured per-node message sizes (bits):
+    /// `T_v ≤ (Σ n_i + (p−1) m)·β` plus per-round latency.
+    pub fn t_allgatherv_bits(&self, n_i_bits: &[u64]) -> f64 {
+        assert_eq!(n_i_bits.len(), self.p);
+        let sum_bits: u64 = n_i_bits.iter().sum();
+        (sum_bits as f64 + (self.p as f64 - 1.0) * self.m_bits as f64) * self.link.beta
+            + (self.p as f64 - 1.0) * self.link.latency
+    }
+
+    /// Relative speedup of compressed allgatherv over allreduce.
+    pub fn speedup(&self, c: f64) -> f64 {
+        self.t_allreduce() / self.t_allgatherv_ratio(c)
+    }
+
+    /// The paper's closed-form lower bound `2(p−1)c/p²` (latency and m
+    /// ignored) — tests check `speedup ≥ bound` in the regime the paper
+    /// assumes (latency ≈ 0).
+    pub fn speedup_lower_bound(&self, c: f64) -> f64 {
+        let p = self.p as f64;
+        2.0 * (p - 1.0) * c / (p * p)
+    }
+
+    /// Compute time for one iteration of the variance accumulation: the
+    /// extra 2·N·|B| multiply-adds (Sec. 5), at `flops`/s.
+    pub fn variance_overhead_s(&self, batch: u64, flops: f64) -> f64 {
+        (2 * self.n * batch) as f64 / flops
+    }
+}
+
+/// One row of the A5 speedup table.
+#[derive(Debug, Clone)]
+pub struct SpeedupRow {
+    pub p: usize,
+    pub c: f64,
+    pub t_allreduce: f64,
+    pub t_allgatherv: f64,
+    pub speedup: f64,
+    pub bound: f64,
+}
+
+/// Generate the Section-5 speedup series over compression ratios and
+/// worker counts (the A5 experiment; ResNet-50-scale N by default).
+pub fn speedup_series(n: u64, ps: &[usize], cs: &[f64], link: LinkModel) -> Vec<SpeedupRow> {
+    let mut rows = Vec::new();
+    for &p in ps {
+        let model = CostModel::new(p, n, link);
+        for &c in cs {
+            rows.push(SpeedupRow {
+                p,
+                c,
+                t_allreduce: model.t_allreduce(),
+                t_allgatherv: model.t_allgatherv_ratio(c),
+                speedup: model.speedup(c),
+                bound: model.speedup_lower_bound(c),
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RESNET50_N: u64 = 25_500_000;
+
+    fn no_latency(p: usize) -> CostModel {
+        let mut m = CostModel::new(
+            p,
+            RESNET50_N,
+            LinkModel {
+                beta: 1e-9,
+                latency: 0.0,
+            },
+        );
+        m.m_bits = 64; // "if we set m small enough"
+        m
+    }
+
+    #[test]
+    fn t_allreduce_matches_formula() {
+        let m = no_latency(8);
+        let want = 2.0 * 7.0 * (RESNET50_N * 32) as f64 * 1e-9 / 8.0;
+        assert!((m.t_allreduce() - want).abs() < 1e-9 * want.abs());
+    }
+
+    #[test]
+    fn speedup_respects_paper_lower_bound() {
+        for p in [2usize, 4, 8, 16, 64] {
+            let m = no_latency(p);
+            for c in [1.0, 10.0, 100.0, 1000.0, 10_000.0] {
+                let s = m.speedup(c);
+                let b = m.speedup_lower_bound(c);
+                assert!(
+                    s >= b * 0.999,
+                    "p={p} c={c}: speedup {s} < bound {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn linear_speedup_regime_starts_near_c_equals_p_over_2() {
+        // Paper: "we expect linear speedup in c > p/2 range" — i.e. the
+        // bound crosses 1 exactly at c = p²/(2(p−1)) ≈ p/2.
+        for p in [4usize, 8, 16] {
+            let m = no_latency(p);
+            let c_star = (p * p) as f64 / (2.0 * (p as f64 - 1.0));
+            assert!(m.speedup_lower_bound(c_star * 1.01) > 1.0);
+            assert!(m.speedup_lower_bound(c_star * 0.99) < 1.0);
+        }
+    }
+
+    #[test]
+    fn t_v_from_measured_bits_equals_ratio_form() {
+        let m = no_latency(8);
+        let c = 100.0;
+        let per_node = (RESNET50_N * 32) as f64 / c;
+        let bits = vec![per_node as u64; 8];
+        let a = m.t_allgatherv_bits(&bits);
+        let b = m.t_allgatherv_ratio(c);
+        assert!((a - b).abs() < 1e-6 * b);
+    }
+
+    #[test]
+    fn uneven_message_sizes_sum_correctly() {
+        let m = no_latency(4);
+        let bits = vec![100, 0, 300, 44];
+        let want = (444.0 + 3.0 * 64.0) * 1e-9;
+        assert!((m.t_allgatherv_bits(&bits) - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn variance_overhead_is_negligible_vs_comm() {
+        // The paper's claim: 2N|B| madds are negligible. At 1 TFLOP/s,
+        // N=25.5M, B=32: ~1.6 ms, vs T_r ≈ 178 ms on 1GbE.
+        let m = CostModel::new(8, RESNET50_N, LinkModel::gige());
+        let overhead = m.variance_overhead_s(32, 1e12);
+        assert!(overhead < 0.05 * m.t_allreduce());
+    }
+
+    #[test]
+    fn series_covers_grid() {
+        let rows = speedup_series(1000, &[2, 4], &[1.0, 10.0], LinkModel::gige());
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|r| r.speedup > 0.0));
+    }
+}

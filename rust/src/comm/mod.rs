@@ -1,0 +1,33 @@
+//! Communication substrate (S8, S9): byte-accurate ring collectives
+//! over a simulated fabric, plus the paper's Section-5 analytic cost
+//! model.
+//!
+//! The paper replaces allreduce with **allgatherv** (Sec. 4.3): each
+//! worker broadcasts its own sparse message, every worker decodes all
+//! of them locally. We implement both collectives as real data movement
+//! (bytes hop between per-node mailboxes around a ring), with traffic
+//! accounting per link; wall-clock is *modeled* analytically exactly as
+//! the paper's own Section 5 does (DESIGN.md §Substitutions).
+
+pub mod allgatherv;
+pub mod allreduce;
+pub mod costmodel;
+
+/// Per-collective traffic accounting.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Traffic {
+    /// Bytes each node pushed onto its outgoing link.
+    pub bytes_sent_per_node: Vec<u64>,
+    /// Ring rounds executed.
+    pub rounds: u32,
+}
+
+impl Traffic {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_sent_per_node.iter().sum()
+    }
+
+    pub fn max_node_bytes(&self) -> u64 {
+        self.bytes_sent_per_node.iter().copied().max().unwrap_or(0)
+    }
+}

@@ -1,0 +1,197 @@
+//! Adaptive-threshold sparsification (Dryden et al., 2016) — the
+//! related-work extension of Strom's method (paper Sec. 3): instead of
+//! a user-chosen τ, send a fixed *proportion* π of gradient elements
+//! each step (the largest |residual| values), with error feedback.
+//!
+//! The per-step threshold adapts to the gradient scale, which removes
+//! Strom's brittle-τ problem at the cost of a per-step selection pass.
+//! Sent values are transmitted exactly (f32) alongside the index, as in
+//! Dryden's design — 64 bits per element on the wire, i.e. 2 packed
+//! words; `payload_bits` accounts for that honestly.
+//!
+//! Wire format: u32 count, then count × (u32 index, f32 value).
+
+use super::encode::{ByteReader, ByteWriter};
+use super::{Aggregation, Codec, Message};
+
+pub struct AdaptiveCodec {
+    /// Fraction of elements to send per step (e.g. 0.01).
+    pi: f32,
+    r: Vec<f32>,
+    /// Scratch |r| for threshold selection (reused).
+    mags: Vec<f32>,
+}
+
+impl AdaptiveCodec {
+    pub fn new(n: usize, pi: f32) -> AdaptiveCodec {
+        assert!(pi > 0.0 && pi <= 1.0, "pi must be in (0, 1]");
+        AdaptiveCodec {
+            pi,
+            r: vec![0.0; n],
+            mags: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn r(&self) -> &[f32] {
+        &self.r
+    }
+
+    /// The adaptive threshold: the k-th largest |r| with k = ceil(π·N).
+    fn threshold(&mut self) -> f32 {
+        let n = self.r.len();
+        let k = ((self.pi * n as f32).ceil() as usize).clamp(1, n);
+        self.mags.clear();
+        self.mags.extend(self.r.iter().map(|x| x.abs()));
+        // select_nth_unstable puts the k-th largest at index k-1 when
+        // ordering descending.
+        let idx = k - 1;
+        self.mags
+            .select_nth_unstable_by(idx, |a, b| b.partial_cmp(a).unwrap());
+        self.mags[idx]
+    }
+}
+
+impl Codec for AdaptiveCodec {
+    fn name(&self) -> String {
+        format!("adaptive(pi={})", self.pi)
+    }
+
+    fn aggregation(&self) -> Aggregation {
+        Aggregation::Sum
+    }
+
+    fn encode_step(&mut self, gsum: &[f32], _gsumsq: &[f32]) -> Message {
+        let n = self.r.len();
+        assert_eq!(gsum.len(), n);
+        for i in 0..n {
+            self.r[i] += gsum[i];
+        }
+        let thr = self.threshold();
+        let mut w = ByteWriter::new();
+        w.u32(0);
+        let mut count = 0u32;
+        if thr > 0.0 {
+            for i in 0..n {
+                if self.r[i].abs() >= thr {
+                    w.u32(i as u32);
+                    w.f32(self.r[i]);
+                    self.r[i] = 0.0; // exact value sent: no residual left
+                    count += 1;
+                }
+            }
+        }
+        let mut bytes = w.finish();
+        bytes[0..4].copy_from_slice(&count.to_le_bytes());
+        Message {
+            bytes,
+            elements: count as u64,
+            payload_bits: count as u64 * 64,
+        }
+    }
+
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) -> anyhow::Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let count = r.u32()?;
+        for _ in 0..count {
+            let index = r.u32()? as usize;
+            let value = r.f32()?;
+            anyhow::ensure!(index < out.len(), "index {index} out of range");
+            out[index] += value;
+        }
+        anyhow::ensure!(r.done(), "trailing bytes");
+        Ok(())
+    }
+
+    fn residual_l1(&self) -> f64 {
+        self.r.iter().map(|x| x.abs() as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn sends_top_fraction_by_magnitude() {
+        let n = 100;
+        let mut c = AdaptiveCodec::new(n, 0.1);
+        let g: Vec<f32> = (0..n).map(|i| i as f32 / 100.0).collect();
+        let msg = c.encode_step(&g, &vec![0.0; n]);
+        assert_eq!(msg.elements, 10);
+        let mut out = vec![0.0f32; n];
+        c.decode_into(&msg.bytes, &mut out).unwrap();
+        // Exactly the 10 largest were delivered, exactly.
+        for i in 0..n {
+            if i >= 90 {
+                assert_eq!(out[i], g[i]);
+            } else {
+                assert_eq!(out[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_values_mean_exact_conservation() {
+        testkit::for_all(
+            "adaptive conservation",
+            |rng: &mut Pcg32| {
+                let n = testkit::usize_in(rng, 2, 80);
+                let steps = testkit::usize_in(rng, 1, 15);
+                (0..steps)
+                    .map(|_| testkit::gradient_vec(rng, n))
+                    .collect::<Vec<_>>()
+            },
+            |stream| {
+                let n = stream[0].len();
+                let mut c = AdaptiveCodec::new(n, 0.2);
+                let mut decoded = vec![0.0f32; n];
+                for g in stream {
+                    let msg = c.encode_step(g, &vec![0.0; n]);
+                    c.decode_into(&msg.bytes, &mut decoded)
+                        .map_err(|e| e.to_string())?;
+                }
+                for i in 0..n {
+                    let total: f32 = stream.iter().map(|g| g[i]).sum();
+                    let got = decoded[i] + c.r()[i];
+                    if (got - total).abs() > 1e-4 * (1.0 + total.abs()) {
+                        return Err(format!("i={i}: {got} != {total}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn compression_ratio_is_one_over_pi() {
+        // Steady state: elements per step ≈ π·N regardless of scale —
+        // the adaptive property that fixes Strom's brittleness.
+        for scale in [1e-4f32, 1.0, 1e4] {
+            let n = 1000;
+            let mut c = AdaptiveCodec::new(n, 0.05);
+            let mut rng = Pcg32::new(7, 7);
+            let mut total = 0u64;
+            for _ in 0..10 {
+                let g: Vec<f32> = (0..n).map(|_| rng.next_normal() * scale).collect();
+                total += c.encode_step(&g, &vec![0.0; n]).elements;
+            }
+            let avg = total as f64 / 10.0;
+            assert!(
+                (45.0..=80.0).contains(&avg),
+                "scale {scale}: avg sent {avg}, want ≈ 50"
+            );
+        }
+    }
+
+    #[test]
+    fn pi_one_sends_everything_nonzero() {
+        let n = 8;
+        let mut c = AdaptiveCodec::new(n, 1.0);
+        let g = vec![0.5f32; n];
+        let msg = c.encode_step(&g, &vec![0.0; n]);
+        assert_eq!(msg.elements, n as u64);
+        assert_eq!(c.residual_l1(), 0.0);
+    }
+}

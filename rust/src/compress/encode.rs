@@ -1,0 +1,338 @@
+//! Wire encoding: 32-bit packed words and the byte-stream container.
+//!
+//! Sec. 4.2 of the paper: each sent gradient element is one 32-bit word
+//! — 1 sign bit, 3 exponent bits (the quantizer's `d_i ∈ [0,7]`), and a
+//! 28-bit parameter index ("a naive encoding ... because the rest
+//! 28-bits are enough"). Strom-style codecs use sign + index only.
+//!
+//! `ByteWriter`/`ByteReader` give the codecs a common little-endian
+//! message container; the communication fabric moves these bytes
+//! verbatim, so what the metrics count is what would cross a real wire.
+
+/// Max index representable in the 28-bit field (N must stay below this;
+/// ResNet-50's 25.5M parameters fit with room to spare, as the paper
+/// notes).
+pub const MAX_INDEX: u32 = (1 << 28) - 1;
+
+/// Pack (sign, d, index) into the paper's 32-bit word layout:
+/// bit 31 = sign, bits 30..28 = d, bits 27..0 = index.
+#[inline]
+pub fn pack_word(negative: bool, d: u8, index: u32) -> u32 {
+    debug_assert!(d < 8, "d must fit 3 bits");
+    debug_assert!(index <= MAX_INDEX, "index must fit 28 bits");
+    ((negative as u32) << 31) | ((d as u32) << 28) | index
+}
+
+#[inline]
+pub fn unpack_word(w: u32) -> (bool, u8, u32) {
+    ((w >> 31) != 0, ((w >> 28) & 0x7) as u8, w & MAX_INDEX)
+}
+
+/// Sign + index word for threshold codecs (Strom / Hybrid): bit 31 =
+/// sign, bits 27..0 = index, exponent field unused (zero).
+#[inline]
+pub fn pack_sign_index(negative: bool, index: u32) -> u32 {
+    debug_assert!(index <= MAX_INDEX);
+    ((negative as u32) << 31) | index
+}
+
+#[inline]
+pub fn unpack_sign_index(w: u32) -> (bool, u32) {
+    ((w >> 31) != 0, w & MAX_INDEX)
+}
+
+/// Little-endian message writer.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        ByteWriter {
+            buf: Vec::with_capacity(cap),
+        }
+    }
+
+    #[inline]
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bytes(&mut self, bs: &[u8]) {
+        self.buf.extend_from_slice(bs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Overwrite 4 bytes at `pos` (header placeholders patched after the
+    /// body is known — O(1), no buffer rebuild).
+    pub fn patch_u32(&mut self, pos: usize, v: u32) {
+        self.buf[pos..pos + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    /// Drop everything from `pos` on (rewinds an abandoned group header).
+    pub fn truncate(&mut self, pos: usize) {
+        self.buf.truncate(pos);
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Little-endian message reader with explicit bounds errors (a malformed
+/// peer message must fail loudly, never read garbage).
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.buf.len(),
+            "message truncated: need {n} bytes at {}, have {}",
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> anyhow::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn i32(&mut self) -> anyhow::Result<i32> {
+        let b = self.take(4)?;
+        Ok(i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn f32(&mut self) -> anyhow::Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Borrow the next `n` bytes and advance past them (sub-block
+    /// framing, e.g. an embedded bitstream of known length).
+    pub fn slice(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn done(&self) -> bool {
+        self.remaining() == 0
+    }
+}
+
+/// Bit-level packer for dense sub-32-bit codes (QSGD, TernGrad).
+#[derive(Default)]
+pub struct BitWriter {
+    out: Vec<u8>,
+    cur: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append the low `width` bits of `v` (LSB-first stream).
+    #[inline]
+    pub fn push(&mut self, v: u32, width: u32) {
+        debug_assert!(width <= 32);
+        self.cur |= (v as u64 & ((1u64 << width) - 1)) << self.nbits;
+        self.nbits += width;
+        while self.nbits >= 8 {
+            self.out.push((self.cur & 0xFF) as u8);
+            self.cur >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.out.push((self.cur & 0xFF) as u8);
+        }
+        self.out
+    }
+}
+
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    cur: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader {
+            buf,
+            pos: 0,
+            cur: 0,
+            nbits: 0,
+        }
+    }
+
+    /// Read `width` bits (LSB-first). Errors on underrun.
+    #[inline]
+    pub fn pull(&mut self, width: u32) -> anyhow::Result<u32> {
+        while self.nbits < width {
+            anyhow::ensure!(self.pos < self.buf.len(), "bitstream underrun");
+            self.cur |= (self.buf[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+        let v = (self.cur & ((1u64 << width) - 1)) as u32;
+        self.cur >>= width;
+        self.nbits -= width;
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn word_roundtrip_exhaustive_fields() {
+        for neg in [false, true] {
+            for d in 0..8u8 {
+                for index in [0u32, 1, 12345, MAX_INDEX] {
+                    let w = pack_word(neg, d, index);
+                    assert_eq!(unpack_word(w), (neg, d, index));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sign_index_roundtrip() {
+        for neg in [false, true] {
+            for index in [0u32, 7, MAX_INDEX] {
+                assert_eq!(unpack_sign_index(pack_sign_index(neg, index)), (neg, index));
+            }
+        }
+    }
+
+    #[test]
+    fn word_roundtrip_property() {
+        testkit::for_all(
+            "pack/unpack word",
+            |rng: &mut Pcg32| {
+                (
+                    rng.next_bool(0.5),
+                    (rng.next_bounded(8)) as u8,
+                    rng.next_bounded(MAX_INDEX + 1),
+                )
+            },
+            |&(neg, d, idx)| {
+                if unpack_word(pack_word(neg, d, idx)) == (neg, d, idx) {
+                    Ok(())
+                } else {
+                    Err("mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn byte_stream_roundtrip() {
+        let mut w = ByteWriter::new();
+        w.u32(0xDEADBEEF);
+        w.f32(-1.5);
+        w.i32(-42);
+        let bytes = w.finish();
+        assert_eq!(bytes.len(), 12);
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.i32().unwrap(), -42);
+        assert!(r.done());
+    }
+
+    #[test]
+    fn reader_rejects_truncation() {
+        let mut r = ByteReader::new(&[1, 2, 3]);
+        assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn bit_packing_roundtrip() {
+        let mut w = BitWriter::new();
+        let vals: Vec<(u32, u32)> =
+            vec![(0b1, 1), (0b10, 2), (0b101, 3), (0xFF, 8), (0x3FFFF, 18), (0, 5)];
+        for &(v, width) in &vals {
+            w.push(v, width);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, width) in &vals {
+            assert_eq!(r.pull(width).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn bit_packing_property() {
+        testkit::for_all(
+            "bit writer/reader",
+            |rng: &mut Pcg32| {
+                let n = testkit::usize_in(rng, 0, 200);
+                (0..n)
+                    .map(|_| {
+                        let width = 1 + rng.next_bounded(32);
+                        (rng.next_u32() & ((1u64 << width) - 1) as u32, width)
+                    })
+                    .collect::<Vec<(u32, u32)>>()
+            },
+            |vals| {
+                let mut w = BitWriter::new();
+                for &(v, width) in vals {
+                    w.push(v, width);
+                }
+                let bytes = w.finish();
+                let mut r = BitReader::new(&bytes);
+                for &(v, width) in vals {
+                    if r.pull(width).map_err(|e| e.to_string())? != v {
+                        return Err("value mismatch".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,213 @@
+//! Algorithm 2 — the hybrid of variance-based compression and Strom's
+//! threshold method.
+//!
+//! An element is sent only when BOTH hold: `|r_i| > τ` (Strom) and
+//! `r_i² > α·v_i` (variance criterion). What is sent is `Sign(r_i)·τ`
+//! (one sign+index word); the residual keeps the remainder
+//! (`r_i -= Sign(r_i)·τ`). Because only *part* of the accumulated
+//! gradient leaves, the squared-sum state must be corrected rather than
+//! reset: the paper modifies `a² → (a−b)²`, i.e.
+//! `v_i ← max(v_i − 2|r_i|τ + τ², 0)` — note the paper's listing applies
+//! this with the *already-decremented* `r_i`, which is what we do —
+//! followed by the usual ζ decay (applied to every element in Alg. 2).
+//!
+//! Wire format: identical to Strom (u32 count + sign/index words); τ is
+//! codec config.
+
+use super::encode::{pack_sign_index, unpack_sign_index, ByteReader, ByteWriter};
+use super::{Aggregation, Codec, Message};
+use crate::model::Layout;
+
+pub struct HybridCodec {
+    layout: Layout,
+    tau: f32,
+    alpha: f32,
+    zeta: f32,
+    r: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl HybridCodec {
+    pub fn new(layout: Layout, tau: f32, alpha: f32, zeta: f32) -> HybridCodec {
+        assert!(tau > 0.0 && alpha > 0.0 && (0.0..=1.0).contains(&zeta));
+        let n = layout.n();
+        HybridCodec {
+            layout,
+            tau,
+            alpha,
+            zeta,
+            r: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    pub fn r(&self) -> &[f32] {
+        &self.r
+    }
+
+    pub fn v(&self) -> &[f32] {
+        &self.v
+    }
+}
+
+impl Codec for HybridCodec {
+    fn name(&self) -> String {
+        format!(
+            "hybrid(tau={},alpha={},zeta={})",
+            self.tau, self.alpha, self.zeta
+        )
+    }
+
+    fn aggregation(&self) -> Aggregation {
+        Aggregation::Sum
+    }
+
+    fn encode_step(&mut self, gsum: &[f32], gsumsq: &[f32]) -> Message {
+        let n = self.layout.n();
+        assert_eq!(gsum.len(), n);
+        assert_eq!(gsumsq.len(), n);
+        let mut w = ByteWriter::new();
+        w.u32(0);
+        let mut count = 0u32;
+        for i in 0..n {
+            self.r[i] += gsum[i];
+            self.v[i] += gsumsq[i];
+            if self.r[i].abs() > self.tau && self.r[i] * self.r[i] > self.alpha * self.v[i]
+            {
+                let neg = self.r[i] < 0.0;
+                w.u32(pack_sign_index(neg, i as u32));
+                count += 1;
+                // Alg. 2: r_i -= Sign(r_i)·τ, then the variance
+                // correction with the decremented r_i.
+                self.r[i] -= if neg { -self.tau } else { self.tau };
+                self.v[i] = (self.v[i] - 2.0 * self.r[i].abs() * self.tau
+                    + self.tau * self.tau)
+                    .max(0.0);
+            }
+            // Alg. 2 decays v unconditionally (outside the if).
+            self.v[i] *= self.zeta;
+        }
+        let mut bytes = w.finish();
+        bytes[0..4].copy_from_slice(&count.to_le_bytes());
+        Message {
+            payload_bits: count as u64 * 32,
+            elements: count as u64,
+            bytes,
+        }
+    }
+
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) -> anyhow::Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let count = r.u32()?;
+        for _ in 0..count {
+            let (neg, index) = unpack_sign_index(r.u32()?);
+            let index = index as usize;
+            anyhow::ensure!(index < out.len(), "index {index} out of range");
+            out[index] += if neg { -self.tau } else { self.tau };
+        }
+        anyhow::ensure!(r.done(), "trailing bytes");
+        Ok(())
+    }
+
+    fn residual_l1(&self) -> f64 {
+        self.r.iter().map(|x| x.abs() as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::rng::Pcg32;
+
+    fn codec(n: usize, tau: f32, alpha: f32) -> HybridCodec {
+        HybridCodec::new(Layout::uniform(n, 8), tau, alpha, 0.999)
+    }
+
+    #[test]
+    fn requires_both_criteria() {
+        // |r| > τ but high variance: held back.
+        let mut c = codec(1, 0.5, 1.0);
+        assert_eq!(c.encode_step(&[1.0], &[100.0]).elements, 0);
+        // Low variance but |r| <= τ: held back.
+        let mut c = codec(1, 0.5, 1.0);
+        assert_eq!(c.encode_step(&[0.3], &[0.0]).elements, 0);
+        // Both: sent.
+        let mut c = codec(1, 0.5, 1.0);
+        assert_eq!(c.encode_step(&[1.0], &[0.0]).elements, 1);
+    }
+
+    #[test]
+    fn sends_tau_quantum_and_keeps_remainder() {
+        let mut c = codec(2, 0.25, 1.0);
+        let msg = c.encode_step(&[1.0, -1.0], &[0.0, 0.0]);
+        assert_eq!(msg.elements, 2);
+        let mut out = vec![0.0; 2];
+        c.decode_into(&msg.bytes, &mut out).unwrap();
+        assert_eq!(out, vec![0.25, -0.25]);
+        assert!((c.r()[0] - 0.75).abs() < 1e-6);
+        assert!((c.r()[1] + 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn variance_correction_reduces_v() {
+        let mut c = codec(1, 0.5, 1.0);
+        // r=2, v=1: sent. After: r=1.5, v = max(1 - 2*1.5*0.5 + 0.25, 0)
+        //   = max(-0.25, 0) = 0, then ζ decay (still 0).
+        c.encode_step(&[2.0], &[1.0]);
+        assert_eq!(c.v()[0], 0.0);
+        assert!((c.r()[0] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn v_never_negative() {
+        testkit::for_all(
+            "hybrid v >= 0",
+            |rng: &mut Pcg32| {
+                let n = testkit::usize_in(rng, 1, 32);
+                let steps = testkit::usize_in(rng, 1, 20);
+                let stream: Vec<(Vec<f32>, Vec<f32>)> = (0..steps)
+                    .map(|_| {
+                        let g = testkit::gradient_vec(rng, n);
+                        let sq: Vec<f32> = g.iter().map(|x| x * x).collect();
+                        (g, sq)
+                    })
+                    .collect();
+                (testkit::f32_in(rng, 0.001, 0.2), stream)
+            },
+            |(tau, stream)| {
+                let n = stream[0].0.len();
+                let mut c = HybridCodec::new(Layout::uniform(n, 8), *tau, 1.5, 0.999);
+                for (g, sq) in stream {
+                    c.encode_step(g, sq);
+                    if c.v().iter().any(|&v| v < 0.0) {
+                        return Err("negative v".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn sign_flip_suppression() {
+        // The paper's Sec. 6.1 hypothesis: after sending +τ, if following
+        // gradients flip sign, the variance criterion holds the residual
+        // back (unlike plain Strom which keeps draining +τ).
+        let mut hybrid = codec(1, 0.1, 1.0);
+        let mut strom = super::super::strom::StromCodec::new(1, 0.1);
+        // Step 1: strong positive.
+        hybrid.encode_step(&[1.0], &[0.01]);
+        strom.encode_step(&[1.0], &[0.01]);
+        // Steps 2-4: noisy negatives with high variance.
+        let mut hybrid_sent = 0;
+        let mut strom_sent = 0;
+        for _ in 0..3 {
+            hybrid_sent += hybrid.encode_step(&[-0.05], &[4.0]).elements;
+            strom_sent += strom.encode_step(&[-0.05], &[4.0]).elements;
+        }
+        // Strom keeps draining its stale positive residual; hybrid stops.
+        assert_eq!(hybrid_sent, 0, "hybrid must hold ambiguous residual");
+        assert_eq!(strom_sent, 3, "strom drains regardless");
+    }
+}

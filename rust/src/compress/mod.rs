@@ -1,0 +1,231 @@
+//! Gradient compression codecs — the paper's contribution (S1–S7).
+//!
+//! Every codec implements [`Codec`]: per step it ingests the worker's
+//! Algorithm-1 moment increments (`gsum = Σ_z ∇f_z/B`,
+//! `gsumsq = Σ_z (∇f_z/B)²`, both produced by the L1 Pallas kernel
+//! through the grad artifact), updates its internal delayed-update
+//! state, and emits a self-contained byte message. Decoding is
+//! stateless: any worker can decode any peer's message given the codec
+//! config, which is what ring allgatherv requires (Sec. 4.3).
+//!
+//! Codecs: [`vgc::VgcCodec`] (Alg. 1), [`hybrid::HybridCodec`] (Alg. 2),
+//! [`strom::StromCodec`], [`qsgd::QsgdCodec`], [`terngrad::TernGradCodec`]
+//! baselines, and [`none::NoCompression`].
+
+pub mod adaptive;
+pub mod encode;
+pub mod hybrid;
+pub mod indexcode;
+pub mod none;
+pub mod onebit;
+pub mod qsgd;
+pub mod quant4;
+pub mod strom;
+pub mod terngrad;
+pub mod vgc;
+
+use crate::model::Layout;
+use crate::util::rng::Pcg32;
+
+/// How decoded per-worker contributions combine into the global update.
+///
+/// The paper's sparse codecs sum (each sent element is a worker's full
+/// accumulated delayed gradient); dense codecs conventionally mean.
+/// We run everything in Sum mode with sum-consistent learning rates —
+/// the paper itself scales LR by the worker count (Sec. 6.1), which is
+/// the same thing — but the distinction is kept explicit so dense
+/// baselines can also be run in textbook Mean mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Aggregation {
+    Sum,
+    Mean,
+}
+
+/// One worker's encoded step message plus accounting.
+#[derive(Debug, Clone)]
+pub struct Message {
+    /// Wire bytes (what the fabric actually moves).
+    pub bytes: Vec<u8>,
+    /// Gradient elements represented (the paper's compression-ratio
+    /// denominator: "the average number of parameters sent").
+    pub elements: u64,
+    /// Exact payload bits (elements × their code width), excluding
+    /// container headers — the paper's accounting convention ("we can
+    /// ignore ... non-essential information").
+    pub payload_bits: u64,
+}
+
+impl Message {
+    pub fn wire_bits(&self) -> u64 {
+        self.bytes.len() as u64 * 8
+    }
+}
+
+/// A gradient compression codec; one instance per worker (it owns that
+/// worker's residual/variance state).
+pub trait Codec: Send {
+    /// Short identifier, e.g. `vgc(alpha=1.5)`.
+    fn name(&self) -> String;
+
+    fn aggregation(&self) -> Aggregation;
+
+    /// Ingest this step's moment increments and emit the wire message.
+    /// `gsumsq` may be ignored by magnitude-only codecs.
+    fn encode_step(&mut self, gsum: &[f32], gsumsq: &[f32]) -> Message;
+
+    /// Decode a peer message, *accumulating* (`+=`) the decoded update
+    /// into `out` (length N). Stateless w.r.t. training state.
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) -> anyhow::Result<()>;
+
+    /// Undelivered mass currently held back by the codec (L1 norm of the
+    /// residual), for diagnostics and conservation tests. Dense codecs
+    /// return 0.
+    fn residual_l1(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Codec selection parsed from CLI / config (see `config` module).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CodecSpec {
+    None,
+    Vgc { alpha: f32, zeta: f32 },
+    /// VGC with the Sec.-4.2 compressed-index wire format.
+    VgcCompact { alpha: f32, zeta: f32 },
+    Strom { tau: f32 },
+    Hybrid { tau: f32, alpha: f32, zeta: f32 },
+    Qsgd { bits: u32, bucket: usize },
+    TernGrad,
+    /// 1-bit SGD baseline (Seide et al. 2014).
+    OneBit,
+    /// Adaptive-threshold top-fraction baseline (Dryden et al. 2016).
+    Adaptive { pi: f32 },
+}
+
+impl CodecSpec {
+    /// Parse e.g. `vgc:alpha=1.5`, `strom:tau=0.01`, `qsgd:bits=2,d=128`,
+    /// `hybrid:tau=0.01,alpha=2`, `terngrad`, `none`.
+    pub fn parse(s: &str) -> anyhow::Result<CodecSpec> {
+        let (head, rest) = match s.split_once(':') {
+            Some((h, r)) => (h, r),
+            None => (s, ""),
+        };
+        let mut kv = std::collections::BTreeMap::new();
+        for part in rest.split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad codec param '{part}' in '{s}'"))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let f = |kv: &std::collections::BTreeMap<String, String>, k: &str, d: f32| -> anyhow::Result<f32> {
+            match kv.get(k) {
+                None => Ok(d),
+                Some(v) => v.parse().map_err(|e| anyhow::anyhow!("bad {k}={v}: {e}")),
+            }
+        };
+        Ok(match head {
+            "none" => CodecSpec::None,
+            "vgc" => {
+                let alpha = f(&kv, "alpha", 1.5)?;
+                let zeta = f(&kv, "zeta", 0.999)?;
+                if kv.get("index").map(|s| s.as_str()) == Some("gamma") {
+                    CodecSpec::VgcCompact { alpha, zeta }
+                } else {
+                    CodecSpec::Vgc { alpha, zeta }
+                }
+            }
+            "strom" => CodecSpec::Strom {
+                tau: f(&kv, "tau", 0.01)?,
+            },
+            "hybrid" => CodecSpec::Hybrid {
+                tau: f(&kv, "tau", 0.01)?,
+                alpha: f(&kv, "alpha", 2.0)?,
+                zeta: f(&kv, "zeta", 0.999)?,
+            },
+            "qsgd" => CodecSpec::Qsgd {
+                bits: f(&kv, "bits", 2.0)? as u32,
+                bucket: f(&kv, "d", 128.0)? as usize,
+            },
+            "terngrad" => CodecSpec::TernGrad,
+            "onebit" => CodecSpec::OneBit,
+            "adaptive" => CodecSpec::Adaptive {
+                pi: f(&kv, "pi", 0.01)?,
+            },
+            other => anyhow::bail!("unknown codec '{other}'"),
+        })
+    }
+
+    /// Instantiate one worker's codec. `worker_seed` feeds the stochastic
+    /// codecs (QSGD/TernGrad rounding).
+    pub fn build(&self, layout: &Layout, worker_seed: u64) -> Box<dyn Codec> {
+        match *self {
+            CodecSpec::None => Box::new(none::NoCompression::new(layout.n())),
+            CodecSpec::Vgc { alpha, zeta } => {
+                Box::new(vgc::VgcCodec::new(layout.clone(), alpha, zeta))
+            }
+            CodecSpec::VgcCompact { alpha, zeta } => Box::new(
+                vgc::VgcCodec::new(layout.clone(), alpha, zeta).with_compact_indices(true),
+            ),
+            CodecSpec::Strom { tau } => Box::new(strom::StromCodec::new(layout.n(), tau)),
+            CodecSpec::Hybrid { tau, alpha, zeta } => {
+                Box::new(hybrid::HybridCodec::new(layout.clone(), tau, alpha, zeta))
+            }
+            CodecSpec::Qsgd { bits, bucket } => Box::new(qsgd::QsgdCodec::new(
+                layout.n(),
+                bits,
+                bucket,
+                Pcg32::new(0x5D01 ^ worker_seed, worker_seed),
+            )),
+            CodecSpec::TernGrad => Box::new(terngrad::TernGradCodec::new(
+                layout.clone(),
+                Pcg32::new(0x7E44 ^ worker_seed, worker_seed),
+            )),
+            CodecSpec::OneBit => Box::new(onebit::OneBitCodec::new(layout.clone())),
+            CodecSpec::Adaptive { pi } => {
+                Box::new(adaptive::AdaptiveCodec::new(layout.n(), pi))
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            CodecSpec::None => "none".into(),
+            CodecSpec::Vgc { alpha, .. } => format!("vgc(α={alpha})"),
+            CodecSpec::VgcCompact { alpha, .. } => format!("vgc-γ(α={alpha})"),
+            CodecSpec::Strom { tau } => format!("strom(τ={tau})"),
+            CodecSpec::Hybrid { tau, alpha, .. } => format!("hybrid(τ={tau},α={alpha})"),
+            CodecSpec::Qsgd { bits, bucket } => format!("qsgd({bits}bit,d={bucket})"),
+            CodecSpec::TernGrad => "terngrad".into(),
+            CodecSpec::OneBit => "onebit".into(),
+            CodecSpec::Adaptive { pi } => format!("adaptive(π={pi})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_codec_specs() {
+        assert_eq!(CodecSpec::parse("none").unwrap(), CodecSpec::None);
+        assert_eq!(
+            CodecSpec::parse("vgc:alpha=2.0").unwrap(),
+            CodecSpec::Vgc { alpha: 2.0, zeta: 0.999 }
+        );
+        assert_eq!(
+            CodecSpec::parse("strom:tau=0.1").unwrap(),
+            CodecSpec::Strom { tau: 0.1 }
+        );
+        assert_eq!(
+            CodecSpec::parse("hybrid:tau=0.01,alpha=2").unwrap(),
+            CodecSpec::Hybrid { tau: 0.01, alpha: 2.0, zeta: 0.999 }
+        );
+        assert_eq!(
+            CodecSpec::parse("qsgd:bits=3,d=512").unwrap(),
+            CodecSpec::Qsgd { bits: 3, bucket: 512 }
+        );
+        assert!(CodecSpec::parse("bogus").is_err());
+        assert!(CodecSpec::parse("vgc:alpha").is_err());
+    }
+}

@@ -1,0 +1,89 @@
+//! No-compression baseline: the raw batch-mean gradient as f32.
+//!
+//! This is the paper's "no compression" row: every parameter is "sent"
+//! every step, 32 bits each, compression ratio 1.
+
+use super::encode::{ByteReader, ByteWriter};
+use super::{Aggregation, Codec, Message};
+
+pub struct NoCompression {
+    n: usize,
+}
+
+impl NoCompression {
+    pub fn new(n: usize) -> NoCompression {
+        NoCompression { n }
+    }
+}
+
+impl Codec for NoCompression {
+    fn name(&self) -> String {
+        "none".into()
+    }
+
+    fn aggregation(&self) -> Aggregation {
+        Aggregation::Sum
+    }
+
+    fn encode_step(&mut self, gsum: &[f32], _gsumsq: &[f32]) -> Message {
+        assert_eq!(gsum.len(), self.n);
+        let mut w = ByteWriter::with_capacity(4 * self.n);
+        for &g in gsum {
+            w.f32(g);
+        }
+        Message {
+            bytes: w.finish(),
+            elements: self.n as u64,
+            payload_bits: self.n as u64 * 32,
+        }
+    }
+
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(out.len() == self.n, "output length mismatch");
+        anyhow::ensure!(
+            bytes.len() == 4 * self.n,
+            "raw message has {} bytes, expected {}",
+            bytes.len(),
+            4 * self.n
+        );
+        let mut r = ByteReader::new(bytes);
+        for o in out.iter_mut() {
+            *o += r.f32()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let g = vec![1.5f32, -2.25, 0.0, 3.125e-7];
+        let mut c = NoCompression::new(4);
+        let msg = c.encode_step(&g, &[0.0; 4]);
+        assert_eq!(msg.elements, 4);
+        assert_eq!(msg.wire_bits(), 128);
+        let mut out = vec![0.0f32; 4];
+        c.decode_into(&msg.bytes, &mut out).unwrap();
+        assert_eq!(out, g);
+    }
+
+    #[test]
+    fn decode_accumulates() {
+        let g = vec![1.0f32, 2.0];
+        let mut c = NoCompression::new(2);
+        let msg = c.encode_step(&g, &[0.0; 2]);
+        let mut out = vec![10.0f32, 20.0];
+        c.decode_into(&msg.bytes, &mut out).unwrap();
+        assert_eq!(out, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn rejects_wrong_size() {
+        let c = NoCompression::new(4);
+        let mut out = vec![0.0f32; 4];
+        assert!(c.decode_into(&[0u8; 12], &mut out).is_err());
+    }
+}

@@ -1,0 +1,298 @@
+//! The paper's 4-bit sign+exponent quantizer (Sec. 4.2, Appendix B).
+//!
+//! For a quantization group (one weight matrix / tensor) with max
+//! absolute value `M_k`, every selected element `g` is quantized to a
+//! signed power of two `± 2^(mexp - d)` where `mexp = ⌊log₂ M_k⌋` and
+//! `d ∈ [0, 7]` is the 3-bit exponent code:
+//!
+//!   1. if `|g| > 2^mexp`, truncate to `2^mexp`;
+//!   2. otherwise round to the *closer* of `2^⌊log₂|g|⌋`, `2^⌈log₂|g|⌉`;
+//!   3. `d = mexp − log₂ g'`; values with `d > 7` are dropped (too small
+//!      relative to the group max to matter).
+//!
+//! Per Sec. 4.4 this is implemented purely with binary operations and
+//! integer arithmetic on the IEEE-754 representation: `2^⌊log₂x⌋` is the
+//! mantissa truncated to zero; round-to-closer-power is "add one to the
+//! most significant bit of the mantissa, then mask the mantissa to 0"
+//! (the tie `1.5·2^e` rounds up, matching the paper's running example).
+//! No float ops on the encode path.
+
+const MANTISSA_MASK: u32 = 0x007F_FFFF;
+const EXP_MASK: u32 = 0x7F80_0000;
+const SIGN_MASK: u32 = 0x8000_0000;
+const MANTISSA_MSB: u32 = 0x0040_0000;
+
+/// `⌊log₂ x⌋` for positive finite x, as the raw IEEE exponent (biased).
+/// Subnormals collapse to biased exponent 0 (they quantize to d > 7 for
+/// any realistic group max, so the inaccuracy is unobservable).
+#[inline]
+fn biased_floor_log2(bits: u32) -> i32 {
+    ((bits & EXP_MASK) >> 23) as i32
+}
+
+/// `2^⌊log₂ x⌋` via mantissa truncation (the paper's bit trick).
+#[inline]
+pub fn pow2_floor(x: f32) -> f32 {
+    f32::from_bits(x.to_bits() & !MANTISSA_MASK & !SIGN_MASK)
+}
+
+/// Round positive x to the closer of `2^⌊log₂x⌋` / `2^⌈log₂x⌉` via the
+/// mantissa-MSB-add trick. Ties (`1.5·2^e`) round up.
+#[inline]
+pub fn pow2_round(x: f32) -> f32 {
+    let bits = x.to_bits() & !SIGN_MASK;
+    f32::from_bits((bits + MANTISSA_MSB) & !MANTISSA_MASK)
+}
+
+/// The biased-exponent form of `⌊log₂ M_k⌋` used on the wire: we send
+/// the *unbiased* exponent (an i32) so the decoder is self-contained.
+#[inline]
+pub fn floor_log2_exp(m: f32) -> i32 {
+    debug_assert!(m > 0.0 && m.is_finite());
+    biased_floor_log2(m.to_bits()) - 127
+}
+
+/// Quantize one element against the group's `mexp = ⌊log₂ M_k⌋`.
+///
+/// Returns `Some((negative, d))` with `d ∈ [0,7]`, or `None` if the
+/// element is dropped (zero, or `d > 7`).
+#[inline]
+pub fn quantize(g: f32, mexp: i32) -> Option<(bool, u8)> {
+    if g == 0.0 || !g.is_finite() {
+        return None;
+    }
+    let negative = g < 0.0;
+    let abs_bits = g.to_bits() & !SIGN_MASK;
+    // Step 1+2 fused: round to the closer power of two, then clamp to
+    // 2^mexp. (For |g| > 2^mexp the clamp implements the truncation rule;
+    // rounding first cannot overshoot past 2^(mexp+1) because |g| <= M_k
+    // < 2^(mexp+1).)
+    let rounded = (abs_bits + MANTISSA_MSB) & !MANTISSA_MASK;
+    let e_unbiased = ((rounded & EXP_MASK) >> 23) as i32 - 127;
+    let e = e_unbiased.min(mexp);
+    let d = mexp - e;
+    if d > 7 {
+        return None;
+    }
+    Some((negative, d as u8))
+}
+
+/// Decode a (sign, d) code back to `± 2^(mexp - d)`.
+#[inline]
+pub fn dequantize(negative: bool, d: u8, mexp: i32) -> f32 {
+    let e = mexp - d as i32;
+    let v = exp2i(e);
+    if negative {
+        -v
+    } else {
+        v
+    }
+}
+
+/// `2^e` for integer e, exact over the normal f32 range, 0 below it.
+#[inline]
+pub fn exp2i(e: i32) -> f32 {
+    if e < -126 {
+        // Would be subnormal; such codes cannot be produced by `quantize`
+        // against any normal M_k with d <= 7 unless mexp is near the
+        // bottom of the range — decode to the nearest representable.
+        return f32::from_bits(1u32 << (23 + e + 149).clamp(0, 22) as u32);
+    }
+    if e > 127 {
+        return f32::INFINITY;
+    }
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// Relative error bound of the quantizer for kept elements in the
+/// rounding regime (|g| ≤ 2^mexp): decoded/true ∈ [2/3, 4/3] (round to
+/// the nearer power of two). Truncated elements (2^mexp < |g| ≤ M_k)
+/// decode to exactly 2^mexp, so their ratio can reach 1/2 when M_k sits
+/// just below 2^(mexp+1). Used by the conservation/bracket tests.
+pub const RELATIVE_BRACKET_LO: f32 = 2.0 / 3.0;
+pub const RELATIVE_BRACKET_HI: f32 = 4.0 / 3.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn pow2_floor_matches_float_math() {
+        testkit::for_all(
+            "pow2_floor == 2^floor(log2 x)",
+            |rng: &mut Pcg32| {
+                // Positive normal floats across the whole range.
+                let e = testkit::usize_in(rng, 1, 252) as u32; // biased exp, normals
+                let m = rng.next_u32() & MANTISSA_MASK;
+                f32::from_bits((e << 23) | m)
+            },
+            |&x| {
+                let want = 2f32.powf(x.log2().floor());
+                let got = pow2_floor(x);
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("x={x}: got {got}, want {want}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn pow2_round_picks_closer_power() {
+        testkit::for_all(
+            "pow2_round closer-of-two",
+            |rng: &mut Pcg32| {
+                let e = testkit::usize_in(rng, 10, 240) as u32;
+                let m = rng.next_u32() & MANTISSA_MASK;
+                f32::from_bits((e << 23) | m)
+            },
+            |&x| {
+                let lo = pow2_floor(x);
+                let hi = lo * 2.0;
+                let got = pow2_round(x);
+                let closer = if (x - lo) < (hi - x) { lo } else { hi };
+                // Tie x == 1.5*lo rounds up — covered by the `<`.
+                if got == closer {
+                    Ok(())
+                } else {
+                    Err(format!("x={x}: got {got}, lo {lo} hi {hi}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn appendix_b_running_example() {
+        // Paper Appendix B: elements (0.04, 0.31, -6.25, 22.25, -35.75),
+        // M_k = 35.75, ⌊log2 M⌋ = 5 (2^5 = 32).
+        let mexp = floor_log2_exp(35.75);
+        assert_eq!(mexp, 5);
+        // 0.04 -> g' = 0.03125, d = 10 > 7: dropped.
+        assert_eq!(quantize(0.04, mexp), None);
+        // 0.31 -> g' = 0.25, d = 7, positive.
+        assert_eq!(quantize(0.31, mexp), Some((false, 7)));
+        // -6.25 -> g' = 8, d = 2, negative.
+        assert_eq!(quantize(-6.25, mexp), Some((true, 2)));
+        // 22.25 -> g' = 16, d = 1, positive.
+        assert_eq!(quantize(22.25, mexp), Some((false, 1)));
+        // -35.75 -> truncated to 32, d = 0, negative.
+        assert_eq!(quantize(-35.75, mexp), Some((true, 0)));
+        // Decoded values.
+        assert_eq!(dequantize(false, 7, mexp), 0.25);
+        assert_eq!(dequantize(true, 2, mexp), -8.0);
+        assert_eq!(dequantize(false, 1, mexp), 16.0);
+        assert_eq!(dequantize(true, 0, mexp), -32.0);
+    }
+
+    #[test]
+    fn quantize_drops_zero_and_nonfinite() {
+        assert_eq!(quantize(0.0, 5), None);
+        assert_eq!(quantize(-0.0, 5), None);
+        assert_eq!(quantize(f32::NAN, 5), None);
+        assert_eq!(quantize(f32::INFINITY, 5), None);
+    }
+
+    #[test]
+    fn decode_brackets_true_value() {
+        testkit::for_all(
+            "decoded value within [2/3, 4/3] of true (non-truncated)",
+            |rng: &mut Pcg32| {
+                let g = rng.next_normal() * 10f32.powi(rng.next_bounded(7) as i32 - 3);
+                (g, 8.0f32.max(g.abs() * (1.0 + rng.next_f32())))
+            },
+            |&(g, m)| {
+                let mexp = floor_log2_exp(m);
+                match quantize(g, mexp) {
+                    None => Ok(()), // dropped: nothing to bracket
+                    Some((neg, d)) => {
+                        let dec = dequantize(neg, d, mexp);
+                        if g == 0.0 {
+                            return Ok(());
+                        }
+                        let ratio = dec / g;
+                        // Truncated elements (|g| > 2^mexp) can decode
+                        // below 2/3; only check the rounding regime.
+                        if g.abs() <= exp2i(mexp) {
+                            if ratio >= RELATIVE_BRACKET_LO - 1e-6
+                                && ratio <= RELATIVE_BRACKET_HI + 1e-6
+                            {
+                                Ok(())
+                            } else {
+                                Err(format!("g={g} decoded {dec} ratio {ratio}"))
+                            }
+                        } else {
+                            if dec.signum() == g.signum() {
+                                Ok(())
+                            } else {
+                                Err("sign flip".into())
+                            }
+                        }
+                    }
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn d_always_in_code_range() {
+        testkit::for_all(
+            "d in [0,7]",
+            |rng: &mut Pcg32| {
+                let v = testkit::adversarial_vec(rng, 16);
+                let m = v.iter().fold(1e-3f32, |a, b| a.max(b.abs()));
+                (v, m)
+            },
+            |(v, m)| {
+                if !m.is_finite() {
+                    return Ok(());
+                }
+                let mexp = floor_log2_exp(*m);
+                for &g in v {
+                    if let Some((_, d)) = quantize(g, mexp) {
+                        if d > 7 {
+                            return Err(format!("d={d} out of range for g={g}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn exp2i_matches_powi() {
+        for e in -126..=127 {
+            assert_eq!(exp2i(e), 2f32.powi(e), "e={e}");
+        }
+    }
+
+    #[test]
+    fn group_max_always_encodable() {
+        // The max element of a group must never be dropped (d == 0).
+        testkit::for_all(
+            "group max encodes with d=0",
+            |rng: &mut Pcg32| {
+                let mut v = testkit::gradient_vec(rng, 32);
+                if v.iter().all(|x| *x == 0.0) {
+                    v[0] = 1.0;
+                }
+                v
+            },
+            |v| {
+                let m = v.iter().fold(0f32, |a, b| a.max(b.abs()));
+                let mexp = floor_log2_exp(m);
+                let &gmax = v
+                    .iter()
+                    .max_by(|a, b| a.abs().partial_cmp(&b.abs()).unwrap())
+                    .unwrap();
+                match quantize(gmax, mexp) {
+                    Some((_, d)) if d <= 1 => Ok(()),
+                    other => Err(format!("max {gmax} quantized to {other:?}")),
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,179 @@
+//! Strom (2015) threshold compression — the paper's main sparse
+//! baseline.
+//!
+//! Each worker accumulates gradients into a residual `r_i`; when
+//! `|r_i| > τ` the worker sends one sign bit for the element and
+//! subtracts `±τ` from the residual ("gradients are decoded up to the
+//! threshold and quantization errors are added to the gradients
+//! calculated in the next step"). The decoded value is exactly `±τ`.
+//!
+//! Wire format: u32 count, then count × u32 sign+index words (the paper
+//! counts one 32-bit word per sent pair for all algorithms, Sec. 6).
+
+use super::encode::{pack_sign_index, unpack_sign_index, ByteReader, ByteWriter};
+use super::{Aggregation, Codec, Message};
+
+pub struct StromCodec {
+    tau: f32,
+    r: Vec<f32>,
+}
+
+impl StromCodec {
+    pub fn new(n: usize, tau: f32) -> StromCodec {
+        assert!(tau > 0.0, "tau must be positive");
+        StromCodec {
+            tau,
+            r: vec![0.0; n],
+        }
+    }
+
+    pub fn r(&self) -> &[f32] {
+        &self.r
+    }
+
+    pub fn tau(&self) -> f32 {
+        self.tau
+    }
+}
+
+impl Codec for StromCodec {
+    fn name(&self) -> String {
+        format!("strom(tau={})", self.tau)
+    }
+
+    fn aggregation(&self) -> Aggregation {
+        Aggregation::Sum
+    }
+
+    fn encode_step(&mut self, gsum: &[f32], _gsumsq: &[f32]) -> Message {
+        assert_eq!(gsum.len(), self.r.len());
+        let mut w = ByteWriter::new();
+        w.u32(0); // count placeholder
+        let mut count = 0u32;
+        for i in 0..self.r.len() {
+            self.r[i] += gsum[i];
+            if self.r[i] > self.tau {
+                w.u32(pack_sign_index(false, i as u32));
+                self.r[i] -= self.tau;
+                count += 1;
+            } else if self.r[i] < -self.tau {
+                w.u32(pack_sign_index(true, i as u32));
+                self.r[i] += self.tau;
+                count += 1;
+            }
+        }
+        let mut bytes = w.finish();
+        bytes[0..4].copy_from_slice(&count.to_le_bytes());
+        Message {
+            payload_bits: count as u64 * 32,
+            elements: count as u64,
+            bytes,
+        }
+    }
+
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) -> anyhow::Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let count = r.u32()?;
+        for _ in 0..count {
+            let (neg, index) = unpack_sign_index(r.u32()?);
+            let index = index as usize;
+            anyhow::ensure!(index < out.len(), "index {index} out of range");
+            out[index] += if neg { -self.tau } else { self.tau };
+        }
+        anyhow::ensure!(r.done(), "trailing bytes");
+        Ok(())
+    }
+
+    fn residual_l1(&self) -> f64 {
+        self.r.iter().map(|x| x.abs() as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn below_threshold_sends_nothing() {
+        let mut c = StromCodec::new(4, 0.5);
+        let msg = c.encode_step(&[0.4, -0.3, 0.0, 0.49], &[0.0; 4]);
+        assert_eq!(msg.elements, 0);
+    }
+
+    #[test]
+    fn above_threshold_sends_sign_and_subtracts_tau() {
+        let mut c = StromCodec::new(3, 0.5);
+        let msg = c.encode_step(&[0.7, -0.9, 0.1], &[0.0; 3]);
+        assert_eq!(msg.elements, 2);
+        let mut out = vec![0.0; 3];
+        c.decode_into(&msg.bytes, &mut out).unwrap();
+        assert_eq!(out, vec![0.5, -0.5, 0.0]);
+        // Residual keeps the remainder (1-bit SGD error feedback).
+        assert!((c.r()[0] - 0.2).abs() < 1e-6);
+        assert!((c.r()[1] + 0.4).abs() < 1e-6);
+        assert!((c.r()[2] - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn residual_accumulates_across_steps() {
+        let mut c = StromCodec::new(1, 1.0);
+        for _ in 0..2 {
+            let msg = c.encode_step(&[0.4], &[0.0]);
+            assert_eq!(msg.elements, 0);
+        }
+        // Third step: r = 1.2 > 1.0 -> send one τ, keep 0.2.
+        let msg = c.encode_step(&[0.4], &[0.0]);
+        assert_eq!(msg.elements, 1);
+        assert!((c.r()[0] - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn conservation_sent_plus_residual_equals_stream() {
+        // Exact invariant: τ·(#pos - #neg per element) + r_i == Σ gsum_i.
+        testkit::for_all(
+            "strom conservation",
+            |rng: &mut Pcg32| {
+                let n = testkit::usize_in(rng, 1, 64);
+                let steps = testkit::usize_in(rng, 1, 30);
+                let tau = testkit::f32_in(rng, 0.01, 0.5);
+                let stream: Vec<Vec<f32>> =
+                    (0..steps).map(|_| testkit::gradient_vec(rng, n)).collect();
+                (tau, stream)
+            },
+            |(tau, stream)| {
+                let n = stream[0].len();
+                let mut c = StromCodec::new(n, *tau);
+                let mut decoded_total = vec![0.0f32; n];
+                for g in stream {
+                    let msg = c.encode_step(g, &vec![0.0; n]);
+                    c.decode_into(&msg.bytes, &mut decoded_total)
+                        .map_err(|e| e.to_string())?;
+                }
+                for i in 0..n {
+                    let total: f32 = stream.iter().map(|g| g[i]).sum();
+                    let got = decoded_total[i] + c.r()[i];
+                    if (got - total).abs() > 1e-4 * (1.0 + total.abs()) {
+                        return Err(format!("i={i}: {got} != {total}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn single_quantum_per_step() {
+        // Even a huge spike emits at most one ±τ per step (Alg. 2's
+        // single-subtraction form); the rest drains over later steps.
+        let mut c = StromCodec::new(1, 0.1);
+        let msg = c.encode_step(&[1.0], &[0.0]);
+        assert_eq!(msg.elements, 1);
+        assert!((c.r()[0] - 0.9).abs() < 1e-6);
+        // Drains with zero new gradient.
+        let msg2 = c.encode_step(&[0.0], &[0.0]);
+        assert_eq!(msg2.elements, 1);
+        assert!((c.r()[0] - 0.8).abs() < 1e-6);
+    }
+}

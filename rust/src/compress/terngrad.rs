@@ -1,0 +1,187 @@
+//! TernGrad (Wen et al., 2017) baseline: ternary stochastic gradients.
+//!
+//! Per quantization group (layer) with scaler `s_k = max|g|`, each
+//! element is sent as `c_i ∈ {−1, 0, +1}` with
+//! `P(|c_i| = 1) = |g_i| / s_k` (unbiased: `E[c_i·s_k] = g_i`). The wire
+//! carries one f32 scaler per group plus 2 bits per element, matching
+//! the paper's description of TernGrad as a 2-bit quantization method.
+//!
+//! Stateless across steps, like QSGD.
+
+use super::encode::{BitReader, BitWriter, ByteReader, ByteWriter};
+use super::{Aggregation, Codec, Message};
+use crate::model::Layout;
+use crate::util::rng::Pcg32;
+
+pub struct TernGradCodec {
+    layout: Layout,
+    rng: Pcg32,
+}
+
+impl TernGradCodec {
+    pub fn new(layout: Layout, rng: Pcg32) -> TernGradCodec {
+        TernGradCodec { layout, rng }
+    }
+}
+
+/// 2-bit codes: 0 = zero, 1 = +1, 2 = −1 (3 unused).
+const CODE_ZERO: u32 = 0;
+const CODE_POS: u32 = 1;
+const CODE_NEG: u32 = 2;
+
+impl Codec for TernGradCodec {
+    fn name(&self) -> String {
+        "terngrad".into()
+    }
+
+    fn aggregation(&self) -> Aggregation {
+        Aggregation::Sum
+    }
+
+    fn encode_step(&mut self, gsum: &[f32], _gsumsq: &[f32]) -> Message {
+        let n = self.layout.n();
+        assert_eq!(gsum.len(), n);
+        let mut w = ByteWriter::new();
+        w.u32(self.layout.n_groups() as u32);
+        let mut bits = BitWriter::new();
+        let mut nonzero = 0u64;
+        for group in self.layout.groups() {
+            let s_k = gsum[group.range()]
+                .iter()
+                .fold(0f32, |a, b| a.max(b.abs()));
+            w.f32(s_k);
+            for &g in &gsum[group.range()] {
+                let code = if s_k == 0.0 || g == 0.0 {
+                    CODE_ZERO
+                } else if self.rng.next_bool(g.abs() / s_k) {
+                    nonzero += 1;
+                    if g > 0.0 {
+                        CODE_POS
+                    } else {
+                        CODE_NEG
+                    }
+                } else {
+                    CODE_ZERO
+                };
+                bits.push(code, 2);
+            }
+        }
+        let packed = bits.finish();
+        w.u32(packed.len() as u32);
+        w.bytes(&packed);
+        Message {
+            bytes: w.finish(),
+            elements: nonzero,
+            payload_bits: n as u64 * 2 + self.layout.n_groups() as u64 * 32,
+        }
+    }
+
+    fn decode_into(&self, bytes: &[u8], out: &mut [f32]) -> anyhow::Result<()> {
+        let n = self.layout.n();
+        anyhow::ensure!(out.len() == n, "output length mismatch");
+        let mut r = ByteReader::new(bytes);
+        let n_groups = r.u32()? as usize;
+        anyhow::ensure!(n_groups == self.layout.n_groups(), "group count mismatch");
+        let mut scalers = Vec::with_capacity(n_groups);
+        for _ in 0..n_groups {
+            scalers.push(r.f32()?);
+        }
+        let packed_len = r.u32()? as usize;
+        anyhow::ensure!(r.remaining() == packed_len, "packed length mismatch");
+        let mut bits = BitReader::new(&bytes[bytes.len() - packed_len..]);
+        for (gi, group) in self.layout.groups().iter().enumerate() {
+            let s_k = scalers[gi];
+            for i in group.range() {
+                match bits.pull(2)? {
+                    CODE_ZERO => {}
+                    CODE_POS => out[i] += s_k,
+                    CODE_NEG => out[i] -= s_k,
+                    other => anyhow::bail!("invalid ternary code {other}"),
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codec(n: usize, seed: u64) -> TernGradCodec {
+        TernGradCodec::new(Layout::uniform(n, 16), Pcg32::new(seed, seed))
+    }
+
+    #[test]
+    fn zero_roundtrip() {
+        let mut c = codec(20, 0);
+        let msg = c.encode_step(&[0.0; 20], &[0.0; 20]);
+        let mut out = vec![0.0; 20];
+        c.decode_into(&msg.bytes, &mut out).unwrap();
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn group_max_always_fires() {
+        // P(|c|=1) = 1 for the max element of each group.
+        let mut g = vec![0.0f32; 16];
+        g[3] = -2.5;
+        let mut c = codec(16, 1);
+        let msg = c.encode_step(&g, &[0.0; 16]);
+        let mut out = vec![0.0; 16];
+        c.decode_into(&msg.bytes, &mut out).unwrap();
+        assert_eq!(out[3], -2.5);
+        assert_eq!(msg.elements, 1);
+    }
+
+    #[test]
+    fn unbiasedness() {
+        let g = vec![0.5f32, -1.0, 0.25, 0.0, 0.75, -0.1, 0.9, -0.6];
+        let n = g.len();
+        let trials = 4000;
+        let mut acc = vec![0.0f64; n];
+        for t in 0..trials {
+            let mut c = codec(n, t as u64 + 1);
+            let msg = c.encode_step(&g, &vec![0.0; n]);
+            let mut out = vec![0.0f32; n];
+            c.decode_into(&msg.bytes, &mut out).unwrap();
+            for i in 0..n {
+                acc[i] += out[i] as f64;
+            }
+        }
+        for i in 0..n {
+            let mean = acc[i] / trials as f64;
+            assert!(
+                (mean - g[i] as f64).abs() < 0.05,
+                "i={i}: E={mean} vs {}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn decoded_values_are_ternary_multiples() {
+        let g: Vec<f32> = (0..32).map(|i| ((i * 7) % 13) as f32 * 0.1 - 0.6).collect();
+        let mut c = codec(32, 5);
+        let msg = c.encode_step(&g, &vec![0.0; 32]);
+        let mut out = vec![0.0; 32];
+        c.decode_into(&msg.bytes, &mut out).unwrap();
+        let l = Layout::uniform(32, 16);
+        for (gi, group) in l.groups().iter().enumerate() {
+            let s_k = g[group.range()].iter().fold(0f32, |a, b| a.max(b.abs()));
+            for i in group.range() {
+                let ok = out[i] == 0.0 || (out[i].abs() - s_k).abs() < 1e-6;
+                assert!(ok, "out[{i}]={} not in {{0, ±{s_k}}} (group {gi})", out[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn payload_is_2_bits_per_element() {
+        let n = 100;
+        let mut c = codec(n, 0);
+        let msg = c.encode_step(&vec![0.1; n], &vec![0.0; n]);
+        let n_groups = Layout::uniform(n, 16).n_groups() as u64;
+        assert_eq!(msg.payload_bits, 200 + n_groups * 32);
+    }
+}

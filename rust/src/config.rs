@@ -1,0 +1,231 @@
+//! Experiment configuration (S15): defaults, named presets, CLI
+//! overrides, and JSON round-trip.
+//!
+//! A `TrainConfig` fully determines a run (model + codec + optimizer +
+//! schedule + data + seeds), so the table harnesses are just lists of
+//! configs. Configs serialize to JSON for the record in EXPERIMENTS.md
+//! and load back for replays.
+
+use crate::compress::CodecSpec;
+use crate::optim::LrSchedule;
+use crate::util::cli::Args;
+use crate::util::json::{num, obj, s, Json};
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub codec: CodecSpec,
+    pub optimizer: String,
+    pub schedule: LrSchedule,
+    pub weight_decay: f32,
+    pub steps: u64,
+    pub seed: u64,
+    pub eval_every: u64,
+    pub log_every: u64,
+    /// Training-set size (synthetic).
+    pub train_size: usize,
+    /// Held-out eval-set size.
+    pub test_size: usize,
+    /// Class separability of the synthetic data.
+    pub signal: f32,
+    /// Cross-check that all workers decode identical updates (costly:
+    /// decodes P× twice; on by default in tests, off in benches).
+    pub verify_sync: bool,
+}
+
+impl TrainConfig {
+    /// Per-model defaults tuned for the scaled synthetic workloads.
+    pub fn defaults(model: &str) -> TrainConfig {
+        let (steps, lr_sched, optimizer) = match model {
+            "mlp" => (200, "const:0.02", "momentum"),
+            "vgg_tiny" => (300, "step:0.003,0.5,150", "momentum"),
+            "vgg_cifar" => (200, "step:0.003,0.5,100", "momentum"),
+            "resnet_mini" => (300, "step:0.001,0.5,150", "momentum"),
+            "transformer" => (300, "const:0.002", "adam"),
+            _ => (200, "const:0.05", "momentum"),
+        };
+        TrainConfig {
+            model: model.to_string(),
+            codec: CodecSpec::Vgc {
+                alpha: 1.5,
+                zeta: 0.999,
+            },
+            optimizer: optimizer.into(),
+            schedule: LrSchedule::parse(lr_sched).unwrap(),
+            weight_decay: 5e-4,
+            steps,
+            seed: 0,
+            eval_every: 50,
+            log_every: 10,
+            train_size: 4096,
+            test_size: 1024,
+            signal: 1.0,
+            verify_sync: false,
+        }
+    }
+
+    /// Apply CLI flag overrides.
+    pub fn override_from(mut self, args: &Args) -> anyhow::Result<TrainConfig> {
+        if let Some(c) = args.get("codec") {
+            self.codec = CodecSpec::parse(c)?;
+        }
+        if let Some(o) = args.get("optimizer") {
+            self.optimizer = o.to_string();
+        }
+        if let Some(l) = args.get("lr") {
+            self.schedule = LrSchedule::parse(l)?;
+        }
+        self.weight_decay = args.parse_or("weight-decay", self.weight_decay)?;
+        self.steps = args.parse_or("steps", self.steps)?;
+        self.seed = args.parse_or("seed", self.seed)?;
+        self.eval_every = args.parse_or("eval-every", self.eval_every)?;
+        self.log_every = args.parse_or("log-every", self.log_every)?;
+        self.train_size = args.parse_or("train-size", self.train_size)?;
+        self.test_size = args.parse_or("test-size", self.test_size)?;
+        self.signal = args.parse_or("signal", self.signal)?;
+        if args.has("verify-sync") {
+            self.verify_sync = true;
+        }
+        Ok(self)
+    }
+
+    /// Serialize for the experiment record.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", s(&self.model)),
+            ("codec", s(&codec_str(&self.codec))),
+            ("optimizer", s(&self.optimizer)),
+            ("schedule", s(&schedule_str(&self.schedule))),
+            ("weight_decay", num(self.weight_decay as f64)),
+            ("steps", num(self.steps as f64)),
+            ("seed", num(self.seed as f64)),
+            ("train_size", num(self.train_size as f64)),
+            ("test_size", num(self.test_size as f64)),
+            ("signal", num(self.signal as f64)),
+        ])
+    }
+
+    /// Load from a JSON config file written by `to_json`.
+    pub fn from_json(j: &Json) -> anyhow::Result<TrainConfig> {
+        let model = j.expect("model")?.as_str()?;
+        let mut cfg = TrainConfig::defaults(model);
+        cfg.codec = CodecSpec::parse(j.expect("codec")?.as_str()?)?;
+        cfg.optimizer = j.expect("optimizer")?.as_str()?.to_string();
+        cfg.schedule = LrSchedule::parse(j.expect("schedule")?.as_str()?)?;
+        cfg.weight_decay = j.expect("weight_decay")?.as_f64()? as f32;
+        cfg.steps = j.expect("steps")?.as_usize()? as u64;
+        cfg.seed = j.expect("seed")?.as_usize()? as u64;
+        cfg.train_size = j.expect("train_size")?.as_usize()?;
+        cfg.test_size = j.expect("test_size")?.as_usize()?;
+        cfg.signal = j.expect("signal")?.as_f64()? as f32;
+        Ok(cfg)
+    }
+}
+
+/// Canonical string form of a codec spec (parses back via
+/// `CodecSpec::parse`).
+pub fn codec_str(c: &CodecSpec) -> String {
+    match c {
+        CodecSpec::None => "none".into(),
+        CodecSpec::Vgc { alpha, zeta } => format!("vgc:alpha={alpha},zeta={zeta}"),
+        CodecSpec::VgcCompact { alpha, zeta } => {
+            format!("vgc:alpha={alpha},zeta={zeta},index=gamma")
+        }
+        CodecSpec::Strom { tau } => format!("strom:tau={tau}"),
+        CodecSpec::Hybrid { tau, alpha, zeta } => {
+            format!("hybrid:tau={tau},alpha={alpha},zeta={zeta}")
+        }
+        CodecSpec::Qsgd { bits, bucket } => format!("qsgd:bits={bits},d={bucket}"),
+        CodecSpec::TernGrad => "terngrad".into(),
+        CodecSpec::OneBit => "onebit".into(),
+        CodecSpec::Adaptive { pi } => format!("adaptive:pi={pi}"),
+    }
+}
+
+/// Canonical string form of a schedule (parses back).
+pub fn schedule_str(sch: &LrSchedule) -> String {
+    match sch {
+        LrSchedule::Constant { lr } => format!("const:{lr}"),
+        LrSchedule::StepDecay { lr, factor, every } => {
+            format!("step:{lr},{factor},{every}")
+        }
+        LrSchedule::Warmup { lr, warmup } => format!("warmup:{lr},{warmup}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_per_model() {
+        let c = TrainConfig::defaults("transformer");
+        assert_eq!(c.optimizer, "adam");
+        let v = TrainConfig::defaults("vgg_tiny");
+        assert_eq!(v.optimizer, "momentum");
+    }
+
+    #[test]
+    fn cli_overrides_apply() {
+        let raw: Vec<String> = [
+            "--codec",
+            "strom:tau=0.1",
+            "--steps",
+            "42",
+            "--optimizer",
+            "adam",
+            "--lr",
+            "const:0.001",
+            "--verify-sync",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&raw, &["verify-sync"]).unwrap();
+        let cfg = TrainConfig::defaults("mlp").override_from(&args).unwrap();
+        assert_eq!(cfg.codec, CodecSpec::Strom { tau: 0.1 });
+        assert_eq!(cfg.steps, 42);
+        assert_eq!(cfg.optimizer, "adam");
+        assert!(cfg.verify_sync);
+    }
+
+    #[test]
+    fn bad_codec_flag_is_loud() {
+        let raw = vec!["--codec".to_string(), "nope:x=1".to_string()];
+        let args = Args::parse(&raw, &[]).unwrap();
+        assert!(TrainConfig::defaults("mlp").override_from(&args).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_config() {
+        let mut cfg = TrainConfig::defaults("vgg_tiny");
+        cfg.codec = CodecSpec::Hybrid {
+            tau: 0.01,
+            alpha: 2.0,
+            zeta: 0.999,
+        };
+        cfg.steps = 77;
+        let j = cfg.to_json();
+        let back = TrainConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.codec, cfg.codec);
+        assert_eq!(back.steps, 77);
+        assert_eq!(back.model, "vgg_tiny");
+    }
+
+    #[test]
+    fn codec_str_parses_back() {
+        for c in [
+            CodecSpec::None,
+            CodecSpec::Vgc { alpha: 1.5, zeta: 0.999 },
+            CodecSpec::Strom { tau: 0.01 },
+            CodecSpec::Hybrid { tau: 0.1, alpha: 2.0, zeta: 0.999 },
+            CodecSpec::Qsgd { bits: 2, bucket: 128 },
+            CodecSpec::TernGrad,
+            CodecSpec::OneBit,
+            CodecSpec::Adaptive { pi: 0.05 },
+            CodecSpec::VgcCompact { alpha: 1.5, zeta: 0.999 },
+        ] {
+            assert_eq!(CodecSpec::parse(&codec_str(&c)).unwrap(), c);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordinator (S14): the paper's distributed-training system.
+//!
+//! `Trainer` runs the synchronous data-parallel loop over simulated
+//! workers; `WorkerState` holds each worker's codec + shard. See
+//! DESIGN.md §1 for the full step anatomy and the substitution notes
+//! (in-process workers, modeled wall-clock).
+
+pub mod trainer;
+pub mod worker;
+
+pub use trainer::{PhaseTimes, Trainer};
+pub use worker::WorkerState;

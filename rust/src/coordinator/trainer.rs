@@ -1,0 +1,383 @@
+//! The synchronous data-parallel training loop (S14) — the system's
+//! leader.
+//!
+//! One step (Fig. 1 of the paper, whole-system view):
+//!
+//! 1. **CalcGrad** — one batched XLA call computes every worker's
+//!    Algorithm-1 moment increments (L2 grad artifact; the inner
+//!    reduction is the L1 Pallas kernel).
+//! 2. **Encode** — each worker's codec ingests its increments, applies
+//!    the variance criterion, quantizes and packs its message.
+//! 3. **CommunicateAndUpdate** — messages travel a byte-accurate ring
+//!    allgatherv; every worker decodes all messages and sums them into
+//!    the global update; the optimizer applies it locally (Sec. 4.3).
+//!
+//! All workers apply identical updates from identical gathered bytes,
+//! so one parameter vector represents them all; `verify_sync`
+//! cross-decodes from two workers' gathered views to prove it.
+
+use anyhow::Result;
+
+use super::worker::WorkerState;
+use crate::comm::allgatherv::ring_allgatherv;
+use crate::compress::Aggregation;
+use crate::config::TrainConfig;
+use crate::data::shard::Shard;
+use crate::data::{ImageDataset, TokenDataset};
+use crate::metrics::{EvalRecord, RunMetrics, StepRecord};
+use crate::model::Layout;
+use crate::optim::{apply_weight_decay, build as build_optimizer, Optimizer};
+use crate::runtime::{Client, Dtype, EvalOutput, Manifest, ModelRuntime};
+
+enum DataSource {
+    Images {
+        train: ImageDataset,
+        test: ImageDataset,
+    },
+    Tokens {
+        train: TokenDataset,
+        test: TokenDataset,
+    },
+}
+
+/// Wall-clock accounting per phase, for the §Perf record.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseTimes {
+    pub compute_s: f64,
+    pub encode_s: f64,
+    pub comm_decode_s: f64,
+    pub update_s: f64,
+}
+
+pub struct Trainer<'c> {
+    rt: ModelRuntime<'c>,
+    layout: Layout,
+    pub cfg: TrainConfig,
+    pub params: Vec<f32>,
+    workers: Vec<WorkerState>,
+    optimizer: Box<dyn Optimizer>,
+    data: DataSource,
+    pub metrics: RunMetrics,
+    pub phases: PhaseTimes,
+    step: u64,
+    // Reused step buffers (hot path: no per-step allocation).
+    xs_f32: Vec<f32>,
+    xs_i32: Vec<i32>,
+    ys: Vec<i32>,
+    update: Vec<f32>,
+    update_check: Vec<f32>,
+}
+
+impl<'c> Trainer<'c> {
+    pub fn new(client: &'c Client, manifest: &Manifest, cfg: TrainConfig) -> Result<Self> {
+        let rt = ModelRuntime::load(client, manifest, &cfg.model)?;
+        let entry = rt.entry.clone();
+        let layout = Layout::from_manifest(&entry)?;
+        let params = manifest.load_params(&entry)?;
+        let p = entry.workers;
+
+        let data = match entry.sample_dtype {
+            Dtype::F32 => DataSource::Images {
+                train: ImageDataset::synth_split(
+                    cfg.seed,
+                    0,
+                    cfg.train_size,
+                    &entry.sample_shape,
+                    entry.n_classes,
+                    cfg.signal,
+                ),
+                test: ImageDataset::synth_split(
+                    cfg.seed,
+                    1,
+                    cfg.test_size,
+                    &entry.sample_shape,
+                    entry.n_classes,
+                    cfg.signal,
+                ),
+            },
+            Dtype::I32 => DataSource::Tokens {
+                train: TokenDataset::synth_split(
+                    cfg.seed,
+                    0,
+                    cfg.train_size,
+                    entry.sample_elems(),
+                    entry.n_classes,
+                ),
+                test: TokenDataset::synth_split(
+                    cfg.seed,
+                    1,
+                    cfg.test_size.max(entry.eval_batch),
+                    entry.sample_elems(),
+                    entry.n_classes,
+                ),
+            },
+        };
+        let train_len = match &data {
+            DataSource::Images { train, .. } => train.len(),
+            DataSource::Tokens { train, .. } => train.len(),
+        };
+
+        let workers: Vec<WorkerState> = (0..p)
+            .map(|w| {
+                WorkerState::new(
+                    w,
+                    cfg.codec.build(&layout, cfg.seed.wrapping_add(w as u64)),
+                    Shard::new(train_len, w, p, cfg.seed),
+                )
+            })
+            .collect();
+
+        let optimizer = build_optimizer(&cfg.optimizer, entry.n_params)?;
+        let n = entry.n_params;
+        let b = entry.batch;
+        let elems = entry.sample_elems();
+        Ok(Trainer {
+            rt,
+            layout,
+            metrics: RunMetrics::new(n, p),
+            phases: PhaseTimes::default(),
+            workers,
+            optimizer,
+            data,
+            params,
+            cfg,
+            step: 0,
+            xs_f32: vec![0.0; p * b * elems],
+            xs_i32: vec![0; p * b * elems],
+            ys: vec![0; p * b],
+            update: vec![0.0; n],
+            update_check: Vec::new(),
+        })
+    }
+
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.rt.n_params()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.rt.workers()
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// Total undelivered residual mass across workers (diagnostics).
+    pub fn residual_l1(&self) -> f64 {
+        self.workers.iter().map(|w| w.codec.residual_l1()).sum()
+    }
+
+    fn fill_batches(&mut self) {
+        let e = &self.rt.entry;
+        let b = e.batch;
+        let elems = e.sample_elems();
+        for w in 0..e.workers {
+            let idxs = self.workers[w].shard.next_batch(b);
+            match &self.data {
+                DataSource::Images { train, .. } => {
+                    for (k, &i) in idxs.iter().enumerate() {
+                        let dst = (w * b + k) * elems;
+                        self.xs_f32[dst..dst + elems].copy_from_slice(train.sample(i));
+                        self.ys[w * b + k] = train.labels[i];
+                    }
+                }
+                DataSource::Tokens { train, .. } => {
+                    for (k, &i) in idxs.iter().enumerate() {
+                        let dst = (w * b + k) * elems;
+                        self.xs_i32[dst..dst + elems].copy_from_slice(train.sequence(i));
+                        self.ys[w * b + k] = 0; // unused by LMs
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run one full synchronous step; returns the step's mean loss.
+    pub fn train_step(&mut self) -> Result<f32> {
+        self.fill_batches();
+        let e = self.rt.entry.clone();
+
+        // (1) CalcGrad: batched multi-worker moments via PJRT.
+        let t0 = std::time::Instant::now();
+        let moments = match e.sample_dtype {
+            Dtype::F32 => self.rt.step(&self.params, Some(&self.xs_f32), None, &self.ys)?,
+            Dtype::I32 => self.rt.step(&self.params, None, Some(&self.xs_i32), &self.ys)?,
+        };
+        self.phases.compute_s += t0.elapsed().as_secs_f64();
+
+        // (2) Encode per worker.
+        let t1 = std::time::Instant::now();
+        let mut elements = 0u64;
+        let mut payload_bits = 0u64;
+        let mut wire_bytes = 0u64;
+        let mut msgs: Vec<Vec<u8>> = Vec::with_capacity(e.workers);
+        for w in 0..e.workers {
+            let msg = self.workers[w]
+                .codec
+                .encode_step(moments.gsum_of(w), moments.gsumsq_of(w));
+            elements += msg.elements;
+            payload_bits += msg.payload_bits;
+            wire_bytes += msg.bytes.len() as u64;
+            msgs.push(msg.bytes);
+        }
+        self.phases.encode_s += t1.elapsed().as_secs_f64();
+
+        // (3) Communicate: byte-accurate ring allgatherv, then decode.
+        let t2 = std::time::Instant::now();
+        let gathered = ring_allgatherv(&msgs);
+        self.update.iter_mut().for_each(|u| *u = 0.0);
+        for src_msg in &gathered.gathered[0] {
+            self.workers[0].codec.decode_into(src_msg, &mut self.update)?;
+        }
+        if self.workers[0].codec.aggregation() == Aggregation::Mean {
+            let inv = 1.0 / e.workers as f32;
+            self.update.iter_mut().for_each(|u| *u *= inv);
+        }
+        if self.cfg.verify_sync && e.workers > 1 {
+            // A different worker decodes its own gathered view; the
+            // updates must be bit-identical (synchrony invariant).
+            self.update_check.clear();
+            self.update_check.resize(e.n_params, 0.0);
+            let last = e.workers - 1;
+            for src_msg in &gathered.gathered[last] {
+                self.workers[last]
+                    .codec
+                    .decode_into(src_msg, &mut self.update_check)?;
+            }
+            if self.workers[last].codec.aggregation() == Aggregation::Mean {
+                let inv = 1.0 / e.workers as f32;
+                self.update_check.iter_mut().for_each(|u| *u *= inv);
+            }
+            anyhow::ensure!(
+                self.update == self.update_check,
+                "worker desync at step {}",
+                self.step
+            );
+        }
+        self.phases.comm_decode_s += t2.elapsed().as_secs_f64();
+
+        // (4) Update locally (identical on all workers).
+        let t3 = std::time::Instant::now();
+        let lr = self.cfg.schedule.at(self.step);
+        self.optimizer.step(&mut self.params, &self.update, lr);
+        apply_weight_decay(&mut self.params, lr, self.cfg.weight_decay);
+        self.phases.update_s += t3.elapsed().as_secs_f64();
+
+        let loss = moments.mean_loss();
+        self.metrics.record_step(StepRecord {
+            step: self.step,
+            loss,
+            lr,
+            elements_sent: elements,
+            payload_bits,
+            wire_bytes,
+        });
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Evaluate on the held-out set; records and returns the record.
+    pub fn evaluate(&mut self) -> Result<EvalRecord> {
+        let e = self.rt.entry.clone();
+        let rec = match &self.data {
+            DataSource::Images { test, .. } => {
+                let be = e.eval_batch;
+                let elems = e.sample_elems();
+                let mut correct = 0usize;
+                let mut total = 0usize;
+                let mut x = vec![0.0f32; be * elems];
+                let mut labels = vec![0i32; be];
+                let n_batches = test.len() / be;
+                for bi in 0..n_batches.max(1) {
+                    let count = be.min(test.len() - bi * be);
+                    if count == 0 {
+                        break;
+                    }
+                    for k in 0..be {
+                        let i = (bi * be + k).min(test.len() - 1);
+                        x[k * elems..(k + 1) * elems].copy_from_slice(test.sample(i));
+                        labels[k] = test.labels[i];
+                    }
+                    match self.rt.eval(&self.params, Some(&x), None)? {
+                        EvalOutput::Logits(logits) => {
+                            for k in 0..count {
+                                let row = &logits[k * e.n_classes..(k + 1) * e.n_classes];
+                                let mut best = 0;
+                                for (c, &v) in row.iter().enumerate() {
+                                    if v > row[best] {
+                                        best = c;
+                                    }
+                                }
+                                if best as i32 == labels[k] {
+                                    correct += 1;
+                                }
+                            }
+                            total += count;
+                        }
+                        other => anyhow::bail!("expected logits, got {other:?}"),
+                    }
+                }
+                EvalRecord {
+                    step: self.step,
+                    accuracy: correct as f32 / total.max(1) as f32,
+                    eval_loss: f32::NAN,
+                }
+            }
+            DataSource::Tokens { test, .. } => {
+                let be = e.eval_batch;
+                let elems = e.sample_elems();
+                let mut x = vec![0i32; be * elems];
+                for k in 0..be {
+                    let i = k.min(test.len() - 1);
+                    x[k * elems..(k + 1) * elems].copy_from_slice(test.sequence(i));
+                }
+                match self.rt.eval(&self.params, None, Some(&x))? {
+                    EvalOutput::Loss(l) => EvalRecord {
+                        step: self.step,
+                        accuracy: f32::NAN,
+                        eval_loss: l,
+                    },
+                    other => anyhow::bail!("expected loss, got {other:?}"),
+                }
+            }
+        };
+        self.metrics.record_eval(rec.clone());
+        Ok(rec)
+    }
+
+    /// Run the configured number of steps with periodic eval + logging.
+    pub fn run(&mut self, quiet: bool) -> Result<()> {
+        let steps = self.cfg.steps;
+        for _ in 0..steps {
+            let loss = self.train_step()?;
+            let s = self.step;
+            if !quiet && self.cfg.log_every > 0 && s % self.cfg.log_every == 0 {
+                println!(
+                    "step {s:>5}  loss {loss:>8.4}  lr {:>8.5}  ratio {:>10.1}  residual_l1 {:.3e}",
+                    self.cfg.schedule.at(s - 1),
+                    self.metrics.compression_ratio(),
+                    self.residual_l1(),
+                );
+            }
+            if self.cfg.eval_every > 0 && s % self.cfg.eval_every == 0 {
+                let rec = self.evaluate()?;
+                if !quiet {
+                    if rec.accuracy.is_nan() {
+                        println!("eval  step {s:>5}  loss {:.4}", rec.eval_loss);
+                    } else {
+                        println!("eval  step {s:>5}  accuracy {:.4}", rec.accuracy);
+                    }
+                }
+            }
+        }
+        // Final eval if the loop didn't land on an eval step.
+        if self.cfg.eval_every > 0 && self.step % self.cfg.eval_every != 0 {
+            self.evaluate()?;
+        }
+        Ok(())
+    }
+}

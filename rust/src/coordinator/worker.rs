@@ -1,0 +1,48 @@
+//! Per-worker state: compression codec + data shard.
+//!
+//! In a real deployment each worker process owns this state; in the
+//! in-process simulator the leader holds one `WorkerState` per logical
+//! worker. The gradient *computation* for all workers happens in a
+//! single batched XLA call (see `model.py`), so a worker here is purely
+//! its codec state and its view of the data.
+
+use crate::compress::Codec;
+use crate::data::shard::Shard;
+
+pub struct WorkerState {
+    pub id: usize,
+    pub codec: Box<dyn Codec>,
+    pub shard: Shard,
+}
+
+impl WorkerState {
+    pub fn new(id: usize, codec: Box<dyn Codec>, shard: Shard) -> WorkerState {
+        WorkerState { id, codec, shard }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CodecSpec;
+    use crate::model::Layout;
+
+    #[test]
+    fn workers_get_independent_codec_state() {
+        let layout = Layout::uniform(8, 4);
+        let spec = CodecSpec::Vgc {
+            alpha: 1.0,
+            zeta: 0.999,
+        };
+        let mut w0 = WorkerState::new(
+            0,
+            spec.build(&layout, 0),
+            Shard::new(64, 0, 2, 0),
+        );
+        let w1 = WorkerState::new(1, spec.build(&layout, 1), Shard::new(64, 1, 2, 0));
+        // Feeding w0 must not affect w1's residual.
+        w0.codec.encode_step(&[0.1; 8], &[10.0; 8]);
+        assert!(w0.codec.residual_l1() > 0.0);
+        assert_eq!(w1.codec.residual_l1(), 0.0);
+    }
+}

@@ -1,0 +1,269 @@
+//! Data pipeline (S11): synthetic datasets and deterministic sharding.
+//!
+//! The paper trains on CIFAR-10 and ImageNet; this testbed has neither
+//! (DESIGN.md §Substitutions), so we synthesize class-conditional
+//! datasets with a fixed seed: each class owns a random template
+//! pattern, a sample is `signal·template + noise·N(0,1)`. This yields a
+//! learnable-but-not-trivial classification problem whose gradient
+//! statistics (large early gradients, shrinking ambiguous ones later)
+//! exercise the same codec behaviour the real datasets do.
+//!
+//! For the LM workload, tokens come from a seeded order-1 Markov chain
+//! with sparse transitions — learnable next-token structure.
+
+pub mod shard;
+
+use crate::util::rng::Pcg32;
+
+/// An in-memory synthetic image classification dataset (flattened
+/// samples, row-major `[n, sample_elems]`).
+pub struct ImageDataset {
+    pub samples: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub sample_elems: usize,
+    pub n_classes: usize,
+}
+
+impl ImageDataset {
+    /// 1-D convenience wrapper (MLP-style flat inputs).
+    pub fn synth(
+        seed: u64,
+        n: usize,
+        sample_elems: usize,
+        n_classes: usize,
+        signal: f32,
+    ) -> ImageDataset {
+        Self::synth_split(seed, 0, n, &[sample_elems], n_classes, signal)
+    }
+
+    /// Generate `n` samples of shape `sample_shape` over `n_classes`
+    /// classes. `signal` controls separability (≈1.0 is comfortably
+    /// learnable for the tiny models; lower is harder).
+    ///
+    /// Class templates are **spatially low-frequency**: drawn on a 4×
+    /// coarser grid along each leading (spatial) dimension and
+    /// nearest-upsampled. High-frequency (iid-pixel) templates would be
+    /// invisible to the conv models — shared 3×3 kernels + pooling + GAP
+    /// average out pixel-level noise, so the task must put class signal
+    /// in low spatial frequencies, as natural images do.
+    ///
+    /// Templates depend only on `seed`; the per-sample noise stream
+    /// additionally depends on `split`, so `synth_split(seed, 0, ..)`
+    /// (train) and `synth_split(seed, 1, ..)` (test) are disjoint draws
+    /// from the SAME underlying task.
+    pub fn synth_split(
+        seed: u64,
+        split: u64,
+        n: usize,
+        sample_shape: &[usize],
+        n_classes: usize,
+        signal: f32,
+    ) -> ImageDataset {
+        let sample_elems: usize = sample_shape.iter().product::<usize>().max(1);
+        // Spatial dims = all but the trailing channel dim (for [H,W,C]);
+        // for flat [D] treat D as the single spatial dim.
+        let (h, w, c) = match sample_shape {
+            [h, w, c] => (*h, *w, *c),
+            [d] => (1usize, *d, 1usize),
+            other => {
+                let d: usize = other.iter().product();
+                (1, d, 1)
+            }
+        };
+        const F: usize = 4; // upsampling factor
+        let (h4, w4) = (h.div_ceil(F), w.div_ceil(F));
+
+        // Templates from `seed` only — both splits share the task.
+        let mut trng = Pcg32::new(seed, 0xDA7A);
+        let mut coarse = vec![0.0f32; n_classes * h4 * w4 * c];
+        for t in coarse.iter_mut() {
+            *t = trng.next_normal();
+        }
+        let mut templates = vec![0.0f32; n_classes * sample_elems];
+        for y in 0..n_classes {
+            for i in 0..h {
+                for j in 0..w {
+                    for ch in 0..c {
+                        let src = ((y * h4 + i / F) * w4 + j / F) * c + ch;
+                        templates[y * sample_elems + (i * w + j) * c + ch] = coarse[src];
+                    }
+                }
+            }
+        }
+
+        let mut rng = Pcg32::new(seed ^ (split.wrapping_mul(0x9E3779B9)), 0xDA7B ^ split);
+        let mut samples = vec![0.0f32; n * sample_elems];
+        let mut labels = vec![0i32; n];
+        for i in 0..n {
+            let y = rng.next_bounded(n_classes as u32) as usize;
+            labels[i] = y as i32;
+            let tpl = &templates[y * sample_elems..(y + 1) * sample_elems];
+            let row = &mut samples[i * sample_elems..(i + 1) * sample_elems];
+            for (k, r) in row.iter_mut().enumerate() {
+                *r = signal * tpl[k] + rng.next_normal();
+            }
+        }
+        ImageDataset {
+            samples,
+            labels,
+            sample_elems,
+            n_classes,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn sample(&self, i: usize) -> &[f32] {
+        &self.samples[i * self.sample_elems..(i + 1) * self.sample_elems]
+    }
+}
+
+/// Synthetic token corpus from a sparse order-1 Markov chain.
+pub struct TokenDataset {
+    pub sequences: Vec<i32>,
+    pub seq_len: usize,
+    pub vocab: usize,
+    n_seqs: usize,
+}
+
+impl TokenDataset {
+    /// `n_seqs` sequences of `seq_len` tokens over `vocab` symbols.
+    /// Each symbol has `branching` likely successors — low enough
+    /// entropy that the LM loss visibly falls below ln(vocab).
+    pub fn synth(seed: u64, n_seqs: usize, seq_len: usize, vocab: usize) -> TokenDataset {
+        Self::synth_split(seed, 0, n_seqs, seq_len, vocab)
+    }
+
+    /// Same Markov chain (from `seed`), disjoint sequences per `split`.
+    pub fn synth_split(
+        seed: u64,
+        split: u64,
+        n_seqs: usize,
+        seq_len: usize,
+        vocab: usize,
+    ) -> TokenDataset {
+        let branching = 4usize;
+        // Chain from `seed` only — shared task across splits.
+        let mut crng = Pcg32::new(seed, 0x70C5);
+        // successors[v] = the `branching` tokens v transitions to.
+        let successors: Vec<Vec<u32>> = (0..vocab)
+            .map(|_| {
+                (0..branching)
+                    .map(|_| crng.next_bounded(vocab as u32))
+                    .collect()
+            })
+            .collect();
+        let mut rng = Pcg32::new(seed ^ (split.wrapping_mul(0x9E3779B9)), 0x70C6 ^ split);
+        let mut sequences = vec![0i32; n_seqs * seq_len];
+        for s in 0..n_seqs {
+            let mut tok = rng.next_bounded(vocab as u32);
+            for t in 0..seq_len {
+                sequences[s * seq_len + t] = tok as i32;
+                let succ = &successors[tok as usize];
+                // 90% follow the chain, 10% jump anywhere.
+                tok = if rng.next_bool(0.9) {
+                    succ[rng.next_bounded(branching as u32) as usize]
+                } else {
+                    rng.next_bounded(vocab as u32)
+                };
+            }
+        }
+        TokenDataset {
+            sequences,
+            seq_len,
+            vocab,
+            n_seqs,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_seqs
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_seqs == 0
+    }
+
+    pub fn sequence(&self, i: usize) -> &[i32] {
+        &self.sequences[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_synth_is_deterministic() {
+        let a = ImageDataset::synth(7, 100, 48, 10, 1.0);
+        let b = ImageDataset::synth(7, 100, 48, 10, 1.0);
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(a.labels, b.labels);
+        let c = ImageDataset::synth(8, 100, 48, 10, 1.0);
+        assert_ne!(a.samples, c.samples);
+    }
+
+    #[test]
+    fn image_labels_cover_classes() {
+        let d = ImageDataset::synth(1, 1000, 16, 10, 1.0);
+        let mut seen = [false; 10];
+        for &y in &d.labels {
+            assert!((0..10).contains(&y));
+            seen[y as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn same_class_samples_correlate_more_than_cross_class() {
+        let d = ImageDataset::synth(3, 400, 64, 4, 1.5);
+        let dot = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>() / a.len() as f32
+        };
+        let (mut same, mut same_n, mut cross, mut cross_n) = (0f64, 0u32, 0f64, 0u32);
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let c = dot(d.sample(i), d.sample(j)) as f64;
+                if d.labels[i] == d.labels[j] {
+                    same += c;
+                    same_n += 1;
+                } else {
+                    cross += c;
+                    cross_n += 1;
+                }
+            }
+        }
+        assert!(same / same_n as f64 > cross / cross_n as f64 + 0.3);
+    }
+
+    #[test]
+    fn token_synth_shapes_and_range() {
+        let d = TokenDataset::synth(5, 32, 64, 256);
+        assert_eq!(d.len(), 32);
+        assert_eq!(d.sequence(0).len(), 64);
+        assert!(d.sequences.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn token_chain_has_structure() {
+        // Bigram entropy must be far below uniform: count distinct
+        // successors per token — with branching 4 + 10% noise it should
+        // be much smaller than vocab.
+        let d = TokenDataset::synth(11, 64, 128, 64);
+        let mut succ: Vec<std::collections::BTreeSet<i32>> = vec![Default::default(); 64];
+        for s in 0..d.len() {
+            let seq = d.sequence(s);
+            for w in seq.windows(2) {
+                succ[w[0] as usize].insert(w[1]);
+            }
+        }
+        let avg: f64 = succ.iter().map(|s| s.len() as f64).sum::<f64>() / 64.0;
+        assert!(avg < 32.0, "avg distinct successors {avg} too uniform");
+    }
+}

@@ -1,0 +1,135 @@
+//! Deterministic per-worker data sharding and batch iteration.
+//!
+//! Data-parallel SGD: worker w of p sees the samples with
+//! `index % p == w` (interleaved shards, so class balance survives any
+//! dataset ordering). Each epoch reshuffles *within* the shard with a
+//! seeded PRNG — every run of the same config touches identical batches
+//! in identical order, which the reproduction experiments rely on.
+
+use crate::util::rng::Pcg32;
+
+/// A worker's view of a dataset: shard indices + epoch shuffling.
+pub struct Shard {
+    indices: Vec<usize>,
+    cursor: usize,
+    epoch: u64,
+    rng: Pcg32,
+}
+
+impl Shard {
+    pub fn new(dataset_len: usize, worker: usize, workers: usize, seed: u64) -> Shard {
+        assert!(worker < workers);
+        let indices: Vec<usize> = (worker..dataset_len).step_by(workers).collect();
+        let mut shard = Shard {
+            indices,
+            cursor: 0,
+            epoch: 0,
+            rng: Pcg32::new(seed ^ 0x5AAD, worker as u64),
+        };
+        shard.shuffle();
+        shard
+    }
+
+    fn shuffle(&mut self) {
+        let mut rng = self.rng.split(self.epoch);
+        rng.shuffle(&mut self.indices);
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Next batch of `b` dataset indices; wraps to a new shuffled epoch
+    /// when exhausted (batches never straddle epochs).
+    pub fn next_batch(&mut self, b: usize) -> Vec<usize> {
+        assert!(b <= self.indices.len(), "batch larger than shard");
+        if self.cursor + b > self.indices.len() {
+            self.epoch += 1;
+            self.cursor = 0;
+            self.shuffle();
+        }
+        let out = self.indices[self.cursor..self.cursor + b].to_vec();
+        self.cursor += b;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_partition_dataset() {
+        let p = 4;
+        let n = 103;
+        let mut seen = vec![0u32; n];
+        for w in 0..p {
+            let s = Shard::new(n, w, p, 0);
+            // Collect the shard's index set via one full epoch.
+            let mut sh = s;
+            let len = sh.len();
+            for idx in sh.next_batch(len) {
+                seen[idx] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "partition violated: {seen:?}");
+    }
+
+    #[test]
+    fn shard_sizes_balanced() {
+        let p = 8;
+        let n = 1000;
+        let sizes: Vec<usize> = (0..p).map(|w| Shard::new(n, w, p, 0).len()).collect();
+        let min = *sizes.iter().min().unwrap();
+        let max = *sizes.iter().max().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Shard::new(64, 1, 4, 42);
+        let mut b = Shard::new(64, 1, 4, 42);
+        for _ in 0..10 {
+            assert_eq!(a.next_batch(4), b.next_batch(4));
+        }
+        let mut c = Shard::new(64, 1, 4, 43);
+        let mut differs = false;
+        for _ in 0..10 {
+            differs |= a.next_batch(4) != c.next_batch(4);
+        }
+        assert!(differs, "different seeds must differ");
+    }
+
+    #[test]
+    fn epoch_advances_and_reshuffles() {
+        let mut s = Shard::new(16, 0, 2, 7); // shard size 8
+        let e0: Vec<usize> = (0..2).flat_map(|_| s.next_batch(4)).collect();
+        assert_eq!(s.epoch(), 0);
+        let e1: Vec<usize> = (0..2).flat_map(|_| s.next_batch(4)).collect();
+        assert_eq!(s.epoch(), 1);
+        let mut a = e0.clone();
+        let mut b = e1.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "same index set per epoch");
+        assert_ne!(e0, e1, "order reshuffled");
+    }
+
+    #[test]
+    fn batches_never_repeat_within_epoch() {
+        let mut s = Shard::new(40, 0, 1, 3);
+        let batch_elems: Vec<usize> = (0..4).flat_map(|_| s.next_batch(10)).collect();
+        let mut sorted = batch_elems.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 40);
+    }
+}

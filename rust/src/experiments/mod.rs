@@ -1,0 +1,271 @@
+//! Experiment harnesses: one function per paper table/figure.
+//!
+//! * [`table1_rows`] / [`table2_rows`] — the codec × optimizer grids of
+//!   Tables 1 and 2 (scaled workloads, DESIGN.md §Substitutions).
+//! * [`run_grid`] — executes a grid and collects `RowResult`s.
+//! * [`print_table`] — paper-shaped console table.
+//! * [`fig3_csv`] — the Figure-3 scatter data (accuracy vs ratio).
+//! * [`costmodel_report`] — the Section-5 speedup analysis (A5).
+
+use anyhow::Result;
+
+use crate::comm::costmodel::{speedup_series, LinkModel};
+use crate::compress::CodecSpec;
+use crate::config::TrainConfig;
+use crate::coordinator::Trainer;
+use crate::runtime::{Client, Manifest};
+use crate::util::json::{num, obj, s, Json};
+
+/// The paper's Table-1/2 codec column.
+pub fn paper_codecs() -> Vec<(String, CodecSpec)> {
+    let mut rows: Vec<(String, CodecSpec)> = vec![("none".into(), CodecSpec::None)];
+    for tau in [0.001f32, 0.01, 0.1] {
+        rows.push((format!("strom tau={tau}"), CodecSpec::Strom { tau }));
+    }
+    for alpha in [1.0f32, 1.5, 2.0] {
+        rows.push((
+            format!("vgc alpha={alpha}"),
+            CodecSpec::Vgc { alpha, zeta: 0.999 },
+        ));
+    }
+    for tau in [0.01f32, 0.1] {
+        rows.push((
+            format!("hybrid tau={tau} alpha=2"),
+            CodecSpec::Hybrid {
+                tau,
+                alpha: 2.0,
+                zeta: 0.999,
+            },
+        ));
+    }
+    for (bits, d) in [(2u32, 128usize), (3, 512), (4, 512)] {
+        rows.push((
+            format!("qsgd {bits}bit d={d}"),
+            CodecSpec::Qsgd { bits, bucket: d },
+        ));
+    }
+    rows
+}
+
+/// One grid cell: a labeled config.
+#[derive(Debug, Clone)]
+pub struct GridRow {
+    pub label: String,
+    pub cfg: TrainConfig,
+}
+
+/// Build the Table-1 grid (vgg_tiny, 8 workers) for one optimizer.
+pub fn table1_rows(optimizer: &str, steps: u64) -> Vec<GridRow> {
+    grid_rows("vgg_tiny", optimizer, steps)
+}
+
+/// Build the Table-2 grid (resnet_mini, 16 workers) for one optimizer.
+pub fn table2_rows(optimizer: &str, steps: u64) -> Vec<GridRow> {
+    grid_rows("resnet_mini", optimizer, steps)
+}
+
+fn grid_rows(model: &str, optimizer: &str, steps: u64) -> Vec<GridRow> {
+    paper_codecs()
+        .into_iter()
+        .map(|(label, codec)| {
+            let mut cfg = TrainConfig::defaults(model);
+            cfg.codec = codec;
+            cfg.optimizer = optimizer.to_string();
+            if optimizer == "adam" {
+                cfg.schedule = crate::optim::LrSchedule::Constant { lr: 0.002 };
+            }
+            cfg.steps = steps;
+            GridRow {
+                label,
+                cfg,
+            }
+        })
+        .collect()
+}
+
+/// One completed run's summary.
+#[derive(Debug, Clone)]
+pub struct RowResult {
+    pub label: String,
+    pub optimizer: String,
+    pub accuracy: f32,
+    pub eval_loss: f32,
+    pub compression: f64,
+    pub bits_ratio: f64,
+    pub final_loss: f32,
+}
+
+/// Execute every row of a grid sequentially (each run is internally
+/// parallel through XLA).
+pub fn run_grid(
+    client: &Client,
+    manifest: &Manifest,
+    rows: &[GridRow],
+    quiet: bool,
+) -> Result<Vec<RowResult>> {
+    let mut out = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        if !quiet {
+            eprintln!(
+                "[{}/{}] {} / {} ...",
+                i + 1,
+                rows.len(),
+                row.label,
+                row.cfg.optimizer
+            );
+        }
+        let mut trainer = Trainer::new(client, manifest, row.cfg.clone())?;
+        trainer.run(true)?;
+        out.push(RowResult {
+            label: row.label.clone(),
+            optimizer: row.cfg.optimizer.clone(),
+            accuracy: trainer.metrics.final_accuracy(),
+            eval_loss: trainer
+                .metrics
+                .evals
+                .last()
+                .map(|e| e.eval_loss)
+                .unwrap_or(f32::NAN),
+            compression: trainer.metrics.compression_ratio(),
+            bits_ratio: trainer.metrics.bits_ratio(),
+            final_loss: trainer.metrics.final_loss(),
+        });
+    }
+    Ok(out)
+}
+
+/// Print results in the paper's table shape (one optimizer per block).
+pub fn print_table(title: &str, results: &[RowResult]) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<26} {:>10} {:>9} {:>14} {:>12}",
+        "Method", "Accuracy", "Loss", "Compression", "BitsRatio"
+    );
+    for r in results {
+        let acc = if r.accuracy.is_nan() {
+            "-".to_string()
+        } else {
+            format!("{:.1}%", r.accuracy * 100.0)
+        };
+        let comp = if r.compression.is_infinite() {
+            "inf".to_string()
+        } else {
+            crate::util::with_commas(r.compression.round() as u64)
+        };
+        println!(
+            "{:<26} {:>10} {:>9.3} {:>14} {:>12.1}",
+            r.label, acc, r.final_loss, comp, r.bits_ratio
+        );
+    }
+}
+
+/// Figure-3 scatter CSV: `method,optimizer,accuracy,compression`.
+pub fn fig3_csv(results: &[RowResult]) -> String {
+    let mut out = String::from("method,optimizer,accuracy,compression,bits_ratio\n");
+    for r in results {
+        out.push_str(&format!(
+            "{},{},{},{},{}\n",
+            r.label, r.optimizer, r.accuracy, r.compression, r.bits_ratio
+        ));
+    }
+    out
+}
+
+/// Serialize results for EXPERIMENTS.md tooling.
+pub fn results_json(table: &str, results: &[RowResult]) -> Json {
+    Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("table", s(table)),
+                    ("method", s(&r.label)),
+                    ("optimizer", s(&r.optimizer)),
+                    ("accuracy", num(r.accuracy as f64)),
+                    ("final_loss", num(r.final_loss as f64)),
+                    ("compression", num(r.compression)),
+                    ("bits_ratio", num(r.bits_ratio)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// The Section-5 (A5) analysis: speedup table over c and p for
+/// ResNet-50-scale N on 1GbE, plus the linear-regime boundary.
+pub fn costmodel_report() -> String {
+    let n = 25_500_000u64;
+    let ps = [4usize, 8, 16, 64];
+    let cs = [1.0, 4.0, 16.0, 64.0, 256.0, 1024.0, 4096.0, 16384.0];
+    let rows = speedup_series(n, &ps, &cs, LinkModel::gige());
+    let mut out = String::new();
+    out.push_str("Section-5 cost model: ring allreduce vs pipelined ring allgatherv\n");
+    out.push_str(&format!("N = {n} params (ResNet-50 scale), 1GbE (beta = 1 ns/bit)\n\n"));
+    out.push_str(&format!(
+        "{:>4} {:>9} {:>14} {:>14} {:>10} {:>10}\n",
+        "p", "c", "T_r (ms)", "T_v (ms)", "speedup", "bound"
+    ));
+    for r in &rows {
+        out.push_str(&format!(
+            "{:>4} {:>9} {:>14.3} {:>14.3} {:>10.2} {:>10.2}\n",
+            r.p,
+            r.c,
+            r.t_allreduce * 1e3,
+            r.t_allgatherv * 1e3,
+            r.speedup,
+            r.bound
+        ));
+    }
+    out.push_str("\nlinear-speedup regime boundary (paper: c > p/2):\n");
+    for p in ps {
+        let c_star = (p * p) as f64 / (2.0 * (p as f64 - 1.0));
+        out.push_str(&format!("  p={p:>3}: bound crosses 1 at c = {c_star:.2}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_codec_grid_matches_table1_rows() {
+        let rows = paper_codecs();
+        // 1 none + 3 strom + 3 vgc + 2 hybrid + 3 qsgd = 12 methods.
+        assert_eq!(rows.len(), 12);
+        assert!(rows.iter().any(|(l, _)| l.contains("vgc alpha=1.5")));
+        assert!(rows.iter().any(|(l, _)| l.contains("hybrid tau=0.1")));
+    }
+
+    #[test]
+    fn grids_use_right_models() {
+        let t1 = table1_rows("momentum", 10);
+        assert!(t1.iter().all(|r| r.cfg.model == "vgg_tiny"));
+        let t2 = table2_rows("adam", 10);
+        assert!(t2.iter().all(|r| r.cfg.model == "resnet_mini"));
+        assert!(t2.iter().all(|r| r.cfg.steps == 10));
+    }
+
+    #[test]
+    fn costmodel_report_contains_linear_regime() {
+        let rep = costmodel_report();
+        assert!(rep.contains("speedup"));
+        assert!(rep.contains("c > p/2"));
+    }
+
+    #[test]
+    fn fig3_csv_shape() {
+        let results = vec![RowResult {
+            label: "vgc alpha=1".into(),
+            optimizer: "adam".into(),
+            accuracy: 0.9,
+            eval_loss: f32::NAN,
+            compression: 100.0,
+            bits_ratio: 120.0,
+            final_loss: 0.2,
+        }];
+        let csv = fig3_csv(&results);
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("vgc alpha=1,adam,0.9,100,120"));
+    }
+}

@@ -1,0 +1,29 @@
+//! `vgc` — Variance-based Gradient Compression for distributed deep
+//! learning (Tsuzuku, Imachi & Akiba, ICLR 2018), reproduced as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! * L3 (this crate): distributed-training coordinator — compression
+//!   codecs, ring communication fabric, optimizers, data pipeline,
+//!   metrics, CLI launcher.
+//! * L2/L1 (python/, build-time only): JAX model fwd/bwd + the fused
+//!   Pallas moment kernel, AOT-lowered to HLO text.
+//! * runtime: loads the artifacts via the PJRT C API and executes them
+//!   on the request path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod bench;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+
+pub mod compress;
+pub mod model;
+pub mod comm;
+pub mod data;
+pub mod optim;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod experiments;

@@ -1,0 +1,243 @@
+//! `repro` — the launcher CLI for the VGC reproduction.
+//!
+//! Subcommands map 1:1 onto DESIGN.md's experiment index:
+//!
+//! ```text
+//! repro train --model vgg_tiny --codec vgc:alpha=1.5 [--steps N ...]
+//! repro table1 [--optimizers adam,momentum] [--steps N] [--out results.json]
+//! repro table2 [...]
+//! repro fig3   [--out fig3.csv]          # scatter data from both tables
+//! repro costmodel                         # Section-5 (A5) analysis
+//! repro inspect                           # artifact manifest summary
+//! ```
+
+use anyhow::Result;
+
+use vgc::config::TrainConfig;
+use vgc::coordinator::Trainer;
+use vgc::experiments;
+use vgc::runtime::{Client, Manifest};
+use vgc::util::cli::Args;
+
+const USAGE: &str = "\
+repro — Variance-based Gradient Compression (ICLR'18) reproduction
+
+USAGE:
+  repro train     --model <name> [--codec SPEC] [--optimizer sgd|momentum|adam]
+                  [--lr SCHED] [--steps N] [--seed S] [--weight-decay W]
+                  [--train-size N] [--test-size N] [--signal F]
+                  [--eval-every K] [--log-every K] [--verify-sync]
+                  [--loss-curve FILE.csv] [--artifacts DIR]
+  repro table1    [--optimizers adam,momentum] [--steps N] [--out FILE.json]
+  repro table2    [--optimizers adam,momentum] [--steps N] [--out FILE.json]
+  repro fig3      [--steps N] [--out FILE.csv]
+  repro costmodel
+  repro inspect   [--artifacts DIR]
+
+Codec SPECs: none | vgc:alpha=A[,zeta=Z] | strom:tau=T |
+             hybrid:tau=T,alpha=A | qsgd:bits=B,d=D | terngrad
+LR SCHEDs:   const:LR | step:LR,FACTOR,EVERY | warmup:LR,STEPS
+";
+
+const TRAIN_FLAGS: &[&str] = &[
+    "model", "codec", "optimizer", "lr", "steps", "seed", "weight-decay",
+    "train-size", "test-size", "signal", "eval-every", "log-every",
+    "verify-sync", "loss-curve", "artifacts",
+];
+
+fn artifacts_dir(args: &Args) -> String {
+    args.str_or("artifacts", "artifacts")
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["verify-sync", "quiet"])?;
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("");
+    match cmd {
+        "train" => cmd_train(&args),
+        "table1" => cmd_table(&args, "table1"),
+        "table2" => cmd_table(&args, "table2"),
+        "fig3" => cmd_fig3(&args),
+        "costmodel" => {
+            print!("{}", experiments::costmodel_report());
+            Ok(())
+        }
+        "inspect" => cmd_inspect(&args),
+        "" | "help" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprint!("unknown command '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.check_known(TRAIN_FLAGS)?;
+    let model = args.require("model")?;
+    let cfg = TrainConfig::defaults(model).override_from(args)?;
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let client = Client::cpu()?;
+    println!(
+        "model={model} codec={} optimizer={} steps={} (platform: {})",
+        cfg.codec.label(),
+        cfg.optimizer,
+        cfg.steps,
+        client.platform()
+    );
+    let mut trainer = Trainer::new(&client, &manifest, cfg)?;
+    let t0 = std::time::Instant::now();
+    trainer.run(false)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let m = &trainer.metrics;
+    println!("\n--- run summary ---");
+    println!("final loss         {:.4}", m.final_loss());
+    if !m.final_accuracy().is_nan() {
+        println!("final accuracy     {:.2}%", m.final_accuracy() * 100.0);
+    }
+    println!("compression ratio  {:.1}", m.compression_ratio());
+    println!("bits ratio         {:.1}", m.bits_ratio());
+    println!("residual L1        {:.3e}", trainer.residual_l1());
+    let ph = trainer.phases;
+    println!(
+        "wall {wall:.1}s  (compute {:.1}s, encode {:.1}s, comm+decode {:.1}s, update {:.1}s)",
+        ph.compute_s, ph.encode_s, ph.comm_decode_s, ph.update_s
+    );
+    if let Some(path) = args.get("loss-curve") {
+        std::fs::write(path, m.loss_curve_csv())?;
+        println!("loss curve written to {path}");
+    }
+    Ok(())
+}
+
+fn parse_optimizers(args: &Args) -> Vec<String> {
+    let list = args.list("optimizers");
+    if list.is_empty() {
+        vec!["adam".into(), "momentum".into()]
+    } else {
+        list
+    }
+}
+
+fn cmd_table(args: &Args, which: &str) -> Result<()> {
+    args.check_known(&["optimizers", "steps", "out", "artifacts", "quiet"])?;
+    let steps = args.parse_or("steps", 300u64)?;
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let client = Client::cpu()?;
+    let mut all = Vec::new();
+    for opt in parse_optimizers(args) {
+        let rows = match which {
+            "table1" => experiments::table1_rows(&opt, steps),
+            _ => experiments::table2_rows(&opt, steps),
+        };
+        let results = experiments::run_grid(&client, &manifest, &rows, args.has("quiet"))?;
+        experiments::print_table(
+            &format!(
+                "{} ({}, {} steps) — paper Table {}",
+                if which == "table1" {
+                    "CIFAR-10-like / vgg_tiny"
+                } else {
+                    "ImageNet-like / resnet_mini"
+                },
+                opt,
+                steps,
+                if which == "table1" { 1 } else { 2 }
+            ),
+            &results,
+        );
+        all.extend(results);
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, experiments::results_json(which, &all).to_string())?;
+        println!("\nresults written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    args.check_known(&["steps", "out", "artifacts", "quiet", "from"])?;
+    // Preferred path: derive the scatter from saved table results
+    // (`--from table1_results.json,table2_results.json`) instead of
+    // re-running both grids.
+    if args.has("from") {
+        let mut csv = String::from("method,optimizer,accuracy,compression,bits_ratio\n");
+        let mut count = 0usize;
+        for path in args.list("from") {
+            let text = std::fs::read_to_string(&path)?;
+            let rows = vgc::util::json::Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            for r in rows.as_arr()? {
+                csv.push_str(&format!(
+                    "{}:{},{},{},{},{}\n",
+                    r.expect("table")?.as_str()?,
+                    r.expect("method")?.as_str()?,
+                    r.expect("optimizer")?.as_str()?,
+                    r.expect("accuracy")?.as_f64()?,
+                    r.expect("compression")?.as_f64()?,
+                    r.expect("bits_ratio")?.as_f64()?,
+                ));
+                count += 1;
+            }
+        }
+        let path = args.str_or("out", "fig3.csv");
+        std::fs::write(&path, &csv)?;
+        println!("figure-3 scatter data ({count} points) written to {path}");
+        return Ok(());
+    }
+    let steps = args.parse_or("steps", 300u64)?;
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let client = Client::cpu()?;
+    let mut all = Vec::new();
+    for (table, builder) in [
+        (
+            "table1",
+            experiments::table1_rows as fn(&str, u64) -> Vec<experiments::GridRow>,
+        ),
+        ("table2", experiments::table2_rows),
+    ] {
+        for opt in ["adam", "momentum"] {
+            let rows = builder(opt, steps);
+            let mut results =
+                experiments::run_grid(&client, &manifest, &rows, args.has("quiet"))?;
+            for r in &mut results {
+                r.label = format!("{table}:{}", r.label);
+            }
+            all.extend(results);
+        }
+    }
+    let csv = experiments::fig3_csv(&all);
+    let path = args.str_or("out", "fig3.csv");
+    std::fs::write(&path, &csv)?;
+    println!(
+        "figure-3 scatter data ({} points) written to {path}",
+        all.len()
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    args.check_known(&["artifacts"])?;
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    println!("artifact manifest (fingerprint {})", manifest.fingerprint);
+    for m in &manifest.models {
+        println!(
+            "  {:<14} N={:<9} P={:<3} B={:<3} eval_batch={:<4} groups={:<4} kind={}",
+            m.name,
+            m.n_params,
+            m.workers,
+            m.batch,
+            m.eval_batch,
+            m.groups.len(),
+            m.kind
+        );
+    }
+    for e in &manifest.moments_bench {
+        println!("  [bench] moments b={} n={} ({})", e.b, e.n, e.hlo);
+    }
+    for e in &manifest.criterion {
+        println!("  [bench] criterion n={} ({})", e.n, e.hlo);
+    }
+    Ok(())
+}

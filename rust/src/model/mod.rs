@@ -1,0 +1,136 @@
+//! Model parameter layout: the flat-vector view of a model.
+//!
+//! The coordinator and every codec see a model as one flat `f32` vector
+//! of length N partitioned into named, contiguous *groups* — one per
+//! weight tensor. Groups are the paper's quantization scopes (`M_k` is
+//! the max |value| within a group, Sec. 4.2). The layout comes from the
+//! AOT manifest (`ravel_pytree` order) and is validated on load.
+
+/// One named tensor's span in the flat vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamGroup {
+    pub name: String,
+    pub offset: usize,
+    pub len: usize,
+}
+
+impl ParamGroup {
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.offset..self.offset + self.len
+    }
+}
+
+/// A validated partition of `[0, n)` into groups.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    n: usize,
+    groups: Vec<ParamGroup>,
+}
+
+impl Layout {
+    pub fn new(n: usize, groups: Vec<ParamGroup>) -> anyhow::Result<Layout> {
+        anyhow::ensure!(!groups.is_empty(), "layout needs at least one group");
+        let mut off = 0;
+        for g in &groups {
+            anyhow::ensure!(
+                g.offset == off,
+                "group '{}' starts at {}, expected {off}",
+                g.name,
+                g.offset
+            );
+            anyhow::ensure!(g.len > 0, "group '{}' is empty", g.name);
+            off += g.len;
+        }
+        anyhow::ensure!(off == n, "groups cover {off} of {n} params");
+        anyhow::ensure!(
+            n as u64 <= (crate::compress::encode::MAX_INDEX as u64) + 1,
+            "N={n} exceeds the 28-bit index space"
+        );
+        Ok(Layout { n, groups })
+    }
+
+    /// From a manifest model entry.
+    pub fn from_manifest(entry: &crate::runtime::ModelEntry) -> anyhow::Result<Layout> {
+        Layout::new(
+            entry.n_params,
+            entry
+                .groups
+                .iter()
+                .map(|g| ParamGroup {
+                    name: g.name.clone(),
+                    offset: g.offset,
+                    len: g.len,
+                })
+                .collect(),
+        )
+    }
+
+    /// A synthetic layout with fixed-size groups (tests and benches).
+    pub fn uniform(n: usize, group_size: usize) -> Layout {
+        assert!(n > 0 && group_size > 0);
+        let mut groups = Vec::new();
+        let mut off = 0;
+        let mut k = 0;
+        while off < n {
+            let len = group_size.min(n - off);
+            groups.push(ParamGroup {
+                name: format!("g{k}"),
+                offset: off,
+                len,
+            });
+            off += len;
+            k += 1;
+        }
+        Layout::new(n, groups).expect("uniform layout is valid")
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn groups(&self) -> &[ParamGroup] {
+        &self.groups
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_layout_partitions() {
+        let l = Layout::uniform(10, 4);
+        assert_eq!(l.n_groups(), 3);
+        assert_eq!(l.groups()[2].len, 2);
+        assert_eq!(l.n(), 10);
+    }
+
+    #[test]
+    fn rejects_gap_and_overlap() {
+        let bad = vec![
+            ParamGroup { name: "a".into(), offset: 0, len: 4 },
+            ParamGroup { name: "b".into(), offset: 5, len: 5 },
+        ];
+        assert!(Layout::new(10, bad).is_err());
+        let overlap = vec![
+            ParamGroup { name: "a".into(), offset: 0, len: 6 },
+            ParamGroup { name: "b".into(), offset: 4, len: 6 },
+        ];
+        assert!(Layout::new(10, overlap).is_err());
+    }
+
+    #[test]
+    fn rejects_28bit_overflow() {
+        // A fake huge layout must be rejected (index field is 28 bits).
+        let groups = vec![ParamGroup {
+            name: "w".into(),
+            offset: 0,
+            len: 1 << 29,
+        }];
+        assert!(Layout::new(1 << 29, groups).is_err());
+    }
+}

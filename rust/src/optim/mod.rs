@@ -1,0 +1,225 @@
+//! Optimizers (S10): SGD, Momentum SGD, Adam — applied *locally after
+//! communication* (Sec. 4.3: "Some optimization methods, such as ADAM,
+//! require preprocessing for parameter updates. They are calculated
+//! locally after the communication.").
+//!
+//! The input to `step` is the decoded, aggregated global gradient (the
+//! sum of all workers' decoded messages). Gradient elements that were
+//! *not* sent are exactly zero here — the paper: "In the combination
+//! with optimization methods like Momentum SGD, gradient elements not
+//! sent are assumed to be equal to zero."
+
+pub mod schedule;
+
+pub use schedule::LrSchedule;
+
+/// A parameter-update rule over the flat vector.
+pub trait Optimizer: Send {
+    fn name(&self) -> String;
+
+    /// Apply one update in place: `params -= f(grad)` at learning rate
+    /// `lr` (already schedule-resolved by the caller).
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32);
+}
+
+/// Plain SGD: `x ← x − γ·g`.
+pub struct Sgd;
+
+impl Optimizer for Sgd {
+    fn name(&self) -> String {
+        "sgd".into()
+    }
+
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        assert_eq!(params.len(), grad.len());
+        for (p, &g) in params.iter_mut().zip(grad) {
+            *p -= lr * g;
+        }
+    }
+}
+
+/// Momentum SGD (Sutskever et al. 2013 heavy-ball form):
+/// `u ← μ·u + g; x ← x − γ·u`.
+pub struct Momentum {
+    mu: f32,
+    u: Vec<f32>,
+}
+
+impl Momentum {
+    pub fn new(n: usize, mu: f32) -> Momentum {
+        assert!((0.0..1.0).contains(&mu));
+        Momentum { mu, u: vec![0.0; n] }
+    }
+}
+
+impl Optimizer for Momentum {
+    fn name(&self) -> String {
+        format!("momentum(mu={})", self.mu)
+    }
+
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.u.len());
+        for i in 0..params.len() {
+            self.u[i] = self.mu * self.u[i] + grad[i];
+            params[i] -= lr * self.u[i];
+        }
+    }
+}
+
+/// Adam (Ba & Kingma 2015) with the paper's default hyperparameters.
+pub struct Adam {
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(n: usize) -> Adam {
+        Adam::with_params(n, 0.9, 0.999, 1e-8)
+    }
+
+    pub fn with_params(n: usize, beta1: f32, beta2: f32, eps: f32) -> Adam {
+        Adam {
+            beta1,
+            beta2,
+            eps,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> String {
+        "adam".into()
+    }
+
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        assert_eq!(params.len(), grad.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+/// Weight decay applied as a separate decoupled step (the paper's
+/// CIFAR runs use weight decay 5e-4).
+pub fn apply_weight_decay(params: &mut [f32], lr: f32, wd: f32) {
+    if wd == 0.0 {
+        return;
+    }
+    let k = 1.0 - lr * wd;
+    for p in params.iter_mut() {
+        *p *= k;
+    }
+}
+
+/// Build an optimizer by name.
+pub fn build(name: &str, n: usize) -> anyhow::Result<Box<dyn Optimizer>> {
+    Ok(match name {
+        "sgd" => Box::new(Sgd),
+        "momentum" => Box::new(Momentum::new(n, 0.9)),
+        "adam" => Box::new(Adam::new(n)),
+        other => anyhow::bail!("unknown optimizer '{other}' (sgd|momentum|adam)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quadratic_converges(opt: &mut dyn Optimizer, lr: f32) -> f32 {
+        // Minimize f(x) = 0.5 Σ (x_i − i)². Gradient: x_i − i.
+        let n = 8;
+        let mut x = vec![0.0f32; n];
+        for _ in 0..500 {
+            let g: Vec<f32> = x.iter().enumerate().map(|(i, &xi)| xi - i as f32).collect();
+            opt.step(&mut x, &g, lr);
+        }
+        x.iter()
+            .enumerate()
+            .map(|(i, &xi)| (xi - i as f32).abs())
+            .fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        assert!(quadratic_converges(&mut Sgd, 0.1) < 1e-3);
+    }
+
+    #[test]
+    fn momentum_converges_on_quadratic() {
+        assert!(quadratic_converges(&mut Momentum::new(8, 0.9), 0.05) < 1e-3);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        assert!(quadratic_converges(&mut Adam::new(8), 0.05) < 1e-2);
+    }
+
+    #[test]
+    fn sgd_matches_closed_form() {
+        let mut x = vec![1.0f32];
+        Sgd.step(&mut x, &[0.5], 0.2);
+        assert!((x[0] - 0.9).abs() < 1e-7);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut m = Momentum::new(1, 0.5);
+        let mut x = vec![0.0f32];
+        m.step(&mut x, &[1.0], 1.0); // u=1, x=-1
+        assert!((x[0] + 1.0).abs() < 1e-7);
+        m.step(&mut x, &[1.0], 1.0); // u=1.5, x=-2.5
+        assert!((x[0] + 2.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // Bias correction makes |Δx| ≈ lr on step 1 regardless of g scale.
+        for g in [1e-4f32, 1.0, 1e4] {
+            let mut a = Adam::new(1);
+            let mut x = vec![0.0f32];
+            a.step(&mut x, &[g], 0.01);
+            assert!((x[0].abs() - 0.01).abs() < 1e-4, "g={g}: dx={}", x[0]);
+        }
+    }
+
+    #[test]
+    fn zero_gradient_elements_leave_sgd_params_untouched() {
+        // The sparse-codec contract: unsent == zero == no direct update.
+        let mut x = vec![1.0f32, 2.0];
+        Sgd.step(&mut x, &[0.0, 1.0], 0.1);
+        assert_eq!(x[0], 1.0);
+        assert!((x[1] - 1.9).abs() < 1e-7);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_parameters() {
+        let mut x = vec![2.0f32, -2.0];
+        apply_weight_decay(&mut x, 0.1, 0.5);
+        assert!((x[0] - 1.9).abs() < 1e-6);
+        assert!((x[1] + 1.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn build_by_name() {
+        assert!(build("sgd", 4).is_ok());
+        assert!(build("momentum", 4).is_ok());
+        assert!(build("adam", 4).is_ok());
+        assert!(build("lion", 4).is_err());
+    }
+}

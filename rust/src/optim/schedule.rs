@@ -1,0 +1,116 @@
+//! Learning-rate schedules.
+//!
+//! The paper's CIFAR-10 Momentum runs halve the LR every 25 epochs
+//! (Sec. 6.1); Adam runs use a constant LR. `StepDecay` generalizes the
+//! former; `Constant` the latter.
+
+#[derive(Debug, Clone)]
+pub enum LrSchedule {
+    Constant {
+        lr: f32,
+    },
+    /// `lr · factor^(step / every)` — the paper's halving schedule with
+    /// `factor = 0.5`, `every = 25 epochs` worth of steps.
+    StepDecay {
+        lr: f32,
+        factor: f32,
+        every: u64,
+    },
+    /// Linear warmup to `lr` over `warmup` steps, then constant.
+    Warmup {
+        lr: f32,
+        warmup: u64,
+    },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: u64) -> f32 {
+        match *self {
+            LrSchedule::Constant { lr } => lr,
+            LrSchedule::StepDecay { lr, factor, every } => {
+                lr * factor.powi((step / every.max(1)) as i32)
+            }
+            LrSchedule::Warmup { lr, warmup } => {
+                if warmup == 0 || step >= warmup {
+                    lr
+                } else {
+                    lr * (step + 1) as f32 / warmup as f32
+                }
+            }
+        }
+    }
+
+    /// Parse `const:0.05`, `step:0.05,0.5,100`, `warmup:0.001,50`.
+    pub fn parse(s: &str) -> anyhow::Result<LrSchedule> {
+        let (kind, rest) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("schedule needs 'kind:params', got '{s}'"))?;
+        let parts: Vec<&str> = rest.split(',').collect();
+        let f = |i: usize| -> anyhow::Result<f32> {
+            parts
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("schedule '{s}' missing param {i}"))?
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad schedule param in '{s}': {e}"))
+        };
+        Ok(match kind {
+            "const" => LrSchedule::Constant { lr: f(0)? },
+            "step" => LrSchedule::StepDecay {
+                lr: f(0)?,
+                factor: f(1)?,
+                every: f(2)? as u64,
+            },
+            "warmup" => LrSchedule::Warmup {
+                lr: f(0)?,
+                warmup: f(1)? as u64,
+            },
+            other => anyhow::bail!("unknown schedule kind '{other}'"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::Constant { lr: 0.1 };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(1_000_000), 0.1);
+    }
+
+    #[test]
+    fn step_decay_halves_on_boundaries() {
+        let s = LrSchedule::StepDecay {
+            lr: 0.4,
+            factor: 0.5,
+            every: 100,
+        };
+        assert_eq!(s.at(0), 0.4);
+        assert_eq!(s.at(99), 0.4);
+        assert_eq!(s.at(100), 0.2);
+        assert_eq!(s.at(250), 0.1);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::Warmup { lr: 1.0, warmup: 10 };
+        assert!((s.at(0) - 0.1).abs() < 1e-6);
+        assert!((s.at(4) - 0.5).abs() < 1e-6);
+        assert_eq!(s.at(10), 1.0);
+        assert_eq!(s.at(100), 1.0);
+    }
+
+    #[test]
+    fn parses_all_kinds() {
+        assert_eq!(LrSchedule::parse("const:0.05").unwrap().at(5), 0.05);
+        let s = LrSchedule::parse("step:0.4,0.5,100").unwrap();
+        assert_eq!(s.at(100), 0.2);
+        let w = LrSchedule::parse("warmup:1.0,10").unwrap();
+        assert_eq!(w.at(20), 1.0);
+        assert!(LrSchedule::parse("cosine:1").is_err());
+        assert!(LrSchedule::parse("0.05").is_err());
+    }
+}

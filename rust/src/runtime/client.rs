@@ -1,0 +1,132 @@
+//! PJRT client wrapper: load AOT HLO-text artifacts and execute them.
+//!
+//! The pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. All
+//! artifacts were lowered with `return_tuple=True`, so every execution
+//! returns one tuple literal which we decompose into per-output
+//! literals.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Process-wide PJRT CPU client. Compiling an executable is expensive
+/// (seconds for the grad graphs), so executables are cached by the
+/// higher layers; the client itself is cheap to share.
+pub struct Client {
+    inner: xla::PjRtClient,
+}
+
+impl Client {
+    pub fn cpu() -> Result<Client> {
+        let inner = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Client { inner })
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .inner
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable {
+            inner: exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled artifact. One per (model, geometry) variant.
+pub struct Executable {
+    inner: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with the given input literals; returns the decomposed
+    /// output tuple (all artifacts are lowered with `return_tuple=True`).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .inner
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        tuple
+            .to_tuple()
+            .with_context(|| format!("decomposing result tuple of {}", self.name))
+    }
+}
+
+// ---- host <-> literal marshalling ----
+
+/// Build an f32 literal of the given dims from a flat host slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expect as usize == data.len(),
+        "literal_f32: {} elements for dims {dims:?}",
+        data.len()
+    );
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given dims from a flat host slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expect as usize == data.len(),
+        "literal_i32: {} elements for dims {dims:?}",
+        data.len()
+    );
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Copy a literal out to a host f32 vec.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_mismatch_is_error() {
+        assert!(literal_f32(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
+        assert!(literal_f32(&[1.0; 4], &[2, 2]).is_ok());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let data = vec![1.0f32, -2.5, 3.25, 0.0, 5.0, -6.0];
+        let lit = literal_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_literal_roundtrip() {
+        let data = vec![1i32, -2, 3, 4];
+        let lit = literal_i32(&data, &[4]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+}

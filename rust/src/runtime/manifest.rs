@@ -1,0 +1,291 @@
+//! Artifact manifest: the contract between the python AOT path and the
+//! Rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every
+//! lowered HLO module (shapes, dtypes, worker/batch geometry), the
+//! initial parameter blobs, and the flat-layout group table that defines
+//! the paper's per-weight-matrix quantization scopes (`M_k`, Sec. 4.2).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One named tensor's span in the flat parameter vector. Quantization
+/// groups (Sec. 4.2) are exactly these spans.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Group {
+    pub name: String,
+    pub offset: usize,
+    pub len: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => anyhow::bail!("unsupported dtype in manifest: {other}"),
+        }
+    }
+}
+
+/// What the eval artifact returns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalKind {
+    /// `[eval_batch, n_classes]` logits (classifiers).
+    Logits,
+    /// Scalar mean loss (language models).
+    Loss,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub kind: String,
+    pub n_params: usize,
+    pub workers: usize,
+    pub batch: usize,
+    pub chunk: usize,
+    pub eval_batch: usize,
+    pub n_classes: usize,
+    pub sample_shape: Vec<usize>,
+    pub sample_dtype: Dtype,
+    pub grad_hlo: String,
+    pub eval_hlo: String,
+    pub eval_kind: EvalKind,
+    pub params_bin: String,
+    pub groups: Vec<Group>,
+    pub seed: u64,
+}
+
+impl ModelEntry {
+    /// Elements in one input sample.
+    pub fn sample_elems(&self) -> usize {
+        self.sample_shape.iter().product::<usize>().max(1)
+    }
+
+    /// Dims of the grad artifact's `xs` input: `[P, B, *sample]`.
+    pub fn xs_dims(&self) -> Vec<i64> {
+        let mut dims = vec![self.workers as i64, self.batch as i64];
+        dims.extend(self.sample_shape.iter().map(|&d| d as i64));
+        dims
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MomentsBenchEntry {
+    pub b: usize,
+    pub n: usize,
+    pub hlo: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct CriterionEntry {
+    pub n: usize,
+    pub hlo: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub fingerprint: String,
+    pub models: Vec<ModelEntry>,
+    pub moments_bench: Vec<MomentsBenchEntry>,
+    pub criterion: Vec<CriterionEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+
+        let version = root.expect("format_version")?.as_usize()?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+
+        let mut models = Vec::new();
+        for m in root.expect("models")?.as_arr()? {
+            models.push(parse_model(m)?);
+        }
+        let shared = root.expect("shared")?;
+        let mut moments_bench = Vec::new();
+        for e in shared.expect("moments_bench")?.as_arr()? {
+            moments_bench.push(MomentsBenchEntry {
+                b: e.expect("b")?.as_usize()?,
+                n: e.expect("n")?.as_usize()?,
+                hlo: e.expect("hlo")?.as_str()?.to_string(),
+            });
+        }
+        let mut criterion = Vec::new();
+        for e in shared.expect("criterion")?.as_arr()? {
+            criterion.push(CriterionEntry {
+                n: e.expect("n")?.as_usize()?,
+                hlo: e.expect("hlo")?.as_str()?.to_string(),
+            });
+        }
+
+        Ok(Manifest {
+            dir,
+            fingerprint: root.expect("fingerprint")?.as_str()?.to_string(),
+            models,
+            moments_bench,
+            criterion,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.iter().find(|m| m.name == name).ok_or_else(|| {
+            let have: Vec<&str> = self.models.iter().map(|m| m.name.as_str()).collect();
+            anyhow::anyhow!("model '{name}' not in manifest; available: {have:?}")
+        })
+    }
+
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Load a `.params.bin` blob (little-endian f32).
+    pub fn load_params(&self, entry: &ModelEntry) -> Result<Vec<f32>> {
+        let path = self.path_of(&entry.params_bin);
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        anyhow::ensure!(
+            bytes.len() == entry.n_params * 4,
+            "params blob {path:?} has {} bytes, expected {}",
+            bytes.len(),
+            entry.n_params * 4
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+fn parse_model(m: &Json) -> Result<ModelEntry> {
+    let groups_json = m.expect("groups")?.as_arr()?;
+    let mut groups = Vec::with_capacity(groups_json.len());
+    for g in groups_json {
+        groups.push(Group {
+            name: g.expect("name")?.as_str()?.to_string(),
+            offset: g.expect("offset")?.as_usize()?,
+            len: g.expect("len")?.as_usize()?,
+        });
+    }
+    let n_params = m.expect("n_params")?.as_usize()?;
+    // Validate the group table partitions [0, N): the quantizer trusts it.
+    let mut off = 0;
+    for g in &groups {
+        anyhow::ensure!(
+            g.offset == off && g.len > 0,
+            "group table not contiguous at {}",
+            g.name
+        );
+        off += g.len;
+    }
+    anyhow::ensure!(off == n_params, "groups cover {off}, expected {n_params}");
+
+    let eval_kind = match m.expect("eval_kind")?.as_str()? {
+        "logits" => EvalKind::Logits,
+        "loss" => EvalKind::Loss,
+        other => anyhow::bail!("unknown eval_kind {other}"),
+    };
+
+    Ok(ModelEntry {
+        name: m.expect("name")?.as_str()?.to_string(),
+        kind: m.expect("kind")?.as_str()?.to_string(),
+        n_params,
+        workers: m.expect("workers")?.as_usize()?,
+        batch: m.expect("batch")?.as_usize()?,
+        chunk: m.expect("chunk")?.as_usize()?,
+        eval_batch: m.expect("eval_batch")?.as_usize()?,
+        n_classes: m.expect("n_classes")?.as_usize()?,
+        sample_shape: m
+            .expect("sample_shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<_>>()?,
+        sample_dtype: Dtype::parse(m.expect("sample_dtype")?.as_str()?)?,
+        grad_hlo: m.expect("grad_hlo")?.as_str()?.to_string(),
+        eval_hlo: m.expect("eval_hlo")?.as_str()?.to_string(),
+        eval_kind,
+        params_bin: m.expect("params_bin")?.as_str()?.to_string(),
+        groups,
+        seed: m.expect("seed")?.as_usize()? as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_json() -> String {
+        r#"{
+          "format_version": 1,
+          "fingerprint": "abc123",
+          "models": [{
+            "name": "m", "kind": "classifier", "n_params": 10,
+            "workers": 2, "batch": 4, "chunk": 2, "eval_batch": 8,
+            "n_classes": 3, "sample_shape": [5], "sample_dtype": "float32",
+            "label_dtype": "int32",
+            "grad_hlo": "m.grad.hlo.txt", "eval_hlo": "m.fwd.hlo.txt",
+            "eval_kind": "logits", "params_bin": "m.params.bin",
+            "groups": [{"name": "a", "offset": 0, "len": 6},
+                        {"name": "b", "offset": 6, "len": 4}],
+            "seed": 0
+          }],
+          "shared": {"moments_bench": [], "criterion": []}
+        }"#
+        .to_string()
+    }
+
+    fn write_manifest(dir: &Path, text: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let dir = std::env::temp_dir().join("vgc_manifest_ok");
+        write_manifest(&dir, &fake_manifest_json());
+        let man = Manifest::load(&dir).unwrap();
+        let m = man.model("m").unwrap();
+        assert_eq!(m.n_params, 10);
+        assert_eq!(m.xs_dims(), vec![2, 4, 5]);
+        assert_eq!(m.sample_elems(), 5);
+        assert!(man.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_non_contiguous_groups() {
+        let dir = std::env::temp_dir().join("vgc_manifest_bad");
+        let bad = fake_manifest_json().replace("\"offset\": 6", "\"offset\": 7");
+        write_manifest(&dir, &bad);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn params_blob_size_is_checked() {
+        let dir = std::env::temp_dir().join("vgc_manifest_params");
+        write_manifest(&dir, &fake_manifest_json());
+        std::fs::write(dir.join("m.params.bin"), vec![0u8; 12]).unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        let m = man.model("m").unwrap().clone();
+        assert!(man.load_params(&m).is_err());
+        std::fs::write(dir.join("m.params.bin"), vec![0u8; 40]).unwrap();
+        let p = man.load_params(&m).unwrap();
+        assert_eq!(p.len(), 10);
+    }
+}

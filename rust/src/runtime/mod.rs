@@ -1,0 +1,11 @@
+//! Runtime bridge: load AOT HLO-text artifacts (built by `make
+//! artifacts`) and execute them on the PJRT CPU client from the L3 hot
+//! path. Python never runs at request time.
+
+pub mod client;
+pub mod manifest;
+pub mod model;
+
+pub use client::{literal_f32, literal_i32, to_vec_f32, Client, Executable};
+pub use manifest::{Dtype, EvalKind, Group, Manifest, ModelEntry};
+pub use model::{EvalOutput, ModelRuntime, StepMoments};

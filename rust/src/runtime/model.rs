@@ -1,0 +1,224 @@
+//! Model runtime: a manifest entry bound to its compiled executables.
+//!
+//! One `ModelRuntime` owns the grad-moments executable (the training hot
+//! path) and, lazily, the eval executable. It hides all literal
+//! marshalling: the coordinator deals in flat `&[f32]` / `&[i32]` host
+//! buffers only.
+
+use anyhow::{Context, Result};
+
+use super::client::{literal_f32, literal_i32, to_vec_f32, Client, Executable};
+use super::manifest::{Dtype, EvalKind, Manifest, ModelEntry};
+
+/// Output of one multi-worker grad-moments step.
+///
+/// Row-major `[P, N]` layouts; `gsum[w]` is worker w's Algorithm-1 `r`
+/// increment (Σ_z ∇f_z / B) and `gsumsq[w]` its `v` increment
+/// (Σ_z (∇f_z / B)²).
+#[derive(Debug, Clone)]
+pub struct StepMoments {
+    pub loss: Vec<f32>,
+    pub gsum: Vec<f32>,
+    pub gsumsq: Vec<f32>,
+    pub n: usize,
+    pub workers: usize,
+}
+
+impl StepMoments {
+    pub fn gsum_of(&self, worker: usize) -> &[f32] {
+        &self.gsum[worker * self.n..(worker + 1) * self.n]
+    }
+
+    pub fn gsumsq_of(&self, worker: usize) -> &[f32] {
+        &self.gsumsq[worker * self.n..(worker + 1) * self.n]
+    }
+
+    pub fn mean_loss(&self) -> f32 {
+        crate::util::mean(&self.loss)
+    }
+}
+
+/// Result of an eval call.
+#[derive(Debug, Clone)]
+pub enum EvalOutput {
+    /// `[eval_batch * n_classes]` row-major logits.
+    Logits(Vec<f32>),
+    /// Scalar mean loss.
+    Loss(f32),
+}
+
+pub struct ModelRuntime<'c> {
+    client: &'c Client,
+    pub entry: ModelEntry,
+    manifest_dir: std::path::PathBuf,
+    grad_exe: Executable,
+    eval_exe: std::cell::OnceCell<Executable>,
+}
+
+impl<'c> ModelRuntime<'c> {
+    /// Compile the grad executable for `model` (eval compiles lazily).
+    pub fn load(client: &'c Client, manifest: &Manifest, model: &str) -> Result<Self> {
+        let entry = manifest.model(model)?.clone();
+        let grad_exe = client
+            .load_hlo(manifest.path_of(&entry.grad_hlo))
+            .with_context(|| format!("loading grad artifact for {model}"))?;
+        Ok(ModelRuntime {
+            client,
+            entry,
+            manifest_dir: manifest.dir.clone(),
+            grad_exe,
+            eval_exe: std::cell::OnceCell::new(),
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.entry.n_params
+    }
+
+    pub fn workers(&self) -> usize {
+        self.entry.workers
+    }
+
+    /// Execute one synchronous step's compute half.
+    ///
+    /// * `params` — flat parameter vector, length N.
+    /// * `xs` — per-worker input batches, flattened `[P, B, *sample]`.
+    ///   For f32 models pass `xs_f32`; for int32 (LM tokens) `xs_i32`.
+    /// * `ys` — labels `[P, B]` (ignored by LMs but always supplied; the
+    ///   lowered graph's signature includes them).
+    pub fn step(
+        &self,
+        params: &[f32],
+        xs_f32: Option<&[f32]>,
+        xs_i32: Option<&[i32]>,
+        ys: &[i32],
+    ) -> Result<StepMoments> {
+        let e = &self.entry;
+        anyhow::ensure!(params.len() == e.n_params, "params length mismatch");
+        let xs_dims = e.xs_dims();
+        let xs_lit = match e.sample_dtype {
+            Dtype::F32 => {
+                let xs = xs_f32.ok_or_else(|| anyhow::anyhow!("model expects f32 inputs"))?;
+                literal_f32(xs, &xs_dims)?
+            }
+            Dtype::I32 => {
+                let xs = xs_i32.ok_or_else(|| anyhow::anyhow!("model expects i32 inputs"))?;
+                literal_i32(xs, &xs_dims)?
+            }
+        };
+        let p_lit = literal_f32(params, &[e.n_params as i64])?;
+        let ys_lit = literal_i32(ys, &[e.workers as i64, e.batch as i64])?;
+
+        let outs = self.grad_exe.execute(&[p_lit, xs_lit, ys_lit])?;
+        anyhow::ensure!(outs.len() == 3, "grad artifact returned {} outputs", outs.len());
+        let loss = to_vec_f32(&outs[0])?;
+        let gsum = to_vec_f32(&outs[1])?;
+        let gsumsq = to_vec_f32(&outs[2])?;
+        anyhow::ensure!(loss.len() == e.workers, "loss shape mismatch");
+        anyhow::ensure!(gsum.len() == e.workers * e.n_params, "gsum shape mismatch");
+        anyhow::ensure!(
+            gsumsq.len() == e.workers * e.n_params,
+            "gsumsq shape mismatch"
+        );
+        Ok(StepMoments {
+            loss,
+            gsum,
+            gsumsq,
+            n: e.n_params,
+            workers: e.workers,
+        })
+    }
+
+    fn eval_exe(&self) -> Result<&Executable> {
+        if self.eval_exe.get().is_none() {
+            let exe = self
+                .client
+                .load_hlo(self.manifest_dir.join(&self.entry.eval_hlo))
+                .with_context(|| format!("loading eval artifact for {}", self.entry.name))?;
+            let _ = self.eval_exe.set(exe);
+        }
+        Ok(self.eval_exe.get().unwrap())
+    }
+
+    /// Run the eval artifact on one eval batch (`[eval_batch, *sample]`).
+    pub fn eval(
+        &self,
+        params: &[f32],
+        x_f32: Option<&[f32]>,
+        x_i32: Option<&[i32]>,
+    ) -> Result<EvalOutput> {
+        let e = &self.entry;
+        let mut dims = vec![e.eval_batch as i64];
+        dims.extend(e.sample_shape.iter().map(|&d| d as i64));
+        let x_lit = match e.sample_dtype {
+            Dtype::F32 => literal_f32(
+                x_f32.ok_or_else(|| anyhow::anyhow!("model expects f32 inputs"))?,
+                &dims,
+            )?,
+            Dtype::I32 => literal_i32(
+                x_i32.ok_or_else(|| anyhow::anyhow!("model expects i32 inputs"))?,
+                &dims,
+            )?,
+        };
+        let p_lit = literal_f32(params, &[e.n_params as i64])?;
+        let outs = self.eval_exe()?.execute(&[p_lit, x_lit])?;
+        match e.eval_kind {
+            EvalKind::Logits => Ok(EvalOutput::Logits(to_vec_f32(&outs[0])?)),
+            EvalKind::Loss => {
+                let v = to_vec_f32(&outs[0])?;
+                Ok(EvalOutput::Loss(v[0]))
+            }
+        }
+    }
+
+    /// Classification accuracy of logits against labels.
+    pub fn accuracy(logits: &[f32], labels: &[i32], n_classes: usize) -> f32 {
+        let n = labels.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let mut correct = 0usize;
+        for (i, &y) in labels.iter().enumerate() {
+            let row = &logits[i * n_classes..(i + 1) * n_classes];
+            let mut best = 0usize;
+            for (k, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = k;
+                }
+            }
+            if best as i32 == y {
+                correct += 1;
+            }
+        }
+        correct as f32 / n as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_argmax_matches() {
+        // 3 samples, 2 classes.
+        let logits = vec![0.1, 0.9, 0.8, 0.2, 0.4, 0.6];
+        let labels = vec![1, 0, 0];
+        let acc = ModelRuntime::accuracy(&logits, &labels, 2);
+        assert!((acc - 2.0 / 3.0).abs() < 1e-6);
+        assert_eq!(ModelRuntime::accuracy(&[], &[], 2), 0.0);
+    }
+
+    #[test]
+    fn step_moments_row_access() {
+        let m = StepMoments {
+            loss: vec![1.0, 3.0],
+            gsum: vec![1.0, 2.0, 3.0, 4.0],
+            gsumsq: vec![5.0, 6.0, 7.0, 8.0],
+            n: 2,
+            workers: 2,
+        };
+        assert_eq!(m.gsum_of(1), &[3.0, 4.0]);
+        assert_eq!(m.gsumsq_of(0), &[5.0, 6.0]);
+        assert_eq!(m.mean_loss(), 2.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Property-based testing harness (the offline crate set has no
+//! `proptest`; DESIGN.md §Substitutions).
+//!
+//! Deliberately small: seeded case generation with failure reporting of
+//! the exact seed + case index, so any failing property is reproducible
+//! with `VGC_PROP_SEED=<seed>`. Generators compose through plain
+//! closures over [`crate::util::rng::Pcg32`].
+
+use crate::util::rng::Pcg32;
+
+/// Number of cases per property (override with VGC_PROP_CASES).
+pub fn default_cases() -> u32 {
+    std::env::var("VGC_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("VGC_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5EED_CAFE)
+}
+
+/// Run `prop` against `cases` generated inputs. On failure, panics with
+/// the seed/case needed to replay deterministically.
+pub fn for_all<T, G, P>(name: &str, gen: G, prop: P)
+where
+    G: Fn(&mut Pcg32) -> T,
+    P: Fn(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let seed = base_seed();
+    let cases = default_cases();
+    for case in 0..cases {
+        let mut rng = Pcg32::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15), case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+// ---- common generators ----
+
+/// Gradient-like vector: mixture of near-zero noise, moderate values and
+/// occasional large spikes — the distribution the codecs actually see.
+pub fn gradient_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            let kind = rng.next_bounded(10);
+            let scale = match kind {
+                0 => 1.0,          // big
+                1..=3 => 1e-2,     // medium
+                _ => 1e-4,         // small
+            };
+            rng.next_normal() * scale
+        })
+        .collect()
+}
+
+/// Vector with exact zeros, subnormals, extremes — quantizer edge cases.
+pub fn adversarial_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| match rng.next_bounded(8) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f32::MIN_POSITIVE / 2.0, // subnormal
+            3 => f32::MAX / 2.0,
+            4 => -f32::MAX / 2.0,
+            5 => 1e-38,
+            _ => rng.next_normal(),
+        })
+        .collect()
+}
+
+pub fn usize_in(rng: &mut Pcg32, lo: usize, hi: usize) -> usize {
+    lo + rng.next_bounded((hi - lo + 1) as u32) as usize
+}
+
+pub fn f32_in(rng: &mut Pcg32, lo: f32, hi: f32) -> f32 {
+    lo + rng.next_f32() * (hi - lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_passes_trivial_property() {
+        for_all(
+            "vec length",
+            |rng| {
+                let n = usize_in(rng, 0, 50);
+                gradient_vec(rng, n)
+            },
+            |v| {
+                if v.len() <= 50 {
+                    Ok(())
+                } else {
+                    Err("too long".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn for_all_reports_failures() {
+        for_all("always fails", |rng| rng.next_u32(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let mut a = Pcg32::new(1, 2);
+        let mut b = Pcg32::new(1, 2);
+        assert_eq!(gradient_vec(&mut a, 32), gradient_vec(&mut b, 32));
+    }
+
+    #[test]
+    fn adversarial_vec_contains_edge_values() {
+        let mut rng = Pcg32::new(3, 3);
+        let v = adversarial_vec(&mut rng, 4096);
+        assert!(v.iter().any(|x| *x == 0.0));
+        assert!(v.iter().any(|x| x.abs() > 1e30));
+        assert!(v.iter().any(|x| x.abs() < 1e-30 && *x != 0.0));
+    }
+}

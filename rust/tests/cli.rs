@@ -1,0 +1,109 @@
+//! Launcher CLI integration: run the real `repro` binary end to end.
+
+use std::process::Command;
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = repro().output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("USAGE"));
+    assert!(text.contains("table1"));
+}
+
+#[test]
+fn unknown_command_exits_nonzero() {
+    let out = repro().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn unknown_flag_is_rejected() {
+    let out = repro().args(["train", "--modell", "mlp"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown flag") || err.contains("model"), "{err}");
+}
+
+#[test]
+fn costmodel_reports_linear_regime() {
+    let out = repro().arg("costmodel").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("c > p/2"));
+    assert!(text.contains("speedup"));
+}
+
+#[test]
+fn inspect_lists_models() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let out = repro().arg("inspect").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for model in ["mlp", "vgg_tiny", "resnet_mini", "transformer"] {
+        assert!(text.contains(model), "missing {model} in:\n{text}");
+    }
+}
+
+#[test]
+fn short_train_run_emits_summary_and_curve() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let curve = std::env::temp_dir().join("vgc_cli_curve.csv");
+    let out = repro()
+        .args([
+            "train", "--model", "mlp", "--codec", "vgc:alpha=1.5", "--steps", "5",
+            "--eval-every", "0", "--log-every", "0",
+            "--loss-curve", curve.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("compression ratio"));
+    let csv = std::fs::read_to_string(&curve).unwrap();
+    assert_eq!(csv.lines().count(), 6); // header + 5 steps
+}
+
+#[test]
+fn fig3_from_results_converts_json() {
+    let dir = std::env::temp_dir();
+    let json = r#"[{"table":"table1","method":"vgc alpha=1","optimizer":"adam",
+        "accuracy":0.9,"final_loss":0.1,"compression":120.5,"bits_ratio":130.0}]"#;
+    let in_path = dir.join("vgc_fig3_in.json");
+    let out_path = dir.join("vgc_fig3_out.csv");
+    std::fs::write(&in_path, json).unwrap();
+    let out = repro()
+        .args([
+            "fig3", "--from", in_path.to_str().unwrap(),
+            "--out", out_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let csv = std::fs::read_to_string(&out_path).unwrap();
+    assert!(csv.contains("table1:vgc alpha=1,adam,0.9"), "{csv}");
+}

@@ -1,0 +1,264 @@
+//! Cross-codec property suite: the invariants DESIGN.md §5 calls out,
+//! exercised over generated gradient streams and the real allgatherv
+//! fabric (no XLA dependency — these run everywhere).
+
+use vgc::comm::allgatherv::ring_allgatherv;
+use vgc::compress::{Codec, CodecSpec};
+use vgc::model::Layout;
+use vgc::testkit;
+use vgc::util::rng::Pcg32;
+
+fn all_specs() -> Vec<CodecSpec> {
+    vec![
+        CodecSpec::None,
+        CodecSpec::Vgc { alpha: 1.0, zeta: 0.999 },
+        CodecSpec::Vgc { alpha: 2.0, zeta: 0.99 },
+        CodecSpec::Strom { tau: 0.05 },
+        CodecSpec::Hybrid { tau: 0.05, alpha: 1.5, zeta: 0.999 },
+        CodecSpec::Qsgd { bits: 2, bucket: 64 },
+        CodecSpec::Qsgd { bits: 4, bucket: 512 },
+        CodecSpec::TernGrad,
+    ]
+}
+
+/// Drive one codec over a stream, decoding every message; returns the
+/// total decoded update.
+fn drive(codec: &mut Box<dyn Codec>, stream: &[Vec<f32>], n: usize) -> Vec<f32> {
+    let mut total = vec![0.0f32; n];
+    for g in stream {
+        let sq: Vec<f32> = g.iter().map(|x| x * x * 0.5).collect();
+        let msg = codec.encode_step(g, &sq);
+        codec.decode_into(&msg.bytes, &mut total).unwrap();
+    }
+    total
+}
+
+#[test]
+fn every_codec_roundtrips_its_own_messages() {
+    for spec in all_specs() {
+        testkit::for_all(
+            &format!("roundtrip {}", spec.label()),
+            |rng: &mut Pcg32| {
+                let n = testkit::usize_in(rng, 1, 150);
+                let steps = testkit::usize_in(rng, 1, 8);
+                (0..steps)
+                    .map(|_| testkit::gradient_vec(rng, n))
+                    .collect::<Vec<_>>()
+            },
+            |stream| {
+                let n = stream[0].len();
+                let layout = Layout::uniform(n, 13);
+                let mut codec = spec.build(&layout, 1);
+                let total = drive(&mut codec, stream, n);
+                if total.iter().all(|x| x.is_finite()) {
+                    Ok(())
+                } else {
+                    Err("non-finite decode".into())
+                }
+            },
+        );
+    }
+}
+
+#[test]
+fn decode_is_stateless_and_deterministic() {
+    // Decoding the same message twice into two buffers gives identical
+    // results, regardless of intervening encodes.
+    for spec in all_specs() {
+        let n = 97;
+        let layout = Layout::uniform(n, 10);
+        let mut codec = spec.build(&layout, 2);
+        let mut rng = Pcg32::new(3, 3);
+        let g = testkit::gradient_vec(&mut rng, n);
+        let sq: Vec<f32> = g.iter().map(|x| x * x).collect();
+        let msg = codec.encode_step(&g, &sq);
+        let mut out1 = vec![0.0f32; n];
+        codec.decode_into(&msg.bytes, &mut out1).unwrap();
+        // Encode more steps (mutates codec state).
+        codec.encode_step(&g, &sq);
+        let mut out2 = vec![0.0f32; n];
+        codec.decode_into(&msg.bytes, &mut out2).unwrap();
+        assert_eq!(out1, out2, "{}", spec.label());
+    }
+}
+
+#[test]
+fn allgatherv_then_decode_equals_direct_decode() {
+    // The synchrony invariant at codec level: decoding the gathered
+    // messages equals decoding the originals, on every worker.
+    let p = 5;
+    let n = 120;
+    let layout = Layout::uniform(n, 11);
+    let spec = CodecSpec::Vgc { alpha: 1.0, zeta: 0.999 };
+    let mut codecs: Vec<Box<dyn Codec>> =
+        (0..p).map(|w| spec.build(&layout, w as u64)).collect();
+    let mut rng = Pcg32::new(17, 4);
+
+    for _ in 0..6 {
+        let msgs: Vec<Vec<u8>> = (0..p)
+            .map(|w| {
+                let g = testkit::gradient_vec(&mut rng, n);
+                let sq = vec![0.0; n];
+                let _ = w;
+                codecs[w].encode_step(&g, &sq).bytes
+            })
+            .collect();
+        let mut direct = vec![0.0f32; n];
+        for m in &msgs {
+            codecs[0].decode_into(m, &mut direct).unwrap();
+        }
+        let res = ring_allgatherv(&msgs);
+        for dst in 0..p {
+            let mut via_ring = vec![0.0f32; n];
+            for m in &res.gathered[dst] {
+                codecs[dst].decode_into(m, &mut via_ring).unwrap();
+            }
+            assert_eq!(direct, via_ring, "worker {dst} desync");
+        }
+    }
+}
+
+#[test]
+fn hybrid_conservation_with_quantized_sends() {
+    // Hybrid sends exact ±τ quanta, so conservation is exact:
+    // decoded_total + residual == accumulated stream.
+    testkit::for_all(
+        "hybrid conservation",
+        |rng: &mut Pcg32| {
+            let n = testkit::usize_in(rng, 1, 60);
+            let steps = testkit::usize_in(rng, 1, 25);
+            let stream: Vec<Vec<f32>> =
+                (0..steps).map(|_| testkit::gradient_vec(rng, n)).collect();
+            (testkit::f32_in(rng, 0.01, 0.3), stream)
+        },
+        |(tau, stream)| {
+            let n = stream[0].len();
+            let layout = Layout::uniform(n, 8);
+            let mut codec = vgc::compress::hybrid::HybridCodec::new(
+                layout, *tau, 1.0, 1.0, // zeta=1: no decay, exact bookkeeping
+            );
+            let mut decoded = vec![0.0f32; n];
+            for g in stream {
+                let sq: Vec<f32> = g.iter().map(|x| x * x).collect();
+                let msg = vgc::compress::Codec::encode_step(&mut codec, g, &sq);
+                vgc::compress::Codec::decode_into(&codec, &msg.bytes, &mut decoded)
+                    .map_err(|e| e.to_string())?;
+            }
+            for i in 0..n {
+                let total: f32 = stream.iter().map(|g| g[i]).sum();
+                let got = decoded[i] + codec.r()[i];
+                if (got - total).abs() > 1e-3 * (1.0 + total.abs()) {
+                    return Err(format!("i={i}: {got} vs {total}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn corrupt_messages_are_rejected_not_misdecoded() {
+    // Failure injection: truncation and bit-flips must either error or
+    // decode within the message's own bounds — never panic, never write
+    // out of range (the decode APIs take &mut [f32] of exactly N).
+    for spec in all_specs() {
+        let n = 64;
+        let layout = Layout::uniform(n, 16);
+        let mut codec = spec.build(&layout, 3);
+        let mut rng = Pcg32::new(9, 9);
+        let g = testkit::gradient_vec(&mut rng, n);
+        let sq: Vec<f32> = g.iter().map(|x| x * x).collect();
+        let msg = codec.encode_step(&g, &sq);
+        if msg.bytes.is_empty() {
+            continue;
+        }
+        let mut out = vec![0.0f32; n];
+        // Truncation: must not panic (error is fine).
+        let _ = codec.decode_into(&msg.bytes[..msg.bytes.len() / 2], &mut out);
+        // Random bit flips: must not panic.
+        for trial in 0..20 {
+            let mut bad = msg.bytes.clone();
+            let pos = (trial * 7919) % bad.len();
+            bad[pos] ^= 0xA5;
+            let mut out = vec![0.0f32; n];
+            let _ = codec.decode_into(&bad, &mut out);
+        }
+    }
+}
+
+#[test]
+fn stochastic_codecs_differ_across_workers_deterministic_within() {
+    // QSGD/TernGrad rounding streams: different worker seeds must give
+    // different messages (independence), same seed identical (replay).
+    for spec in [CodecSpec::Qsgd { bits: 2, bucket: 32 }, CodecSpec::TernGrad] {
+        let n = 256;
+        let layout = Layout::uniform(n, 32);
+        let mut rng = Pcg32::new(11, 11);
+        let g = testkit::gradient_vec(&mut rng, n);
+        let sq = vec![0.0f32; n];
+        let m0a = spec.build(&layout, 0).encode_step(&g, &sq);
+        let m0b = spec.build(&layout, 0).encode_step(&g, &sq);
+        let m1 = spec.build(&layout, 1).encode_step(&g, &sq);
+        assert_eq!(m0a.bytes, m0b.bytes, "{} not replayable", spec.label());
+        assert_ne!(m0a.bytes, m1.bytes, "{} workers correlated", spec.label());
+    }
+}
+
+#[test]
+fn vgc_total_delivery_approaches_stream_mass_on_persistent_gradients() {
+    // A persistent constant gradient must eventually be delivered: over
+    // many steps the decoded total approaches steps·g within the
+    // quantizer bracket plus at most a few steps' worth of residual.
+    let n = 32;
+    let layout = Layout::uniform(n, 8);
+    let mut codec = CodecSpec::Vgc { alpha: 2.0, zeta: 0.999 }.build(&layout, 0);
+    let g = vec![0.02f32; n];
+    let sq = vec![0.0004f32; n]; // per-step v increment = g² (B=1-like)
+    let steps = 200;
+    let mut decoded = vec![0.0f32; n];
+    for _ in 0..steps {
+        let msg = codec.encode_step(&g, &sq);
+        codec.decode_into(&msg.bytes, &mut decoded).unwrap();
+    }
+    let want = 0.02 * steps as f32;
+    for (i, &d) in decoded.iter().enumerate() {
+        assert!(
+            d > want * 0.5 && d < want * 1.4,
+            "i={i}: delivered {d} of {want}"
+        );
+    }
+}
+
+#[test]
+fn message_sizes_account_for_elements() {
+    // Wire accounting: sparse codec messages carry exactly 4 bytes per
+    // element plus declared headers; elements never exceeds N.
+    testkit::for_all(
+        "message accounting",
+        |rng: &mut Pcg32| {
+            let n = testkit::usize_in(rng, 1, 300);
+            testkit::gradient_vec(rng, n)
+        },
+        |g| {
+            let n = g.len();
+            let layout = Layout::uniform(n, 17);
+            for spec in [
+                CodecSpec::Strom { tau: 0.01 },
+                CodecSpec::Vgc { alpha: 1.0, zeta: 0.999 },
+            ] {
+                let mut codec = spec.build(&layout, 0);
+                let msg = codec.encode_step(g, &vec![0.0; n]);
+                if msg.elements > n as u64 {
+                    return Err(format!("{}: {} > N", spec.label(), msg.elements));
+                }
+                if msg.payload_bits != msg.elements * 32 {
+                    return Err(format!("{}: payload bits mismatch", spec.label()));
+                }
+                if (msg.bytes.len() as u64) < msg.elements * 4 {
+                    return Err(format!("{}: wire smaller than payload", spec.label()));
+                }
+            }
+            Ok(())
+        },
+    );
+}

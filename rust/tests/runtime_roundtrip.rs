@@ -1,0 +1,135 @@
+//! Integration: load real AOT artifacts and execute them end-to-end.
+//!
+//! Requires `make artifacts` to have run (skips loudly otherwise).
+
+use vgc::runtime::{Client, EvalOutput, Manifest, ModelRuntime};
+use vgc::util::rng::Pcg32;
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(dir).expect("manifest parses"))
+}
+
+#[test]
+fn mlp_grad_step_executes_and_is_sane() {
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    let rt = ModelRuntime::load(&client, &man, "mlp").unwrap();
+    let e = rt.entry.clone();
+    let params = man.load_params(&e).unwrap();
+
+    let mut rng = Pcg32::new(0, 0);
+    let xs: Vec<f32> = (0..e.workers * e.batch * e.sample_elems())
+        .map(|_| rng.next_normal())
+        .collect();
+    let ys: Vec<i32> = (0..e.workers * e.batch)
+        .map(|_| rng.next_bounded(e.n_classes as u32) as i32)
+        .collect();
+
+    let out = rt.step(&params, Some(&xs), None, &ys).unwrap();
+    assert_eq!(out.loss.len(), e.workers);
+    assert_eq!(out.gsum.len(), e.workers * e.n_params);
+    // Fresh random data, 10 classes: loss must be near ln(10).
+    for &l in &out.loss {
+        assert!(l.is_finite() && l > 1.0 && l < 5.0, "loss={l}");
+    }
+    // v increments are sums of squares: non-negative everywhere.
+    assert!(out.gsumsq.iter().all(|&v| v >= 0.0));
+    // Workers see different shards => different moments.
+    assert_ne!(out.gsum_of(0), out.gsum_of(1));
+}
+
+#[test]
+fn mlp_eval_returns_logits() {
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    let rt = ModelRuntime::load(&client, &man, "mlp").unwrap();
+    let e = rt.entry.clone();
+    let params = man.load_params(&e).unwrap();
+    let x = vec![0.5f32; e.eval_batch * e.sample_elems()];
+    match rt.eval(&params, Some(&x), None).unwrap() {
+        EvalOutput::Logits(logits) => {
+            assert_eq!(logits.len(), e.eval_batch * e.n_classes);
+            assert!(logits.iter().all(|v| v.is_finite()));
+        }
+        other => panic!("expected logits, got {other:?}"),
+    }
+}
+
+#[test]
+fn step_rejects_wrong_shapes() {
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    let rt = ModelRuntime::load(&client, &man, "mlp").unwrap();
+    let e = rt.entry.clone();
+    let params = man.load_params(&e).unwrap();
+    let good_xs = vec![0.0f32; e.workers * e.batch * e.sample_elems()];
+    let good_ys = vec![0i32; e.workers * e.batch];
+
+    // Wrong params length.
+    assert!(rt.step(&params[..10], Some(&good_xs), None, &good_ys).is_err());
+    // Wrong xs length.
+    assert!(rt.step(&params, Some(&good_xs[..8]), None, &good_ys).is_err());
+    // Wrong dtype: model expects f32 inputs, i32 supplied.
+    let bad_i32 = vec![0i32; good_xs.len()];
+    assert!(rt.step(&params, None, Some(&bad_i32), &good_ys).is_err());
+}
+
+#[test]
+fn grad_matches_across_repeated_execution() {
+    // PJRT execution must be deterministic: same inputs, same moments.
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    let rt = ModelRuntime::load(&client, &man, "mlp").unwrap();
+    let e = rt.entry.clone();
+    let params = man.load_params(&e).unwrap();
+    let mut rng = Pcg32::new(1, 1);
+    let xs: Vec<f32> = (0..e.workers * e.batch * e.sample_elems())
+        .map(|_| rng.next_normal())
+        .collect();
+    let ys: Vec<i32> = (0..e.workers * e.batch)
+        .map(|_| rng.next_bounded(e.n_classes as u32) as i32)
+        .collect();
+    let a = rt.step(&params, Some(&xs), None, &ys).unwrap();
+    let b = rt.step(&params, Some(&xs), None, &ys).unwrap();
+    assert_eq!(a.gsum, b.gsum);
+    assert_eq!(a.gsumsq, b.gsumsq);
+    assert_eq!(a.loss, b.loss);
+}
+
+#[test]
+fn gsumsq_consistent_with_gsum_scale() {
+    // Cauchy-Schwarz over the batch: (Σ g/B)² ≤ B · Σ (g/B)², i.e.
+    // gsum² ≤ B · gsumsq elementwise — a cheap cross-check that the two
+    // outputs really are the first and second moments of one stream.
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    let rt = ModelRuntime::load(&client, &man, "mlp").unwrap();
+    let e = rt.entry.clone();
+    let params = man.load_params(&e).unwrap();
+    let mut rng = Pcg32::new(2, 2);
+    let xs: Vec<f32> = (0..e.workers * e.batch * e.sample_elems())
+        .map(|_| rng.next_normal())
+        .collect();
+    let ys: Vec<i32> = (0..e.workers * e.batch)
+        .map(|_| rng.next_bounded(e.n_classes as u32) as i32)
+        .collect();
+    let out = rt.step(&params, Some(&xs), None, &ys).unwrap();
+    let b = e.batch as f32;
+    for w in 0..e.workers {
+        let gs = out.gsum_of(w);
+        let gss = out.gsumsq_of(w);
+        for i in 0..e.n_params {
+            assert!(
+                gs[i] * gs[i] <= b * gss[i] + 1e-6,
+                "w={w} i={i}: {} vs {}",
+                gs[i] * gs[i],
+                b * gss[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Integration: full training runs over real artifacts, one per codec,
+//! plus the cross-cutting coordinator invariants (synchrony, ratio
+//! ordering, delayed-update conservation).
+
+use vgc::compress::CodecSpec;
+use vgc::config::TrainConfig;
+use vgc::coordinator::Trainer;
+use vgc::optim::LrSchedule;
+use vgc::runtime::{Client, Manifest};
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(dir).expect("manifest parses"))
+}
+
+fn mlp_cfg(codec: CodecSpec, steps: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::defaults("mlp");
+    cfg.codec = codec;
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.log_every = 0;
+    cfg.verify_sync = true;
+    cfg
+}
+
+#[test]
+fn every_codec_trains_mlp_to_lower_loss() {
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    let codecs = vec![
+        CodecSpec::None,
+        CodecSpec::Vgc { alpha: 1.0, zeta: 0.999 },
+        CodecSpec::Vgc { alpha: 2.0, zeta: 0.999 },
+        CodecSpec::Strom { tau: 0.001 },
+        CodecSpec::Hybrid { tau: 0.001, alpha: 2.0, zeta: 0.999 },
+        CodecSpec::Qsgd { bits: 4, bucket: 128 },
+        CodecSpec::TernGrad,
+    ];
+    for codec in codecs {
+        let label = codec.label();
+        let mut t = Trainer::new(&client, &man, mlp_cfg(codec, 40)).unwrap();
+        t.run(true).unwrap();
+        let first = t.metrics.steps.first().unwrap().loss;
+        let tail = t.metrics.tail_loss(5);
+        assert!(
+            tail < first * 0.8,
+            "{label}: loss did not fall ({first} -> {tail})"
+        );
+        assert!(
+            tail.is_finite(),
+            "{label}: non-finite loss"
+        );
+    }
+}
+
+#[test]
+fn sparse_codecs_compress_and_dense_do_not() {
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+
+    let mut none = Trainer::new(&client, &man, mlp_cfg(CodecSpec::None, 25)).unwrap();
+    none.run(true).unwrap();
+    assert!((none.metrics.compression_ratio() - 1.0).abs() < 1e-9);
+
+    let mut vgc = Trainer::new(
+        &client,
+        &man,
+        mlp_cfg(CodecSpec::Vgc { alpha: 2.0, zeta: 0.999 }, 25),
+    )
+    .unwrap();
+    vgc.run(true).unwrap();
+    assert!(
+        vgc.metrics.compression_ratio() > 5.0,
+        "vgc ratio {} too low",
+        vgc.metrics.compression_ratio()
+    );
+}
+
+#[test]
+fn alpha_orders_compression_ratio() {
+    // Paper Sec. 4.4: larger α compresses more aggressively.
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    let mut ratios = Vec::new();
+    for alpha in [1.0f32, 1.5, 2.0] {
+        let mut t = Trainer::new(
+            &client,
+            &man,
+            mlp_cfg(CodecSpec::Vgc { alpha, zeta: 0.999 }, 30),
+        )
+        .unwrap();
+        t.run(true).unwrap();
+        ratios.push(t.metrics.compression_ratio());
+    }
+    assert!(
+        ratios[0] < ratios[1] && ratios[1] < ratios[2],
+        "ratios not increasing with alpha: {ratios:?}"
+    );
+}
+
+#[test]
+fn verify_sync_holds_across_full_run() {
+    // verify_sync asserts inside train_step; a desync would panic.
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    let mut cfg = mlp_cfg(CodecSpec::Hybrid { tau: 0.001, alpha: 1.0, zeta: 0.999 }, 30);
+    cfg.verify_sync = true;
+    let mut t = Trainer::new(&client, &man, cfg).unwrap();
+    t.run(true).unwrap();
+}
+
+#[test]
+fn same_seed_reproduces_exactly() {
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    let run = |seed: u64| {
+        let mut cfg = mlp_cfg(CodecSpec::Vgc { alpha: 1.5, zeta: 0.999 }, 15);
+        cfg.seed = seed;
+        let mut t = Trainer::new(&client, &man, cfg).unwrap();
+        t.run(true).unwrap();
+        (t.params.clone(), t.metrics.compression_ratio())
+    };
+    let (p1, r1) = run(7);
+    let (p2, r2) = run(7);
+    assert_eq!(p1, p2, "same seed must give identical parameters");
+    assert_eq!(r1, r2);
+    let (p3, _) = run(8);
+    assert_ne!(p1, p3, "different seed must differ");
+}
+
+#[test]
+fn adam_runs_after_communication() {
+    // Sec. 4.3: Adam preprocessing is local, post-communication — just
+    // verify Adam + VGC trains and params stay finite.
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    let mut cfg = mlp_cfg(CodecSpec::Vgc { alpha: 1.5, zeta: 0.999 }, 30);
+    cfg.optimizer = "adam".into();
+    cfg.schedule = LrSchedule::Constant { lr: 0.002 };
+    let mut t = Trainer::new(&client, &man, cfg).unwrap();
+    t.run(true).unwrap();
+    assert!(t.params.iter().all(|p| p.is_finite()));
+    let first = t.metrics.steps.first().unwrap().loss;
+    assert!(t.metrics.tail_loss(5) < first);
+}
+
+#[test]
+fn eval_accuracy_improves_with_training() {
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    let mut cfg = mlp_cfg(CodecSpec::Vgc { alpha: 1.0, zeta: 0.999 }, 60);
+    cfg.eval_every = 30;
+    let mut t = Trainer::new(&client, &man, cfg).unwrap();
+    let before = t.evaluate().unwrap().accuracy;
+    t.run(true).unwrap();
+    let after = t.metrics.final_accuracy();
+    assert!(
+        after > before + 0.3,
+        "accuracy {before} -> {after}: no learning"
+    );
+}
+
+#[test]
+fn residual_conservation_under_training() {
+    // VGC invariant over a real gradient stream: residual mass is
+    // finite and bounded; after a send, state resets (checked
+    // statistically: the residual L1 must not blow up monotonically).
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    let mut t = Trainer::new(
+        &client,
+        &man,
+        mlp_cfg(CodecSpec::Vgc { alpha: 1.0, zeta: 0.999 }, 50),
+    )
+    .unwrap();
+    let mut l1s = Vec::new();
+    for _ in 0..50 {
+        t.train_step().unwrap();
+        l1s.push(t.residual_l1());
+    }
+    let max = l1s.iter().cloned().fold(0.0f64, f64::max);
+    assert!(max.is_finite() && max > 0.0);
+    // Late-run residual should not be orders of magnitude above the
+    // running maximum of the first half (no runaway accumulation).
+    let first_half_max = l1s[..25].iter().cloned().fold(0.0f64, f64::max);
+    assert!(
+        *l1s.last().unwrap() < first_half_max * 20.0,
+        "runaway residual: {l1s:?}"
+    );
+}
