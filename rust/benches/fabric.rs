@@ -1,0 +1,76 @@
+//! Fabric bench: raw event throughput of the discrete-event engine,
+//! and the 16-worker ring vs parameter-server allgatherv step (both
+//! the host cost of simulating it and the simulated wall-clock it
+//! predicts).
+
+use vgc::bench::Bencher;
+use vgc::fabric::{build_topology, Fabric, FabricConfig, LinkSpec, TopologyKind};
+use vgc::util::rng::Pcg32;
+
+fn messages(p: usize, bytes: usize) -> Vec<Vec<u8>> {
+    (0..p)
+        .map(|w| {
+            let mut rng = Pcg32::new(w as u64, 3);
+            (0..bytes).map(|_| rng.next_u32() as u8).collect()
+        })
+        .collect()
+}
+
+fn config() -> FabricConfig {
+    FabricConfig {
+        link: LinkSpec::gige(),
+        ..FabricConfig::default()
+    }
+}
+
+fn main() {
+    let b = Bencher::default();
+    let p = 16;
+
+    // Engine event throughput: a tree gatherv at branch 4 exercises
+    // fan-in, fan-out and forwarding; tiny payloads isolate the
+    // scheduler cost from byte shuffling.
+    let tiny = messages(p, 64);
+    let kind = TopologyKind::Tree { branch: 4 };
+    let topo = build_topology(kind, p);
+    let events_per_run = {
+        let mut f = Fabric::for_config(&config(), topo.node_count());
+        topo.allgatherv(&mut f, &tiny).events
+    };
+    b.report_throughput(
+        &format!("fabric/events/tree4/p={p}"),
+        events_per_run as f64,
+        "ev",
+        || {
+            let mut f = Fabric::for_config(&config(), topo.node_count());
+            let r = topo.allgatherv(&mut f, &tiny);
+            std::hint::black_box(r.time_ps);
+        },
+    );
+
+    // Ring vs parameter-server at a codec-realistic 64 KiB message.
+    let msgs = messages(p, 64 * 1024);
+    for kind in [TopologyKind::Ring, TopologyKind::Star] {
+        let topo = build_topology(kind, p);
+        let mut probe = Fabric::for_config(&config(), topo.node_count());
+        let sim = topo.allgatherv(&mut probe, &msgs);
+        println!(
+            "sim   {:<44} step={:.3} ms  traffic={} B  max_link={} B  events={}",
+            format!("fabric/allgatherv/{}/p={p}/64KiB", kind.label()),
+            sim.time_secs() * 1e3,
+            sim.traffic.total_bytes(),
+            probe.max_link_bytes(),
+            sim.events,
+        );
+        b.report_throughput(
+            &format!("fabric/allgatherv/{}/p={p}/64KiB", kind.label()),
+            sim.events as f64,
+            "ev",
+            || {
+                let mut f = Fabric::for_config(&config(), topo.node_count());
+                let r = topo.allgatherv(&mut f, &msgs);
+                std::hint::black_box(r.time_ps);
+            },
+        );
+    }
+}

@@ -1,15 +1,23 @@
 //! Ring allgatherv: every node ends up holding every node's message.
 //!
-//! Implements the classic p−1-round ring: in round t, node i sends the
-//! block that *originated* at node `(i − t) mod p` to its right
-//! neighbour `(i+1) mod p`. Bytes genuinely move between per-node
-//! mailboxes, so a bug in block bookkeeping shows up as corrupted codec
-//! messages downstream, not just a wrong counter.
+//! This is now a thin front over the event-driven fabric's ring
+//! backend ([`crate::fabric::ring`]): the classic p−1-hop circulation
+//! where each node injects its own block rightward and forwards every
+//! block it receives except the one that completes its set. Bytes
+//! genuinely move between per-node endpoints, so a bug in block
+//! bookkeeping shows up as corrupted codec messages downstream, not
+//! just a wrong counter. Traffic accounting is unchanged from the
+//! pre-fabric lockstep implementation (Σ_j n_j − n_(i+1) per node,
+//! p−1 rounds).
 //!
-//! Wall-clock is modeled (not measured) with the paper's pipelined-ring
-//! bound (Träff et al. 2008; Sec. 5): see [`costmodel`].
+//! Wall-clock on this path stays *modeled* as before (the default
+//! fabric config is deterministic and contention-free here — see
+//! [`costmodel`] for the paper's pipelined-ring bound and its
+//! simulated cross-check); callers that want simulated time, jitter,
+//! stragglers or other topologies use `fabric` directly.
 
 use super::Traffic;
+use crate::fabric::{build_topology, Fabric, FabricConfig, TopologyKind};
 
 /// Result of one allgatherv: `gathered[dst][src]` is node `src`'s
 /// message as received by node `dst` (every row must be identical —
@@ -23,53 +31,12 @@ pub struct GatherResult {
 pub fn ring_allgatherv(inputs: &[Vec<u8>]) -> GatherResult {
     let p = inputs.len();
     assert!(p > 0, "allgatherv needs at least one node");
-    // blocks[node][origin] = Option<bytes>
-    let mut blocks: Vec<Vec<Option<Vec<u8>>>> = (0..p)
-        .map(|i| {
-            let mut row = vec![None; p];
-            row[i] = Some(inputs[i].clone());
-            row
-        })
-        .collect();
-    let mut bytes_sent = vec![0u64; p];
-
-    for t in 0..p.saturating_sub(1) {
-        // Compute all sends for this round first (synchronous rounds:
-        // everyone sends in parallel), then deliver.
-        let mut in_flight: Vec<(usize, usize, Vec<u8>)> = Vec::with_capacity(p);
-        for i in 0..p {
-            let origin = (i + p - t) % p;
-            let block = blocks[i][origin]
-                .as_ref()
-                .expect("ring invariant: block present")
-                .clone();
-            bytes_sent[i] += block.len() as u64;
-            in_flight.push((origin, (i + 1) % p, block));
-        }
-        for (origin, dst, block) in in_flight {
-            debug_assert!(
-                blocks[dst][origin].is_none() || blocks[dst][origin].as_deref() == Some(&block),
-                "conflicting delivery"
-            );
-            blocks[dst][origin] = Some(block);
-        }
-    }
-
-    let gathered: Vec<Vec<Vec<u8>>> = blocks
-        .into_iter()
-        .map(|row| {
-            row.into_iter()
-                .map(|b| b.expect("all blocks delivered after p-1 rounds"))
-                .collect()
-        })
-        .collect();
-
+    let topo = build_topology(TopologyKind::Ring, p);
+    let mut fabric = Fabric::for_config(&FabricConfig::default(), topo.node_count());
+    let sim = topo.allgatherv(&mut fabric, inputs);
     GatherResult {
-        gathered,
-        traffic: Traffic {
-            bytes_sent_per_node: bytes_sent,
-            rounds: p.saturating_sub(1) as u32,
-        },
+        gathered: sim.gathered,
+        traffic: sim.traffic,
     }
 }
 

@@ -1,11 +1,16 @@
 //! Ring allreduce (sum) — the uncompressed baseline collective.
 //!
-//! Classic two-phase ring: reduce-scatter (p−1 rounds over N/p chunks,
-//! each node ends owning the full sum of one chunk) followed by
-//! allgather (p−1 rounds circulating the reduced chunks). Total bytes
-//! per node ≈ 2·(p−1)·N·s/p — exactly the paper's `T_r` bandwidth term.
+//! A thin front over the fabric's ring backend
+//! ([`crate::fabric::ring`]): reduce-scatter (p−1 hops over N/p
+//! chunks, each node ends owning the full sum of one chunk) pipelined
+//! into the allgather of the reduced chunks. The event-driven protocol
+//! accumulates in the same order over the same chunk boundaries as the
+//! original lockstep rounds, so results are bit-identical and total
+//! bytes per node stay ≈ 2·(p−1)·N·s/p — exactly the paper's `T_r`
+//! bandwidth term.
 
 use super::Traffic;
+use crate::fabric::{build_topology, Fabric, FabricConfig, TopologyKind};
 
 /// Result: every node's reduced vector plus traffic accounting.
 pub struct ReduceResult {
@@ -17,65 +22,12 @@ pub struct ReduceResult {
 pub fn ring_allreduce(inputs: &[Vec<f32>]) -> ReduceResult {
     let p = inputs.len();
     assert!(p > 0);
-    let n = inputs[0].len();
-    assert!(inputs.iter().all(|v| v.len() == n), "length mismatch");
-    if p == 1 {
-        return ReduceResult {
-            reduced: vec![inputs[0].clone()],
-            traffic: Traffic {
-                bytes_sent_per_node: vec![0],
-                rounds: 0,
-            },
-        };
-    }
-
-    // Chunk boundaries: chunk c covers [start(c), start(c+1)).
-    let start = |c: usize| c * n / p;
-    let chunk_range = |c: usize| start(c % p)..start(c % p + 1);
-
-    let mut state: Vec<Vec<f32>> = inputs.to_vec();
-    let mut bytes_sent = vec![0u64; p];
-
-    // Phase 1: reduce-scatter. In round t node i sends chunk (i - t)
-    // and accumulates the chunk it receives into its copy.
-    for t in 0..p - 1 {
-        let mut in_flight: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(p);
-        for i in 0..p {
-            let c = (i + p - t) % p;
-            let payload: Vec<f32> = state[i][chunk_range(c)].to_vec();
-            bytes_sent[i] += payload.len() as u64 * 4;
-            in_flight.push((c, (i + 1) % p, payload));
-        }
-        for (c, dst, payload) in in_flight {
-            let r = chunk_range(c);
-            for (k, v) in payload.into_iter().enumerate() {
-                state[dst][r.start + k] += v;
-            }
-        }
-    }
-
-    // Phase 2: allgather of the reduced chunks. After phase 1 node i
-    // owns the fully-reduced chunk (i + 1) mod p.
-    for t in 0..p - 1 {
-        let mut in_flight: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(p);
-        for i in 0..p {
-            let c = (i + 1 + p - t) % p;
-            let payload: Vec<f32> = state[i][chunk_range(c)].to_vec();
-            bytes_sent[i] += payload.len() as u64 * 4;
-            in_flight.push((c, (i + 1) % p, payload));
-        }
-        for (c, dst, payload) in in_flight {
-            let r = chunk_range(c);
-            state[dst][r.clone()].copy_from_slice(&payload);
-        }
-    }
-
+    let topo = build_topology(TopologyKind::Ring, p);
+    let mut fabric = Fabric::for_config(&FabricConfig::default(), topo.node_count());
+    let sim = topo.allreduce(&mut fabric, inputs);
     ReduceResult {
-        reduced: state,
-        traffic: Traffic {
-            bytes_sent_per_node: bytes_sent,
-            rounds: 2 * (p as u32 - 1),
-        },
+        reduced: sim.reduced,
+        traffic: sim.traffic,
     }
 }
 

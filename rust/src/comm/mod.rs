@@ -4,10 +4,15 @@
 //!
 //! The paper replaces allreduce with **allgatherv** (Sec. 4.3): each
 //! worker broadcasts its own sparse message, every worker decodes all
-//! of them locally. We implement both collectives as real data movement
-//! (bytes hop between per-node mailboxes around a ring), with traffic
-//! accounting per link; wall-clock is *modeled* analytically exactly as
-//! the paper's own Section 5 does (DESIGN.md §Substitutions).
+//! of them locally. Both collectives are thin fronts over the
+//! event-driven fabric simulator's ring backend (`crate::fabric`):
+//! real data movement between per-node endpoints, traffic accounting
+//! per node, byte- and bit-identical to the original lockstep rounds.
+//! On this default path wall-clock stays *modeled* analytically
+//! exactly as the paper's own Section 5 does (DESIGN.md
+//! §Substitutions); [`costmodel`] additionally cross-validates the
+//! analytic bound against the fabric's simulated wall-clock, and other
+//! topologies/link models are reachable through `fabric` directly.
 
 pub mod allgatherv;
 pub mod allreduce;

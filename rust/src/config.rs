@@ -7,6 +7,7 @@
 //! and load back for replays.
 
 use crate::compress::CodecSpec;
+use crate::fabric::FabricConfig;
 use crate::optim::LrSchedule;
 use crate::util::cli::Args;
 use crate::util::json::{num, obj, s, Json};
@@ -31,6 +32,9 @@ pub struct TrainConfig {
     /// Cross-check that all workers decode identical updates (costly:
     /// decodes P× twice; on by default in tests, off in benches).
     pub verify_sync: bool,
+    /// Cluster/network model for the simulated-wall-clock report
+    /// (topology, link bandwidth/latency/jitter, stragglers).
+    pub fabric: FabricConfig,
 }
 
 impl TrainConfig {
@@ -61,6 +65,7 @@ impl TrainConfig {
             test_size: 1024,
             signal: 1.0,
             verify_sync: false,
+            fabric: FabricConfig::default(),
         }
     }
 
@@ -86,6 +91,7 @@ impl TrainConfig {
         if args.has("verify-sync") {
             self.verify_sync = true;
         }
+        self.fabric = self.fabric.override_from(args)?;
         Ok(self)
     }
 
@@ -102,6 +108,7 @@ impl TrainConfig {
             ("train_size", num(self.train_size as f64)),
             ("test_size", num(self.test_size as f64)),
             ("signal", num(self.signal as f64)),
+            ("fabric", self.fabric.to_json()),
         ])
     }
 
@@ -118,6 +125,10 @@ impl TrainConfig {
         cfg.train_size = j.expect("train_size")?.as_usize()?;
         cfg.test_size = j.expect("test_size")?.as_usize()?;
         cfg.signal = j.expect("signal")?.as_f64()? as f32;
+        // Absent in configs recorded before the fabric existed.
+        if let Some(f) = j.get("fabric") {
+            cfg.fabric = FabricConfig::from_json(f)?;
+        }
         Ok(cfg)
     }
 }
@@ -210,6 +221,30 @@ mod tests {
         assert_eq!(back.codec, cfg.codec);
         assert_eq!(back.steps, 77);
         assert_eq!(back.model, "vgg_tiny");
+    }
+
+    #[test]
+    fn fabric_overrides_and_json_roundtrip() {
+        let raw: Vec<String> = [
+            "--topology",
+            "star",
+            "--bandwidth-gbps",
+            "10",
+            "--stragglers",
+            "0:3",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&raw, &[]).unwrap();
+        let cfg = TrainConfig::defaults("mlp").override_from(&args).unwrap();
+        assert_eq!(cfg.fabric.topology, crate::fabric::TopologyKind::Star);
+        assert_eq!(cfg.fabric.link.bandwidth_gbps, 10.0);
+        assert_eq!(cfg.fabric.stragglers.len(), 1);
+
+        let back =
+            TrainConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.fabric, cfg.fabric);
     }
 
     #[test]

@@ -6,15 +6,21 @@
 //! * [`print_table`] — paper-shaped console table.
 //! * [`fig3_csv`] — the Figure-3 scatter data (accuracy vs ratio).
 //! * [`costmodel_report`] — the Section-5 speedup analysis (A5).
+//! * [`fabric_sweep`] — simulated {topology × bandwidth × workers ×
+//!   codec} step times over the event-driven fabric (F1).
 
 use anyhow::Result;
 
-use crate::comm::costmodel::{speedup_series, LinkModel};
+use crate::comm::costmodel::{ring_gatherv_bytes_per_node, speedup_series, CostModel, LinkModel};
 use crate::compress::CodecSpec;
-use crate::config::TrainConfig;
+use crate::config::{codec_str, TrainConfig};
 use crate::coordinator::Trainer;
+use crate::fabric::{build_topology, Fabric, FabricConfig, LinkSpec, Straggler, TopologyKind};
+use crate::model::Layout;
 use crate::runtime::{Client, Manifest};
+use crate::testkit;
 use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Pcg32;
 
 /// The paper's Table-1/2 codec column.
 pub fn paper_codecs() -> Vec<(String, CodecSpec)> {
@@ -224,6 +230,275 @@ pub fn costmodel_report() -> String {
     out
 }
 
+// ---- F1: fabric sweep ----
+
+/// Sweep dimensions for the simulated-cluster experiment.
+#[derive(Debug, Clone)]
+pub struct FabricSweepOpts {
+    pub topologies: Vec<TopologyKind>,
+    pub workers: Vec<usize>,
+    pub bandwidths_gbps: Vec<f64>,
+    pub codecs: Vec<CodecSpec>,
+    /// Synthetic gradient dimension (paper-scale runs use 25.5M; the
+    /// default keeps the sweep interactive).
+    pub n_params: usize,
+    pub latency_us: f64,
+    pub jitter_us: f64,
+    pub stragglers: Vec<Straggler>,
+    pub seed: u64,
+    /// Codec warmup steps before the measured message (residual state
+    /// makes step-0 messages unrepresentative).
+    pub warmup_steps: u32,
+}
+
+impl Default for FabricSweepOpts {
+    fn default() -> Self {
+        FabricSweepOpts {
+            topologies: vec![
+                TopologyKind::Ring,
+                TopologyKind::Star,
+                TopologyKind::Full,
+                TopologyKind::Tree { branch: 4 },
+            ],
+            workers: vec![8, 16],
+            bandwidths_gbps: vec![1.0, 10.0],
+            codecs: vec![
+                CodecSpec::None,
+                CodecSpec::Vgc {
+                    alpha: 2.0,
+                    zeta: 0.999,
+                },
+                CodecSpec::Strom { tau: 0.01 },
+            ],
+            n_params: 65_536,
+            latency_us: 50.0,
+            jitter_us: 0.0,
+            stragglers: Vec::new(),
+            seed: 0,
+            warmup_steps: 2,
+        }
+    }
+}
+
+/// One sweep cell: simulated step communication on one cluster shape.
+#[derive(Debug, Clone)]
+pub struct FabricSweepRow {
+    pub topology: String,
+    pub workers: usize,
+    pub bandwidth_gbps: f64,
+    pub codec: String,
+    /// Mean encoded message size per worker, bytes.
+    pub wire_bytes_per_worker: f64,
+    /// Total egress bytes across all nodes for the gatherv.
+    pub traffic_bytes: u64,
+    /// Heaviest single directed link, bytes.
+    pub max_link_bytes: u64,
+    /// Simulated wall-clock of the codec-message allgatherv, ms.
+    pub sim_ms: f64,
+    /// Simulated wall-clock of the dense f32 allreduce baseline, ms.
+    pub dense_ms: f64,
+    /// dense_ms / sim_ms — the end-to-end win of compression+gatherv
+    /// (0 for the degenerate single-worker case where nothing moves).
+    pub speedup: f64,
+    /// Deliveries processed by the gatherv simulation.
+    pub events: u64,
+    /// Ring only: the paper's analytic `T_v` bound for these messages.
+    pub analytic_ms: Option<f64>,
+}
+
+/// The deterministic per-worker gradient stream the sweep feeds every
+/// codec — and the dense baseline. `[worker][step]`, `steps` vectors.
+fn sweep_gradients(p: usize, n: usize, seed: u64, steps: u32) -> Vec<Vec<Vec<f32>>> {
+    (0..p)
+        .map(|w| {
+            let mut rng = Pcg32::new(seed ^ 0x5EED_FAB, w as u64);
+            (0..steps)
+                .map(|_| testkit::gradient_vec(&mut rng, n))
+                .collect()
+        })
+        .collect()
+}
+
+/// Drive one codec over the stream; return each worker's final-step
+/// wire message (earlier steps only warm up the residual state).
+fn sweep_messages(spec: &CodecSpec, grads: &[Vec<Vec<f32>>], n: usize, seed: u64) -> Vec<Vec<u8>> {
+    let layout = Layout::uniform(n, 256);
+    grads
+        .iter()
+        .enumerate()
+        .map(|(w, stream)| {
+            let mut codec = spec.build(&layout, seed.wrapping_add(w as u64));
+            let mut msg = None;
+            for g in stream {
+                let sq: Vec<f32> = g.iter().map(|x| x * x * 0.5).collect();
+                msg = Some(codec.encode_step(g, &sq));
+            }
+            msg.expect("stream has at least one step").bytes
+        })
+        .collect()
+}
+
+/// Run the full sweep. Ring cells are cross-checked against the
+/// analytic cost model: simulated per-node egress bytes must equal
+/// `Σ_j n_j − n_(i+1)` *exactly* (hard assertion — a mismatch is a
+/// fabric bug, not an experiment outcome).
+pub fn fabric_sweep(opts: &FabricSweepOpts) -> Vec<FabricSweepRow> {
+    let mut rows = Vec::new();
+    for &p in &opts.workers {
+        // The gradient stream is codec-independent, so encode once per
+        // codec and reuse one dense baseline per (topology, bandwidth).
+        let grads = sweep_gradients(p, opts.n_params, opts.seed, opts.warmup_steps + 1);
+        let final_grads: Vec<Vec<f32>> = grads
+            .iter()
+            .map(|stream| stream.last().expect("non-empty stream").clone())
+            .collect();
+        let encoded: Vec<(String, Vec<Vec<u8>>, Vec<u64>, f64)> = opts
+            .codecs
+            .iter()
+            .map(|codec| {
+                let msgs = sweep_messages(codec, &grads, opts.n_params, opts.seed);
+                let sizes: Vec<u64> = msgs.iter().map(|m| m.len() as u64).collect();
+                let wire = sizes.iter().sum::<u64>() as f64 / p as f64;
+                (codec_str(codec), msgs, sizes, wire)
+            })
+            .collect();
+        for &kind in &opts.topologies {
+            for &gbps in &opts.bandwidths_gbps {
+                let cfg = FabricConfig {
+                    topology: kind,
+                    link: LinkSpec {
+                        bandwidth_gbps: gbps,
+                        latency_us: opts.latency_us,
+                        jitter_us: opts.jitter_us,
+                    },
+                    seed: opts.seed,
+                    stragglers: opts.stragglers.clone(),
+                };
+                let topo = build_topology(kind, p);
+
+                let mut reduce_fabric = Fabric::for_config(&cfg, topo.node_count());
+                let dense = topo.allreduce(&mut reduce_fabric, &final_grads);
+                let dense_ms = dense.time_secs() * 1e3;
+
+                for (label, msgs, sizes, wire_per_worker) in &encoded {
+                    let mut gather_fabric = Fabric::for_config(&cfg, topo.node_count());
+                    let gather = topo.allgatherv(&mut gather_fabric, msgs);
+                    let max_link_bytes = gather_fabric.max_link_bytes();
+
+                    let analytic_ms = if kind == TopologyKind::Ring {
+                        let expect = ring_gatherv_bytes_per_node(sizes);
+                        assert_eq!(
+                            gather.traffic.bytes_sent_per_node, expect,
+                            "ring byte accounting diverged from the analytic model \
+                             (p={p}, codec={label})"
+                        );
+                        let model =
+                            CostModel::new(p, opts.n_params as u64, cfg.link.to_cost_model());
+                        let bits: Vec<u64> = sizes.iter().map(|b| b * 8).collect();
+                        Some(model.t_allgatherv_bits(&bits) * 1e3)
+                    } else {
+                        None
+                    };
+
+                    let sim_ms = gather.time_secs() * 1e3;
+                    rows.push(FabricSweepRow {
+                        topology: kind.label(),
+                        workers: p,
+                        bandwidth_gbps: gbps,
+                        codec: label.clone(),
+                        wire_bytes_per_worker: *wire_per_worker,
+                        traffic_bytes: gather.traffic.total_bytes(),
+                        max_link_bytes,
+                        sim_ms,
+                        dense_ms,
+                        speedup: if sim_ms > 0.0 { dense_ms / sim_ms } else { 0.0 },
+                        events: gather.events,
+                        analytic_ms,
+                    });
+                }
+            }
+        }
+    }
+    rows
+}
+
+/// Markdown table of the sweep (the `repro fabric-sweep` report).
+pub fn fabric_sweep_markdown(opts: &FabricSweepOpts, rows: &[FabricSweepRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "### fabric sweep — N={} params, latency {} us, jitter {} us{}\n\n",
+        opts.n_params,
+        opts.latency_us,
+        opts.jitter_us,
+        if opts.stragglers.is_empty() {
+            String::new()
+        } else {
+            format!(", stragglers {}", Straggler::list_str(&opts.stragglers))
+        }
+    ));
+    out.push_str(
+        "| topology | p | Gbps | codec | wire/worker | sim gatherv | dense allreduce \
+         | speedup | analytic T_v | max link | events |\n",
+    );
+    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|\n");
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {:.3} ms | {:.3} ms | {:.2}x | {} | {} | {} |\n",
+            r.topology,
+            r.workers,
+            r.bandwidth_gbps,
+            r.codec,
+            human_bytes(r.wire_bytes_per_worker),
+            r.sim_ms,
+            r.dense_ms,
+            r.speedup,
+            r.analytic_ms
+                .map(|a| format!("{a:.3} ms"))
+                .unwrap_or_else(|| "-".into()),
+            human_bytes(r.max_link_bytes as f64),
+            r.events,
+        ));
+    }
+    out
+}
+
+fn human_bytes(b: f64) -> String {
+    if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1} KB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Serialize sweep rows for EXPERIMENTS.md tooling.
+pub fn fabric_sweep_json(rows: &[FabricSweepRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("topology", s(&r.topology)),
+                    ("workers", num(r.workers as f64)),
+                    ("bandwidth_gbps", num(r.bandwidth_gbps)),
+                    ("codec", s(&r.codec)),
+                    ("wire_bytes_per_worker", num(r.wire_bytes_per_worker)),
+                    ("traffic_bytes", num(r.traffic_bytes as f64)),
+                    ("max_link_bytes", num(r.max_link_bytes as f64)),
+                    ("sim_ms", num(r.sim_ms)),
+                    ("dense_ms", num(r.dense_ms)),
+                    ("speedup", num(r.speedup)),
+                    ("events", num(r.events as f64)),
+                    (
+                        "analytic_ms",
+                        r.analytic_ms.map(num).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -251,6 +526,66 @@ mod tests {
         let rep = costmodel_report();
         assert!(rep.contains("speedup"));
         assert!(rep.contains("c > p/2"));
+    }
+
+    fn tiny_sweep_opts() -> FabricSweepOpts {
+        FabricSweepOpts {
+            topologies: vec![TopologyKind::Ring, TopologyKind::Star],
+            workers: vec![3],
+            bandwidths_gbps: vec![1.0],
+            codecs: vec![
+                CodecSpec::None,
+                CodecSpec::Vgc {
+                    alpha: 2.0,
+                    zeta: 0.999,
+                },
+            ],
+            n_params: 2048,
+            ..FabricSweepOpts::default()
+        }
+    }
+
+    #[test]
+    fn fabric_sweep_covers_grid_and_checks_ring_bytes() {
+        let opts = tiny_sweep_opts();
+        let rows = fabric_sweep(&opts);
+        // 2 codecs × 2 topologies × 1 bandwidth × 1 worker count.
+        assert_eq!(rows.len(), 4);
+        assert!(rows
+            .iter()
+            .all(|r| r.sim_ms > 0.0 && r.dense_ms > 0.0 && r.events > 0));
+        // Ring rows carry the analytic bound; star rows don't.
+        for r in &rows {
+            assert_eq!(r.analytic_ms.is_some(), r.topology == "ring", "{r:?}");
+        }
+        // Compression beats the dense wire format on the same topology.
+        let ring_none = rows
+            .iter()
+            .find(|r| r.topology == "ring" && r.codec == "none")
+            .unwrap();
+        let ring_vgc = rows
+            .iter()
+            .find(|r| r.topology == "ring" && r.codec.starts_with("vgc"))
+            .unwrap();
+        assert!(
+            ring_vgc.speedup > ring_none.speedup,
+            "vgc {} <= none {}",
+            ring_vgc.speedup,
+            ring_none.speedup
+        );
+        assert!(ring_vgc.wire_bytes_per_worker < ring_none.wire_bytes_per_worker);
+    }
+
+    #[test]
+    fn fabric_sweep_report_shapes() {
+        let opts = tiny_sweep_opts();
+        let rows = fabric_sweep(&opts);
+        let md = fabric_sweep_markdown(&opts, &rows);
+        assert!(md.contains("| topology |"), "{md}");
+        assert_eq!(md.lines().filter(|l| l.starts_with("| ")).count(), 1 + rows.len());
+        let j = fabric_sweep_json(&rows);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.as_arr().unwrap().len(), rows.len());
     }
 
     #[test]

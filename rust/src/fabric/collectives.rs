@@ -1,0 +1,169 @@
+//! Shared collective plumbing: result types, gather bookkeeping, and
+//! the chunking rule the ring allreduce inherits from `comm`.
+//!
+//! Every topology backend produces the same result shapes, so callers
+//! (the `comm` fronts, `fabric-sweep`, tests) are topology-agnostic:
+//! `gathered[dst][src]` is worker `src`'s message as received by
+//! worker `dst`; `reduced[w]` is worker `w`'s copy of the elementwise
+//! sum. Byte identity with the lockstep `comm` implementations is a
+//! hard invariant (tested property-style in `tests/fabric_sim.rs`).
+
+use super::clock::Time;
+use super::Fabric;
+use crate::comm::Traffic;
+
+/// An allgatherv outcome over any topology.
+pub struct SimGather {
+    /// `gathered[dst][src]` — every row must equal the input row.
+    pub gathered: Vec<Vec<Vec<u8>>>,
+    /// Per-*node* egress bytes (workers first, then any infrastructure
+    /// nodes such as the parameter-server hub) + logical round count.
+    pub traffic: Traffic,
+    /// Simulated completion time, ps.
+    pub time_ps: Time,
+    /// Deliveries processed.
+    pub events: u64,
+}
+
+impl SimGather {
+    pub fn time_secs(&self) -> f64 {
+        self.time_ps as f64 * 1e-12
+    }
+}
+
+/// An allreduce outcome over any topology.
+pub struct SimReduce {
+    pub reduced: Vec<Vec<f32>>,
+    pub traffic: Traffic,
+    pub time_ps: Time,
+    pub events: u64,
+}
+
+impl SimReduce {
+    pub fn time_secs(&self) -> f64 {
+        self.time_ps as f64 * 1e-12
+    }
+}
+
+/// Pack the fabric's accounting into the `comm::Traffic` shape.
+pub fn traffic_from(fabric: &Fabric, rounds: u32) -> Traffic {
+    Traffic {
+        bytes_sent_per_node: fabric.bytes_sent_per_node(),
+        rounds,
+    }
+}
+
+/// Per-worker block bookkeeping for gather protocols: which origins
+/// each worker holds. Duplicate deliveries of conflicting content are
+/// protocol bugs and assert.
+pub struct GatherState {
+    blocks: Vec<Vec<Option<Vec<u8>>>>,
+}
+
+impl GatherState {
+    /// Seed each worker with its own block.
+    pub fn new(inputs: &[Vec<u8>]) -> GatherState {
+        let p = inputs.len();
+        GatherState {
+            blocks: (0..p)
+                .map(|i| {
+                    let mut row = vec![None; p];
+                    row[i] = Some(inputs[i].clone());
+                    row
+                })
+                .collect(),
+        }
+    }
+
+    /// Record that `worker` received `origin`'s block.
+    pub fn store(&mut self, worker: usize, origin: usize, bytes: &[u8]) {
+        let slot = &mut self.blocks[worker][origin];
+        debug_assert!(
+            slot.is_none() || slot.as_deref() == Some(bytes),
+            "conflicting delivery of origin {origin} at worker {worker}"
+        );
+        if slot.is_none() {
+            *slot = Some(bytes.to_vec());
+        }
+    }
+
+    /// True once `worker` holds every origin.
+    pub fn complete(&self, worker: usize) -> bool {
+        self.blocks[worker].iter().all(|b| b.is_some())
+    }
+
+    /// Consume into the `gathered[dst][src]` matrix; panics if any
+    /// block never arrived (the protocol under-delivered).
+    pub fn into_gathered(self) -> Vec<Vec<Vec<u8>>> {
+        self.blocks
+            .into_iter()
+            .enumerate()
+            .map(|(w, row)| {
+                row.into_iter()
+                    .enumerate()
+                    .map(|(o, b)| {
+                        b.unwrap_or_else(|| panic!("worker {w} never received origin {o}"))
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// Chunk boundaries for the ring allreduce — identical to the lockstep
+/// `comm::allreduce` rule so byte counts and f32 sums match exactly:
+/// chunk `c` covers `[c·n/p, (c+1)·n/p)`.
+pub fn chunk_range(n: usize, p: usize, c: usize) -> std::ops::Range<usize> {
+    let start = |c: usize| c * n / p;
+    start(c % p)..start(c % p + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_state_tracks_completion() {
+        let inputs = vec![vec![1u8], vec![2, 2], vec![]];
+        let mut gs = GatherState::new(&inputs);
+        assert!(!gs.complete(0));
+        gs.store(0, 1, &[2, 2]);
+        gs.store(0, 2, &[]);
+        assert!(gs.complete(0));
+        gs.store(1, 0, &[1]);
+        gs.store(1, 2, &[]);
+        gs.store(2, 0, &[1]);
+        gs.store(2, 1, &[2, 2]);
+        let g = gs.into_gathered();
+        for dst in 0..3 {
+            for src in 0..3 {
+                assert_eq!(g[dst][src], inputs[src]);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "never received")]
+    fn incomplete_gather_panics_on_assembly() {
+        let gs = GatherState::new(&[vec![1u8], vec![2u8]]);
+        let _ = gs.into_gathered();
+    }
+
+    #[test]
+    fn chunk_ranges_partition_exactly() {
+        for (n, p) in [(100, 4), (97, 8), (3, 5), (0, 2)] {
+            let mut covered = 0usize;
+            for c in 0..p {
+                let r = chunk_range(n, p, c);
+                assert_eq!(r.start, covered);
+                covered = r.end;
+            }
+            assert_eq!(covered, n);
+        }
+    }
+
+    #[test]
+    fn chunk_range_wraps_modulo_p() {
+        assert_eq!(chunk_range(100, 4, 5), chunk_range(100, 4, 1));
+    }
+}

@@ -1,0 +1,125 @@
+//! Link model: bandwidth / latency / jitter per directed edge, plus
+//! per-link traffic accounting.
+//!
+//! The fabric uses a cut-through port model (see `fabric::Fabric`): a
+//! message occupies the sender's egress port for its serialization
+//! time, its first bit lands `latency (+ jitter)` after transmission
+//! starts, and delivery completes one (receiver-rate) serialization
+//! time after the first bit clears the receiver's ingress queue. On an
+//! uncontended path that reduces to the classic
+//! `ser + latency` store-and-forward hop; under fan-in/fan-out the
+//! port queues produce incast and broadcast bottlenecks (the
+//! parameter-server hub effect).
+
+use super::clock::{Time, PS_PER_US};
+use crate::comm::costmodel::LinkModel;
+
+/// Uniform link parameters in human units. Conversions to picoseconds
+/// happen at send time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// Bandwidth in Gbit/s (1 Gbps ⇒ 1000 ps/bit).
+    pub bandwidth_gbps: f64,
+    /// One-way propagation latency, microseconds.
+    pub latency_us: f64,
+    /// Max uniform extra latency per message, microseconds (0 = none).
+    pub jitter_us: f64,
+}
+
+impl LinkSpec {
+    /// 1000BASE-T Ethernet — the paper's "commodity interconnect".
+    pub fn gige() -> LinkSpec {
+        LinkSpec {
+            bandwidth_gbps: 1.0,
+            latency_us: 50.0,
+            jitter_us: 0.0,
+        }
+    }
+
+    /// InfiniBand-class link (~100 Gb/s, 2 µs).
+    pub fn infiniband() -> LinkSpec {
+        LinkSpec {
+            bandwidth_gbps: 100.0,
+            latency_us: 2.0,
+            jitter_us: 0.0,
+        }
+    }
+
+    /// Build from the Section-5 cost model's parameters
+    /// (`beta` seconds/bit, `latency` seconds).
+    pub fn from_cost_model(link: &LinkModel) -> LinkSpec {
+        LinkSpec {
+            bandwidth_gbps: 1e-9 / link.beta,
+            latency_us: link.latency * 1e6,
+            jitter_us: 0.0,
+        }
+    }
+
+    /// The matching cost-model parameters, for analytic cross-checks.
+    pub fn to_cost_model(&self) -> LinkModel {
+        LinkModel {
+            beta: 1e-9 / self.bandwidth_gbps,
+            latency: self.latency_us / 1e6,
+        }
+    }
+
+    /// Serialization time for `bytes` at this link's rate, in ps.
+    pub fn ser_ps(&self, bytes: u64) -> Time {
+        let ps_per_bit = 1000.0 / self.bandwidth_gbps;
+        ((bytes * 8) as f64 * ps_per_bit).ceil() as Time
+    }
+
+    pub fn latency_ps(&self) -> Time {
+        (self.latency_us * PS_PER_US).round() as Time
+    }
+
+    pub fn jitter_ps(&self) -> Time {
+        (self.jitter_us * PS_PER_US).round() as Time
+    }
+}
+
+/// Traffic carried by one directed link over a collective.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LinkStat {
+    pub bytes: u64,
+    pub messages: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gige_serialization_math() {
+        let l = LinkSpec::gige();
+        // 1 MB at 1 Gbps = 8e6 bits * 1000 ps/bit = 8 ms.
+        assert_eq!(l.ser_ps(1_000_000), 8_000_000_000);
+        assert_eq!(l.latency_ps(), 50_000_000);
+        assert_eq!(l.jitter_ps(), 0);
+    }
+
+    #[test]
+    fn infiniband_is_100x_faster() {
+        let g = LinkSpec::gige().ser_ps(1 << 20);
+        let i = LinkSpec::infiniband().ser_ps(1 << 20);
+        assert_eq!(g, i * 100);
+    }
+
+    #[test]
+    fn cost_model_roundtrip() {
+        for spec in [LinkSpec::gige(), LinkSpec::infiniband()] {
+            let back = LinkSpec::from_cost_model(&spec.to_cost_model());
+            assert!((back.bandwidth_gbps - spec.bandwidth_gbps).abs() < 1e-9);
+            assert!((back.latency_us - spec.latency_us).abs() < 1e-9);
+        }
+        // And the canonical constants line up with costmodel's presets.
+        let m = LinkSpec::gige().to_cost_model();
+        assert!((m.beta - 1e-9).abs() < 1e-21);
+        assert!((m.latency - 50e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_bytes_serialize_instantly() {
+        assert_eq!(LinkSpec::gige().ser_ps(0), 0);
+    }
+}

@@ -1,0 +1,482 @@
+//! `fabric` — event-driven cluster/network simulation (S16).
+//!
+//! The paper's Section 5 argues VGC "enables distributed deep learning
+//! …with commodity environments" from a purely analytic cost model;
+//! this subsystem lets the repo *simulate* that claim instead of only
+//! asserting it. A cluster is a set of [`node::Node`] endpoints
+//! exchanging [`Msg`]s over links with configurable bandwidth, latency
+//! and jitter ([`link::LinkSpec`]), with per-node straggler injection
+//! ([`node::Straggler`]), driven by a deterministic discrete-event
+//! clock ([`clock::SimClock`]) — no real sleeping, reproducible under
+//! `util::rng` seeds.
+//!
+//! On top of the engine, pluggable [`topology::Topology`] backends
+//! (ring, fully-connected, parameter-server hub, 2-level tree) expose
+//! `allgatherv`/`allreduce` collectives that move the *actual bytes*,
+//! so the byte-accurate codec path runs unchanged over any topology.
+//! `comm::allgatherv`/`comm::allreduce` are thin fronts over the ring
+//! backend; `repro fabric-sweep` sweeps {topology × bandwidth ×
+//! workers × codec} end to end. See DESIGN.md §Fabric.
+//!
+//! Timing model (cut-through ports):
+//!
+//! * a send occupies the source egress port for `ser × slowdown(src)`,
+//!   queued FIFO behind earlier sends;
+//! * the first bit lands `latency + jitter` after transmission starts;
+//! * delivery completes `ser × slowdown(dst)` after the first bit
+//!   clears the destination ingress queue (incast contention).
+//!
+//! Uncontended, a hop costs the classic `ser + latency`; contention at
+//! ports reproduces hub incast and broadcast bottlenecks.
+
+pub mod clock;
+pub mod collectives;
+pub mod link;
+pub mod node;
+pub mod ring;
+pub mod star;
+pub mod topology;
+pub mod tree;
+
+use std::collections::BTreeMap;
+
+pub use clock::{SimClock, Time};
+pub use collectives::{SimGather, SimReduce};
+pub use link::{LinkSpec, LinkStat};
+pub use node::{Node, NodePerf, Straggler};
+pub use topology::{build_topology, Topology, TopologyKind};
+
+use crate::util::cli::Args;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Pcg32;
+
+/// Message payloads: wire bytes (codec messages) or f32 vectors
+/// (dense allreduce partials). Sizes are what the links bill for.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    Bytes(Vec<u8>),
+    F32(Vec<f32>),
+}
+
+impl Payload {
+    pub fn size_bytes(&self) -> u64 {
+        match self {
+            Payload::Bytes(b) => b.len() as u64,
+            Payload::F32(v) => v.len() as u64 * 4,
+        }
+    }
+}
+
+/// One in-flight message. `origin` identifies the block/chunk the
+/// payload represents; `hop` counts forwarding steps; `tag`
+/// distinguishes protocol phases (topology-specific).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Msg {
+    pub origin: usize,
+    pub hop: u32,
+    pub tag: u8,
+    pub payload: Payload,
+}
+
+/// A delivery event in the clock queue.
+struct Delivery {
+    dst: usize,
+    msg: Msg,
+}
+
+/// One line of the event trace: enough to prove two runs identical and
+/// to debug a protocol. Recorded in send order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub sent: Time,
+    pub delivered: Time,
+    pub src: usize,
+    pub dst: usize,
+    pub origin: usize,
+    pub tag: u8,
+    pub bytes: u64,
+}
+
+/// A collective protocol driven by the engine: `start` injects the
+/// t = 0 sends `(src, dst, msg)`; `on_deliver` reacts to a delivery at
+/// `node` with follow-up sends `(dst, msg)` from that node.
+pub trait Protocol {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)>;
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)>;
+}
+
+/// The simulated cluster: nodes + uniform link model + event clock.
+pub struct Fabric {
+    pub link: LinkSpec,
+    nodes: Vec<Node>,
+    clock: SimClock<Delivery>,
+    rng: Pcg32,
+    links: BTreeMap<(usize, usize), LinkStat>,
+    trace: Vec<TraceEvent>,
+}
+
+impl Fabric {
+    /// Build a fabric of `node_count` endpoints (workers plus any
+    /// infrastructure nodes the topology needs).
+    pub fn new(link: LinkSpec, node_count: usize, seed: u64) -> Fabric {
+        Fabric {
+            link,
+            nodes: (0..node_count).map(Node::new).collect(),
+            clock: SimClock::new(),
+            rng: Pcg32::new(seed, 0xFAB),
+            links: BTreeMap::new(),
+            trace: Vec::new(),
+        }
+    }
+
+    /// Build from a config for a topology needing `node_count` nodes.
+    /// A straggler spec naming a node that does not exist is a config
+    /// error, not a no-op — silently dropping it would let `describe()`
+    /// report a degradation the simulation never applied.
+    pub fn for_config(cfg: &FabricConfig, node_count: usize) -> Fabric {
+        let mut f = Fabric::new(cfg.link, node_count, cfg.seed);
+        for s in &cfg.stragglers {
+            assert!(
+                s.node < f.nodes.len(),
+                "straggler node {} out of range (fabric has {} nodes)",
+                s.node,
+                f.nodes.len()
+            );
+            f.nodes[s.node].perf.slowdown = s.slowdown;
+        }
+        f
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node(&self, id: usize) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// Simulated time of the last delivery (collective completion).
+    pub fn now(&self) -> Time {
+        self.clock.now()
+    }
+
+    pub fn now_secs(&self) -> f64 {
+        self.clock.now() as f64 * 1e-12
+    }
+
+    /// Deliveries processed so far (event-throughput denominator).
+    pub fn events(&self) -> u64 {
+        self.clock.processed()
+    }
+
+    /// Per-directed-link traffic accounting, deterministic order.
+    pub fn links(&self) -> &BTreeMap<(usize, usize), LinkStat> {
+        &self.links
+    }
+
+    /// Heaviest single directed link, in bytes.
+    pub fn max_link_bytes(&self) -> u64 {
+        self.links.values().map(|l| l.bytes).max().unwrap_or(0)
+    }
+
+    /// The recorded event trace (send order).
+    pub fn trace(&self) -> &[TraceEvent] {
+        &self.trace
+    }
+
+    /// Bytes each node pushed onto its egress port.
+    pub fn bytes_sent_per_node(&self) -> Vec<u64> {
+        self.nodes.iter().map(|n| n.sent_bytes).collect()
+    }
+
+    /// Schedule a message from `src` to `dst`, not before `ready`.
+    fn send(&mut self, src: usize, dst: usize, msg: Msg, ready: Time) {
+        assert!(src != dst, "self-send from node {src}");
+        let bytes = msg.payload.size_bytes();
+        let ser = self.link.ser_ps(bytes);
+
+        let tx_ser = self.nodes[src].scaled(ser);
+        let start_tx = ready.max(self.nodes[src].egress_free);
+        self.nodes[src].egress_free = start_tx + tx_ser;
+        self.nodes[src].sent_bytes += bytes;
+        self.nodes[src].sent_messages += 1;
+
+        let jitter_max = self.link.jitter_ps();
+        let jitter = if jitter_max > 0 {
+            (self.rng.next_f64() * jitter_max as f64) as Time
+        } else {
+            0
+        };
+        let front = start_tx + self.link.latency_ps() + jitter;
+
+        // Delivery completes when the receiver has drained the message
+        // (ingress queue + rx serialization) AND the sender has pushed
+        // the last bit (tx serialization + propagation) — whichever is
+        // later. Uncontended equal-rate hops reduce to ser + latency.
+        let rx_ser = self.nodes[dst].scaled(ser);
+        let rx_start = front.max(self.nodes[dst].ingress_free);
+        let tx_tail = start_tx + tx_ser + self.link.latency_ps() + jitter;
+        let delivered = (rx_start + rx_ser).max(tx_tail);
+        self.nodes[dst].ingress_free = delivered;
+
+        let stat = self.links.entry((src, dst)).or_default();
+        stat.bytes += bytes;
+        stat.messages += 1;
+
+        self.trace.push(TraceEvent {
+            sent: start_tx,
+            delivered,
+            src,
+            dst,
+            origin: msg.origin,
+            tag: msg.tag,
+            bytes,
+        });
+        self.clock.schedule(delivered, Delivery { dst, msg });
+    }
+
+    /// Drive a protocol to completion; returns the finish time (ps).
+    /// Running a second protocol on the same fabric continues the
+    /// clock (back-to-back collectives share port state).
+    pub fn run(&mut self, proto: &mut dyn Protocol) -> Time {
+        let t0 = self.clock.now();
+        for (src, dst, msg) in proto.start() {
+            self.send(src, dst, msg, t0);
+        }
+        while let Some((t, d)) = self.clock.pop() {
+            let Delivery { dst, msg } = d;
+            self.nodes[dst].recv_bytes += msg.payload.size_bytes();
+            self.nodes[dst].recv_messages += 1;
+            let outs = proto.on_deliver(dst, &msg);
+            if !outs.is_empty() {
+                let ready = t + self.nodes[dst].compute_delay();
+                for (to, m) in outs {
+                    self.send(dst, to, m, ready);
+                }
+            }
+        }
+        self.clock.now()
+    }
+}
+
+/// Full fabric configuration: topology choice + link model + seeds +
+/// straggler injection. Serializes into the experiment record and
+/// parses from CLI flags (`--topology`, `--bandwidth-gbps`,
+/// `--latency-us`, `--jitter-us`, `--stragglers`, `--fabric-seed`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricConfig {
+    pub topology: TopologyKind,
+    pub link: LinkSpec,
+    pub seed: u64,
+    pub stragglers: Vec<Straggler>,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            topology: TopologyKind::Ring,
+            link: LinkSpec::gige(),
+            seed: 0,
+            stragglers: Vec::new(),
+        }
+    }
+}
+
+impl FabricConfig {
+    /// The flag names [`FabricConfig::override_from`] consumes (for
+    /// `Args::check_known` lists).
+    pub const FLAGS: &'static [&'static str] = &[
+        "topology",
+        "bandwidth-gbps",
+        "latency-us",
+        "jitter-us",
+        "stragglers",
+        "fabric-seed",
+    ];
+
+    /// Apply CLI flag overrides.
+    pub fn override_from(mut self, args: &Args) -> anyhow::Result<FabricConfig> {
+        if let Some(t) = args.get("topology") {
+            self.topology = TopologyKind::parse(t)?;
+        }
+        self.link.bandwidth_gbps = args.parse_or("bandwidth-gbps", self.link.bandwidth_gbps)?;
+        self.link.latency_us = args.parse_or("latency-us", self.link.latency_us)?;
+        self.link.jitter_us = args.parse_or("jitter-us", self.link.jitter_us)?;
+        self.seed = args.parse_or("fabric-seed", self.seed)?;
+        if let Some(spec) = args.get("stragglers") {
+            self.stragglers = Straggler::parse_list(spec)?;
+        }
+        anyhow::ensure!(
+            self.link.bandwidth_gbps > 0.0,
+            "--bandwidth-gbps must be positive"
+        );
+        anyhow::ensure!(self.link.latency_us >= 0.0, "--latency-us must be >= 0");
+        anyhow::ensure!(self.link.jitter_us >= 0.0, "--jitter-us must be >= 0");
+        Ok(self)
+    }
+
+    /// One-line human description for run summaries.
+    pub fn describe(&self) -> String {
+        let mut out = format!(
+            "{} @ {} Gbps, {} us latency",
+            self.topology.label(),
+            self.link.bandwidth_gbps,
+            self.link.latency_us
+        );
+        if self.link.jitter_us > 0.0 {
+            out.push_str(&format!(", jitter {} us", self.link.jitter_us));
+        }
+        if !self.stragglers.is_empty() {
+            out.push_str(&format!(
+                ", stragglers {}",
+                Straggler::list_str(&self.stragglers)
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("topology", s(&self.topology.label())),
+            ("bandwidth_gbps", num(self.link.bandwidth_gbps)),
+            ("latency_us", num(self.link.latency_us)),
+            ("jitter_us", num(self.link.jitter_us)),
+            ("seed", num(self.seed as f64)),
+            ("stragglers", s(&Straggler::list_str(&self.stragglers))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<FabricConfig> {
+        Ok(FabricConfig {
+            topology: TopologyKind::parse(j.expect("topology")?.as_str()?)?,
+            link: LinkSpec {
+                bandwidth_gbps: j.expect("bandwidth_gbps")?.as_f64()?,
+                latency_us: j.expect("latency_us")?.as_f64()?,
+                jitter_us: j.expect("jitter_us")?.as_f64()?,
+            },
+            seed: j.expect("seed")?.as_f64()? as u64,
+            stragglers: Straggler::parse_list(j.expect("stragglers")?.as_str()?)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct OneShot {
+        delivered: Vec<(usize, usize)>,
+    }
+
+    impl Protocol for OneShot {
+        fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+            vec![(
+                0,
+                1,
+                Msg {
+                    origin: 0,
+                    hop: 0,
+                    tag: 0,
+                    payload: Payload::Bytes(vec![0u8; 125]), // 1000 bits
+                },
+            )]
+        }
+        fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+            self.delivered.push((node, msg.origin));
+            Vec::new()
+        }
+    }
+
+    #[test]
+    fn single_hop_costs_ser_plus_latency() {
+        let link = LinkSpec {
+            bandwidth_gbps: 1.0,
+            latency_us: 1.0,
+            jitter_us: 0.0,
+        };
+        let mut f = Fabric::new(link, 2, 0);
+        let mut p = OneShot {
+            delivered: Vec::new(),
+        };
+        let t = f.run(&mut p);
+        // 1000 bits at 1 Gbps = 1 us ser; + 1 us latency = 2 us.
+        assert_eq!(t, 2_000_000);
+        assert_eq!(p.delivered, vec![(1, 0)]);
+        assert_eq!(f.node(0).sent_bytes, 125);
+        assert_eq!(f.node(1).recv_bytes, 125);
+        assert_eq!(f.links()[&(0, 1)].messages, 1);
+        assert_eq!(f.events(), 1);
+    }
+
+    #[test]
+    fn straggler_sender_slows_delivery() {
+        let link = LinkSpec {
+            bandwidth_gbps: 1.0,
+            latency_us: 1.0,
+            jitter_us: 0.0,
+        };
+        let mut f = Fabric::for_config(
+            &FabricConfig {
+                link,
+                stragglers: vec![Straggler {
+                    node: 0,
+                    slowdown: 3.0,
+                }],
+                ..FabricConfig::default()
+            },
+            2,
+        );
+        let mut p = OneShot {
+            delivered: Vec::new(),
+        };
+        let t = f.run(&mut p);
+        // rx ser is unscaled (receiver is healthy): latency dominates the
+        // slow tx only through the later start of reception.
+        assert!(t > 2_000_000, "straggler did not slow the hop: {t}");
+    }
+
+    #[test]
+    fn fabric_config_flags_and_json_roundtrip() {
+        let raw: Vec<String> = [
+            "--topology",
+            "tree:8",
+            "--bandwidth-gbps",
+            "10",
+            "--latency-us",
+            "5",
+            "--jitter-us",
+            "2",
+            "--stragglers",
+            "1:4",
+            "--fabric-seed",
+            "9",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&raw, &[]).unwrap();
+        let cfg = FabricConfig::default().override_from(&args).unwrap();
+        assert_eq!(cfg.topology, TopologyKind::Tree { branch: 8 });
+        assert_eq!(cfg.link.bandwidth_gbps, 10.0);
+        assert_eq!(cfg.stragglers.len(), 1);
+        assert_eq!(cfg.seed, 9);
+
+        let back =
+            FabricConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn describe_mentions_topology_and_stragglers() {
+        let cfg = FabricConfig {
+            stragglers: vec![Straggler {
+                node: 2,
+                slowdown: 2.0,
+            }],
+            ..FabricConfig::default()
+        };
+        let d = cfg.describe();
+        assert!(d.contains("ring"), "{d}");
+        assert!(d.contains("2:2"), "{d}");
+    }
+}

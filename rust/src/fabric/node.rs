@@ -1,0 +1,142 @@
+//! Node endpoints: per-node ports, performance profile, straggler
+//! injection, and traffic accounting.
+
+use super::clock::{Time, PS_PER_US};
+
+/// Per-node performance profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodePerf {
+    /// Multiplier on this node's port serialization times (> 1 = a slow
+    /// NIC/CPU; straggler injection sets this).
+    pub slowdown: f64,
+    /// Fixed processing delay added before each send the node issues in
+    /// reaction to a delivery (protocol handling cost), ps.
+    pub compute_ps: Time,
+}
+
+impl Default for NodePerf {
+    fn default() -> Self {
+        NodePerf {
+            slowdown: 1.0,
+            compute_ps: 0,
+        }
+    }
+}
+
+/// A straggler directive: slow node `node` down by `slowdown`×.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Straggler {
+    pub node: usize,
+    pub slowdown: f64,
+}
+
+impl Straggler {
+    /// Parse a comma-separated spec like `"0:4,3:2.5"` (node:slowdown).
+    pub fn parse_list(spec: &str) -> anyhow::Result<Vec<Straggler>> {
+        let mut out = Vec::new();
+        for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let (node, factor) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("straggler spec '{part}': want node:slowdown"))?;
+            let s = Straggler {
+                node: node.trim().parse()?,
+                slowdown: factor.trim().parse()?,
+            };
+            anyhow::ensure!(
+                s.slowdown >= 1.0,
+                "straggler slowdown must be >= 1 (got {})",
+                s.slowdown
+            );
+            out.push(s);
+        }
+        Ok(out)
+    }
+
+    /// Canonical string form (parses back via [`Straggler::parse_list`]).
+    pub fn list_str(list: &[Straggler]) -> String {
+        list.iter()
+            .map(|s| format!("{}:{}", s.node, s.slowdown))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// One simulated endpoint: a worker or an infrastructure node (e.g. the
+/// parameter-server hub).
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: usize,
+    pub perf: NodePerf,
+    /// Egress port free-at time (ps). Sends queue here.
+    pub egress_free: Time,
+    /// Ingress port free-at time (ps). Incast queues here.
+    pub ingress_free: Time,
+    pub sent_bytes: u64,
+    pub sent_messages: u64,
+    pub recv_bytes: u64,
+    pub recv_messages: u64,
+}
+
+impl Node {
+    pub fn new(id: usize) -> Node {
+        Node {
+            id,
+            perf: NodePerf::default(),
+            egress_free: 0,
+            ingress_free: 0,
+            sent_bytes: 0,
+            sent_messages: 0,
+            recv_bytes: 0,
+            recv_messages: 0,
+        }
+    }
+
+    /// Serialization time scaled by this node's slowdown.
+    pub fn scaled(&self, ser: Time) -> Time {
+        if self.perf.slowdown == 1.0 {
+            ser
+        } else {
+            (ser as f64 * self.perf.slowdown).ceil() as Time
+        }
+    }
+
+    /// Protocol processing delay before reactive sends.
+    pub fn compute_delay(&self) -> Time {
+        self.scaled(self.perf.compute_ps)
+    }
+}
+
+/// Convert a microsecond figure to the node-profile ps unit.
+pub fn us_to_ps(us: f64) -> Time {
+    (us * PS_PER_US).round() as Time
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn straggler_spec_roundtrip() {
+        let list = Straggler::parse_list("0:4,3:2.5").unwrap();
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[0].node, 0);
+        assert!((list[0].slowdown - 4.0).abs() < 1e-12);
+        assert_eq!(Straggler::list_str(&list), "0:4,3:2.5");
+        assert!(Straggler::parse_list("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_straggler_specs_are_loud() {
+        assert!(Straggler::parse_list("3").is_err());
+        assert!(Straggler::parse_list("x:2").is_err());
+        assert!(Straggler::parse_list("0:0.5").is_err()); // speedups disallowed
+    }
+
+    #[test]
+    fn slowdown_scales_serialization() {
+        let mut n = Node::new(0);
+        assert_eq!(n.scaled(1000), 1000);
+        n.perf.slowdown = 2.5;
+        assert_eq!(n.scaled(1000), 2500);
+    }
+}

@@ -1,0 +1,369 @@
+//! Ring topology: the paper's substrate, now event-driven.
+//!
+//! Allgatherv is the classic p−1-hop circulation: each worker injects
+//! its own block rightward and forwards every block it receives except
+//! the one that completes its set (origin `(i+1) mod p`). Allreduce is
+//! the two-phase ring (reduce-scatter then allgather) over the same
+//! chunk boundaries as the lockstep `comm::allreduce`, with the
+//! accumulation performed in the same order — so the fronts in `comm`
+//! return **bit-identical** results and **byte-identical** traffic to
+//! the pre-fabric implementations, while wall-clock now emerges from
+//! the event clock (pipelined hops, stragglers, jitter) instead of a
+//! closed-form bound.
+
+use super::collectives::{chunk_range, traffic_from, GatherState, SimGather, SimReduce};
+use super::topology::{Topology, TopologyKind};
+use super::{Fabric, Msg, Payload, Protocol};
+use crate::comm::Traffic;
+
+const TAG_GATHER: u8 = 0;
+/// Reduce-scatter phase of allreduce.
+const TAG_RS: u8 = 1;
+/// Allgather phase of allreduce.
+const TAG_AG: u8 = 2;
+
+pub struct Ring {
+    p: usize,
+}
+
+impl Ring {
+    pub fn new(workers: usize) -> Ring {
+        assert!(workers > 0, "topology needs at least one worker");
+        Ring { p: workers }
+    }
+
+    fn right(&self, i: usize) -> usize {
+        (i + 1) % self.p
+    }
+}
+
+struct RingGather {
+    p: usize,
+    inputs: Vec<Vec<u8>>,
+    state: GatherState,
+}
+
+impl Protocol for RingGather {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        (0..self.p)
+            .map(|w| {
+                (
+                    w,
+                    (w + 1) % self.p,
+                    Msg {
+                        origin: w,
+                        hop: 1,
+                        tag: TAG_GATHER,
+                        payload: Payload::Bytes(self.inputs[w].clone()),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        let Payload::Bytes(b) = &msg.payload else {
+            unreachable!("gather protocol only moves bytes")
+        };
+        self.state.store(node, msg.origin, b);
+        // Forward everything except the block that completes this
+        // node's set — exactly p−1 egress blocks per node, the same
+        // Σ_j n_j − n_(i+1) accounting as the lockstep ring.
+        if msg.origin != (node + 1) % self.p {
+            vec![(
+                (node + 1) % self.p,
+                Msg {
+                    origin: msg.origin,
+                    hop: msg.hop + 1,
+                    tag: TAG_GATHER,
+                    payload: msg.payload.clone(),
+                },
+            )]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+struct RingReduce {
+    p: usize,
+    n: usize,
+    inputs: Vec<Vec<f32>>,
+    /// Fully-reduced chunks as they land: `chunks[node][chunk]`.
+    chunks: Vec<Vec<Option<Vec<f32>>>>,
+}
+
+impl Protocol for RingReduce {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        (0..self.p)
+            .map(|w| {
+                let payload = self.inputs[w][chunk_range(self.n, self.p, w)].to_vec();
+                (
+                    w,
+                    (w + 1) % self.p,
+                    Msg {
+                        origin: w, // chunk id
+                        hop: 1,
+                        tag: TAG_RS,
+                        payload: Payload::F32(payload),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        let Payload::F32(partial) = &msg.payload else {
+            unreachable!("reduce protocol only moves f32 chunks")
+        };
+        let c = msg.origin;
+        let right = (node + 1) % self.p;
+        match msg.tag {
+            TAG_RS => {
+                // Accumulate exactly as the lockstep ring does:
+                // receiver's own slice += incoming partial.
+                let r = chunk_range(self.n, self.p, c);
+                let mut acc = self.inputs[node][r].to_vec();
+                for (k, v) in partial.iter().enumerate() {
+                    acc[k] += v;
+                }
+                if msg.hop < (self.p - 1) as u32 {
+                    vec![(
+                        right,
+                        Msg {
+                            origin: c,
+                            hop: msg.hop + 1,
+                            tag: TAG_RS,
+                            payload: Payload::F32(acc),
+                        },
+                    )]
+                } else {
+                    // p−1 hops done: chunk c is fully reduced here
+                    // (node == (c + p − 1) mod p). Keep it and start
+                    // circulating it (phase 2) immediately — the two
+                    // phases pipeline per chunk.
+                    self.chunks[node][c] = Some(acc.clone());
+                    vec![(
+                        right,
+                        Msg {
+                            origin: c,
+                            hop: 1,
+                            tag: TAG_AG,
+                            payload: Payload::F32(acc),
+                        },
+                    )]
+                }
+            }
+            TAG_AG => {
+                self.chunks[node][c] = Some(partial.clone());
+                if msg.hop < (self.p - 1) as u32 {
+                    vec![(
+                        right,
+                        Msg {
+                            origin: c,
+                            hop: msg.hop + 1,
+                            tag: TAG_AG,
+                            payload: msg.payload.clone(),
+                        },
+                    )]
+                } else {
+                    Vec::new()
+                }
+            }
+            other => unreachable!("unknown ring reduce tag {other}"),
+        }
+    }
+}
+
+impl Topology for Ring {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Ring
+    }
+
+    fn workers(&self) -> usize {
+        self.p
+    }
+
+    fn gather_rounds(&self) -> u32 {
+        self.p.saturating_sub(1) as u32
+    }
+
+    fn reduce_rounds(&self) -> u32 {
+        2 * self.p.saturating_sub(1) as u32
+    }
+
+    fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
+        assert_eq!(inputs.len(), self.p, "one input message per worker");
+        let mut proto = RingGather {
+            p: self.p,
+            inputs: inputs.to_vec(),
+            state: GatherState::new(inputs),
+        };
+        let time_ps = if self.p > 1 { fabric.run(&mut proto) } else { 0 };
+        SimGather {
+            gathered: proto.state.into_gathered(),
+            traffic: traffic_from(fabric, self.gather_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+
+    fn allreduce(&self, fabric: &mut Fabric, inputs: &[Vec<f32>]) -> SimReduce {
+        assert_eq!(inputs.len(), self.p);
+        let n = inputs[0].len();
+        assert!(inputs.iter().all(|v| v.len() == n), "length mismatch");
+        if self.p == 1 {
+            return SimReduce {
+                reduced: vec![inputs[0].clone()],
+                traffic: Traffic {
+                    bytes_sent_per_node: vec![0],
+                    rounds: 0,
+                },
+                time_ps: 0,
+                events: 0,
+            };
+        }
+        let mut proto = RingReduce {
+            p: self.p,
+            n,
+            inputs: inputs.to_vec(),
+            chunks: vec![vec![None; self.p]; self.p],
+        };
+        let time_ps = fabric.run(&mut proto);
+        let reduced: Vec<Vec<f32>> = proto
+            .chunks
+            .iter()
+            .map(|row| {
+                let mut out = vec![0.0f32; n];
+                for (c, slot) in row.iter().enumerate() {
+                    let chunk = slot.as_ref().expect("ring reduce under-delivered");
+                    out[chunk_range(n, self.p, c)].copy_from_slice(chunk);
+                }
+                out
+            })
+            .collect();
+        SimReduce {
+            reduced,
+            traffic: traffic_from(fabric, self.reduce_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{FabricConfig, LinkSpec, Straggler};
+
+    fn fabric_with(p: usize, stragglers: Vec<Straggler>) -> Fabric {
+        Fabric::for_config(
+            &FabricConfig {
+                link: LinkSpec {
+                    bandwidth_gbps: 1.0,
+                    latency_us: 1.0,
+                    jitter_us: 0.0,
+                },
+                stragglers,
+                ..FabricConfig::default()
+            },
+            p,
+        )
+    }
+
+    #[test]
+    fn gather_traffic_matches_lockstep_accounting() {
+        let sizes = [100usize, 200, 50, 400];
+        let inputs: Vec<Vec<u8>> = sizes.iter().map(|&s| vec![7u8; s]).collect();
+        let topo = Ring::new(4);
+        let mut f = fabric_with(4, Vec::new());
+        let res = topo.allgatherv(&mut f, &inputs);
+        for i in 0..4 {
+            let expected: u64 = (0..4)
+                .filter(|&j| j != (i + 1) % 4)
+                .map(|j| sizes[j] as u64)
+                .sum();
+            assert_eq!(res.traffic.bytes_sent_per_node[i], expected, "node {i}");
+        }
+        assert_eq!(res.traffic.rounds, 3);
+        for dst in 0..4 {
+            for src in 0..4 {
+                assert_eq!(res.gathered[dst][src], inputs[src]);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_gather_time_is_hops_times_ser_plus_latency() {
+        // 4 workers, 125-byte (1000-bit = 1 µs) blocks, 1 µs latency:
+        // pipelined hops never queue, so completion = 3 × (1 + 1) µs.
+        let inputs: Vec<Vec<u8>> = (0..4).map(|_| vec![0u8; 125]).collect();
+        let topo = Ring::new(4);
+        let mut f = fabric_with(4, Vec::new());
+        let res = topo.allgatherv(&mut f, &inputs);
+        assert_eq!(res.time_ps, 3 * 2_000_000);
+        assert_eq!(res.events, 12); // p(p−1) deliveries
+    }
+
+    #[test]
+    fn straggler_stretches_completion() {
+        let inputs: Vec<Vec<u8>> = (0..4).map(|_| vec![0u8; 12_500]).collect();
+        let topo = Ring::new(4);
+        let mut healthy = fabric_with(4, Vec::new());
+        let t0 = topo.allgatherv(&mut healthy, &inputs).time_ps;
+        let mut slowed = fabric_with(
+            4,
+            vec![Straggler {
+                node: 2,
+                slowdown: 10.0,
+            }],
+        );
+        let t1 = topo.allgatherv(&mut slowed, &inputs).time_ps;
+        assert!(t1 > t0, "straggler had no effect: {t0} vs {t1}");
+    }
+
+    #[test]
+    fn reduce_matches_elementwise_sum() {
+        let inputs = vec![
+            vec![1.0f32, 2.0, 3.0, 4.0, 5.0],
+            vec![10.0, 20.0, 30.0, 40.0, 50.0],
+            vec![-1.0, -2.0, -3.0, -4.0, -5.0],
+        ];
+        let topo = Ring::new(3);
+        let mut f = fabric_with(3, Vec::new());
+        let res = topo.allreduce(&mut f, &inputs);
+        let want = vec![10.0f32, 20.0, 30.0, 40.0, 50.0];
+        for node in 0..3 {
+            assert_eq!(res.reduced[node], want, "node {node}");
+        }
+        assert_eq!(res.traffic.rounds, 4);
+    }
+
+    #[test]
+    fn reduce_traffic_matches_two_phase_accounting() {
+        let p = 4;
+        let n = 100;
+        let inputs: Vec<Vec<f32>> = (0..p).map(|i| vec![i as f32; n]).collect();
+        let topo = Ring::new(p);
+        let mut f = fabric_with(p, Vec::new());
+        let res = topo.allreduce(&mut f, &inputs);
+        for i in 0..p {
+            assert_eq!(
+                res.traffic.bytes_sent_per_node[i],
+                (2 * (p - 1) * n / p * 4) as u64,
+                "node {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn n_smaller_than_p_still_reduces() {
+        let inputs: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32, 1.0]).collect();
+        let topo = Ring::new(5);
+        let mut f = fabric_with(5, Vec::new());
+        let res = topo.allreduce(&mut f, &inputs);
+        for node in 0..5 {
+            assert_eq!(res.reduced[node], vec![10.0, 5.0]);
+        }
+    }
+}

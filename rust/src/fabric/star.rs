@@ -1,0 +1,298 @@
+//! Star topology: a parameter-server hub.
+//!
+//! Workers 0..p are leaves; node `p` is a dedicated hub (it holds no
+//! gradient of its own). Allgatherv relays every block through the hub
+//! (up, then fan-out); allreduce ships full vectors up, reduces at the
+//! hub in worker order, and fans the sum back out. The hub's ingress
+//! port serializes the p-way incast and its egress port the p·(p−1)
+//! fan-out — the classic PS bottleneck the sweep quantifies against
+//! the ring.
+
+use super::collectives::{traffic_from, GatherState, SimGather, SimReduce};
+use super::topology::{Topology, TopologyKind};
+use super::{Fabric, Msg, Payload, Protocol};
+
+/// Block/vector travelling worker → hub.
+const TAG_UP: u8 = 0;
+/// Block/sum travelling hub → worker.
+const TAG_DOWN: u8 = 1;
+
+pub struct Star {
+    p: usize,
+}
+
+impl Star {
+    pub fn new(workers: usize) -> Star {
+        assert!(workers > 0, "topology needs at least one worker");
+        Star { p: workers }
+    }
+
+    fn hub(&self) -> usize {
+        self.p
+    }
+}
+
+struct StarGather {
+    p: usize,
+    hub: usize,
+    inputs: Vec<Vec<u8>>,
+    state: GatherState,
+}
+
+impl Protocol for StarGather {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        if self.p == 1 {
+            return Vec::new();
+        }
+        (0..self.p)
+            .map(|w| {
+                (
+                    w,
+                    self.hub,
+                    Msg {
+                        origin: w,
+                        hop: 1,
+                        tag: TAG_UP,
+                        payload: Payload::Bytes(self.inputs[w].clone()),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        if node == self.hub {
+            // Fan the block out to every worker that lacks it.
+            (0..self.p)
+                .filter(|&v| v != msg.origin)
+                .map(|v| {
+                    (
+                        v,
+                        Msg {
+                            origin: msg.origin,
+                            hop: msg.hop + 1,
+                            tag: TAG_DOWN,
+                            payload: msg.payload.clone(),
+                        },
+                    )
+                })
+                .collect()
+        } else {
+            let Payload::Bytes(b) = &msg.payload else {
+                unreachable!("gather protocol only moves bytes")
+            };
+            self.state.store(node, msg.origin, b);
+            Vec::new()
+        }
+    }
+}
+
+struct StarReduce {
+    p: usize,
+    hub: usize,
+    inputs: Vec<Vec<f32>>,
+    /// Vectors buffered at the hub, by worker id.
+    up: Vec<Option<Vec<f32>>>,
+    /// The fan-out sum as received by each worker.
+    down: Vec<Option<Vec<f32>>>,
+}
+
+impl Protocol for StarReduce {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        (0..self.p)
+            .map(|w| {
+                (
+                    w,
+                    self.hub,
+                    Msg {
+                        origin: w,
+                        hop: 1,
+                        tag: TAG_UP,
+                        payload: Payload::F32(self.inputs[w].clone()),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        let Payload::F32(v) = &msg.payload else {
+            unreachable!("reduce protocol only moves f32 vectors")
+        };
+        if node == self.hub {
+            self.up[msg.origin] = Some(v.clone());
+            if self.up.iter().any(|b| b.is_none()) {
+                return Vec::new();
+            }
+            // Last contribution arrived: reduce in worker order and fan
+            // the identical sum back out.
+            let n = v.len();
+            let mut sum = vec![0.0f32; n];
+            for slot in &self.up {
+                for (k, x) in slot.as_ref().unwrap().iter().enumerate() {
+                    sum[k] += x;
+                }
+            }
+            (0..self.p)
+                .map(|w| {
+                    (
+                        w,
+                        Msg {
+                            origin: w,
+                            hop: msg.hop + 1,
+                            tag: TAG_DOWN,
+                            payload: Payload::F32(sum.clone()),
+                        },
+                    )
+                })
+                .collect()
+        } else {
+            self.down[node] = Some(v.clone());
+            Vec::new()
+        }
+    }
+}
+
+impl Topology for Star {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Star
+    }
+
+    fn workers(&self) -> usize {
+        self.p
+    }
+
+    fn node_count(&self) -> usize {
+        self.p + 1
+    }
+
+    fn gather_rounds(&self) -> u32 {
+        if self.p > 1 {
+            2
+        } else {
+            0
+        }
+    }
+
+    fn reduce_rounds(&self) -> u32 {
+        2
+    }
+
+    fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
+        assert_eq!(inputs.len(), self.p, "one input message per worker");
+        let mut proto = StarGather {
+            p: self.p,
+            hub: self.hub(),
+            inputs: inputs.to_vec(),
+            state: GatherState::new(inputs),
+        };
+        let time_ps = fabric.run(&mut proto);
+        SimGather {
+            gathered: proto.state.into_gathered(),
+            traffic: traffic_from(fabric, self.gather_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+
+    fn allreduce(&self, fabric: &mut Fabric, inputs: &[Vec<f32>]) -> SimReduce {
+        assert_eq!(inputs.len(), self.p);
+        let n = inputs[0].len();
+        assert!(inputs.iter().all(|v| v.len() == n), "length mismatch");
+        let mut proto = StarReduce {
+            p: self.p,
+            hub: self.hub(),
+            inputs: inputs.to_vec(),
+            up: vec![None; self.p],
+            down: vec![None; self.p],
+        };
+        let time_ps = fabric.run(&mut proto);
+        let reduced: Vec<Vec<f32>> = proto
+            .down
+            .iter()
+            .map(|slot| slot.clone().expect("star reduce under-delivered"))
+            .collect();
+        SimReduce {
+            reduced,
+            traffic: traffic_from(fabric, self.reduce_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{FabricConfig, LinkSpec};
+
+    fn fabric(nodes: usize) -> Fabric {
+        Fabric::for_config(
+            &FabricConfig {
+                link: LinkSpec {
+                    bandwidth_gbps: 1.0,
+                    latency_us: 1.0,
+                    jitter_us: 0.0,
+                },
+                ..FabricConfig::default()
+            },
+            nodes,
+        )
+    }
+
+    #[test]
+    fn gather_relays_every_block_through_the_hub() {
+        let inputs = vec![vec![1u8; 8], vec![2u8; 16], vec![3u8; 4]];
+        let topo = Star::new(3);
+        let mut f = fabric(topo.node_count());
+        let res = topo.allgatherv(&mut f, &inputs);
+        for dst in 0..3 {
+            for src in 0..3 {
+                assert_eq!(res.gathered[dst][src], inputs[src]);
+            }
+        }
+        // Workers send their own block once; the hub re-sends every
+        // block p−1 times.
+        assert_eq!(res.traffic.bytes_sent_per_node[0], 8);
+        assert_eq!(res.traffic.bytes_sent_per_node[1], 16);
+        assert_eq!(res.traffic.bytes_sent_per_node[2], 4);
+        assert_eq!(res.traffic.bytes_sent_per_node[3], 2 * (8 + 16 + 4));
+        assert_eq!(res.traffic.rounds, 2);
+    }
+
+    #[test]
+    fn reduce_sums_in_worker_order_everywhere() {
+        let inputs = vec![vec![1.0f32, -1.0], vec![2.0, 0.5], vec![3.0, 0.25]];
+        let topo = Star::new(3);
+        let mut f = fabric(topo.node_count());
+        let res = topo.allreduce(&mut f, &inputs);
+        for node in 0..3 {
+            assert_eq!(res.reduced[node], vec![6.0, -0.25], "node {node}");
+        }
+    }
+
+    #[test]
+    fn hub_fanout_is_slower_than_full_mesh() {
+        use crate::fabric::topology::FullMesh;
+        let inputs: Vec<Vec<u8>> = (0..8).map(|_| vec![0u8; 12_500]).collect();
+        let star = Star::new(8);
+        let mesh = FullMesh::new(8);
+        let mut fs = fabric(star.node_count());
+        let mut fm = fabric(mesh.node_count());
+        let ts = star.allgatherv(&mut fs, &inputs).time_ps;
+        let tm = mesh.allgatherv(&mut fm, &inputs).time_ps;
+        assert!(
+            ts > tm,
+            "hub bottleneck missing: star {ts} ps vs mesh {tm} ps"
+        );
+    }
+
+    #[test]
+    fn single_worker_star_gathers_trivially() {
+        let topo = Star::new(1);
+        let mut f = fabric(topo.node_count());
+        let res = topo.allgatherv(&mut f, &[vec![5u8; 3]]);
+        assert_eq!(res.gathered[0][0], vec![5u8; 3]);
+        assert_eq!(res.time_ps, 0);
+    }
+}

@@ -1,0 +1,327 @@
+//! Pluggable topology backends: the trait, the selector enum, and the
+//! fully-connected mesh reference implementation.
+//!
+//! A topology owns the routing/protocol logic for both collectives and
+//! is judged on two axes the sweep reports: simulated wall-clock and
+//! per-link traffic. Ring ([`super::ring`]) is the paper's substrate;
+//! star ([`super::star`]) models a parameter server; tree
+//! ([`super::tree`]) a 2-level hierarchical cluster (e.g. rack-local
+//! leaders); [`FullMesh`] here is the contention-free upper bound.
+
+use super::collectives::{traffic_from, GatherState, SimGather, SimReduce};
+use super::{Fabric, Msg, Payload, Protocol};
+
+/// Topology selector, parsed from `--topology`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    Ring,
+    Full,
+    Star,
+    Tree { branch: usize },
+}
+
+impl TopologyKind {
+    /// Parse `ring`, `full`, `star`, `tree` (branch 4) or `tree:<b>`.
+    pub fn parse(s: &str) -> anyhow::Result<TopologyKind> {
+        let (head, rest) = match s.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (s, None),
+        };
+        match (head, rest) {
+            ("ring", None) => Ok(TopologyKind::Ring),
+            ("full", None) => Ok(TopologyKind::Full),
+            ("star", None) => Ok(TopologyKind::Star),
+            ("tree", None) => Ok(TopologyKind::Tree { branch: 4 }),
+            ("tree", Some(b)) => {
+                let branch: usize = b
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("tree branch '{b}': {e}"))?;
+                anyhow::ensure!(branch >= 1, "tree branch must be >= 1");
+                Ok(TopologyKind::Tree { branch })
+            }
+            _ => anyhow::bail!("unknown topology '{s}' (ring|full|star|tree[:branch])"),
+        }
+    }
+
+    /// Canonical string form (parses back).
+    pub fn label(&self) -> String {
+        match self {
+            TopologyKind::Ring => "ring".into(),
+            TopologyKind::Full => "full".into(),
+            TopologyKind::Star => "star".into(),
+            TopologyKind::Tree { branch } => format!("tree:{branch}"),
+        }
+    }
+}
+
+/// A cluster wiring + collective protocol implementation.
+pub trait Topology {
+    fn kind(&self) -> TopologyKind;
+    /// Participating workers (collective endpoints).
+    fn workers(&self) -> usize;
+    /// Total simulated nodes, including infrastructure (e.g. the hub).
+    fn node_count(&self) -> usize {
+        self.workers()
+    }
+    /// Logical round count for gatherv (`Traffic::rounds`).
+    fn gather_rounds(&self) -> u32;
+    /// Logical round count for allreduce.
+    fn reduce_rounds(&self) -> u32;
+    /// Every worker ends holding every worker's byte message.
+    fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather;
+    /// Every worker ends holding the elementwise sum of all inputs.
+    fn allreduce(&self, fabric: &mut Fabric, inputs: &[Vec<f32>]) -> SimReduce;
+}
+
+/// Instantiate a backend for `workers` endpoints.
+pub fn build_topology(kind: TopologyKind, workers: usize) -> Box<dyn Topology> {
+    match kind {
+        TopologyKind::Ring => Box::new(super::ring::Ring::new(workers)),
+        TopologyKind::Full => Box::new(FullMesh::new(workers)),
+        TopologyKind::Star => Box::new(super::star::Star::new(workers)),
+        TopologyKind::Tree { branch } => Box::new(super::tree::Tree::new(workers, branch)),
+    }
+}
+
+// ---- fully-connected mesh ----
+
+/// Every pair of workers has a direct path; collectives are one
+/// logical round with no forwarding. Egress/ingress port contention is
+/// the only queueing (each node still pushes p−1 copies through its
+/// own NIC).
+pub struct FullMesh {
+    p: usize,
+}
+
+impl FullMesh {
+    pub fn new(workers: usize) -> FullMesh {
+        assert!(workers > 0, "topology needs at least one worker");
+        FullMesh { p: workers }
+    }
+}
+
+struct MeshGather {
+    p: usize,
+    inputs: Vec<Vec<u8>>,
+    state: GatherState,
+}
+
+impl Protocol for MeshGather {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        let mut out = Vec::new();
+        for w in 0..self.p {
+            for v in 0..self.p {
+                if v != w {
+                    out.push((
+                        w,
+                        v,
+                        Msg {
+                            origin: w,
+                            hop: 0,
+                            tag: 0,
+                            payload: Payload::Bytes(self.inputs[w].clone()),
+                        },
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        if let Payload::Bytes(b) = &msg.payload {
+            self.state.store(node, msg.origin, b);
+        }
+        Vec::new()
+    }
+}
+
+struct MeshReduce {
+    p: usize,
+    inputs: Vec<Vec<f32>>,
+    got: Vec<Vec<Option<Vec<f32>>>>,
+}
+
+impl Protocol for MeshReduce {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        let mut out = Vec::new();
+        for w in 0..self.p {
+            for v in 0..self.p {
+                if v != w {
+                    out.push((
+                        w,
+                        v,
+                        Msg {
+                            origin: w,
+                            hop: 0,
+                            tag: 0,
+                            payload: Payload::F32(self.inputs[w].clone()),
+                        },
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        if let Payload::F32(v) = &msg.payload {
+            self.got[node][msg.origin] = Some(v.clone());
+        }
+        Vec::new()
+    }
+}
+
+impl Topology for FullMesh {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Full
+    }
+
+    fn workers(&self) -> usize {
+        self.p
+    }
+
+    fn gather_rounds(&self) -> u32 {
+        u32::from(self.p > 1)
+    }
+
+    fn reduce_rounds(&self) -> u32 {
+        u32::from(self.p > 1)
+    }
+
+    fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
+        assert_eq!(inputs.len(), self.p, "one input message per worker");
+        let mut proto = MeshGather {
+            p: self.p,
+            inputs: inputs.to_vec(),
+            state: GatherState::new(inputs),
+        };
+        let time_ps = fabric.run(&mut proto);
+        SimGather {
+            gathered: proto.state.into_gathered(),
+            traffic: traffic_from(fabric, self.gather_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+
+    fn allreduce(&self, fabric: &mut Fabric, inputs: &[Vec<f32>]) -> SimReduce {
+        assert_eq!(inputs.len(), self.p);
+        let n = inputs[0].len();
+        assert!(inputs.iter().all(|v| v.len() == n), "length mismatch");
+        let mut got: Vec<Vec<Option<Vec<f32>>>> = vec![vec![None; self.p]; self.p];
+        for (w, row) in got.iter_mut().enumerate() {
+            row[w] = Some(inputs[w].clone());
+        }
+        let mut proto = MeshReduce {
+            p: self.p,
+            inputs: inputs.to_vec(),
+            got,
+        };
+        let time_ps = fabric.run(&mut proto);
+        // Sum in origin order on every node — identical bits everywhere.
+        let reduced: Vec<Vec<f32>> = proto
+            .got
+            .iter()
+            .map(|row| {
+                let mut out = vec![0.0f32; n];
+                for slot in row {
+                    let v = slot.as_ref().expect("mesh reduce under-delivered");
+                    for (k, x) in v.iter().enumerate() {
+                        out[k] += x;
+                    }
+                }
+                out
+            })
+            .collect();
+        SimReduce {
+            reduced,
+            traffic: traffic_from(fabric, self.reduce_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{FabricConfig, LinkSpec};
+
+    fn fabric(p: usize) -> Fabric {
+        Fabric::for_config(
+            &FabricConfig {
+                link: LinkSpec {
+                    bandwidth_gbps: 1.0,
+                    latency_us: 1.0,
+                    jitter_us: 0.0,
+                },
+                ..FabricConfig::default()
+            },
+            p,
+        )
+    }
+
+    #[test]
+    fn kind_parse_and_label_roundtrip() {
+        for k in [
+            TopologyKind::Ring,
+            TopologyKind::Full,
+            TopologyKind::Star,
+            TopologyKind::Tree { branch: 4 },
+            TopologyKind::Tree { branch: 8 },
+        ] {
+            assert_eq!(TopologyKind::parse(&k.label()).unwrap(), k);
+        }
+        assert_eq!(
+            TopologyKind::parse("tree").unwrap(),
+            TopologyKind::Tree { branch: 4 }
+        );
+        assert!(TopologyKind::parse("torus").is_err());
+        assert!(TopologyKind::parse("tree:0").is_err());
+    }
+
+    #[test]
+    fn mesh_gather_delivers_everything_in_one_round() {
+        let inputs = vec![vec![1u8; 10], vec![2u8; 3], vec![3u8; 7], vec![]];
+        let topo = FullMesh::new(4);
+        let mut f = fabric(topo.node_count());
+        let res = topo.allgatherv(&mut f, &inputs);
+        for dst in 0..4 {
+            for src in 0..4 {
+                assert_eq!(res.gathered[dst][src], inputs[src]);
+            }
+        }
+        assert_eq!(res.traffic.rounds, 1);
+        // Each worker pushes p−1 copies of its own message.
+        for (w, input) in inputs.iter().enumerate() {
+            assert_eq!(
+                res.traffic.bytes_sent_per_node[w],
+                3 * input.len() as u64,
+                "worker {w}"
+            );
+        }
+        assert_eq!(res.events, 12); // p(p−1) deliveries
+    }
+
+    #[test]
+    fn mesh_reduce_is_elementwise_sum() {
+        let inputs = vec![vec![1.0f32, -2.0], vec![0.5, 0.5], vec![2.5, 10.0]];
+        let topo = FullMesh::new(3);
+        let mut f = fabric(3);
+        let res = topo.allreduce(&mut f, &inputs);
+        for node in 0..3 {
+            assert_eq!(res.reduced[node], vec![4.0, 8.5], "node {node}");
+        }
+    }
+
+    #[test]
+    fn single_worker_mesh_is_a_noop() {
+        let topo = FullMesh::new(1);
+        let mut f = fabric(1);
+        let res = topo.allgatherv(&mut f, &[vec![9u8; 5]]);
+        assert_eq!(res.gathered[0][0], vec![9u8; 5]);
+        assert_eq!(res.time_ps, 0);
+        assert_eq!(res.traffic.rounds, 0);
+    }
+}

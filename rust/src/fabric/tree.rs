@@ -1,0 +1,432 @@
+//! 2-level hierarchical topology: workers grouped under leaders
+//! (think rack-local aggregation), leaders fully connected.
+//!
+//! Group `g` spans workers `[g·b, min((g+1)·b, p))` for branch factor
+//! `b`; the lowest id in each group is its leader (leaders are
+//! themselves workers — no extra infrastructure node). Blocks flow
+//! member → leader → other leaders → their members, so cross-group
+//! traffic crosses each leader pair exactly once per block — the
+//! bandwidth hierarchy a flat ring or mesh cannot express.
+//!
+//! Degenerate branches recover the other topologies: `b = 1` is a full
+//! mesh over all workers; `b ≥ p` is a single star with worker 0 as
+//! hub.
+
+use super::collectives::{traffic_from, GatherState, SimGather, SimReduce};
+use super::topology::{Topology, TopologyKind};
+use super::{Fabric, Msg, Payload, Protocol};
+
+/// Member block/vector travelling up to its leader.
+const TAG_UP: u8 = 0;
+/// Leader-to-leader exchange.
+const TAG_XCHG: u8 = 1;
+/// Leader fan-out down to its members.
+const TAG_DOWN: u8 = 2;
+
+pub struct Tree {
+    p: usize,
+    branch: usize,
+}
+
+impl Tree {
+    pub fn new(workers: usize, branch: usize) -> Tree {
+        assert!(workers > 0, "topology needs at least one worker");
+        assert!(branch >= 1, "tree branch must be >= 1");
+        Tree { p: workers, branch }
+    }
+
+    fn leader_of(&self, w: usize) -> usize {
+        (w / self.branch) * self.branch
+    }
+
+    fn is_leader(&self, w: usize) -> bool {
+        w % self.branch == 0
+    }
+
+    fn leaders(&self) -> Vec<usize> {
+        (0..self.p).step_by(self.branch).collect()
+    }
+
+    /// Members of `leader`'s group, excluding the leader itself.
+    fn members(&self, leader: usize) -> Vec<usize> {
+        (leader + 1..(leader + self.branch).min(self.p)).collect()
+    }
+}
+
+struct TreeGather<'t> {
+    t: &'t Tree,
+    inputs: Vec<Vec<u8>>,
+    state: GatherState,
+}
+
+impl TreeGather<'_> {
+    fn msg(&self, origin: usize, hop: u32, tag: u8, payload: &Payload) -> Msg {
+        Msg {
+            origin,
+            hop,
+            tag,
+            payload: payload.clone(),
+        }
+    }
+}
+
+impl Protocol for TreeGather<'_> {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        let mut out = Vec::new();
+        for w in 0..self.t.p {
+            let payload = Payload::Bytes(self.inputs[w].clone());
+            if self.t.is_leader(w) {
+                for l in self.t.leaders() {
+                    if l != w {
+                        out.push((w, l, self.msg(w, 1, TAG_XCHG, &payload)));
+                    }
+                }
+                for m in self.t.members(w) {
+                    out.push((w, m, self.msg(w, 1, TAG_DOWN, &payload)));
+                }
+            } else {
+                out.push((w, self.t.leader_of(w), self.msg(w, 1, TAG_UP, &payload)));
+            }
+        }
+        out
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        let Payload::Bytes(b) = &msg.payload else {
+            unreachable!("gather protocol only moves bytes")
+        };
+        self.state.store(node, msg.origin, b);
+        if !self.t.is_leader(node) {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        match msg.tag {
+            TAG_UP => {
+                // A member block: cross to the other leaders and to the
+                // rest of this group.
+                for l in self.t.leaders() {
+                    if l != node {
+                        out.push((l, self.msg(msg.origin, msg.hop + 1, TAG_XCHG, &msg.payload)));
+                    }
+                }
+                for m in self.t.members(node) {
+                    if m != msg.origin {
+                        out.push((m, self.msg(msg.origin, msg.hop + 1, TAG_DOWN, &msg.payload)));
+                    }
+                }
+            }
+            TAG_XCHG => {
+                // Another group's block: fan down to this group.
+                for m in self.t.members(node) {
+                    out.push((m, self.msg(msg.origin, msg.hop + 1, TAG_DOWN, &msg.payload)));
+                }
+            }
+            other => unreachable!("leader received unexpected tag {other}"),
+        }
+        out
+    }
+}
+
+struct TreeReduce<'t> {
+    t: &'t Tree,
+    n: usize,
+    inputs: Vec<Vec<f32>>,
+    /// Member vectors buffered at leaders, by worker id.
+    up: Vec<Option<Vec<f32>>>,
+    /// Group partials buffered at every leader, by leader id.
+    partials: Vec<Vec<Option<Vec<f32>>>>,
+    /// Final sums as seen by each worker.
+    totals: Vec<Option<Vec<f32>>>,
+}
+
+impl TreeReduce<'_> {
+    /// Sum this leader's group (leader + members, ascending id).
+    fn group_partial(&self, leader: usize) -> Vec<f32> {
+        let mut sum = self.inputs[leader].clone();
+        for m in self.t.members(leader) {
+            let v = self.up[m].as_ref().expect("member vector missing");
+            for (k, x) in v.iter().enumerate() {
+                sum[k] += x;
+            }
+        }
+        sum
+    }
+
+    /// Once a leader holds every group partial, the grand total
+    /// (ascending leader order) and the fan-out sends.
+    fn try_finish(&mut self, leader: usize, hop: u32) -> Vec<(usize, Msg)> {
+        let leaders = self.t.leaders();
+        if leaders.iter().any(|&l| self.partials[leader][l].is_none()) {
+            return Vec::new();
+        }
+        let mut total = vec![0.0f32; self.n];
+        for &l in &leaders {
+            let v = self.partials[leader][l].as_ref().unwrap();
+            for (k, x) in v.iter().enumerate() {
+                total[k] += x;
+            }
+        }
+        self.totals[leader] = Some(total.clone());
+        let payload = Payload::F32(total);
+        self.t
+            .members(leader)
+            .into_iter()
+            .map(|m| {
+                (
+                    m,
+                    Msg {
+                        origin: leader,
+                        hop,
+                        tag: TAG_DOWN,
+                        payload: payload.clone(),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// Leader's own group is complete: record the partial, exchange it,
+    /// and possibly finish (single-leader trees finish immediately).
+    fn group_ready(&mut self, leader: usize, hop: u32) -> Vec<(usize, Msg)> {
+        let partial = self.group_partial(leader);
+        self.partials[leader][leader] = Some(partial.clone());
+        let payload = Payload::F32(partial);
+        let mut out: Vec<(usize, Msg)> = self
+            .t
+            .leaders()
+            .into_iter()
+            .filter(|&l| l != leader)
+            .map(|l| {
+                (
+                    l,
+                    Msg {
+                        origin: leader,
+                        hop,
+                        tag: TAG_XCHG,
+                        payload: payload.clone(),
+                    },
+                )
+            })
+            .collect();
+        out.extend(self.try_finish(leader, hop + 1));
+        out
+    }
+}
+
+impl Protocol for TreeReduce<'_> {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        let mut out = Vec::new();
+        for w in 0..self.t.p {
+            if !self.t.is_leader(w) {
+                out.push((
+                    w,
+                    self.t.leader_of(w),
+                    Msg {
+                        origin: w,
+                        hop: 1,
+                        tag: TAG_UP,
+                        payload: Payload::F32(self.inputs[w].clone()),
+                    },
+                ));
+            }
+        }
+        // Leaders whose whole group is themselves are ready at t = 0.
+        for l in self.t.leaders() {
+            if self.t.members(l).is_empty() {
+                for (dst, msg) in self.group_ready(l, 1) {
+                    out.push((l, dst, msg));
+                }
+            }
+        }
+        out
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        let Payload::F32(v) = &msg.payload else {
+            unreachable!("reduce protocol only moves f32 vectors")
+        };
+        match msg.tag {
+            TAG_UP => {
+                self.up[msg.origin] = Some(v.clone());
+                let complete = self
+                    .t
+                    .members(node)
+                    .iter()
+                    .all(|&m| self.up[m].is_some());
+                if complete {
+                    self.group_ready(node, msg.hop + 1)
+                } else {
+                    Vec::new()
+                }
+            }
+            TAG_XCHG => {
+                self.partials[node][msg.origin] = Some(v.clone());
+                self.try_finish(node, msg.hop + 1)
+            }
+            TAG_DOWN => {
+                self.totals[node] = Some(v.clone());
+                Vec::new()
+            }
+            other => unreachable!("unknown tree reduce tag {other}"),
+        }
+    }
+}
+
+impl Topology for Tree {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Tree {
+            branch: self.branch,
+        }
+    }
+
+    fn workers(&self) -> usize {
+        self.p
+    }
+
+    fn gather_rounds(&self) -> u32 {
+        if self.p > 1 {
+            3
+        } else {
+            0
+        }
+    }
+
+    fn reduce_rounds(&self) -> u32 {
+        if self.p > 1 {
+            3
+        } else {
+            0
+        }
+    }
+
+    fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
+        assert_eq!(inputs.len(), self.p, "one input message per worker");
+        let mut proto = TreeGather {
+            t: self,
+            inputs: inputs.to_vec(),
+            state: GatherState::new(inputs),
+        };
+        let time_ps = if self.p > 1 { fabric.run(&mut proto) } else { 0 };
+        SimGather {
+            gathered: proto.state.into_gathered(),
+            traffic: traffic_from(fabric, self.gather_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+
+    fn allreduce(&self, fabric: &mut Fabric, inputs: &[Vec<f32>]) -> SimReduce {
+        assert_eq!(inputs.len(), self.p);
+        let n = inputs[0].len();
+        assert!(inputs.iter().all(|v| v.len() == n), "length mismatch");
+        let mut proto = TreeReduce {
+            t: self,
+            n,
+            inputs: inputs.to_vec(),
+            up: vec![None; self.p],
+            partials: vec![vec![None; self.p]; self.p],
+            totals: vec![None; self.p],
+        };
+        let time_ps = if self.p > 1 { fabric.run(&mut proto) } else { 0 };
+        let reduced: Vec<Vec<f32>> = if self.p == 1 {
+            vec![inputs[0].clone()]
+        } else {
+            proto
+                .totals
+                .iter()
+                .map(|slot| slot.clone().expect("tree reduce under-delivered"))
+                .collect()
+        };
+        SimReduce {
+            reduced,
+            traffic: traffic_from(fabric, self.reduce_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{FabricConfig, LinkSpec};
+
+    fn fabric(nodes: usize) -> Fabric {
+        Fabric::for_config(
+            &FabricConfig {
+                link: LinkSpec {
+                    bandwidth_gbps: 1.0,
+                    latency_us: 1.0,
+                    jitter_us: 0.0,
+                },
+                ..FabricConfig::default()
+            },
+            nodes,
+        )
+    }
+
+    #[test]
+    fn grouping_math() {
+        let t = Tree::new(10, 4);
+        assert_eq!(t.leaders(), vec![0, 4, 8]);
+        assert_eq!(t.leader_of(5), 4);
+        assert_eq!(t.members(8), vec![9]);
+        assert_eq!(t.members(0), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn gather_delivers_across_groups() {
+        for (p, b) in [(7usize, 3usize), (8, 4), (5, 1), (3, 8), (2, 2)] {
+            let inputs: Vec<Vec<u8>> =
+                (0..p).map(|w| vec![w as u8 + 1; (w * 13) % 29 + 1]).collect();
+            let topo = Tree::new(p, b);
+            let mut f = fabric(topo.node_count());
+            let res = topo.allgatherv(&mut f, &inputs);
+            for dst in 0..p {
+                for src in 0..p {
+                    assert_eq!(
+                        res.gathered[dst][src], inputs[src],
+                        "p={p} b={b} dst={dst} src={src}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_matches_sum_for_awkward_shapes() {
+        for (p, b) in [(7usize, 3usize), (4, 2), (5, 1), (3, 8), (1, 4)] {
+            let inputs: Vec<Vec<f32>> = (0..p)
+                .map(|w| (0..6).map(|k| (w * 6 + k) as f32 * 0.5).collect())
+                .collect();
+            let topo = Tree::new(p, b);
+            let mut f = fabric(topo.node_count());
+            let res = topo.allreduce(&mut f, &inputs);
+            for k in 0..6 {
+                let want: f32 = inputs.iter().map(|v| v[k]).sum();
+                for node in 0..p {
+                    let got = res.reduced[node][k];
+                    assert!(
+                        (got - want).abs() < 1e-3,
+                        "p={p} b={b} node={node} k={k}: {got} != {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cross_group_traffic_crosses_leader_links_once_per_block() {
+        // 4 workers, branch 2: groups {0,1} and {2,3}. Worker 1's block
+        // must cross the 0→2 leader link exactly once.
+        let inputs: Vec<Vec<u8>> = (0..4).map(|w| vec![w as u8; 100]).collect();
+        let topo = Tree::new(4, 2);
+        let mut f = fabric(topo.node_count());
+        let res = topo.allgatherv(&mut f, &inputs);
+        assert_eq!(res.traffic.rounds, 3);
+        // Leader 0 sends: its own block to {1, 2}, member 1's block to
+        // {2}, and group 2's two blocks down to {1} → 5 sends.
+        assert_eq!(f.links()[&(0, 2)].messages, 2); // blocks 0 and 1 cross once each
+        assert_eq!(f.links()[&(2, 0)].messages, 2); // blocks 2 and 3 likewise
+    }
+}

@@ -3,8 +3,9 @@
 //! three-layer Rust + JAX + Pallas system.
 //!
 //! * L3 (this crate): distributed-training coordinator — compression
-//!   codecs, ring communication fabric, optimizers, data pipeline,
-//!   metrics, CLI launcher.
+//!   codecs, the event-driven cluster fabric simulator (`fabric`) with
+//!   pluggable topologies backing the `comm` collectives, optimizers,
+//!   data pipeline, metrics, CLI launcher.
 //! * L2/L1 (python/, build-time only): JAX model fwd/bwd + the fused
 //!   Pallas moment kernel, AOT-lowered to HLO text.
 //! * runtime: loads the artifacts via the PJRT C API and executes them
@@ -21,6 +22,7 @@ pub mod util;
 pub mod compress;
 pub mod model;
 pub mod comm;
+pub mod fabric;
 pub mod data;
 pub mod optim;
 pub mod config;

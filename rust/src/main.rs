@@ -8,14 +8,17 @@
 //! repro table2 [...]
 //! repro fig3   [--out fig3.csv]          # scatter data from both tables
 //! repro costmodel                         # Section-5 (A5) analysis
+//! repro fabric-sweep                      # simulated cluster sweep (F1)
 //! repro inspect                           # artifact manifest summary
 //! ```
 
 use anyhow::Result;
 
+use vgc::compress::CodecSpec;
 use vgc::config::TrainConfig;
 use vgc::coordinator::Trainer;
-use vgc::experiments;
+use vgc::experiments::{self, FabricSweepOpts};
+use vgc::fabric::{build_topology, Fabric, FabricConfig, Straggler, TopologyKind};
 use vgc::runtime::{Client, Manifest};
 use vgc::util::cli::Args;
 
@@ -28,15 +31,25 @@ USAGE:
                   [--train-size N] [--test-size N] [--signal F]
                   [--eval-every K] [--log-every K] [--verify-sync]
                   [--loss-curve FILE.csv] [--artifacts DIR]
+                  [--topology TOPO] [--bandwidth-gbps G] [--latency-us L]
+                  [--jitter-us J] [--stragglers NODE:SLOW,..] [--fabric-seed S]
   repro table1    [--optimizers adam,momentum] [--steps N] [--out FILE.json]
   repro table2    [--optimizers adam,momentum] [--steps N] [--out FILE.json]
   repro fig3      [--steps N] [--out FILE.csv]
   repro costmodel
+  repro fabric-sweep
+                  [--topologies ring,star,full,tree:4] [--workers 8,16]
+                  [--bandwidth-gbps 1,10] [--codecs SPEC+SPEC+..]
+                  [--n PARAMS] [--latency-us L] [--jitter-us J]
+                  [--stragglers NODE:SLOW,..] [--seed S] [--warmup K]
+                  [--out FILE.json] [--md FILE.md]
   repro inspect   [--artifacts DIR]
 
 Codec SPECs: none | vgc:alpha=A[,zeta=Z] | strom:tau=T |
              hybrid:tau=T,alpha=A | qsgd:bits=B,d=D | terngrad
+             (fabric-sweep separates codec specs with '+')
 LR SCHEDs:   const:LR | step:LR,FACTOR,EVERY | warmup:LR,STEPS
+Topologies:  ring | full | star | tree[:branch]
 ";
 
 const TRAIN_FLAGS: &[&str] = &[
@@ -44,6 +57,14 @@ const TRAIN_FLAGS: &[&str] = &[
     "train-size", "test-size", "signal", "eval-every", "log-every",
     "verify-sync", "loss-curve", "artifacts",
 ];
+
+/// Train accepts its own flags plus the fabric overrides — built at
+/// runtime from `FabricConfig::FLAGS` so the lists cannot drift.
+fn train_flags() -> Vec<&'static str> {
+    let mut flags = TRAIN_FLAGS.to_vec();
+    flags.extend_from_slice(FabricConfig::FLAGS);
+    flags
+}
 
 fn artifacts_dir(args: &Args) -> String {
     args.str_or("artifacts", "artifacts")
@@ -61,6 +82,7 @@ fn main() -> Result<()> {
             print!("{}", experiments::costmodel_report());
             Ok(())
         }
+        "fabric-sweep" => cmd_fabric_sweep(&args),
         "inspect" => cmd_inspect(&args),
         "" | "help" | "--help" => {
             print!("{USAGE}");
@@ -74,7 +96,7 @@ fn main() -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    args.check_known(TRAIN_FLAGS)?;
+    args.check_known(&train_flags())?;
     let model = args.require("model")?;
     let cfg = TrainConfig::defaults(model).override_from(args)?;
     let manifest = Manifest::load(artifacts_dir(args))?;
@@ -87,6 +109,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         client.platform()
     );
     let mut trainer = Trainer::new(&client, &manifest, cfg)?;
+    {
+        // Fail before the run, not after it, if the fabric config names
+        // a node this model's cluster does not have.
+        let nodes = build_topology(trainer.cfg.fabric.topology, trainer.workers()).node_count();
+        for s in &trainer.cfg.fabric.stragglers {
+            anyhow::ensure!(
+                s.node < nodes,
+                "--stragglers names node {} but the {} fabric has {} nodes",
+                s.node,
+                trainer.cfg.fabric.topology.label(),
+                nodes
+            );
+        }
+    }
     let t0 = std::time::Instant::now();
     trainer.run(false)?;
     let wall = t0.elapsed().as_secs_f64();
@@ -105,9 +141,101 @@ fn cmd_train(args: &Args) -> Result<()> {
         "wall {wall:.1}s  (compute {:.1}s, encode {:.1}s, comm+decode {:.1}s, update {:.1}s)",
         ph.compute_s, ph.encode_s, ph.comm_decode_s, ph.update_s
     );
+    // Replay the run's average message size through the configured
+    // fabric: simulated step-communication time on that cluster shape.
+    let p = trainer.workers();
+    if p > 0 {
+        let fabric_cfg = trainer.cfg.fabric.clone();
+        let avg = m.avg_wire_bytes_per_worker_step().round() as usize;
+        let topo = build_topology(fabric_cfg.topology, p);
+        let mut fab = Fabric::for_config(&fabric_cfg, topo.node_count());
+        let sim = topo.allgatherv(&mut fab, &vec![vec![0u8; avg]; p]);
+        println!(
+            "fabric sim         {}: step comm {:.3} ms ({avg} B per worker)",
+            fabric_cfg.describe(),
+            sim.time_secs() * 1e3,
+        );
+    }
     if let Some(path) = args.get("loss-curve") {
         std::fs::write(path, m.loss_curve_csv())?;
         println!("loss curve written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fabric_sweep(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "topologies", "workers", "bandwidth-gbps", "codecs", "n", "latency-us",
+        "jitter-us", "stragglers", "seed", "warmup", "out", "md",
+    ])?;
+    let mut opts = FabricSweepOpts::default();
+    let topologies = args
+        .list("topologies")
+        .iter()
+        .map(|t| TopologyKind::parse(t))
+        .collect::<Result<Vec<_>>>()?;
+    if !topologies.is_empty() {
+        opts.topologies = topologies;
+    }
+    let workers = args.parse_list::<usize>("workers")?;
+    if !workers.is_empty() {
+        opts.workers = workers;
+    }
+    let bandwidths = args.parse_list::<f64>("bandwidth-gbps")?;
+    if !bandwidths.is_empty() {
+        anyhow::ensure!(
+            bandwidths.iter().all(|b| *b > 0.0),
+            "--bandwidth-gbps values must be positive"
+        );
+        opts.bandwidths_gbps = bandwidths;
+    }
+    // Codec specs contain commas (vgc:alpha=1.5,zeta=0.999), so the
+    // list separator here is '+'.
+    if let Some(spec) = args.get("codecs") {
+        opts.codecs = spec
+            .split('+')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| CodecSpec::parse(s.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(!opts.codecs.is_empty(), "--codecs lists no specs");
+    }
+    opts.n_params = args.parse_or("n", opts.n_params)?;
+    anyhow::ensure!(opts.n_params > 0, "--n must be positive");
+    opts.latency_us = args.parse_or("latency-us", opts.latency_us)?;
+    opts.jitter_us = args.parse_or("jitter-us", opts.jitter_us)?;
+    if let Some(spec) = args.get("stragglers") {
+        opts.stragglers = Straggler::parse_list(spec)?;
+    }
+    if let Some(&min_p) = opts.workers.iter().min() {
+        // Every swept fabric must contain every straggler node.
+        let min_nodes = opts
+            .topologies
+            .iter()
+            .map(|&k| build_topology(k, min_p).node_count())
+            .min()
+            .unwrap_or(min_p);
+        for s in &opts.stragglers {
+            anyhow::ensure!(
+                s.node < min_nodes,
+                "--stragglers names node {} but the smallest swept fabric has {} nodes",
+                s.node,
+                min_nodes
+            );
+        }
+    }
+    opts.seed = args.parse_or("seed", opts.seed)?;
+    opts.warmup_steps = args.parse_or("warmup", opts.warmup_steps)?;
+
+    let rows = experiments::fabric_sweep(&opts);
+    let md = experiments::fabric_sweep_markdown(&opts, &rows);
+    print!("{md}");
+    if let Some(path) = args.get("md") {
+        std::fs::write(path, &md)?;
+        println!("\nmarkdown written to {path}");
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, experiments::fabric_sweep_json(&rows).to_string())?;
+        println!("\nresults written to {path}");
     }
     Ok(())
 }

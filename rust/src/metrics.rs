@@ -119,6 +119,16 @@ impl RunMetrics {
             .fold(f32::NAN, |a, b| if b > a || a.is_nan() { b } else { a })
     }
 
+    /// Mean wire bytes per worker per step (feeds the fabric
+    /// simulation of the run's communication pattern).
+    pub fn avg_wire_bytes_per_worker_step(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|r| r.wire_bytes).sum::<u64>() as f64
+            / (self.steps.len() as f64 * self.workers as f64)
+    }
+
     /// Modeled per-step communication times (allreduce baseline vs this
     /// run's measured allgatherv bits) under a link model.
     pub fn modeled_comm(&self, model: &CostModel) -> (f64, f64) {
@@ -189,6 +199,15 @@ mod tests {
         assert!((m.avg_elements_per_worker_step() - 10.0).abs() < 1e-9);
         assert!((m.compression_ratio() - 100.0).abs() < 1e-9);
         assert!((m.bits_ratio() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn avg_wire_bytes_averages_over_workers_and_steps() {
+        let mut m = RunMetrics::new(1000, 2);
+        m.record_step(rec(0, 20, 640)); // 80 wire bytes total
+        m.record_step(rec(1, 20, 1280)); // 160 wire bytes total
+        assert!((m.avg_wire_bytes_per_worker_step() - 60.0).abs() < 1e-9);
+        assert_eq!(RunMetrics::new(10, 2).avg_wire_bytes_per_worker_step(), 0.0);
     }
 
     #[test]

@@ -10,6 +10,10 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+// The offline build resolves `xla::` to the in-crate stand-in; to link
+// the real PJRT bindings instead, point this alias back at the crate.
+use super::xla;
+
 /// Process-wide PJRT CPU client. Compiling an executable is expensive
 /// (seconds for the grad graphs), so executables are cached by the
 /// higher layers; the client itself is cheap to share.

@@ -5,6 +5,7 @@
 pub mod client;
 pub mod manifest;
 pub mod model;
+pub mod xla;
 
 pub use client::{literal_f32, literal_i32, to_vec_f32, Client, Executable};
 pub use manifest::{Dtype, EvalKind, Group, Manifest, ModelEntry};

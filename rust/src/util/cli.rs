@@ -107,6 +107,22 @@ impl Args {
             })
             .unwrap_or_default()
     }
+
+    /// Comma-separated *typed* list flag (e.g. `--bandwidth-gbps 1,10`
+    /// or `--workers 4,8,16`). Absent flag → empty vec; any unparsable
+    /// element is a hard error.
+    pub fn parse_list<T: std::str::FromStr>(&self, flag: &str) -> anyhow::Result<Vec<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.list(flag)
+            .iter()
+            .map(|v| {
+                v.parse::<T>()
+                    .map_err(|e| anyhow::anyhow!("bad value '{v}' for --{flag}: {e}"))
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -161,5 +177,14 @@ mod tests {
         let a = Args::parse(&raw(&["--alphas", "1, 1.5,2.0"]), &[]).unwrap();
         assert_eq!(a.list("alphas"), vec!["1", "1.5", "2.0"]);
         assert!(a.list("nope").is_empty());
+    }
+
+    #[test]
+    fn typed_list_flag() {
+        let a = Args::parse(&raw(&["--workers", "4, 8,16", "--bw", "1,2.5"]), &[]).unwrap();
+        assert_eq!(a.parse_list::<usize>("workers").unwrap(), vec![4, 8, 16]);
+        assert_eq!(a.parse_list::<f64>("bw").unwrap(), vec![1.0, 2.5]);
+        assert!(a.parse_list::<usize>("nope").unwrap().is_empty());
+        assert!(a.parse_list::<usize>("bw").is_err());
     }
 }

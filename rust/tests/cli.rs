@@ -19,6 +19,51 @@ fn help_prints_usage() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("USAGE"));
     assert!(text.contains("table1"));
+    assert!(text.contains("fabric-sweep"));
+}
+
+#[test]
+fn fabric_sweep_runs_end_to_end() {
+    let json_path = std::env::temp_dir().join("vgc_fabric_sweep.json");
+    let out = repro()
+        .args([
+            "fabric-sweep",
+            "--topologies", "ring,star",
+            "--workers", "4",
+            "--bandwidth-gbps", "1,10",
+            "--codecs", "none+vgc:alpha=2",
+            "--n", "4096",
+            "--out", json_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("| topology |"), "{text}");
+    assert!(text.contains("speedup"), "{text}");
+    assert!(text.contains("| ring |"), "{text}");
+    assert!(text.contains("| star |"), "{text}");
+    // 2 topologies × 2 bandwidths × 2 codecs × 1 worker count.
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    let rows = vgc::util::json::Json::parse(&json).unwrap();
+    assert_eq!(rows.as_arr().unwrap().len(), 8);
+    assert!(json.contains("sim_ms"));
+    assert!(json.contains("max_link_bytes"));
+}
+
+#[test]
+fn fabric_sweep_rejects_bad_topology() {
+    let out = repro()
+        .args(["fabric-sweep", "--topologies", "torus"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("topology"), "{err}");
 }
 
 #[test]

@@ -1,0 +1,251 @@
+//! Fabric integration properties (no XLA dependency — run everywhere):
+//!
+//! * simulated ring-allgatherv traffic equals the analytic cost
+//!   model's byte counts for random worker counts / message sizes;
+//! * every topology delivers complete, uncorrupted gathers and exact
+//!   sums;
+//! * two same-seed runs produce identical event traces (determinism
+//!   under jitter + stragglers);
+//! * stragglers strictly slow completion;
+//! * the simulated ring respects the paper's analytic `T_v` bound for
+//!   uniform messages.
+
+use vgc::comm::allgatherv::ring_allgatherv;
+use vgc::comm::costmodel::{ring_gatherv_bytes_per_node, CostModel, LinkModel};
+use vgc::fabric::{
+    build_topology, Fabric, FabricConfig, LinkSpec, Straggler, TopologyKind, TraceEvent,
+};
+use vgc::testkit;
+use vgc::util::rng::Pcg32;
+
+fn all_kinds() -> Vec<TopologyKind> {
+    vec![
+        TopologyKind::Ring,
+        TopologyKind::Full,
+        TopologyKind::Star,
+        TopologyKind::Tree { branch: 3 },
+        TopologyKind::Tree { branch: 1 },
+    ]
+}
+
+fn rand_messages(rng: &mut Pcg32, p: usize, max_len: usize) -> Vec<Vec<u8>> {
+    (0..p)
+        .map(|_| {
+            let len = testkit::usize_in(rng, 0, max_len);
+            (0..len).map(|_| rng.next_u32() as u8).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn ring_traffic_equals_analytic_byte_counts() {
+    testkit::for_all(
+        "ring gatherv bytes == analytic",
+        |rng: &mut Pcg32| {
+            let p = testkit::usize_in(rng, 1, 12);
+            rand_messages(rng, p, 300)
+        },
+        |inputs| {
+            let sizes: Vec<u64> = inputs.iter().map(|m| m.len() as u64).collect();
+            let want = ring_gatherv_bytes_per_node(&sizes);
+            // Through the fabric directly…
+            let topo = build_topology(TopologyKind::Ring, inputs.len());
+            let mut fabric =
+                Fabric::for_config(&FabricConfig::default(), topo.node_count());
+            let sim = topo.allgatherv(&mut fabric, inputs);
+            if sim.traffic.bytes_sent_per_node != want {
+                return Err(format!(
+                    "fabric {:?} != analytic {:?}",
+                    sim.traffic.bytes_sent_per_node, want
+                ));
+            }
+            // …and through the comm front (must agree with both).
+            let front = ring_allgatherv(inputs);
+            if front.traffic.bytes_sent_per_node != want {
+                return Err("comm front diverged from analytic counts".into());
+            }
+            if front.traffic.rounds != inputs.len() as u32 - 1 {
+                return Err(format!("rounds {}", front.traffic.rounds));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn every_topology_gathers_completely() {
+    testkit::for_all(
+        "topology gather completeness",
+        |rng: &mut Pcg32| {
+            let p = testkit::usize_in(rng, 1, 9);
+            rand_messages(rng, p, 64)
+        },
+        |inputs| {
+            let p = inputs.len();
+            for kind in all_kinds() {
+                let topo = build_topology(kind, p);
+                let mut fabric =
+                    Fabric::for_config(&FabricConfig::default(), topo.node_count());
+                let sim = topo.allgatherv(&mut fabric, inputs);
+                for dst in 0..p {
+                    for src in 0..p {
+                        if sim.gathered[dst][src] != inputs[src] {
+                            return Err(format!(
+                                "{}: corrupt at dst={dst} src={src}",
+                                kind.label()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn every_topology_allreduces_to_the_sum() {
+    testkit::for_all(
+        "topology allreduce == sum",
+        |rng: &mut Pcg32| {
+            let p = testkit::usize_in(rng, 1, 8);
+            let n = testkit::usize_in(rng, 1, 97);
+            (0..p)
+                .map(|_| testkit::gradient_vec(rng, n))
+                .collect::<Vec<_>>()
+        },
+        |inputs| {
+            let p = inputs.len();
+            let n = inputs[0].len();
+            for kind in all_kinds() {
+                let topo = build_topology(kind, p);
+                let mut fabric =
+                    Fabric::for_config(&FabricConfig::default(), topo.node_count());
+                let sim = topo.allreduce(&mut fabric, inputs);
+                for i in 0..n {
+                    let want: f64 = inputs.iter().map(|v| v[i] as f64).sum();
+                    for node in 0..p {
+                        let got = sim.reduced[node][i] as f64;
+                        if (got - want).abs() > 1e-4 * (1.0 + want.abs()) {
+                            return Err(format!(
+                                "{}: node {node} i={i}: {got} != {want}",
+                                kind.label()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn noisy_config(seed: u64) -> FabricConfig {
+    FabricConfig {
+        topology: TopologyKind::Ring,
+        link: LinkSpec {
+            bandwidth_gbps: 1.0,
+            latency_us: 20.0,
+            jitter_us: 15.0,
+        },
+        seed,
+        stragglers: vec![
+            Straggler {
+                node: 1,
+                slowdown: 2.5,
+            },
+            Straggler {
+                node: 4,
+                slowdown: 1.5,
+            },
+        ],
+    }
+}
+
+fn run_once(cfg: &FabricConfig, p: usize) -> (Vec<TraceEvent>, u64) {
+    let inputs: Vec<Vec<u8>> = (0..p).map(|w| vec![w as u8; 500 + w * 97]).collect();
+    let topo = build_topology(cfg.topology, p);
+    let mut fabric = Fabric::for_config(cfg, topo.node_count());
+    let sim = topo.allgatherv(&mut fabric, &inputs);
+    (fabric.trace().to_vec(), sim.time_ps)
+}
+
+#[test]
+fn same_seed_runs_replay_identical_traces() {
+    let cfg = noisy_config(42);
+    let (trace_a, time_a) = run_once(&cfg, 6);
+    let (trace_b, time_b) = run_once(&cfg, 6);
+    assert!(!trace_a.is_empty());
+    assert_eq!(trace_a, trace_b, "same-seed traces diverged");
+    assert_eq!(time_a, time_b);
+}
+
+#[test]
+fn different_jitter_seeds_diverge() {
+    let (trace_a, _) = run_once(&noisy_config(42), 6);
+    let (trace_b, _) = run_once(&noisy_config(43), 6);
+    assert_ne!(trace_a, trace_b, "jitter ignored the seed");
+}
+
+#[test]
+fn stragglers_strictly_slow_every_topology() {
+    let p = 6;
+    let inputs: Vec<Vec<u8>> = (0..p).map(|_| vec![7u8; 10_000]).collect();
+    for kind in all_kinds() {
+        let base = FabricConfig {
+            topology: kind,
+            link: LinkSpec {
+                bandwidth_gbps: 1.0,
+                latency_us: 10.0,
+                jitter_us: 0.0,
+            },
+            seed: 0,
+            stragglers: Vec::new(),
+        };
+        let topo = build_topology(kind, p);
+        let mut healthy = Fabric::for_config(&base, topo.node_count());
+        let t0 = topo.allgatherv(&mut healthy, &inputs).time_ps;
+        let slowed_cfg = FabricConfig {
+            stragglers: vec![Straggler {
+                node: 2,
+                slowdown: 8.0,
+            }],
+            ..base
+        };
+        let mut slowed = Fabric::for_config(&slowed_cfg, topo.node_count());
+        let t1 = topo.allgatherv(&mut slowed, &inputs).time_ps;
+        assert!(
+            t1 > t0,
+            "{}: straggler did not slow the collective ({t0} vs {t1})",
+            kind.label()
+        );
+    }
+}
+
+#[test]
+fn simulated_ring_within_analytic_bound_for_uniform_messages() {
+    for p in [2usize, 3, 4, 8, 16] {
+        for bytes in [1_000u64, 50_000, 1_000_000] {
+            let model = CostModel::new(p, 1_000_000, LinkModel::gige());
+            let check = model.crosscheck_ring_gatherv(&vec![bytes; p]);
+            assert!(
+                check.within_bound(),
+                "p={p} bytes={bytes}: sim {} s > bound {} s",
+                check.simulated_s,
+                check.analytic_s
+            );
+        }
+    }
+}
+
+#[test]
+fn comm_front_and_fabric_ring_agree_bit_for_bit() {
+    let mut rng = Pcg32::new(7, 1);
+    let inputs = rand_messages(&mut rng, 5, 200);
+    let front = ring_allgatherv(&inputs);
+    let topo = build_topology(TopologyKind::Ring, 5);
+    let mut fabric = Fabric::for_config(&FabricConfig::default(), topo.node_count());
+    let sim = topo.allgatherv(&mut fabric, &inputs);
+    assert_eq!(front.gathered, sim.gathered);
+    assert_eq!(front.traffic, sim.traffic);
+}
