@@ -5,10 +5,11 @@
 //! next to CalcGrad — the numbers here feed EXPERIMENTS.md §Perf.
 
 use vgc::bench::Bencher;
-use vgc::compress::CodecSpec;
+use vgc::compress::{Codec, CodecEngine, CodecSpec};
 use vgc::model::Layout;
 use vgc::testkit;
 use vgc::util::rng::Pcg32;
+use vgc::util::threadpool::ThreadPool;
 
 fn main() {
     let n = 1_000_000usize;
@@ -49,6 +50,56 @@ fn main() {
             || {
                 codec.decode_into(&msg0.bytes, &mut out).unwrap();
                 std::hint::black_box(out[0]);
+            },
+        );
+    }
+
+    // Engine: 8 simulated workers end-to-end (encode all + decode all),
+    // serial path vs the parallel sharded engine — the §Perf headline.
+    let p = 8usize;
+    let mut rng = Pcg32::new(43, 2);
+    let inputs: Vec<(Vec<f32>, Vec<f32>)> = (0..p)
+        .map(|_| {
+            let g = testkit::gradient_vec(&mut rng, n);
+            let q: Vec<f32> = g.iter().map(|x| x * x * 1.5).collect();
+            (g, q)
+        })
+        .collect();
+    let gs: Vec<&[f32]> = inputs.iter().map(|(g, _)| g.as_slice()).collect();
+    let qs: Vec<&[f32]> = inputs.iter().map(|(_, q)| q.as_slice()).collect();
+    let spec = CodecSpec::Vgc { alpha: 1.5, zeta: 0.999 };
+    println!("# engine: vgc, {p} workers, serial vs parallel");
+    for threads in [1usize, ThreadPool::available()] {
+        let mut codecs: Vec<Box<dyn Codec>> =
+            (0..p).map(|w| spec.build(&layout, w as u64)).collect();
+        let mut engine = CodecEngine::new(threads);
+        let mut update = vec![0.0f32; n];
+        // Warm state/buffers and capture messages for the decode bench.
+        let msgs: Vec<Vec<u8>> = {
+            let mut refs: Vec<&mut dyn Codec> =
+                codecs.iter_mut().map(|c| &mut **c).collect();
+            engine.encode_all(&mut refs, &gs, &qs);
+            engine.messages().to_vec()
+        };
+        {
+            let mut refs: Vec<&mut dyn Codec> =
+                codecs.iter_mut().map(|c| &mut **c).collect();
+            b.report_throughput(
+                &format!("engine-encode/vgc/p{p}/t{threads}"),
+                (p * n) as f64,
+                "elem",
+                || {
+                    engine.encode_all(&mut refs, &gs, &qs);
+                },
+            );
+        }
+        b.report_throughput(
+            &format!("engine-decode/vgc/p{p}/t{threads}"),
+            (p * n) as f64,
+            "elem",
+            || {
+                engine.decode_all(&*codecs[0], &msgs, &mut update).unwrap();
+                std::hint::black_box(update[0]);
             },
         );
     }

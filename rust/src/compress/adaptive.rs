@@ -12,7 +12,16 @@
 //! Wire format: u32 count, then count × (u32 index, f32 value).
 
 use super::encode::{ByteReader, ByteWriter};
-use super::{Aggregation, Codec, Message};
+use super::engine::{DecodeBuf, EncodeStats};
+use super::{Aggregation, Codec};
+use crate::util::threadpool::{split_ranges, Task, ThreadPool};
+
+/// Per-shard reusable encode scratch (pooled encode).
+#[derive(Default)]
+struct ShardScratch {
+    bytes: Vec<u8>,
+    count: u32,
+}
 
 pub struct AdaptiveCodec {
     /// Fraction of elements to send per step (e.g. 0.01).
@@ -20,6 +29,7 @@ pub struct AdaptiveCodec {
     r: Vec<f32>,
     /// Scratch |r| for threshold selection (reused).
     mags: Vec<f32>,
+    shards: Vec<ShardScratch>,
 }
 
 impl AdaptiveCodec {
@@ -29,6 +39,7 @@ impl AdaptiveCodec {
             pi,
             r: vec![0.0; n],
             mags: Vec::with_capacity(n),
+            shards: Vec::new(),
         }
     }
 
@@ -60,30 +71,99 @@ impl Codec for AdaptiveCodec {
         Aggregation::Sum
     }
 
-    fn encode_step(&mut self, gsum: &[f32], _gsumsq: &[f32]) -> Message {
+    fn encode_step_into(
+        &mut self,
+        gsum: &[f32],
+        _gsumsq: &[f32],
+        bytes: &mut Vec<u8>,
+    ) -> EncodeStats {
         let n = self.r.len();
         assert_eq!(gsum.len(), n);
         for i in 0..n {
             self.r[i] += gsum[i];
         }
         let thr = self.threshold();
-        let mut w = ByteWriter::new();
+        let mut w = ByteWriter::over(bytes);
         w.u32(0);
-        let mut count = 0u32;
+        let count = if thr > 0.0 {
+            emit_range(&mut self.r, thr, 0, &mut w)
+        } else {
+            0
+        };
+        w.patch_u32(0, count);
+        EncodeStats {
+            elements: count as u64,
+            payload_bits: count as u64 * 64,
+        }
+    }
+
+    fn encode_step_pooled(
+        &mut self,
+        gsum: &[f32],
+        _gsumsq: &[f32],
+        pool: &ThreadPool,
+        bytes: &mut Vec<u8>,
+    ) -> EncodeStats {
+        if pool.threads() == 1 {
+            return self.encode_step_into(gsum, _gsumsq, bytes);
+        }
+        let n = self.r.len();
+        assert_eq!(gsum.len(), n);
+        let ranges = split_ranges(n, pool.threads());
+        // Phase 1: accumulate residuals, parallel over disjoint ranges.
+        {
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(ranges.len());
+            let mut r_rest: &mut [f32] = &mut self.r;
+            for range in &ranges {
+                let (r_s, r_next) = r_rest.split_at_mut(range.end - range.start);
+                r_rest = r_next;
+                let gs = &gsum[range.start..range.end];
+                tasks.push(Box::new(move || {
+                    for (x, g) in r_s.iter_mut().zip(gs) {
+                        *x += g;
+                    }
+                }));
+            }
+            pool.run(tasks);
+        }
+        // Phase 2: the adaptive threshold needs a global order statistic
+        // over |r| — stays serial (O(N) select_nth).
+        let thr = self.threshold();
+        // Phase 3: emit (index, value) pairs, parallel over ranges.
+        while self.shards.len() < ranges.len() {
+            self.shards.push(ShardScratch::default());
+        }
         if thr > 0.0 {
-            for i in 0..n {
-                if self.r[i].abs() >= thr {
-                    w.u32(i as u32);
-                    w.f32(self.r[i]);
-                    self.r[i] = 0.0; // exact value sent: no residual left
-                    count += 1;
-                }
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(ranges.len());
+            let mut r_rest: &mut [f32] = &mut self.r;
+            let mut shard_iter = self.shards.iter_mut();
+            for range in &ranges {
+                let (r_s, r_next) = r_rest.split_at_mut(range.end - range.start);
+                r_rest = r_next;
+                let scratch = shard_iter.next().expect("scratch sized above");
+                let base = range.start;
+                tasks.push(Box::new(move || {
+                    scratch.bytes.clear();
+                    let mut w = ByteWriter::append(&mut scratch.bytes);
+                    scratch.count = emit_range(r_s, thr, base, &mut w);
+                }));
+            }
+            pool.run(tasks);
+        } else {
+            for scratch in self.shards[..ranges.len()].iter_mut() {
+                scratch.bytes.clear();
+                scratch.count = 0;
             }
         }
-        let mut bytes = w.finish();
-        bytes[0..4].copy_from_slice(&count.to_le_bytes());
-        Message {
-            bytes,
+        let mut w = ByteWriter::over(bytes);
+        w.u32(0);
+        let mut count = 0u32;
+        for scratch in self.shards[..ranges.len()].iter() {
+            w.bytes(&scratch.bytes);
+            count += scratch.count;
+        }
+        w.patch_u32(0, count);
+        EncodeStats {
             elements: count as u64,
             payload_bits: count as u64 * 64,
         }
@@ -102,9 +182,39 @@ impl Codec for AdaptiveCodec {
         Ok(())
     }
 
+    fn decode_entries(&self, bytes: &[u8], buf: &mut DecodeBuf) -> anyhow::Result<()> {
+        let n = buf.expected_len();
+        let mut r = ByteReader::new(bytes);
+        let count = r.u32()?;
+        for _ in 0..count {
+            let index = r.u32()?;
+            let value = r.f32()?;
+            anyhow::ensure!((index as usize) < n, "index {index} out of range");
+            buf.push(index, value);
+        }
+        anyhow::ensure!(r.done(), "trailing bytes");
+        Ok(())
+    }
+
     fn residual_l1(&self) -> f64 {
         self.r.iter().map(|x| x.abs() as f64).sum()
     }
+}
+
+/// Emit the (index, exact f32 value) pairs of every element at or above
+/// the threshold, resetting their residuals (global element `i` = local
+/// `i` + `base`). Shared by the serial and pooled paths.
+fn emit_range(r: &mut [f32], thr: f32, base: usize, w: &mut ByteWriter) -> u32 {
+    let mut count = 0u32;
+    for (i, x) in r.iter_mut().enumerate() {
+        if x.abs() >= thr {
+            w.u32((i + base) as u32);
+            w.f32(*x);
+            *x = 0.0; // exact value sent: no residual left
+            count += 1;
+        }
+    }
+    count
 }
 
 #[cfg(test)]

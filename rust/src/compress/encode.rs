@@ -41,21 +41,28 @@ pub fn unpack_sign_index(w: u32) -> (bool, u32) {
     ((w >> 31) != 0, w & MAX_INDEX)
 }
 
-/// Little-endian message writer.
-#[derive(Default)]
-pub struct ByteWriter {
-    buf: Vec<u8>,
+/// Little-endian message writer over a caller-owned buffer.
+///
+/// The writer *borrows* its output `Vec<u8>` so codecs can reuse one
+/// buffer across steps — in the steady state (capacity converged) a
+/// whole encode performs zero heap allocations (§Perf L3). Start a
+/// fresh message with [`ByteWriter::over`] (clears, keeps capacity) or
+/// continue an existing stream with [`ByteWriter::append`] (per-shard
+/// bodies concatenated by the engine).
+pub struct ByteWriter<'a> {
+    buf: &'a mut Vec<u8>,
 }
 
-impl ByteWriter {
-    pub fn new() -> Self {
-        Self::default()
+impl<'a> ByteWriter<'a> {
+    /// Begin a new message in `buf`: cleared, capacity reused.
+    pub fn over(buf: &'a mut Vec<u8>) -> ByteWriter<'a> {
+        buf.clear();
+        ByteWriter { buf }
     }
 
-    pub fn with_capacity(cap: usize) -> Self {
-        ByteWriter {
-            buf: Vec::with_capacity(cap),
-        }
+    /// Continue writing at the end of `buf` without clearing.
+    pub fn append(buf: &'a mut Vec<u8>) -> ByteWriter<'a> {
+        ByteWriter { buf }
     }
 
     #[inline]
@@ -94,10 +101,6 @@ impl ByteWriter {
     /// Drop everything from `pos` on (rewinds an abandoned group header).
     pub fn truncate(&mut self, pos: usize) {
         self.buf.truncate(pos);
-    }
-
-    pub fn finish(self) -> Vec<u8> {
-        self.buf
     }
 }
 
@@ -155,17 +158,24 @@ impl<'a> ByteReader<'a> {
     }
 }
 
-/// Bit-level packer for dense sub-32-bit codes (QSGD, TernGrad).
-#[derive(Default)]
-pub struct BitWriter {
-    out: Vec<u8>,
+/// Bit-level packer for dense sub-32-bit codes (QSGD, TernGrad, the
+/// gamma index coder). Borrows its output buffer like [`ByteWriter`]
+/// so hot paths can reuse one scratch `Vec<u8>` across steps.
+pub struct BitWriter<'a> {
+    out: &'a mut Vec<u8>,
     cur: u64,
     nbits: u32,
 }
 
-impl BitWriter {
-    pub fn new() -> Self {
-        Self::default()
+impl<'a> BitWriter<'a> {
+    /// Begin a new bitstream in `out`: cleared, capacity reused.
+    pub fn over(out: &'a mut Vec<u8>) -> BitWriter<'a> {
+        out.clear();
+        BitWriter {
+            out,
+            cur: 0,
+            nbits: 0,
+        }
     }
 
     /// Append the low `width` bits of `v` (LSB-first stream).
@@ -181,11 +191,11 @@ impl BitWriter {
         }
     }
 
-    pub fn finish(mut self) -> Vec<u8> {
+    /// Flush the trailing partial byte into the buffer.
+    pub fn flush(self) {
         if self.nbits > 0 {
             self.out.push((self.cur & 0xFF) as u8);
         }
-        self.out
     }
 }
 
@@ -272,17 +282,41 @@ mod tests {
 
     #[test]
     fn byte_stream_roundtrip() {
-        let mut w = ByteWriter::new();
+        let mut bytes = Vec::new();
+        let mut w = ByteWriter::over(&mut bytes);
         w.u32(0xDEADBEEF);
         w.f32(-1.5);
         w.i32(-42);
-        let bytes = w.finish();
         assert_eq!(bytes.len(), 12);
         let mut r = ByteReader::new(&bytes);
         assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
         assert_eq!(r.f32().unwrap(), -1.5);
         assert_eq!(r.i32().unwrap(), -42);
         assert!(r.done());
+    }
+
+    #[test]
+    fn byte_writer_reuses_capacity_across_messages() {
+        let mut bytes = Vec::new();
+        {
+            let mut w = ByteWriter::over(&mut bytes);
+            for i in 0..100u32 {
+                w.u32(i);
+            }
+        }
+        let cap = bytes.capacity();
+        {
+            let mut w = ByteWriter::over(&mut bytes);
+            w.u32(7);
+            w.patch_u32(0, 9);
+        }
+        assert_eq!(bytes.capacity(), cap, "over() must keep capacity");
+        assert_eq!(bytes, 9u32.to_le_bytes());
+        {
+            let mut w = ByteWriter::append(&mut bytes);
+            w.u32(1);
+        }
+        assert_eq!(bytes.len(), 8, "append() must not clear");
     }
 
     #[test]
@@ -293,13 +327,14 @@ mod tests {
 
     #[test]
     fn bit_packing_roundtrip() {
-        let mut w = BitWriter::new();
+        let mut bytes = Vec::new();
+        let mut w = BitWriter::over(&mut bytes);
         let vals: Vec<(u32, u32)> =
             vec![(0b1, 1), (0b10, 2), (0b101, 3), (0xFF, 8), (0x3FFFF, 18), (0, 5)];
         for &(v, width) in &vals {
             w.push(v, width);
         }
-        let bytes = w.finish();
+        w.flush();
         let mut r = BitReader::new(&bytes);
         for &(v, width) in &vals {
             assert_eq!(r.pull(width).unwrap(), v);
@@ -320,11 +355,12 @@ mod tests {
                     .collect::<Vec<(u32, u32)>>()
             },
             |vals| {
-                let mut w = BitWriter::new();
+                let mut bytes = Vec::new();
+                let mut w = BitWriter::over(&mut bytes);
                 for &(v, width) in vals {
                     w.push(v, width);
                 }
-                let bytes = w.finish();
+                w.flush();
                 let mut r = BitReader::new(&bytes);
                 for &(v, width) in vals {
                     if r.pull(width).map_err(|e| e.to_string())? != v {

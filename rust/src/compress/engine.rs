@@ -1,0 +1,393 @@
+//! Parallel sharded codec engine — the L3 wire path's execution layer
+//! (§Perf).
+//!
+//! The paper's Sec. 5 cost model only wins when L3 encode/decode stays
+//! negligible next to CalcGrad; Agarwal et al. show codec overhead
+//! routinely erases the communication savings in practice. This module
+//! therefore runs the codecs *in parallel* while guaranteeing the wire
+//! bytes and decoded updates stay **bit-identical** to the serial path
+//! (the trainer's `verify_sync` invariant must keep holding at any
+//! thread count):
+//!
+//! * **Encode** fans out across workers (each worker's codec is an
+//!   independent state machine) and, when there are more threads than
+//!   workers, across *group-aligned shards* inside one codec via
+//!   [`Codec::encode_step_pooled`] — shard byte streams concatenate in
+//!   group order, reproducing the serial message exactly.
+//! * **Decode** runs in two phases. Phase 1 parses each gathered
+//!   message once into a reusable [`DecodeBuf`] of `(index, value)`
+//!   contribution entries (parallel across messages). Phase 2 reduces
+//!   the buffers into the output vector in parallel across *disjoint
+//!   index ranges*; within each range contributions apply in message
+//!   order, so every output element sees the exact f32 addition
+//!   sequence of the serial `decode_into` loop — bit-identical, with
+//!   no cross-thread reduction tree to perturb rounding.
+//!
+//! All buffers (message bytes, entry buffers, codec scratch) are
+//! engine- or codec-owned and reused, so once capacities converge a
+//! steady-state step performs zero heap allocations in the codec
+//! kernels; the scoped thread fan-out itself costs O(threads) small
+//! allocations per phase (see `util::threadpool`).
+
+use crate::util::threadpool::{Task, ThreadPool};
+
+use super::Codec;
+
+/// Per-message accounting produced by the encode kernels (the byte
+/// stream itself lands in a caller-provided buffer).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EncodeStats {
+    /// Gradient elements represented (compression-ratio denominator).
+    pub elements: u64,
+    /// Exact payload bits, excluding container headers.
+    pub payload_bits: u64,
+}
+
+/// Reusable decoded-message buffer: the `(index, value)` contribution
+/// entries of one wire message, in message order.
+///
+/// Sparse codecs push only their sent elements; dense codecs push every
+/// element. [`DecodeBuf::apply_range`] replays a sub-range of the
+/// contributions onto an output slice, preserving the serial
+/// accumulation order per index.
+pub struct DecodeBuf {
+    expected: usize,
+    idx: Vec<u32>,
+    val: Vec<f32>,
+    sorted: bool,
+    last: i64,
+    /// Dense decode scratch for the default (dense) `decode_entries`.
+    dense: Vec<f32>,
+    /// Scratch for codecs that stage decoded blocks (compact VGC).
+    pub idx_scratch: Vec<u32>,
+    pub code_scratch: Vec<(bool, u8)>,
+}
+
+impl Default for DecodeBuf {
+    fn default() -> Self {
+        DecodeBuf::new()
+    }
+}
+
+impl DecodeBuf {
+    pub fn new() -> DecodeBuf {
+        DecodeBuf {
+            expected: 0,
+            idx: Vec::new(),
+            val: Vec::new(),
+            sorted: true,
+            last: -1,
+            dense: Vec::new(),
+            idx_scratch: Vec::new(),
+            code_scratch: Vec::new(),
+        }
+    }
+
+    /// Clear entries (capacity kept) and record the decode target length
+    /// `n`; every pushed index must be `< n`.
+    pub fn reset(&mut self, expected_len: usize) {
+        self.expected = expected_len;
+        self.idx.clear();
+        self.val.clear();
+        self.sorted = true;
+        self.last = -1;
+    }
+
+    /// The output-vector length this buffer decodes against.
+    pub fn expected_len(&self) -> usize {
+        self.expected
+    }
+
+    /// Append one contribution. Monotonicity is tracked so the apply
+    /// pass can binary-search sorted streams (every in-tree encoder
+    /// emits ascending indices) while staying correct for arbitrary
+    /// well-formed messages.
+    #[inline]
+    pub fn push(&mut self, index: u32, value: f32) {
+        if (index as i64) < self.last {
+            self.sorted = false;
+        }
+        self.last = index as i64;
+        self.idx.push(index);
+        self.val.push(value);
+    }
+
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    pub fn is_sorted(&self) -> bool {
+        self.sorted
+    }
+
+    /// Move the dense scratch out (and back) around a `decode_into`
+    /// call — lets the default dense `decode_entries` borrow both the
+    /// scratch and the entry vectors without aliasing.
+    pub fn take_dense(&mut self) -> Vec<f32> {
+        std::mem::take(&mut self.dense)
+    }
+
+    pub fn return_dense(&mut self, dense: Vec<f32>) {
+        self.dense = dense;
+    }
+
+    /// Replay the contributions whose index falls in `[lo, hi)` onto
+    /// `out` (which covers exactly that index range), in entry order.
+    pub fn apply_range(&self, lo: u32, hi: u32, out: &mut [f32]) {
+        debug_assert_eq!((hi - lo) as usize, out.len());
+        if self.sorted {
+            let start = self.idx.partition_point(|&i| i < lo);
+            let end = self.idx.partition_point(|&i| i < hi);
+            for k in start..end {
+                out[(self.idx[k] - lo) as usize] += self.val[k];
+            }
+        } else {
+            for k in 0..self.idx.len() {
+                let i = self.idx[k];
+                if i >= lo && i < hi {
+                    out[(i - lo) as usize] += self.val[k];
+                }
+            }
+        }
+    }
+}
+
+/// The engine: a thread pool plus reusable per-worker buffers.
+pub struct CodecEngine {
+    pool: ThreadPool,
+    msg_bufs: Vec<Vec<u8>>,
+    stats: Vec<EncodeStats>,
+    dec_bufs: Vec<DecodeBuf>,
+    n_msgs: usize,
+}
+
+impl CodecEngine {
+    /// `threads == 1` reproduces the serial path exactly (no spawns).
+    pub fn new(threads: usize) -> CodecEngine {
+        CodecEngine {
+            pool: ThreadPool::new(threads),
+            msg_bufs: Vec::new(),
+            stats: Vec::new(),
+            dec_bufs: Vec::new(),
+            n_msgs: 0,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Encode every worker's step message into the engine's reusable
+    /// buffers. `codecs[w]` ingests `gsums[w]`/`gsumsqs[w]`; results are
+    /// exposed via [`CodecEngine::messages`] / [`CodecEngine::stats`].
+    ///
+    /// Strategy: workers fan out across threads when there are at least
+    /// as many workers as threads; otherwise each worker encodes with
+    /// its codec's shard-parallel kernel. Both produce bytes identical
+    /// to the serial `encode_step_into`.
+    pub fn encode_all(
+        &mut self,
+        codecs: &mut [&mut dyn Codec],
+        gsums: &[&[f32]],
+        gsumsqs: &[&[f32]],
+    ) {
+        let p = codecs.len();
+        assert_eq!(gsums.len(), p, "one gsum slice per worker");
+        assert_eq!(gsumsqs.len(), p, "one gsumsq slice per worker");
+        while self.msg_bufs.len() < p {
+            self.msg_bufs.push(Vec::new());
+        }
+        while self.stats.len() < p {
+            self.stats.push(EncodeStats::default());
+        }
+        self.n_msgs = p;
+        let t = self.pool.threads();
+        if t == 1 {
+            for w in 0..p {
+                self.stats[w] =
+                    codecs[w].encode_step_into(gsums[w], gsumsqs[w], &mut self.msg_bufs[w]);
+            }
+        } else if p >= t {
+            let ck = p.div_ceil(t);
+            let bufs = &mut self.msg_bufs[..p];
+            let stats = &mut self.stats[..p];
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(t);
+            let iter = codecs
+                .chunks_mut(ck)
+                .zip(bufs.chunks_mut(ck))
+                .zip(stats.chunks_mut(ck))
+                .zip(gsums.chunks(ck))
+                .zip(gsumsqs.chunks(ck));
+            for ((((cs, bs), sts), gs), qs) in iter {
+                tasks.push(Box::new(move || {
+                    for i in 0..cs.len() {
+                        sts[i] = cs[i].encode_step_into(gs[i], qs[i], &mut bs[i]);
+                    }
+                }));
+            }
+            self.pool.run(tasks);
+        } else {
+            for w in 0..p {
+                self.stats[w] = codecs[w].encode_step_pooled(
+                    gsums[w],
+                    gsumsqs[w],
+                    &self.pool,
+                    &mut self.msg_bufs[w],
+                );
+            }
+        }
+    }
+
+    /// The messages produced by the last [`CodecEngine::encode_all`].
+    pub fn messages(&self) -> &[Vec<u8>] {
+        &self.msg_bufs[..self.n_msgs]
+    }
+
+    /// Per-worker accounting for the last [`CodecEngine::encode_all`].
+    pub fn stats(&self) -> &[EncodeStats] {
+        &self.stats[..self.n_msgs]
+    }
+
+    /// Decode the gathered messages and *overwrite* `out` with their
+    /// accumulated update — bit-identical to zeroing `out` and running
+    /// the serial `decode_into` loop over `msgs` in order.
+    pub fn decode_all(
+        &mut self,
+        codec: &dyn Codec,
+        msgs: &[Vec<u8>],
+        out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let p = msgs.len();
+        let n = out.len();
+        let t = self.pool.threads();
+        if t == 1 {
+            for x in out.iter_mut() {
+                *x = 0.0;
+            }
+            for m in msgs {
+                codec.decode_into(m, out)?;
+            }
+            return Ok(());
+        }
+        while self.dec_bufs.len() < p {
+            self.dec_bufs.push(DecodeBuf::new());
+        }
+        // Phase 1: parse every message into its entry buffer, in
+        // parallel across messages.
+        let mut results: Vec<anyhow::Result<()>> = (0..p).map(|_| Ok(())).collect();
+        {
+            let ck = p.div_ceil(t).max(1);
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(t);
+            let iter = self.dec_bufs[..p]
+                .chunks_mut(ck)
+                .zip(msgs.chunks(ck))
+                .zip(results.chunks_mut(ck));
+            for ((bufs, ms), rs) in iter {
+                tasks.push(Box::new(move || {
+                    for i in 0..bufs.len() {
+                        bufs[i].reset(n);
+                        rs[i] = codec.decode_entries(&ms[i], &mut bufs[i]);
+                    }
+                }));
+            }
+            self.pool.run(tasks);
+        }
+        for r in results {
+            r?;
+        }
+        // Phase 2: reduce into disjoint output ranges; each range
+        // applies contributions in message order (serial f32 order).
+        {
+            let bufs = &self.dec_bufs[..p];
+            let ck = n.div_ceil(t).max(1);
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(t);
+            let mut lo = 0usize;
+            for chunk in out.chunks_mut(ck) {
+                let hi = lo + chunk.len();
+                let (lo32, hi32) = (lo as u32, hi as u32);
+                tasks.push(Box::new(move || {
+                    for x in chunk.iter_mut() {
+                        *x = 0.0;
+                    }
+                    for b in bufs {
+                        b.apply_range(lo32, hi32, chunk);
+                    }
+                }));
+                lo = hi;
+            }
+            self.pool.run(tasks);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_buf_tracks_sortedness() {
+        let mut b = DecodeBuf::new();
+        b.reset(10);
+        b.push(1, 1.0);
+        b.push(5, 2.0);
+        assert!(b.is_sorted());
+        assert_eq!(b.len(), 2);
+        b.push(3, 3.0);
+        assert!(!b.is_sorted());
+        b.reset(10);
+        assert!(b.is_sorted());
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn apply_range_matches_serial_accumulation_order() {
+        // Two messages touching overlapping indices: the chunked apply
+        // must reproduce the serial per-index addition sequence exactly.
+        let n = 8usize;
+        let mut b1 = DecodeBuf::new();
+        b1.reset(n);
+        let mut b2 = DecodeBuf::new();
+        b2.reset(n);
+        for i in 0..n as u32 {
+            b1.push(i, 0.1 + i as f32);
+        }
+        for i in (0..n as u32).step_by(2) {
+            b2.push(i, 1e-8);
+        }
+        // Serial reference.
+        let mut serial = vec![0.0f32; n];
+        for (b, _) in [(&b1, 0), (&b2, 1)] {
+            for k in 0..b.len() {
+                serial[b.idx[k] as usize] += b.val[k];
+            }
+        }
+        // Chunked apply over 3 uneven ranges.
+        let mut out = vec![0.0f32; n];
+        for (lo, hi) in [(0u32, 3u32), (3, 4), (4, 8)] {
+            let chunk = &mut out[lo as usize..hi as usize];
+            b1.apply_range(lo, hi, chunk);
+            b2.apply_range(lo, hi, chunk);
+        }
+        for i in 0..n {
+            assert_eq!(serial[i].to_bits(), out[i].to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn unsorted_buffer_still_applies_correctly() {
+        let mut b = DecodeBuf::new();
+        b.reset(4);
+        b.push(3, 1.0);
+        b.push(0, 2.0);
+        b.push(3, 4.0);
+        assert!(!b.is_sorted());
+        let mut out = vec![0.0f32; 4];
+        b.apply_range(0, 4, &mut out);
+        assert_eq!(out, vec![2.0, 0.0, 0.0, 5.0]);
+    }
+}

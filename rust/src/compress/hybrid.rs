@@ -15,8 +15,17 @@
 //! codec config.
 
 use super::encode::{pack_sign_index, unpack_sign_index, ByteReader, ByteWriter};
-use super::{Aggregation, Codec, Message};
+use super::engine::{DecodeBuf, EncodeStats};
+use super::{Aggregation, Codec};
 use crate::model::Layout;
+use crate::util::threadpool::{split_ranges, Task, ThreadPool};
+
+/// Per-shard reusable encode scratch (pooled encode).
+#[derive(Default)]
+struct ShardScratch {
+    bytes: Vec<u8>,
+    count: u32,
+}
 
 pub struct HybridCodec {
     layout: Layout,
@@ -25,11 +34,14 @@ pub struct HybridCodec {
     zeta: f32,
     r: Vec<f32>,
     v: Vec<f32>,
+    shards: Vec<ShardScratch>,
 }
 
 impl HybridCodec {
     pub fn new(layout: Layout, tau: f32, alpha: f32, zeta: f32) -> HybridCodec {
-        assert!(tau > 0.0 && alpha > 0.0 && (0.0..=1.0).contains(&zeta));
+        assert!(tau > 0.0, "tau must be positive");
+        assert!(alpha > 0.0, "alpha must be positive");
+        assert!(zeta > 0.0 && zeta <= 1.0, "zeta must be in (0, 1]");
         let n = layout.n();
         HybridCodec {
             layout,
@@ -38,6 +50,7 @@ impl HybridCodec {
             zeta,
             r: vec![0.0; n],
             v: vec![0.0; n],
+            shards: Vec::new(),
         }
     }
 
@@ -62,37 +75,85 @@ impl Codec for HybridCodec {
         Aggregation::Sum
     }
 
-    fn encode_step(&mut self, gsum: &[f32], gsumsq: &[f32]) -> Message {
+    fn encode_step_into(
+        &mut self,
+        gsum: &[f32],
+        gsumsq: &[f32],
+        bytes: &mut Vec<u8>,
+    ) -> EncodeStats {
         let n = self.layout.n();
         assert_eq!(gsum.len(), n);
         assert_eq!(gsumsq.len(), n);
-        let mut w = ByteWriter::new();
+        let mut w = ByteWriter::over(bytes);
         w.u32(0);
-        let mut count = 0u32;
-        for i in 0..n {
-            self.r[i] += gsum[i];
-            self.v[i] += gsumsq[i];
-            if self.r[i].abs() > self.tau && self.r[i] * self.r[i] > self.alpha * self.v[i]
-            {
-                let neg = self.r[i] < 0.0;
-                w.u32(pack_sign_index(neg, i as u32));
-                count += 1;
-                // Alg. 2: r_i -= Sign(r_i)·τ, then the variance
-                // correction with the decremented r_i.
-                self.r[i] -= if neg { -self.tau } else { self.tau };
-                self.v[i] = (self.v[i] - 2.0 * self.r[i].abs() * self.tau
-                    + self.tau * self.tau)
-                    .max(0.0);
-            }
-            // Alg. 2 decays v unconditionally (outside the if).
-            self.v[i] *= self.zeta;
-        }
-        let mut bytes = w.finish();
-        bytes[0..4].copy_from_slice(&count.to_le_bytes());
-        Message {
+        let count = encode_range(
+            &mut self.r,
+            &mut self.v,
+            gsum,
+            gsumsq,
+            self.tau,
+            self.alpha,
+            self.zeta,
+            0,
+            &mut w,
+        );
+        w.patch_u32(0, count);
+        EncodeStats {
             payload_bits: count as u64 * 32,
             elements: count as u64,
-            bytes,
+        }
+    }
+
+    fn encode_step_pooled(
+        &mut self,
+        gsum: &[f32],
+        gsumsq: &[f32],
+        pool: &ThreadPool,
+        bytes: &mut Vec<u8>,
+    ) -> EncodeStats {
+        if pool.threads() == 1 {
+            return self.encode_step_into(gsum, gsumsq, bytes);
+        }
+        let n = self.layout.n();
+        assert_eq!(gsum.len(), n);
+        assert_eq!(gsumsq.len(), n);
+        let ranges = split_ranges(n, pool.threads());
+        while self.shards.len() < ranges.len() {
+            self.shards.push(ShardScratch::default());
+        }
+        let (tau, alpha, zeta) = (self.tau, self.alpha, self.zeta);
+        let mut tasks: Vec<Task<'_>> = Vec::with_capacity(ranges.len());
+        let mut r_rest: &mut [f32] = &mut self.r;
+        let mut v_rest: &mut [f32] = &mut self.v;
+        let mut shard_iter = self.shards.iter_mut();
+        for range in &ranges {
+            let len = range.end - range.start;
+            let (r_s, r_next) = r_rest.split_at_mut(len);
+            let (v_s, v_next) = v_rest.split_at_mut(len);
+            r_rest = r_next;
+            v_rest = v_next;
+            let scratch = shard_iter.next().expect("scratch sized above");
+            let gs = &gsum[range.start..range.end];
+            let qs = &gsumsq[range.start..range.end];
+            let base = range.start;
+            tasks.push(Box::new(move || {
+                scratch.bytes.clear();
+                let mut w = ByteWriter::append(&mut scratch.bytes);
+                scratch.count = encode_range(r_s, v_s, gs, qs, tau, alpha, zeta, base, &mut w);
+            }));
+        }
+        pool.run(tasks);
+        let mut w = ByteWriter::over(bytes);
+        w.u32(0);
+        let mut count = 0u32;
+        for scratch in self.shards[..ranges.len()].iter() {
+            w.bytes(&scratch.bytes);
+            count += scratch.count;
+        }
+        w.patch_u32(0, count);
+        EncodeStats {
+            payload_bits: count as u64 * 32,
+            elements: count as u64,
         }
     }
 
@@ -109,9 +170,56 @@ impl Codec for HybridCodec {
         Ok(())
     }
 
+    fn decode_entries(&self, bytes: &[u8], buf: &mut DecodeBuf) -> anyhow::Result<()> {
+        let n = buf.expected_len();
+        let mut r = ByteReader::new(bytes);
+        let count = r.u32()?;
+        for _ in 0..count {
+            let (neg, index) = unpack_sign_index(r.u32()?);
+            anyhow::ensure!((index as usize) < n, "index {index} out of range");
+            buf.push(index, if neg { -self.tau } else { self.tau });
+        }
+        anyhow::ensure!(r.done(), "trailing bytes");
+        Ok(())
+    }
+
     fn residual_l1(&self) -> f64 {
         self.r.iter().map(|x| x.abs() as f64).sum()
     }
+}
+
+/// The Alg.-2 kernel over one contiguous shard (global element `i` =
+/// local `i` + `base`). Emits sign+index words in ascending index
+/// order; shared by the serial and pooled paths.
+#[allow(clippy::too_many_arguments)]
+fn encode_range(
+    r: &mut [f32],
+    v: &mut [f32],
+    gsum: &[f32],
+    gsumsq: &[f32],
+    tau: f32,
+    alpha: f32,
+    zeta: f32,
+    base: usize,
+    w: &mut ByteWriter,
+) -> u32 {
+    let mut count = 0u32;
+    for i in 0..r.len() {
+        r[i] += gsum[i];
+        v[i] += gsumsq[i];
+        if r[i].abs() > tau && r[i] * r[i] > alpha * v[i] {
+            let neg = r[i] < 0.0;
+            w.u32(pack_sign_index(neg, (i + base) as u32));
+            count += 1;
+            // Alg. 2: r_i -= Sign(r_i)·τ, then the variance
+            // correction with the decremented r_i.
+            r[i] -= if neg { -tau } else { tau };
+            v[i] = (v[i] - 2.0 * r[i].abs() * tau + tau * tau).max(0.0);
+        }
+        // Alg. 2 decays v unconditionally (outside the if).
+        v[i] *= zeta;
+    }
+    count
 }
 
 #[cfg(test)]
@@ -122,6 +230,33 @@ mod tests {
 
     fn codec(n: usize, tau: f32, alpha: f32) -> HybridCodec {
         HybridCodec::new(Layout::uniform(n, 8), tau, alpha, 0.999)
+    }
+
+    #[test]
+    #[should_panic(expected = "zeta must be in (0, 1]")]
+    fn zeta_zero_is_rejected() {
+        let _ = HybridCodec::new(Layout::uniform(4, 2), 0.1, 1.0, 0.0);
+    }
+
+    #[test]
+    fn pooled_encode_is_byte_identical_to_serial() {
+        use crate::util::threadpool::ThreadPool;
+        let n = 301;
+        let mut serial = codec(n, 0.02, 1.5);
+        let mut pooled = codec(n, 0.02, 1.5);
+        let pool = ThreadPool::new(3);
+        let mut rng = Pcg32::new(23, 1);
+        for _ in 0..5 {
+            let g = testkit::gradient_vec(&mut rng, n);
+            let sq: Vec<f32> = g.iter().map(|x| x * x).collect();
+            let ms = serial.encode_step(&g, &sq);
+            let mut pb = Vec::new();
+            let st = pooled.encode_step_pooled(&g, &sq, &pool, &mut pb);
+            assert_eq!(ms.bytes, pb);
+            assert_eq!(ms.elements, st.elements);
+        }
+        assert_eq!(serial.r(), pooled.r());
+        assert_eq!(serial.v(), pooled.v());
     }
 
     #[test]

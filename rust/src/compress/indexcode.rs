@@ -46,7 +46,8 @@ fn gamma_decode(bits: &mut BitReader) -> anyhow::Result<u32> {
 /// Gaps are `index[0]+1, index[i]−index[i−1]` (all ≥ 1 for strictly
 /// increasing input, which is enforced).
 pub fn pack_indices(indices: &[u32]) -> anyhow::Result<Vec<u8>> {
-    let mut bits = BitWriter::new();
+    let mut out = Vec::new();
+    let mut bits = BitWriter::over(&mut out);
     let mut prev: i64 = -1;
     for &idx in indices {
         let gap = idx as i64 - prev;
@@ -54,7 +55,8 @@ pub fn pack_indices(indices: &[u32]) -> anyhow::Result<Vec<u8>> {
         gamma_encode(&mut bits, gap as u32);
         prev = idx as i64;
     }
-    Ok(bits.finish())
+    bits.flush();
+    Ok(out)
 }
 
 /// Decode `count` gap-encoded indices.
@@ -85,11 +87,16 @@ pub fn gamma_bits(indices: &[u32]) -> u64 {
 }
 
 /// Compact re-encoding of a VGC-style sparse group: 4-bit sign+exponent
-/// codes packed densely + gamma-coded indices. Returns
-/// `(bytes, payload_bits)`.
-pub fn vgc_compact(indices: &[u32], codes: &[(bool, u8)]) -> anyhow::Result<(Vec<u8>, u64)> {
+/// codes packed densely + gamma-coded indices, written into a reusable
+/// buffer (cleared; capacity kept — the zero-allocation encode path).
+/// Returns the exact payload bit count.
+pub fn vgc_compact_into(
+    indices: &[u32],
+    codes: &[(bool, u8)],
+    out: &mut Vec<u8>,
+) -> anyhow::Result<u64> {
     anyhow::ensure!(indices.len() == codes.len(), "length mismatch");
-    let mut bits = BitWriter::new();
+    let mut bits = BitWriter::over(out);
     let mut prev: i64 = -1;
     for (&idx, &(neg, d)) in indices.iter().zip(codes) {
         let gap = idx as i64 - prev;
@@ -99,18 +106,29 @@ pub fn vgc_compact(indices: &[u32], codes: &[(bool, u8)]) -> anyhow::Result<(Vec
         bits.push(d as u32, 3);
         prev = idx as i64;
     }
-    let payload_bits = gamma_bits(indices) + 4 * indices.len() as u64;
-    Ok((bits.finish(), payload_bits))
+    bits.flush();
+    Ok(gamma_bits(indices) + 4 * indices.len() as u64)
 }
 
-/// Decode a compact VGC group back to `(indices, codes)`.
-pub fn vgc_compact_decode(
+/// Allocating convenience wrapper over [`vgc_compact_into`]. Returns
+/// `(bytes, payload_bits)`.
+pub fn vgc_compact(indices: &[u32], codes: &[(bool, u8)]) -> anyhow::Result<(Vec<u8>, u64)> {
+    let mut out = Vec::new();
+    let payload_bits = vgc_compact_into(indices, codes, &mut out)?;
+    Ok((out, payload_bits))
+}
+
+/// Decode a compact VGC group into reusable `(indices, codes)` buffers
+/// (cleared; capacity kept — the zero-allocation decode path).
+pub fn vgc_compact_decode_into(
     bytes: &[u8],
     count: usize,
-) -> anyhow::Result<(Vec<u32>, Vec<(bool, u8)>)> {
+    indices: &mut Vec<u32>,
+    codes: &mut Vec<(bool, u8)>,
+) -> anyhow::Result<()> {
+    indices.clear();
+    codes.clear();
     let mut bits = BitReader::new(bytes);
-    let mut indices = Vec::with_capacity(count);
-    let mut codes = Vec::with_capacity(count);
     let mut prev: i64 = -1;
     for _ in 0..count {
         let gap = gamma_decode(&mut bits)? as i64;
@@ -121,6 +139,17 @@ pub fn vgc_compact_decode(
         let d = bits.pull(3)? as u8;
         codes.push((neg, d));
     }
+    Ok(())
+}
+
+/// Allocating convenience wrapper over [`vgc_compact_decode_into`].
+pub fn vgc_compact_decode(
+    bytes: &[u8],
+    count: usize,
+) -> anyhow::Result<(Vec<u32>, Vec<(bool, u8)>)> {
+    let mut indices = Vec::with_capacity(count);
+    let mut codes = Vec::with_capacity(count);
+    vgc_compact_decode_into(bytes, count, &mut indices, &mut codes)?;
     Ok((indices, codes))
 }
 
@@ -140,11 +169,12 @@ mod tests {
 
     #[test]
     fn gamma_roundtrip_small_values() {
-        let mut bits = BitWriter::new();
+        let mut bytes = Vec::new();
+        let mut bits = BitWriter::over(&mut bytes);
         for v in 1..=200u32 {
             gamma_encode(&mut bits, v);
         }
-        let bytes = bits.finish();
+        bits.flush();
         let mut r = BitReader::new(&bytes);
         for v in 1..=200u32 {
             assert_eq!(gamma_decode(&mut r).unwrap(), v);

@@ -14,6 +14,7 @@
 
 pub mod adaptive;
 pub mod encode;
+pub mod engine;
 pub mod hybrid;
 pub mod indexcode;
 pub mod none;
@@ -24,8 +25,11 @@ pub mod strom;
 pub mod terngrad;
 pub mod vgc;
 
+pub use engine::{CodecEngine, DecodeBuf, EncodeStats};
+
 use crate::model::Layout;
 use crate::util::rng::Pcg32;
+use crate::util::threadpool::ThreadPool;
 
 /// How decoded per-worker contributions combine into the global update.
 ///
@@ -62,20 +66,82 @@ impl Message {
 }
 
 /// A gradient compression codec; one instance per worker (it owns that
-/// worker's residual/variance state).
-pub trait Codec: Send {
+/// worker's residual/variance state). `Sync` so the stateless decode
+/// side can be shared across the engine's threads.
+pub trait Codec: Send + Sync {
     /// Short identifier, e.g. `vgc(alpha=1.5)`.
     fn name(&self) -> String;
 
     fn aggregation(&self) -> Aggregation;
 
-    /// Ingest this step's moment increments and emit the wire message.
-    /// `gsumsq` may be ignored by magnitude-only codecs.
-    fn encode_step(&mut self, gsum: &[f32], gsumsq: &[f32]) -> Message;
+    /// Primary encode kernel: ingest this step's moment increments
+    /// (`gsumsq` may be ignored by magnitude-only codecs) and write the
+    /// wire message into `bytes` (cleared; capacity reused, so
+    /// steady-state encodes perform zero heap allocations — §Perf).
+    fn encode_step_into(
+        &mut self,
+        gsum: &[f32],
+        gsumsq: &[f32],
+        bytes: &mut Vec<u8>,
+    ) -> EncodeStats;
+
+    /// Convenience wrapper producing an owned [`Message`].
+    fn encode_step(&mut self, gsum: &[f32], gsumsq: &[f32]) -> Message {
+        let mut bytes = Vec::new();
+        let st = self.encode_step_into(gsum, gsumsq, &mut bytes);
+        Message {
+            bytes,
+            elements: st.elements,
+            payload_bits: st.payload_bits,
+        }
+    }
+
+    /// Shard-parallel encode over `pool`. Implementations MUST produce
+    /// bytes, stats and post-step state identical to
+    /// [`Codec::encode_step_into`] (the engine's parity contract); the
+    /// default simply runs the serial kernel. Used by the engine when
+    /// threads outnumber workers.
+    fn encode_step_pooled(
+        &mut self,
+        gsum: &[f32],
+        gsumsq: &[f32],
+        pool: &ThreadPool,
+        bytes: &mut Vec<u8>,
+    ) -> EncodeStats {
+        let _ = pool;
+        self.encode_step_into(gsum, gsumsq, bytes)
+    }
 
     /// Decode a peer message, *accumulating* (`+=`) the decoded update
     /// into `out` (length N). Stateless w.r.t. training state.
     fn decode_into(&self, bytes: &[u8], out: &mut [f32]) -> anyhow::Result<()>;
+
+    /// Decode a peer message into `(index, value)` contribution entries
+    /// (message order preserved — the engine replays them to reproduce
+    /// the serial accumulation bit-for-bit). Sparse codecs override
+    /// this with a direct parse; the default decodes densely through
+    /// `decode_into` and emits the nonzero elements. Dropping the zeros
+    /// is bit-safe: the decode accumulators start at `+0.0` and can
+    /// never become `-0.0` (IEEE round-to-nearest returns `+0.0` for
+    /// every cancelling sum), so adding `±0.0` never changes any bit —
+    /// and it keeps mostly-zero dense streams (low-bit QSGD, TernGrad)
+    /// cheap to replay.
+    fn decode_entries(&self, bytes: &[u8], buf: &mut DecodeBuf) -> anyhow::Result<()> {
+        let n = buf.expected_len();
+        let mut dense = buf.take_dense();
+        dense.clear();
+        dense.resize(n, 0.0);
+        let res = self.decode_into(bytes, &mut dense);
+        if res.is_ok() {
+            for (i, &v) in dense.iter().enumerate() {
+                if v != 0.0 {
+                    buf.push(i as u32, v);
+                }
+            }
+        }
+        buf.return_dense(dense);
+        res
+    }
 
     /// Undelivered mass currently held back by the codec (L1 norm of the
     /// residual), for diagnostics and conservation tests. Dense codecs
@@ -123,6 +189,17 @@ impl CodecSpec {
                 Some(v) => v.parse().map_err(|e| anyhow::anyhow!("bad {k}={v}: {e}")),
             }
         };
+        // Integer params parse as integers (a float detour would round
+        // large values, e.g. buckets above 2^24, and silently accept
+        // fractions).
+        let u = |kv: &std::collections::BTreeMap<String, String>, k: &str, d: u64| -> anyhow::Result<u64> {
+            match kv.get(k) {
+                None => Ok(d),
+                Some(v) => v
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad integer {k}={v}: {e}")),
+            }
+        };
         Ok(match head {
             "none" => CodecSpec::None,
             "vgc" => {
@@ -142,10 +219,22 @@ impl CodecSpec {
                 alpha: f(&kv, "alpha", 2.0)?,
                 zeta: f(&kv, "zeta", 0.999)?,
             },
-            "qsgd" => CodecSpec::Qsgd {
-                bits: f(&kv, "bits", 2.0)? as u32,
-                bucket: f(&kv, "d", 128.0)? as usize,
-            },
+            "qsgd" => {
+                let bits = u(&kv, "bits", 2)?;
+                anyhow::ensure!(
+                    (1..=8).contains(&bits),
+                    "qsgd bits must be in 1..=8, got {bits}"
+                );
+                let bucket = u(&kv, "d", 128)?;
+                anyhow::ensure!(
+                    (1..=u32::MAX as u64).contains(&bucket),
+                    "qsgd bucket size d must be in 1..=2^32-1, got {bucket}"
+                );
+                CodecSpec::Qsgd {
+                    bits: bits as u32,
+                    bucket: bucket as usize,
+                }
+            }
             "terngrad" => CodecSpec::TernGrad,
             "onebit" => CodecSpec::OneBit,
             "adaptive" => CodecSpec::Adaptive {
@@ -227,5 +316,22 @@ mod tests {
         );
         assert!(CodecSpec::parse("bogus").is_err());
         assert!(CodecSpec::parse("vgc:alpha").is_err());
+    }
+
+    #[test]
+    fn integer_codec_params_parse_exactly_and_validate() {
+        // 2^24 + 1 is not representable in f32: the old float detour
+        // would silently round it. Must survive exactly.
+        assert_eq!(
+            CodecSpec::parse("qsgd:bits=3,d=16777217").unwrap(),
+            CodecSpec::Qsgd { bits: 3, bucket: 16_777_217 }
+        );
+        // Out-of-range and non-integer values are loud errors.
+        assert!(CodecSpec::parse("qsgd:bits=0").is_err());
+        assert!(CodecSpec::parse("qsgd:bits=9").is_err());
+        assert!(CodecSpec::parse("qsgd:d=0").is_err());
+        assert!(CodecSpec::parse("qsgd:bits=2.5").is_err());
+        assert!(CodecSpec::parse("qsgd:d=1.5").is_err());
+        assert!(CodecSpec::parse("qsgd:bits=-1").is_err());
     }
 }

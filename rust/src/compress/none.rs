@@ -4,7 +4,8 @@
 //! every step, 32 bits each, compression ratio 1.
 
 use super::encode::{ByteReader, ByteWriter};
-use super::{Aggregation, Codec, Message};
+use super::engine::EncodeStats;
+use super::{Aggregation, Codec};
 
 pub struct NoCompression {
     n: usize,
@@ -25,14 +26,18 @@ impl Codec for NoCompression {
         Aggregation::Sum
     }
 
-    fn encode_step(&mut self, gsum: &[f32], _gsumsq: &[f32]) -> Message {
+    fn encode_step_into(
+        &mut self,
+        gsum: &[f32],
+        _gsumsq: &[f32],
+        bytes: &mut Vec<u8>,
+    ) -> EncodeStats {
         assert_eq!(gsum.len(), self.n);
-        let mut w = ByteWriter::with_capacity(4 * self.n);
+        let mut w = ByteWriter::over(bytes);
         for &g in gsum {
             w.f32(g);
         }
-        Message {
-            bytes: w.finish(),
+        EncodeStats {
             elements: self.n as u64,
             payload_bits: self.n as u64 * 32,
         }

@@ -15,13 +15,16 @@
 //! followed by a dense sign bitmap. 1 bit/element ⇒ bits-ratio ≈ 32.
 
 use super::encode::{BitReader, BitWriter, ByteReader, ByteWriter};
-use super::{Aggregation, Codec, Message};
+use super::engine::EncodeStats;
+use super::{Aggregation, Codec};
 use crate::model::Layout;
 
 pub struct OneBitCodec {
     layout: Layout,
     /// Error-feedback residual.
     e: Vec<f32>,
+    /// Reusable scratch for the packed sign bitmap.
+    packed: Vec<u8>,
 }
 
 impl OneBitCodec {
@@ -30,6 +33,7 @@ impl OneBitCodec {
         OneBitCodec {
             layout,
             e: vec![0.0; n],
+            packed: Vec::new(),
         }
     }
 
@@ -47,12 +51,17 @@ impl Codec for OneBitCodec {
         Aggregation::Sum
     }
 
-    fn encode_step(&mut self, gsum: &[f32], _gsumsq: &[f32]) -> Message {
+    fn encode_step_into(
+        &mut self,
+        gsum: &[f32],
+        _gsumsq: &[f32],
+        bytes: &mut Vec<u8>,
+    ) -> EncodeStats {
         let n = self.layout.n();
         assert_eq!(gsum.len(), n);
-        let mut w = ByteWriter::new();
+        let mut w = ByteWriter::over(bytes);
         w.u32(self.layout.n_groups() as u32);
-        let mut bits = BitWriter::new();
+        let mut bits = BitWriter::over(&mut self.packed);
 
         for group in self.layout.groups().iter() {
             // Corrected gradient = new gradient + carried error.
@@ -80,11 +89,10 @@ impl Codec for OneBitCodec {
                 self.e[i] = c - decoded;
             }
         }
-        let packed = bits.finish();
-        w.u32(packed.len() as u32);
-        w.bytes(&packed);
-        Message {
-            bytes: w.finish(),
+        bits.flush();
+        w.u32(self.packed.len() as u32);
+        w.bytes(&self.packed);
+        EncodeStats {
             elements: n as u64, // dense: every element is represented
             payload_bits: n as u64 + self.layout.n_groups() as u64 * 64,
         }

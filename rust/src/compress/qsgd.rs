@@ -14,7 +14,8 @@
 //! the convergence argument).
 
 use super::encode::{BitReader, BitWriter, ByteReader, ByteWriter};
-use super::{Aggregation, Codec, Message};
+use super::engine::EncodeStats;
+use super::{Aggregation, Codec};
 use crate::util::rng::Pcg32;
 
 pub struct QsgdCodec {
@@ -22,6 +23,8 @@ pub struct QsgdCodec {
     bits: u32,
     bucket: usize,
     rng: Pcg32,
+    /// Reusable scratch for the packed code bitstream.
+    packed: Vec<u8>,
 }
 
 impl QsgdCodec {
@@ -33,6 +36,7 @@ impl QsgdCodec {
             bits,
             bucket,
             rng,
+            packed: Vec::new(),
         }
     }
 
@@ -55,16 +59,27 @@ impl Codec for QsgdCodec {
         Aggregation::Sum
     }
 
-    fn encode_step(&mut self, gsum: &[f32], _gsumsq: &[f32]) -> Message {
+    fn encode_step_into(
+        &mut self,
+        gsum: &[f32],
+        _gsumsq: &[f32],
+        bytes: &mut Vec<u8>,
+    ) -> EncodeStats {
         assert_eq!(gsum.len(), self.n);
         let s = self.levels() as f32;
-        let mut w = ByteWriter::new();
-        let n_buckets = self.n.div_ceil(self.bucket);
+        let levels = self.levels();
+        let width = self.bits;
+        let bucket = self.bucket;
+        let n = self.n;
+        let mut w = ByteWriter::over(bytes);
+        let n_buckets = n.div_ceil(bucket);
         w.u32(n_buckets as u32);
-        let mut bitw = BitWriter::new();
+        // Norms land contiguously in the byte stream; codes go to the
+        // reusable packed bitstream appended after them.
+        let mut bitw = BitWriter::over(&mut self.packed);
         let mut nonzero = 0u64;
         for b in 0..n_buckets {
-            let range = b * self.bucket..((b + 1) * self.bucket).min(self.n);
+            let range = b * bucket..((b + 1) * bucket).min(n);
             let norm: f32 = gsum[range.clone()]
                 .iter()
                 .map(|x| x * x)
@@ -79,27 +94,25 @@ impl Codec for QsgdCodec {
                     let lo = x.floor();
                     let frac = x - lo;
                     let level = lo as u32 + self.rng.next_bool(frac) as u32;
-                    (g < 0.0, level.min(self.levels()))
+                    (g < 0.0, level.min(levels))
                 };
                 if level > 0 {
                     nonzero += 1;
                 }
                 bitw.push(sign as u32, 1);
-                bitw.push(level, self.bits);
+                bitw.push(level, width);
             }
         }
-        let packed = bitw.finish();
-        w.u32(packed.len() as u32);
-        w.bytes(&packed);
-        Message {
-            bytes: w.finish(),
+        bitw.flush();
+        w.u32(self.packed.len() as u32);
+        w.bytes(&self.packed);
+        EncodeStats {
             // Ratio accounting: QSGD is dense; the honest element count
             // is the nonzeros (zero codes carry no gradient), which is
             // how the paper's QSGD rows land between pure-quantization
             // and sparsification ratios.
             elements: nonzero,
-            payload_bits: self.n as u64 * self.code_width() as u64
-                + n_buckets as u64 * 32,
+            payload_bits: n as u64 * self.code_width() as u64 + n_buckets as u64 * 32,
         }
     }
 

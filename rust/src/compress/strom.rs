@@ -11,11 +11,21 @@
 //! counts one 32-bit word per sent pair for all algorithms, Sec. 6).
 
 use super::encode::{pack_sign_index, unpack_sign_index, ByteReader, ByteWriter};
-use super::{Aggregation, Codec, Message};
+use super::engine::{DecodeBuf, EncodeStats};
+use super::{Aggregation, Codec};
+use crate::util::threadpool::{split_ranges, Task, ThreadPool};
+
+/// Per-shard reusable encode scratch (pooled encode).
+#[derive(Default)]
+struct ShardScratch {
+    bytes: Vec<u8>,
+    count: u32,
+}
 
 pub struct StromCodec {
     tau: f32,
     r: Vec<f32>,
+    shards: Vec<ShardScratch>,
 }
 
 impl StromCodec {
@@ -24,6 +34,7 @@ impl StromCodec {
         StromCodec {
             tau,
             r: vec![0.0; n],
+            shards: Vec::new(),
         }
     }
 
@@ -45,29 +56,69 @@ impl Codec for StromCodec {
         Aggregation::Sum
     }
 
-    fn encode_step(&mut self, gsum: &[f32], _gsumsq: &[f32]) -> Message {
+    fn encode_step_into(
+        &mut self,
+        gsum: &[f32],
+        _gsumsq: &[f32],
+        bytes: &mut Vec<u8>,
+    ) -> EncodeStats {
         assert_eq!(gsum.len(), self.r.len());
-        let mut w = ByteWriter::new();
+        let mut w = ByteWriter::over(bytes);
         w.u32(0); // count placeholder
-        let mut count = 0u32;
-        for i in 0..self.r.len() {
-            self.r[i] += gsum[i];
-            if self.r[i] > self.tau {
-                w.u32(pack_sign_index(false, i as u32));
-                self.r[i] -= self.tau;
-                count += 1;
-            } else if self.r[i] < -self.tau {
-                w.u32(pack_sign_index(true, i as u32));
-                self.r[i] += self.tau;
-                count += 1;
-            }
-        }
-        let mut bytes = w.finish();
-        bytes[0..4].copy_from_slice(&count.to_le_bytes());
-        Message {
+        let count = encode_range(&mut self.r, gsum, self.tau, 0, &mut w);
+        w.patch_u32(0, count);
+        EncodeStats {
             payload_bits: count as u64 * 32,
             elements: count as u64,
-            bytes,
+        }
+    }
+
+    fn encode_step_pooled(
+        &mut self,
+        gsum: &[f32],
+        _gsumsq: &[f32],
+        pool: &ThreadPool,
+        bytes: &mut Vec<u8>,
+    ) -> EncodeStats {
+        if pool.threads() == 1 {
+            return self.encode_step_into(gsum, _gsumsq, bytes);
+        }
+        assert_eq!(gsum.len(), self.r.len());
+        let ranges = split_ranges(self.r.len(), pool.threads());
+        while self.shards.len() < ranges.len() {
+            self.shards.push(ShardScratch::default());
+        }
+        let tau = self.tau;
+        let mut tasks: Vec<Task<'_>> = Vec::with_capacity(ranges.len());
+        let mut r_rest: &mut [f32] = &mut self.r;
+        let mut shard_iter = self.shards.iter_mut();
+        for range in &ranges {
+            let len = range.end - range.start;
+            let (r_s, r_next) = r_rest.split_at_mut(len);
+            r_rest = r_next;
+            let scratch = shard_iter.next().expect("scratch sized above");
+            let gs = &gsum[range.start..range.end];
+            let base = range.start;
+            tasks.push(Box::new(move || {
+                scratch.bytes.clear();
+                let mut w = ByteWriter::append(&mut scratch.bytes);
+                scratch.count = encode_range(r_s, gs, tau, base, &mut w);
+            }));
+        }
+        pool.run(tasks);
+        // Assemble: count header + shard word streams in index order —
+        // byte-identical to the serial message.
+        let mut w = ByteWriter::over(bytes);
+        w.u32(0);
+        let mut count = 0u32;
+        for scratch in self.shards[..ranges.len()].iter() {
+            w.bytes(&scratch.bytes);
+            count += scratch.count;
+        }
+        w.patch_u32(0, count);
+        EncodeStats {
+            payload_bits: count as u64 * 32,
+            elements: count as u64,
         }
     }
 
@@ -84,9 +135,42 @@ impl Codec for StromCodec {
         Ok(())
     }
 
+    fn decode_entries(&self, bytes: &[u8], buf: &mut DecodeBuf) -> anyhow::Result<()> {
+        let n = buf.expected_len();
+        let mut r = ByteReader::new(bytes);
+        let count = r.u32()?;
+        for _ in 0..count {
+            let (neg, index) = unpack_sign_index(r.u32()?);
+            anyhow::ensure!((index as usize) < n, "index {index} out of range");
+            buf.push(index, if neg { -self.tau } else { self.tau });
+        }
+        anyhow::ensure!(r.done(), "trailing bytes");
+        Ok(())
+    }
+
     fn residual_l1(&self) -> f64 {
         self.r.iter().map(|x| x.abs() as f64).sum()
     }
+}
+
+/// The Strom threshold kernel over one contiguous residual shard
+/// (global element `i` = local `i` + `base`); emits sign+index words in
+/// ascending index order. Shared by the serial and pooled paths.
+fn encode_range(r: &mut [f32], gsum: &[f32], tau: f32, base: usize, w: &mut ByteWriter) -> u32 {
+    let mut count = 0u32;
+    for i in 0..r.len() {
+        r[i] += gsum[i];
+        if r[i] > tau {
+            w.u32(pack_sign_index(false, (i + base) as u32));
+            r[i] -= tau;
+            count += 1;
+        } else if r[i] < -tau {
+            w.u32(pack_sign_index(true, (i + base) as u32));
+            r[i] += tau;
+            count += 1;
+        }
+    }
+    count
 }
 
 #[cfg(test)]

@@ -9,18 +9,25 @@
 //! Stateless across steps, like QSGD.
 
 use super::encode::{BitReader, BitWriter, ByteReader, ByteWriter};
-use super::{Aggregation, Codec, Message};
+use super::engine::EncodeStats;
+use super::{Aggregation, Codec};
 use crate::model::Layout;
 use crate::util::rng::Pcg32;
 
 pub struct TernGradCodec {
     layout: Layout,
     rng: Pcg32,
+    /// Reusable scratch for the packed ternary bitstream.
+    packed: Vec<u8>,
 }
 
 impl TernGradCodec {
     pub fn new(layout: Layout, rng: Pcg32) -> TernGradCodec {
-        TernGradCodec { layout, rng }
+        TernGradCodec {
+            layout,
+            rng,
+            packed: Vec::new(),
+        }
     }
 }
 
@@ -38,12 +45,17 @@ impl Codec for TernGradCodec {
         Aggregation::Sum
     }
 
-    fn encode_step(&mut self, gsum: &[f32], _gsumsq: &[f32]) -> Message {
+    fn encode_step_into(
+        &mut self,
+        gsum: &[f32],
+        _gsumsq: &[f32],
+        bytes: &mut Vec<u8>,
+    ) -> EncodeStats {
         let n = self.layout.n();
         assert_eq!(gsum.len(), n);
-        let mut w = ByteWriter::new();
+        let mut w = ByteWriter::over(bytes);
         w.u32(self.layout.n_groups() as u32);
-        let mut bits = BitWriter::new();
+        let mut bits = BitWriter::over(&mut self.packed);
         let mut nonzero = 0u64;
         for group in self.layout.groups() {
             let s_k = gsum[group.range()]
@@ -66,11 +78,10 @@ impl Codec for TernGradCodec {
                 bits.push(code, 2);
             }
         }
-        let packed = bits.finish();
-        w.u32(packed.len() as u32);
-        w.bytes(&packed);
-        Message {
-            bytes: w.finish(),
+        bits.flush();
+        w.u32(self.packed.len() as u32);
+        w.bytes(&self.packed);
+        EncodeStats {
             elements: nonzero,
             payload_bits: n as u64 * 2 + self.layout.n_groups() as u64 * 32,
         }

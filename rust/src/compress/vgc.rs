@@ -26,13 +26,26 @@
 //! [`super::indexcode`]).
 
 use super::encode::{pack_word, unpack_word, ByteReader, ByteWriter};
+use super::engine::{DecodeBuf, EncodeStats};
 use super::indexcode;
 use super::quant4;
-use super::{Aggregation, Codec, Message};
-use crate::model::Layout;
+use super::{Aggregation, Codec};
+use crate::model::{Layout, ParamGroup};
+use crate::util::threadpool::{Task, ThreadPool};
 
 /// Format flag in the leading u32 (bit 31): compact index coding.
 const COMPACT_FLAG: u32 = 1 << 31;
+
+/// Per-shard reusable encode scratch (pooled encode).
+#[derive(Default)]
+struct ShardScratch {
+    bytes: Vec<u8>,
+    selected: Vec<u32>,
+    codes: Vec<(bool, u8)>,
+    compact_buf: Vec<u8>,
+    stats: EncodeStats,
+    groups_sent: u32,
+}
 
 pub struct VgcCodec {
     layout: Layout,
@@ -48,12 +61,16 @@ pub struct VgcCodec {
     selected: Vec<u32>,
     /// Scratch: quantized codes for the compact format.
     codes: Vec<(bool, u8)>,
+    /// Scratch: per-group compact bitstream (reused across groups).
+    compact_buf: Vec<u8>,
+    /// Per-shard scratch for the pooled encode (lazily sized).
+    shards: Vec<ShardScratch>,
 }
 
 impl VgcCodec {
     pub fn new(layout: Layout, alpha: f32, zeta: f32) -> VgcCodec {
         assert!(alpha > 0.0, "alpha must be positive");
-        assert!((0.0..=1.0).contains(&zeta), "zeta must be in (0, 1]");
+        assert!(zeta > 0.0 && zeta <= 1.0, "zeta must be in (0, 1]");
         let n = layout.n();
         VgcCodec {
             layout,
@@ -64,6 +81,8 @@ impl VgcCodec {
             v: vec![0.0; n],
             selected: Vec::new(),
             codes: Vec::new(),
+            compact_buf: Vec::new(),
+            shards: Vec::new(),
         }
     }
 
@@ -98,77 +117,33 @@ impl Codec for VgcCodec {
         Aggregation::Sum
     }
 
-    fn encode_step(&mut self, gsum: &[f32], gsumsq: &[f32]) -> Message {
+    fn encode_step_into(
+        &mut self,
+        gsum: &[f32],
+        gsumsq: &[f32],
+        bytes: &mut Vec<u8>,
+    ) -> EncodeStats {
         let n = self.layout.n();
         assert_eq!(gsum.len(), n);
         assert_eq!(gsumsq.len(), n);
 
-        let mut writer = ByteWriter::new();
-        writer.u32(0); // group-count + format-flag placeholder
-        let mut n_groups_sent = 0u32;
-        let mut elements = 0u64;
-        let mut payload_bits = 0u64;
-
-        for (gi, group) in self.layout.groups().iter().enumerate() {
-            // Pass 1 (fused with accumulation — §Perf L3): ingest this
-            // step's increments (Alg. 1 lines 1-2), select unambiguous
-            // elements, and find the group max M_k over the *sent*
-            // values (the gradient actually encoded).
-            self.selected.clear();
-            let mut m_k = 0f32;
-            for i in group.range() {
-                self.r[i] += gsum[i];
-                self.v[i] += gsumsq[i];
-                if Self::criterion(self.r[i], self.v[i], self.alpha) {
-                    self.selected.push(i as u32);
-                    m_k = m_k.max(self.r[i].abs());
-                }
-            }
-            if self.selected.is_empty() || m_k == 0.0 || !m_k.is_finite() {
-                continue;
-            }
-            let mexp = quant4::floor_log2_exp(m_k);
-
-            // Pass 2: quantize. d>7 underflows are dropped and revert
-            // to "unsent" (state kept); kept indices stay sorted by
-            // compacting `selected` in place.
-            self.codes.clear();
-            let mut kept = 0usize;
-            for si in 0..self.selected.len() {
-                let iu = self.selected[si];
-                let i = iu as usize;
-                if let Some((neg, d)) = quant4::quantize(self.r[i], mexp) {
-                    self.selected[kept] = iu;
-                    kept += 1;
-                    self.codes.push((neg, d));
-                    // Alg. 1 sent branch: reset both accumulators.
-                    self.r[i] = 0.0;
-                    self.v[i] = 0.0;
-                }
-            }
-            if kept == 0 {
-                continue;
-            }
-            writer.u32(gi as u32);
-            writer.i32(mexp);
-            writer.u32(kept as u32);
-            if self.compact {
-                let (bytes, bits) =
-                    indexcode::vgc_compact(&self.selected[..kept], &self.codes)
-                        .expect("selected indices are sorted by construction");
-                writer.u32(bytes.len() as u32);
-                writer.bytes(&bytes);
-                payload_bits += bits;
-            } else {
-                for (k, &iu) in self.selected[..kept].iter().enumerate() {
-                    let (neg, d) = self.codes[k];
-                    writer.u32(pack_word(neg, d, iu));
-                }
-                payload_bits += kept as u64 * 32;
-            }
-            elements += kept as u64;
-            n_groups_sent += 1;
-        }
+        let mut w = ByteWriter::over(bytes);
+        w.u32(0); // group-count + format-flag placeholder
+        let (stats, n_groups_sent) = encode_groups(
+            self.layout.groups(),
+            0,
+            0,
+            &mut self.r,
+            &mut self.v,
+            gsum,
+            gsumsq,
+            self.alpha,
+            self.compact,
+            &mut self.selected,
+            &mut self.codes,
+            &mut self.compact_buf,
+            &mut w,
+        );
 
         // Alg. 1 unsent branch: decay v. Sent elements were reset to 0
         // above, so a branchless multiply is semantically identical to
@@ -179,21 +154,254 @@ impl Codec for VgcCodec {
         }
 
         let flag = if self.compact { COMPACT_FLAG } else { 0 };
-        writer.patch_u32(0, n_groups_sent | flag);
-        Message {
-            payload_bits,
-            elements,
-            bytes: writer.finish(),
+        w.patch_u32(0, n_groups_sent | flag);
+        stats
+    }
+
+    fn encode_step_pooled(
+        &mut self,
+        gsum: &[f32],
+        gsumsq: &[f32],
+        pool: &ThreadPool,
+        bytes: &mut Vec<u8>,
+    ) -> EncodeStats {
+        if pool.threads() == 1 {
+            return self.encode_step_into(gsum, gsumsq, bytes);
         }
+        let n = self.layout.n();
+        assert_eq!(gsum.len(), n);
+        assert_eq!(gsumsq.len(), n);
+        let spans = shard_groups(self.layout.groups(), pool.threads());
+        while self.shards.len() < spans.len() {
+            self.shards.push(ShardScratch::default());
+        }
+        let VgcCodec {
+            layout,
+            alpha,
+            zeta,
+            compact,
+            r,
+            v,
+            shards,
+            ..
+        } = self;
+        let (alpha, zeta, compact) = (*alpha, *zeta, *compact);
+        let groups = layout.groups();
+        let mut tasks: Vec<Task<'_>> = Vec::with_capacity(spans.len());
+        let mut r_rest: &mut [f32] = r;
+        let mut v_rest: &mut [f32] = v;
+        let mut shard_iter = shards.iter_mut();
+        for span in &spans {
+            let len = span.elem_hi - span.elem_lo;
+            let (r_s, r_next) = r_rest.split_at_mut(len);
+            let (v_s, v_next) = v_rest.split_at_mut(len);
+            r_rest = r_next;
+            v_rest = v_next;
+            let scratch = shard_iter.next().expect("scratch sized above");
+            let g_slice = &groups[span.group_lo..span.group_hi];
+            let gs = &gsum[span.elem_lo..span.elem_hi];
+            let qs = &gsumsq[span.elem_lo..span.elem_hi];
+            let (base, gi_base) = (span.elem_lo, span.group_lo);
+            tasks.push(Box::new(move || {
+                scratch.bytes.clear();
+                let mut w = ByteWriter::append(&mut scratch.bytes);
+                let (stats, sent) = encode_groups(
+                    g_slice,
+                    gi_base,
+                    base,
+                    r_s,
+                    v_s,
+                    gs,
+                    qs,
+                    alpha,
+                    compact,
+                    &mut scratch.selected,
+                    &mut scratch.codes,
+                    &mut scratch.compact_buf,
+                    &mut w,
+                );
+                scratch.stats = stats;
+                scratch.groups_sent = sent;
+                // ζ decay of this shard's element range (identical to
+                // the serial whole-vector pass).
+                for x in v_s.iter_mut() {
+                    *x *= zeta;
+                }
+            }));
+        }
+        pool.run(tasks);
+
+        // Assemble: header, then shard bodies concatenated in group
+        // order — byte-identical to the serial message.
+        let mut w = ByteWriter::over(bytes);
+        w.u32(0);
+        let mut stats = EncodeStats::default();
+        let mut groups_sent = 0u32;
+        for scratch in shards[..spans.len()].iter() {
+            w.bytes(&scratch.bytes);
+            stats.elements += scratch.stats.elements;
+            stats.payload_bits += scratch.stats.payload_bits;
+            groups_sent += scratch.groups_sent;
+        }
+        let flag = if compact { COMPACT_FLAG } else { 0 };
+        w.patch_u32(0, groups_sent | flag);
+        stats
     }
 
     fn decode_into(&self, bytes: &[u8], out: &mut [f32]) -> anyhow::Result<()> {
         decode_vgc_message(bytes, &self.layout, out)
     }
 
+    fn decode_entries(&self, bytes: &[u8], buf: &mut DecodeBuf) -> anyhow::Result<()> {
+        decode_vgc_entries(bytes, &self.layout, buf)
+    }
+
     fn residual_l1(&self) -> f64 {
         self.r.iter().map(|x| x.abs() as f64).sum()
     }
+}
+
+/// One contiguous run of groups assigned to an encode shard.
+struct GroupSpan {
+    group_lo: usize,
+    group_hi: usize,
+    elem_lo: usize,
+    elem_hi: usize,
+}
+
+/// Partition the layout's groups into contiguous element-balanced spans
+/// (one encode task each). Spans stay group-aligned so the shard byte
+/// streams concatenate into exactly the serial message.
+fn shard_groups(groups: &[ParamGroup], parts: usize) -> Vec<GroupSpan> {
+    let total: usize = groups.iter().map(|g| g.len).sum();
+    let target = total.div_ceil(parts.max(1)).max(1);
+    let mut spans = Vec::new();
+    let mut group_lo = 0usize;
+    let mut elem_lo = 0usize;
+    let mut acc = 0usize;
+    for (k, g) in groups.iter().enumerate() {
+        acc += g.len;
+        if acc >= target || k + 1 == groups.len() {
+            spans.push(GroupSpan {
+                group_lo,
+                group_hi: k + 1,
+                elem_lo,
+                elem_hi: g.offset + g.len,
+            });
+            group_lo = k + 1;
+            elem_lo = g.offset + g.len;
+            acc = 0;
+        }
+    }
+    spans
+}
+
+/// Mask-pass tile: small enough to stay in L1 / registers, large enough
+/// to amortize the second sweep.
+const TILE: usize = 256;
+
+/// Encode a contiguous run of groups (Alg. 1) into `w`.
+///
+/// `r`/`v`/`gsum`/`gsumsq` cover exactly the elements of `groups`
+/// (global element `i` lives at local index `i - base`); emitted wire
+/// indices are global. Selection runs in two passes per tile: a
+/// branchless criterion-mask pass (auto-vectorizes — no data-dependent
+/// branches in the float loop), then a gather pass over the mask
+/// (§Perf L3). Produces byte-for-byte the fused single-pass stream.
+#[allow(clippy::too_many_arguments)]
+fn encode_groups(
+    groups: &[ParamGroup],
+    group_index_base: usize,
+    base: usize,
+    r: &mut [f32],
+    v: &mut [f32],
+    gsum: &[f32],
+    gsumsq: &[f32],
+    alpha: f32,
+    compact: bool,
+    selected: &mut Vec<u32>,
+    codes: &mut Vec<(bool, u8)>,
+    compact_buf: &mut Vec<u8>,
+    w: &mut ByteWriter,
+) -> (EncodeStats, u32) {
+    let mut stats = EncodeStats::default();
+    let mut groups_sent = 0u32;
+    let mut mask = [false; TILE];
+    for (k, group) in groups.iter().enumerate() {
+        let gi = group_index_base + k;
+        let lo = group.offset - base;
+        let hi = lo + group.len;
+
+        // Pass 1+2, tiled: branchless accumulate-and-mask, then gather
+        // selected indices and the group max M_k over sent values.
+        selected.clear();
+        let mut m_k = 0f32;
+        let mut start = lo;
+        while start < hi {
+            let end = (start + TILE).min(hi);
+            let width = end - start;
+            for j in 0..width {
+                let i = start + j;
+                let ri = r[i] + gsum[i];
+                let vi = v[i] + gsumsq[i];
+                r[i] = ri;
+                v[i] = vi;
+                mask[j] = VgcCodec::criterion(ri, vi, alpha);
+            }
+            for (j, &m) in mask[..width].iter().enumerate() {
+                if m {
+                    let i = start + j;
+                    selected.push((i + base) as u32);
+                    m_k = m_k.max(r[i].abs());
+                }
+            }
+            start = end;
+        }
+        if selected.is_empty() || m_k == 0.0 || !m_k.is_finite() {
+            continue;
+        }
+        let mexp = quant4::floor_log2_exp(m_k);
+
+        // Quantize pass: d>7 underflows are dropped and revert to
+        // "unsent" (state kept); kept indices stay sorted by compacting
+        // `selected` in place.
+        codes.clear();
+        let mut kept = 0usize;
+        for si in 0..selected.len() {
+            let iu = selected[si];
+            let i = iu as usize - base;
+            if let Some((neg, d)) = quant4::quantize(r[i], mexp) {
+                selected[kept] = iu;
+                kept += 1;
+                codes.push((neg, d));
+                // Alg. 1 sent branch: reset both accumulators.
+                r[i] = 0.0;
+                v[i] = 0.0;
+            }
+        }
+        if kept == 0 {
+            continue;
+        }
+        w.u32(gi as u32);
+        w.i32(mexp);
+        w.u32(kept as u32);
+        if compact {
+            let bits = indexcode::vgc_compact_into(&selected[..kept], codes, compact_buf)
+                .expect("selected indices are sorted by construction");
+            w.u32(compact_buf.len() as u32);
+            w.bytes(compact_buf);
+            stats.payload_bits += bits;
+        } else {
+            for (k2, &iu) in selected[..kept].iter().enumerate() {
+                let (neg, d) = codes[k2];
+                w.u32(pack_word(neg, d, iu));
+            }
+            stats.payload_bits += kept as u64 * 32;
+        }
+        stats.elements += kept as u64;
+        groups_sent += 1;
+    }
+    (stats, groups_sent)
 }
 
 /// Stateless decode of the VGC wire format, both naive and compact
@@ -242,9 +450,67 @@ pub fn decode_vgc_message(
     Ok(())
 }
 
+/// Entry-level decode of the VGC wire format (both variants): pushes
+/// exactly the contributions `decode_vgc_message` would accumulate, in
+/// the same order, into a reusable [`DecodeBuf`] (the engine's parity
+/// contract; zero allocations once scratch capacities converge).
+pub fn decode_vgc_entries(
+    bytes: &[u8],
+    layout: &Layout,
+    buf: &mut DecodeBuf,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(buf.expected_len() == layout.n(), "output length mismatch");
+    let mut r = ByteReader::new(bytes);
+    let head = r.u32()?;
+    let compact = head & COMPACT_FLAG != 0;
+    let n_groups = head & !COMPACT_FLAG;
+    for _ in 0..n_groups {
+        let gi = r.u32()? as usize;
+        let mexp = r.i32()?;
+        let count = r.u32()? as usize;
+        anyhow::ensure!(gi < layout.n_groups(), "bad group index {gi}");
+        let range = layout.groups()[gi].range();
+        if compact {
+            let byte_len = r.u32()? as usize;
+            let block = r.slice(byte_len)?;
+            let mut idxs = std::mem::take(&mut buf.idx_scratch);
+            let mut cds = std::mem::take(&mut buf.code_scratch);
+            let mut res = indexcode::vgc_compact_decode_into(block, count, &mut idxs, &mut cds);
+            if res.is_ok() {
+                for (&index, &(neg, d)) in idxs.iter().zip(cds.iter()) {
+                    let i = index as usize;
+                    if !range.contains(&i) {
+                        res = Err(anyhow::anyhow!(
+                            "index {i} outside group {gi} ({range:?})"
+                        ));
+                        break;
+                    }
+                    buf.push(index, quant4::dequantize(neg, d, mexp));
+                }
+            }
+            buf.idx_scratch = idxs;
+            buf.code_scratch = cds;
+            res?;
+            continue;
+        }
+        for _ in 0..count {
+            let (neg, d, index) = unpack_word(r.u32()?);
+            let i = index as usize;
+            anyhow::ensure!(
+                range.contains(&i),
+                "index {i} outside group {gi} ({range:?})"
+            );
+            buf.push(index, quant4::dequantize(neg, d, mexp));
+        }
+    }
+    anyhow::ensure!(r.done(), "{} trailing bytes in message", r.remaining());
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::Message;
     use crate::testkit;
     use crate::util::rng::Pcg32;
 
@@ -256,6 +522,69 @@ mod tests {
         let mut out = vec![0.0; n];
         codec.decode_into(&msg.bytes, &mut out).unwrap();
         out
+    }
+
+    #[test]
+    #[should_panic(expected = "zeta must be in (0, 1]")]
+    fn zeta_zero_is_rejected() {
+        let _ = VgcCodec::new(layout(4), 1.0, 0.0);
+    }
+
+    #[test]
+    fn zeta_one_is_accepted() {
+        let _ = VgcCodec::new(layout(4), 1.0, 1.0);
+    }
+
+    #[test]
+    fn entry_decode_matches_dense_decode_bitwise() {
+        use crate::compress::engine::DecodeBuf;
+        for compact in [false, true] {
+            let n = 257;
+            let mut c =
+                VgcCodec::new(layout(n), 1.0, 0.999).with_compact_indices(compact);
+            let mut rng = Pcg32::new(11, 3);
+            let g = testkit::gradient_vec(&mut rng, n);
+            let msg = c.encode_step(&g, &vec![0.0; n]);
+            let mut dense = vec![0.0f32; n];
+            c.decode_into(&msg.bytes, &mut dense).unwrap();
+            let mut buf = DecodeBuf::new();
+            buf.reset(n);
+            c.decode_entries(&msg.bytes, &mut buf).unwrap();
+            assert!(buf.is_sorted());
+            let mut replay = vec![0.0f32; n];
+            buf.apply_range(0, n as u32, &mut replay);
+            for i in 0..n {
+                assert_eq!(dense[i].to_bits(), replay[i].to_bits(), "i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_encode_is_byte_identical_to_serial() {
+        use crate::util::threadpool::ThreadPool;
+        for compact in [false, true] {
+            for threads in [2usize, 3, 7] {
+                let n = 533; // non-trivial group structure (groups of 7)
+                let mut serial =
+                    VgcCodec::new(layout(n), 1.0, 0.999).with_compact_indices(compact);
+                let mut pooled =
+                    VgcCodec::new(layout(n), 1.0, 0.999).with_compact_indices(compact);
+                let pool = ThreadPool::new(threads);
+                let mut rng = Pcg32::new(17, threads as u64);
+                for _ in 0..4 {
+                    let g = testkit::gradient_vec(&mut rng, n);
+                    let sq: Vec<f32> = g.iter().map(|x| x * x * 0.5).collect();
+                    let ms = serial.encode_step(&g, &sq);
+                    let mut pb = Vec::new();
+                    let st = pooled.encode_step_pooled(&g, &sq, &pool, &mut pb);
+                    assert_eq!(ms.bytes, pb, "bytes diverged (threads={threads})");
+                    assert_eq!(ms.elements, st.elements);
+                    assert_eq!(ms.payload_bits, st.payload_bits);
+                }
+                assert_eq!(serial.r(), pooled.r());
+                assert_eq!(serial.v(), pooled.v());
+            }
+        }
     }
 
     #[test]

@@ -30,8 +30,13 @@ pub struct TrainConfig {
     /// Class separability of the synthetic data.
     pub signal: f32,
     /// Cross-check that all workers decode identical updates (costly:
-    /// decodes P× twice; on by default in tests, off in benches).
+    /// decodes P× twice; on by default in tests, off in benches). With
+    /// `codec_threads > 1` the check cross-validates the parallel
+    /// engine against the serial decode every step.
     pub verify_sync: bool,
+    /// Codec engine threads: 0 = auto (available parallelism), 1 = the
+    /// exact serial path, N > 1 = parallel sharded encode/decode.
+    pub codec_threads: usize,
     /// Cluster/network model for the simulated-wall-clock report
     /// (topology, link bandwidth/latency/jitter, stragglers).
     pub fabric: FabricConfig,
@@ -65,7 +70,17 @@ impl TrainConfig {
             test_size: 1024,
             signal: 1.0,
             verify_sync: false,
+            codec_threads: 0,
             fabric: FabricConfig::default(),
+        }
+    }
+
+    /// The engine width `codec_threads` resolves to (0 = auto).
+    pub fn resolved_codec_threads(&self) -> usize {
+        if self.codec_threads == 0 {
+            crate::util::threadpool::ThreadPool::available()
+        } else {
+            self.codec_threads
         }
     }
 
@@ -91,6 +106,7 @@ impl TrainConfig {
         if args.has("verify-sync") {
             self.verify_sync = true;
         }
+        self.codec_threads = args.parse_or("codec-threads", self.codec_threads)?;
         self.fabric = self.fabric.override_from(args)?;
         Ok(self)
     }
@@ -108,6 +124,7 @@ impl TrainConfig {
             ("train_size", num(self.train_size as f64)),
             ("test_size", num(self.test_size as f64)),
             ("signal", num(self.signal as f64)),
+            ("codec_threads", num(self.codec_threads as f64)),
             ("fabric", self.fabric.to_json()),
         ])
     }
@@ -125,6 +142,10 @@ impl TrainConfig {
         cfg.train_size = j.expect("train_size")?.as_usize()?;
         cfg.test_size = j.expect("test_size")?.as_usize()?;
         cfg.signal = j.expect("signal")?.as_f64()? as f32;
+        // Absent in configs recorded before the engine existed.
+        if let Some(t) = j.get("codec_threads") {
+            cfg.codec_threads = t.as_usize()?;
+        }
         // Absent in configs recorded before the fabric existed.
         if let Some(f) = j.get("fabric") {
             cfg.fabric = FabricConfig::from_json(f)?;
@@ -198,6 +219,23 @@ mod tests {
         assert_eq!(cfg.steps, 42);
         assert_eq!(cfg.optimizer, "adam");
         assert!(cfg.verify_sync);
+    }
+
+    #[test]
+    fn codec_threads_override_and_resolution() {
+        let raw: Vec<String> = ["--codec-threads", "3"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&raw, &[]).unwrap();
+        let cfg = TrainConfig::defaults("mlp").override_from(&args).unwrap();
+        assert_eq!(cfg.codec_threads, 3);
+        assert_eq!(cfg.resolved_codec_threads(), 3);
+        // Default is auto: resolves to available parallelism (>= 1).
+        let auto = TrainConfig::defaults("mlp");
+        assert_eq!(auto.codec_threads, 0);
+        assert!(auto.resolved_codec_threads() >= 1);
+        // Round-trips through JSON.
+        let back =
+            TrainConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.codec_threads, 3);
     }
 
     #[test]

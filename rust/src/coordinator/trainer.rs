@@ -20,7 +20,7 @@ use anyhow::Result;
 
 use super::worker::WorkerState;
 use crate::comm::allgatherv::ring_allgatherv;
-use crate::compress::Aggregation;
+use crate::compress::{Aggregation, Codec, CodecEngine};
 use crate::config::TrainConfig;
 use crate::data::shard::Shard;
 use crate::data::{ImageDataset, TokenDataset};
@@ -60,6 +60,9 @@ pub struct Trainer<'c> {
     pub metrics: RunMetrics,
     pub phases: PhaseTimes,
     step: u64,
+    /// Parallel sharded codec engine (`--codec-threads`); width 1 takes
+    /// the exact legacy serial path.
+    engine: CodecEngine,
     // Reused step buffers (hot path: no per-step allocation).
     xs_f32: Vec<f32>,
     xs_i32: Vec<i32>,
@@ -131,7 +134,9 @@ impl<'c> Trainer<'c> {
         let n = entry.n_params;
         let b = entry.batch;
         let elems = entry.sample_elems();
+        let engine = CodecEngine::new(cfg.resolved_codec_threads());
         Ok(Trainer {
+            engine,
             rt,
             layout,
             metrics: RunMetrics::new(n, p),
@@ -209,29 +214,68 @@ impl<'c> Trainer<'c> {
         };
         self.phases.compute_s += t0.elapsed().as_secs_f64();
 
-        // (2) Encode per worker.
+        // (2) Encode per worker — fanned out across workers (and
+        // group-aligned shards) when `--codec-threads` > 1; the engine
+        // produces bytes bit-identical to the serial path.
         let t1 = std::time::Instant::now();
+        let parallel = self.engine.threads() > 1;
         let mut elements = 0u64;
         let mut payload_bits = 0u64;
         let mut wire_bytes = 0u64;
-        let mut msgs: Vec<Vec<u8>> = Vec::with_capacity(e.workers);
-        for w in 0..e.workers {
-            let msg = self.workers[w]
-                .codec
-                .encode_step(moments.gsum_of(w), moments.gsumsq_of(w));
-            elements += msg.elements;
-            payload_bits += msg.payload_bits;
-            wire_bytes += msg.bytes.len() as u64;
-            msgs.push(msg.bytes);
+        let mut msgs: Vec<Vec<u8>> = Vec::new();
+        if parallel {
+            let mut codecs: Vec<&mut dyn Codec> = self
+                .workers
+                .iter_mut()
+                .map(|w| &mut *w.codec)
+                .collect();
+            let gsums: Vec<&[f32]> = (0..e.workers).map(|w| moments.gsum_of(w)).collect();
+            let gsumsqs: Vec<&[f32]> =
+                (0..e.workers).map(|w| moments.gsumsq_of(w)).collect();
+            self.engine.encode_all(&mut codecs, &gsums, &gsumsqs);
+            for st in self.engine.stats() {
+                elements += st.elements;
+                payload_bits += st.payload_bits;
+            }
+            for m in self.engine.messages() {
+                wire_bytes += m.len() as u64;
+            }
+        } else {
+            msgs.reserve(e.workers);
+            for w in 0..e.workers {
+                let msg = self.workers[w]
+                    .codec
+                    .encode_step(moments.gsum_of(w), moments.gsumsq_of(w));
+                elements += msg.elements;
+                payload_bits += msg.payload_bits;
+                wire_bytes += msg.bytes.len() as u64;
+                msgs.push(msg.bytes);
+            }
         }
         self.phases.encode_s += t1.elapsed().as_secs_f64();
 
         // (3) Communicate: byte-accurate ring allgatherv, then decode.
         let t2 = std::time::Instant::now();
-        let gathered = ring_allgatherv(&msgs);
-        self.update.iter_mut().for_each(|u| *u = 0.0);
-        for src_msg in &gathered.gathered[0] {
-            self.workers[0].codec.decode_into(src_msg, &mut self.update)?;
+        let gathered = if parallel {
+            ring_allgatherv(self.engine.messages())
+        } else {
+            ring_allgatherv(&msgs)
+        };
+        if parallel {
+            // Parallel decode: parse each gathered message once, then
+            // reduce disjoint index ranges in message order — bit-equal
+            // to the serial loop below (verify_sync cross-checks it
+            // against a serial decode every step when enabled).
+            self.engine.decode_all(
+                &*self.workers[0].codec,
+                &gathered.gathered[0],
+                &mut self.update,
+            )?;
+        } else {
+            self.update.iter_mut().for_each(|u| *u = 0.0);
+            for src_msg in &gathered.gathered[0] {
+                self.workers[0].codec.decode_into(src_msg, &mut self.update)?;
+            }
         }
         if self.workers[0].codec.aggregation() == Aggregation::Mean {
             let inv = 1.0 / e.workers as f32;

@@ -1,0 +1,334 @@
+//! `repro bench-codecs` — the §Perf L3 wire-path benchmark.
+//!
+//! Measures per-codec encode/decode throughput over a gradient-realistic
+//! stream at `workers` simulated workers, comparing the serial path
+//! (`threads = 1`: per-worker `encode_step` + sequential `decode_into`,
+//! exactly what the trainer runs pre-engine) against the parallel
+//! sharded engine (`threads > 1`), plus steady-state heap-allocation
+//! counts when the counting allocator is installed (the `repro` binary
+//! installs it; see `util::alloc`).
+//!
+//! Emits a markdown table and, with `--json`, a `BENCH_codecs.json`
+//! record so the perf trajectory is tracked across PRs.
+
+use crate::bench::Bencher;
+use crate::compress::{Codec, CodecEngine, CodecSpec};
+use crate::model::Layout;
+use crate::testkit;
+use crate::util::alloc;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Pcg32;
+use crate::util::threadpool::ThreadPool;
+
+pub struct BenchCodecsOpts {
+    /// Gradient elements per worker stream.
+    pub n: usize,
+    /// Quantization-group size of the synthetic layout.
+    pub group: usize,
+    /// Simulated workers (one codec instance each).
+    pub workers: usize,
+    /// Engine widths to measure (1 = the exact legacy serial path).
+    pub threads: Vec<usize>,
+    /// Steps in the allocation-count probe.
+    pub alloc_steps: u32,
+    pub codecs: Vec<CodecSpec>,
+}
+
+impl Default for BenchCodecsOpts {
+    fn default() -> Self {
+        BenchCodecsOpts {
+            n: 1_000_000,
+            group: 4096,
+            workers: 8,
+            threads: vec![1, ThreadPool::available()],
+            alloc_steps: 5,
+            codecs: vec![
+                CodecSpec::Vgc { alpha: 1.5, zeta: 0.999 },
+                CodecSpec::VgcCompact { alpha: 1.5, zeta: 0.999 },
+                CodecSpec::Strom { tau: 0.01 },
+                CodecSpec::Hybrid { tau: 0.01, alpha: 2.0, zeta: 0.999 },
+                CodecSpec::Adaptive { pi: 0.01 },
+                CodecSpec::None,
+            ],
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchCodecsRow {
+    pub codec: String,
+    pub threads: usize,
+    pub encode_elem_per_s: f64,
+    pub decode_elem_per_s: f64,
+    /// p·n elements over one encode + one decode of all messages.
+    pub combined_elem_per_s: f64,
+    /// Steady-state heap allocations per step (None when the counting
+    /// allocator is not installed).
+    pub allocs_per_step: Option<f64>,
+    pub wire_bytes_per_worker: u64,
+}
+
+/// Run the sweep. Workers all see the same fixed per-worker streams, so
+/// serial and parallel rows measure identical work.
+pub fn bench_codecs(opts: &BenchCodecsOpts) -> Vec<BenchCodecsRow> {
+    let b = Bencher::default();
+    let layout = Layout::uniform(opts.n, opts.group);
+    let mut rng = Pcg32::new(42, 7);
+    let inputs: Vec<(Vec<f32>, Vec<f32>)> = (0..opts.workers)
+        .map(|_| {
+            let g = testkit::gradient_vec(&mut rng, opts.n);
+            let q: Vec<f32> = g.iter().map(|x| x * x * 1.5).collect();
+            (g, q)
+        })
+        .collect();
+    let mut rows = Vec::new();
+    for spec in &opts.codecs {
+        for &threads in &opts.threads {
+            rows.push(bench_one(&b, spec, threads, &layout, &inputs, opts));
+        }
+    }
+    rows
+}
+
+fn bench_one(
+    b: &Bencher,
+    spec: &CodecSpec,
+    threads: usize,
+    layout: &Layout,
+    inputs: &[(Vec<f32>, Vec<f32>)],
+    opts: &BenchCodecsOpts,
+) -> BenchCodecsRow {
+    let p = inputs.len();
+    let n = layout.n();
+    let mut codecs: Vec<Box<dyn Codec>> =
+        (0..p).map(|w| spec.build(layout, w as u64)).collect();
+    let mut engine = CodecEngine::new(threads);
+    let mut update = vec![0.0f32; n];
+    let gs: Vec<&[f32]> = inputs.iter().map(|(g, _)| g.as_slice()).collect();
+    let qs: Vec<&[f32]> = inputs.iter().map(|(_, q)| q.as_slice()).collect();
+    let name = spec.label();
+
+    // Warm the residual state + buffer capacities, and capture one set
+    // of messages for the decode benchmark.
+    let msgs: Vec<Vec<u8>> = {
+        let mut refs: Vec<&mut dyn Codec> = codecs.iter_mut().map(|c| &mut **c).collect();
+        engine.encode_all(&mut refs, &gs, &qs);
+        engine.encode_all(&mut refs, &gs, &qs);
+        engine.messages().to_vec()
+    };
+    let wire_bytes_per_worker =
+        msgs.iter().map(|m| m.len() as u64).sum::<u64>() / p.max(1) as u64;
+
+    let (enc, dec, allocs) = if threads == 1 {
+        // The exact legacy serial path: owned-message encode, sequential
+        // accumulate decode.
+        let enc = b.run(&format!("encode/{name}/serial"), || {
+            for w in 0..p {
+                let msg = codecs[w].encode_step(gs[w], qs[w]);
+                std::hint::black_box(msg.elements);
+            }
+        });
+        let dec = b.run(&format!("decode/{name}/serial"), || {
+            for x in update.iter_mut() {
+                *x = 0.0;
+            }
+            for m in &msgs {
+                codecs[0].decode_into(m, &mut update).unwrap();
+            }
+            std::hint::black_box(update[0]);
+        });
+        let allocs = probe_allocs(opts.alloc_steps, || {
+            for w in 0..p {
+                let msg = codecs[w].encode_step(gs[w], qs[w]);
+                std::hint::black_box(msg.elements);
+            }
+        });
+        (enc, dec, allocs)
+    } else {
+        let mut refs: Vec<&mut dyn Codec> = codecs.iter_mut().map(|c| &mut **c).collect();
+        let enc = b.run(&format!("encode/{name}/t{threads}"), || {
+            engine.encode_all(&mut refs, &gs, &qs);
+        });
+        drop(refs);
+        let dec = b.run(&format!("decode/{name}/t{threads}"), || {
+            engine.decode_all(&*codecs[0], &msgs, &mut update).unwrap();
+            std::hint::black_box(update[0]);
+        });
+        let mut refs: Vec<&mut dyn Codec> = codecs.iter_mut().map(|c| &mut **c).collect();
+        let allocs = probe_allocs(opts.alloc_steps, || {
+            engine.encode_all(&mut refs, &gs, &qs);
+        });
+        (enc, dec, allocs)
+    };
+
+    let items = (p * n) as f64;
+    let combined = items / (enc.mean.as_secs_f64() + dec.mean.as_secs_f64());
+    BenchCodecsRow {
+        codec: name,
+        threads,
+        encode_elem_per_s: enc.throughput(items),
+        decode_elem_per_s: dec.throughput(items),
+        combined_elem_per_s: combined,
+        allocs_per_step: allocs,
+        wire_bytes_per_worker,
+    }
+}
+
+/// Allocation events per iteration of `step` (None when the counting
+/// allocator is not installed — the library tests, for example).
+fn probe_allocs<F: FnMut()>(steps: u32, mut step: F) -> Option<f64> {
+    if !alloc::counting_enabled() {
+        return None;
+    }
+    let steps = steps.max(1);
+    step(); // settle capacities
+    let before = alloc::allocations();
+    for _ in 0..steps {
+        step();
+    }
+    Some((alloc::allocations() - before) as f64 / steps as f64)
+}
+
+/// The headline acceptance ratio: best parallel combined throughput
+/// over the serial combined throughput for the given codec label.
+pub fn speedup_for(rows: &[BenchCodecsRow], codec_label: &str) -> Option<f64> {
+    let serial = rows
+        .iter()
+        .find(|r| r.codec == codec_label && r.threads == 1)?;
+    let best = rows
+        .iter()
+        .filter(|r| r.codec == codec_label && r.threads > 1)
+        .map(|r| r.combined_elem_per_s)
+        .fold(f64::NAN, f64::max);
+    if best.is_nan() {
+        None
+    } else {
+        Some(best / serial.combined_elem_per_s)
+    }
+}
+
+pub fn bench_codecs_markdown(opts: &BenchCodecsOpts, rows: &[BenchCodecsRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "# codec engine bench — n={} workers={} group={}\n\n",
+        opts.n, opts.workers, opts.group
+    ));
+    out.push_str(
+        "| codec | threads | encode Melem/s | decode Melem/s | combined Melem/s | allocs/step | wire B/worker |\n",
+    );
+    out.push_str("|---|---|---|---|---|---|---|\n");
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {:.2} | {:.2} | {:.2} | {} | {} |\n",
+            r.codec,
+            r.threads,
+            r.encode_elem_per_s / 1e6,
+            r.decode_elem_per_s / 1e6,
+            r.combined_elem_per_s / 1e6,
+            r.allocs_per_step
+                .map(|a| format!("{a:.1}"))
+                .unwrap_or_else(|| "n/a".into()),
+            r.wire_bytes_per_worker,
+        ));
+    }
+    let vgc_label = CodecSpec::Vgc { alpha: 1.5, zeta: 0.999 }.label();
+    if let Some(sp) = speedup_for(rows, &vgc_label) {
+        out.push_str(&format!(
+            "\nvgc combined encode+decode speedup (parallel / serial): {sp:.2}x\n"
+        ));
+    }
+    out
+}
+
+pub fn bench_codecs_json(opts: &BenchCodecsOpts, rows: &[BenchCodecsRow]) -> Json {
+    let vgc_label = CodecSpec::Vgc { alpha: 1.5, zeta: 0.999 }.label();
+    obj(vec![
+        ("bench", s("codecs")),
+        ("n", num(opts.n as f64)),
+        ("workers", num(opts.workers as f64)),
+        ("group", num(opts.group as f64)),
+        (
+            "vgc_parallel_speedup",
+            speedup_for(rows, &vgc_label).map(num).unwrap_or(Json::Null),
+        ),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("codec", s(&r.codec)),
+                            ("threads", num(r.threads as f64)),
+                            ("encode_elem_per_s", num(r.encode_elem_per_s)),
+                            ("decode_elem_per_s", num(r.decode_elem_per_s)),
+                            ("combined_elem_per_s", num(r.combined_elem_per_s)),
+                            (
+                                "allocs_per_step",
+                                r.allocs_per_step.map(num).unwrap_or(Json::Null),
+                            ),
+                            (
+                                "wire_bytes_per_worker",
+                                num(r.wire_bytes_per_worker as f64),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn tiny_opts() -> BenchCodecsOpts {
+        BenchCodecsOpts {
+            n: 2000,
+            group: 64,
+            workers: 3,
+            threads: vec![1, 2],
+            alloc_steps: 1,
+            codecs: vec![
+                CodecSpec::Vgc { alpha: 1.5, zeta: 0.999 },
+                CodecSpec::Strom { tau: 0.01 },
+            ],
+        }
+    }
+
+    #[test]
+    fn sweep_produces_rows_and_json() {
+        // Shrink the bencher budget via a tiny workload; the default
+        // Bencher still iterates but each iteration is microseconds.
+        let opts = tiny_opts();
+        let b = Bencher {
+            min_iters: 2,
+            budget: Duration::from_millis(5),
+            warmup: 1,
+        };
+        let layout = Layout::uniform(opts.n, opts.group);
+        let mut rng = Pcg32::new(1, 1);
+        let inputs: Vec<(Vec<f32>, Vec<f32>)> = (0..opts.workers)
+            .map(|_| {
+                let g = testkit::gradient_vec(&mut rng, opts.n);
+                let q: Vec<f32> = g.iter().map(|x| x * x).collect();
+                (g, q)
+            })
+            .collect();
+        let mut rows = Vec::new();
+        for spec in &opts.codecs {
+            for &threads in &opts.threads {
+                rows.push(bench_one(&b, spec, threads, &layout, &inputs, &opts));
+            }
+        }
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|r| r.combined_elem_per_s > 0.0));
+        let md = bench_codecs_markdown(&opts, &rows);
+        assert!(md.contains("| codec |"), "{md}");
+        assert!(md.contains("speedup"), "{md}");
+        let j = bench_codecs_json(&opts, &rows).to_string();
+        let back = Json::parse(&j).unwrap();
+        assert_eq!(back.expect("rows").unwrap().as_arr().unwrap().len(), 4);
+    }
+}

@@ -8,6 +8,14 @@
 //! * [`costmodel_report`] — the Section-5 speedup analysis (A5).
 //! * [`fabric_sweep`] — simulated {topology × bandwidth × workers ×
 //!   codec} step times over the event-driven fabric (F1).
+//! * [`benchcodecs`] — §Perf codec-engine throughput sweep
+//!   (`repro bench-codecs`, serial vs parallel, `BENCH_codecs.json`).
+
+pub mod benchcodecs;
+
+pub use benchcodecs::{
+    bench_codecs, bench_codecs_json, bench_codecs_markdown, BenchCodecsOpts, BenchCodecsRow,
+};
 
 use anyhow::Result;
 

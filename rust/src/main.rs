@@ -17,10 +17,19 @@ use anyhow::Result;
 use vgc::compress::CodecSpec;
 use vgc::config::TrainConfig;
 use vgc::coordinator::Trainer;
-use vgc::experiments::{self, FabricSweepOpts};
+use vgc::experiments::{self, BenchCodecsOpts, FabricSweepOpts};
 use vgc::fabric::{build_topology, Fabric, FabricConfig, Straggler, TopologyKind};
 use vgc::runtime::{Client, Manifest};
+use vgc::util::alloc::CountingAlloc;
 use vgc::util::cli::Args;
+use vgc::util::threadpool::ThreadPool;
+
+/// Counting allocator so `repro bench-codecs` can report steady-state
+/// allocation counts for the codec wire path (§Perf zero-allocation
+/// contract). One relaxed atomic increment per allocation — noise next
+/// to the allocation itself.
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc::new();
 
 const USAGE: &str = "\
 repro — Variance-based Gradient Compression (ICLR'18) reproduction
@@ -30,6 +39,7 @@ USAGE:
                   [--lr SCHED] [--steps N] [--seed S] [--weight-decay W]
                   [--train-size N] [--test-size N] [--signal F]
                   [--eval-every K] [--log-every K] [--verify-sync]
+                  [--codec-threads N]   (0 = auto, 1 = serial wire path)
                   [--loss-curve FILE.csv] [--artifacts DIR]
                   [--topology TOPO] [--bandwidth-gbps G] [--latency-us L]
                   [--jitter-us J] [--stragglers NODE:SLOW,..] [--fabric-seed S]
@@ -43,6 +53,10 @@ USAGE:
                   [--n PARAMS] [--latency-us L] [--jitter-us J]
                   [--stragglers NODE:SLOW,..] [--seed S] [--warmup K]
                   [--out FILE.json] [--md FILE.md]
+  repro bench-codecs
+                  [--n PARAMS] [--group SIZE] [--workers P]
+                  [--threads T1,T2,..] [--codecs SPEC+SPEC+..]
+                  [--alloc-steps K] [--json FILE.json]
   repro inspect   [--artifacts DIR]
 
 Codec SPECs: none | vgc:alpha=A[,zeta=Z] | strom:tau=T |
@@ -55,7 +69,7 @@ Topologies:  ring | full | star | tree[:branch]
 const TRAIN_FLAGS: &[&str] = &[
     "model", "codec", "optimizer", "lr", "steps", "seed", "weight-decay",
     "train-size", "test-size", "signal", "eval-every", "log-every",
-    "verify-sync", "loss-curve", "artifacts",
+    "verify-sync", "codec-threads", "loss-curve", "artifacts",
 ];
 
 /// Train accepts its own flags plus the fabric overrides — built at
@@ -83,6 +97,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "fabric-sweep" => cmd_fabric_sweep(&args),
+        "bench-codecs" => cmd_bench_codecs(&args),
         "inspect" => cmd_inspect(&args),
         "" | "help" | "--help" => {
             print!("{USAGE}");
@@ -102,10 +117,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     let manifest = Manifest::load(artifacts_dir(args))?;
     let client = Client::cpu()?;
     println!(
-        "model={model} codec={} optimizer={} steps={} (platform: {})",
+        "model={model} codec={} optimizer={} steps={} codec-threads={} (platform: {})",
         cfg.codec.label(),
         cfg.optimizer,
         cfg.steps,
+        cfg.resolved_codec_threads(),
         client.platform()
     );
     let mut trainer = Trainer::new(&client, &manifest, cfg)?;
@@ -235,6 +251,52 @@ fn cmd_fabric_sweep(args: &Args) -> Result<()> {
     }
     if let Some(path) = args.get("out") {
         std::fs::write(path, experiments::fabric_sweep_json(&rows).to_string())?;
+        println!("\nresults written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_bench_codecs(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "n", "group", "workers", "threads", "codecs", "alloc-steps", "json",
+    ])?;
+    let mut opts = BenchCodecsOpts::default();
+    let threads = args.parse_list::<usize>("threads")?;
+    if !threads.is_empty() {
+        anyhow::ensure!(
+            threads.iter().all(|&t| t >= 1),
+            "--threads values must be >= 1"
+        );
+        opts.threads = threads;
+    }
+    opts.n = args.parse_or("n", opts.n)?;
+    anyhow::ensure!(opts.n > 0, "--n must be positive");
+    opts.group = args.parse_or("group", opts.group)?;
+    anyhow::ensure!(opts.group > 0, "--group must be positive");
+    opts.workers = args.parse_or("workers", opts.workers)?;
+    anyhow::ensure!(opts.workers > 0, "--workers must be positive");
+    opts.alloc_steps = args.parse_or("alloc-steps", opts.alloc_steps)?;
+    // Codec specs contain commas, so the list separator is '+' (same
+    // convention as fabric-sweep).
+    if let Some(spec) = args.get("codecs") {
+        opts.codecs = spec
+            .split('+')
+            .filter(|c| !c.trim().is_empty())
+            .map(|c| CodecSpec::parse(c.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(!opts.codecs.is_empty(), "--codecs lists no specs");
+    }
+    println!(
+        "bench-codecs: n={} workers={} threads={:?} (available parallelism: {})",
+        opts.n,
+        opts.workers,
+        opts.threads,
+        ThreadPool::available()
+    );
+    let rows = experiments::bench_codecs(&opts);
+    print!("{}", experiments::bench_codecs_markdown(&opts, &rows));
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, experiments::bench_codecs_json(&opts, &rows).to_string())?;
         println!("\nresults written to {path}");
     }
     Ok(())

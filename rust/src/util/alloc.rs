@@ -1,0 +1,74 @@
+//! Counting global allocator — the §Perf zero-allocation contract's
+//! measuring stick.
+//!
+//! Binaries (and the `alloc_steady` integration test) opt in with
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static GLOBAL: vgc::util::alloc::CountingAlloc = CountingAlloc::new();
+//! ```
+//!
+//! after which [`allocations`] reports the cumulative number of heap
+//! allocation events (alloc / alloc_zeroed / realloc) process-wide.
+//! `repro bench-codecs` samples the counter around steady-state codec
+//! steps to *record* each path's allocation behavior (the legacy
+//! serial path allocates per message by design; the engine's reused
+//! buffers do not). The zero-allocation proof for the reworked kernels
+//! themselves lives in `tests/alloc_steady.rs`, which drives
+//! `encode_step_into`/`decode_entries` directly. When the counter was
+//! never installed it stays 0 and the bench reports allocation counts
+//! as unavailable.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Thin wrapper over [`System`] that counts allocation events.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    pub const fn new() -> CountingAlloc {
+        CountingAlloc
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        CountingAlloc::new()
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Cumulative allocation events since process start (0 when the counting
+/// allocator is not installed as `#[global_allocator]`).
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// True once any allocation has been observed — i.e. the counting
+/// allocator is actually installed (every Rust program allocates long
+/// before user code runs).
+pub fn counting_enabled() -> bool {
+    allocations() > 0
+}

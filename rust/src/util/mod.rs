@@ -1,8 +1,11 @@
-//! Shared substrates: PRNG, JSON, CLI parsing, and small numeric helpers.
+//! Shared substrates: PRNG, JSON, CLI parsing, scoped threading, and
+//! small numeric helpers.
 
+pub mod alloc;
 pub mod cli;
 pub mod json;
 pub mod rng;
+pub mod threadpool;
 
 /// Mean of a slice (0.0 for empty — callers decide if that is meaningful).
 pub fn mean(xs: &[f32]) -> f32 {

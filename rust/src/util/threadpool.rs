@@ -1,0 +1,163 @@
+//! Scoped thread pool for the parallel codec engine (§Perf L3).
+//!
+//! The offline crate set has no `rayon`, so this is a minimal
+//! work-queue fan-out built directly on [`std::thread::scope`]: each
+//! [`ThreadPool::run`] call spawns up to `threads` scoped OS threads
+//! that drain a shared task queue, then joins them all before
+//! returning. Tasks may therefore borrow from the caller's stack
+//! (mutable disjoint slices, shared inputs) with no `unsafe` and no
+//! lifetime erasure — the scope guarantees every borrow outlives every
+//! task.
+//!
+//! Cost model: one `run` call costs O(threads) thread spawns (a few
+//! tens of microseconds each), which is negligible against the
+//! multi-millisecond encode/decode phases it parallelizes. The codec
+//! *kernels* stay allocation-free; the fan-out itself costs O(threads)
+//! small allocations per phase (boxed tasks + thread stacks), which is
+//! the documented exception to the zero-allocation steady state.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// A unit of work: runs once, may borrow caller state for `'s`.
+pub type Task<'s> = Box<dyn FnOnce() + Send + 's>;
+
+/// Fixed-width scoped thread pool. `threads == 1` runs every task
+/// inline on the caller's thread (the exact serial path, no spawns).
+#[derive(Debug, Clone)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        ThreadPool {
+            threads: threads.max(1),
+        }
+    }
+
+    /// The machine's available parallelism (fallback 1).
+    pub fn available() -> usize {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run all tasks to completion. Tasks are executed in queue order by
+    /// whichever worker is free (completion order is unspecified, so
+    /// tasks must write to disjoint state). Panics in a task propagate
+    /// to the caller after all threads join.
+    pub fn run<'s>(&self, tasks: Vec<Task<'s>>) {
+        if self.threads == 1 || tasks.len() <= 1 {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let n_workers = self.threads.min(tasks.len());
+        let queue: Mutex<VecDeque<Task<'s>>> = Mutex::new(tasks.into());
+        std::thread::scope(|scope| {
+            for _ in 0..n_workers {
+                scope.spawn(|| loop {
+                    let task = queue.lock().unwrap().pop_front();
+                    match task {
+                        Some(t) => t(),
+                        None => break,
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Split `n` items into at most `parts` contiguous near-equal ranges
+/// (the last may be short; empty input yields no ranges).
+pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let mut out = Vec::new();
+    if n == 0 {
+        return out;
+    }
+    let chunk = n.div_ceil(parts.max(1));
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + chunk).min(n);
+        out.push(lo..hi);
+        lo = hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        for threads in [1, 2, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            let counter = AtomicUsize::new(0);
+            let tasks: Vec<Task> = (0..20)
+                .map(|_| {
+                    let c = &counter;
+                    Box::new(move || {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    }) as Task
+                })
+                .collect();
+            pool.run(tasks);
+            assert_eq!(counter.load(Ordering::Relaxed), 20, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tasks_may_mutate_disjoint_borrowed_slices() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u64; 1000];
+        let mut tasks: Vec<Task> = Vec::new();
+        for (k, chunk) in data.chunks_mut(100).enumerate() {
+            tasks.push(Box::new(move || {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x = (k * 100 + i) as u64;
+                }
+            }));
+        }
+        pool.run(tasks);
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as u64);
+        }
+    }
+
+    #[test]
+    fn zero_and_single_task_inputs() {
+        let pool = ThreadPool::new(4);
+        pool.run(Vec::new());
+        let mut hit = false;
+        pool.run(vec![Box::new(|| hit = true) as Task]);
+        assert!(hit);
+    }
+
+    #[test]
+    fn clamps_to_one_thread_minimum() {
+        assert_eq!(ThreadPool::new(0).threads(), 1);
+        assert!(ThreadPool::available() >= 1);
+    }
+
+    #[test]
+    fn split_ranges_partitions_exactly() {
+        assert_eq!(split_ranges(0, 4), vec![]);
+        assert_eq!(split_ranges(10, 3), vec![0..4, 4..8, 8..10]);
+        assert_eq!(split_ranges(3, 8), vec![0..1, 1..2, 2..3]);
+        let rs = split_ranges(1_000_003, 7);
+        assert!(rs.len() <= 7);
+        assert_eq!(rs.first().unwrap().start, 0);
+        assert_eq!(rs.last().unwrap().end, 1_000_003);
+        for w in rs.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! The §Perf zero-allocation contract: once buffer capacities converge,
+//! the sparse codec kernels (`encode_step_into` + `decode_entries`)
+//! perform **zero** heap allocations per step. This test installs the
+//! counting allocator for its own test binary and measures deltas
+//! around steady-state steps.
+//!
+//! Scope: the paper codecs and their wire path (vgc, vgc-γ, strom,
+//! hybrid, adaptive, none). The stochastic dense baselines (qsgd,
+//! terngrad, onebit) reuse their encode scratch too but their decode
+//! goes through the dense fallback, which is exercised for the `none`
+//! codec here.
+
+use vgc::compress::{Codec, CodecSpec, DecodeBuf};
+use vgc::model::Layout;
+use vgc::testkit;
+use vgc::util::alloc::{allocations, CountingAlloc};
+use vgc::util::rng::Pcg32;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc::new();
+
+fn steady_state_allocs(spec: &CodecSpec) -> u64 {
+    let n = 20_000;
+    let layout = Layout::uniform(n, 256);
+    let mut codec = spec.build(&layout, 0);
+    let mut rng = Pcg32::new(7, 7);
+    let g = testkit::gradient_vec(&mut rng, n);
+    let q: Vec<f32> = g.iter().map(|x| x * x * 0.9).collect();
+    let mut bytes = Vec::new();
+    let mut buf = DecodeBuf::new();
+    let mut sink = 0u64;
+
+    let mut one_step = |codec: &mut Box<dyn Codec>,
+                        bytes: &mut Vec<u8>,
+                        buf: &mut DecodeBuf,
+                        sink: &mut u64| {
+        let st = codec.encode_step_into(&g, &q, bytes);
+        *sink ^= st.elements;
+        buf.reset(n);
+        codec.decode_entries(bytes, buf).unwrap();
+        *sink ^= buf.len() as u64;
+    };
+
+    // Warm up: residual state cycles and every scratch capacity reaches
+    // its peak within a few steps on a fixed input stream.
+    for _ in 0..8 {
+        one_step(&mut codec, &mut bytes, &mut buf, &mut sink);
+    }
+    // Measure: the minimum delta over several steps (a converged step
+    // must allocate nothing).
+    let mut min_delta = u64::MAX;
+    for _ in 0..4 {
+        let before = allocations();
+        one_step(&mut codec, &mut bytes, &mut buf, &mut sink);
+        min_delta = min_delta.min(allocations() - before);
+    }
+    std::hint::black_box(sink);
+    min_delta
+}
+
+#[test]
+fn steady_state_wire_path_allocates_nothing() {
+    for spec in [
+        CodecSpec::Vgc { alpha: 1.5, zeta: 0.999 },
+        CodecSpec::VgcCompact { alpha: 1.5, zeta: 0.999 },
+        CodecSpec::Strom { tau: 0.01 },
+        CodecSpec::Hybrid { tau: 0.01, alpha: 2.0, zeta: 0.999 },
+        CodecSpec::Adaptive { pi: 0.02 },
+        CodecSpec::None,
+    ] {
+        let allocs = steady_state_allocs(&spec);
+        assert_eq!(
+            allocs,
+            0,
+            "codec {} allocated {allocs} times in a steady-state step",
+            spec.label()
+        );
+    }
+}

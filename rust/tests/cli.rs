@@ -130,6 +130,80 @@ fn short_train_run_emits_summary_and_curve() {
 }
 
 #[test]
+fn bench_codecs_runs_and_emits_json() {
+    let json_path = std::env::temp_dir().join("vgc_bench_codecs.json");
+    let out = repro()
+        .env("VGC_BENCH_FAST", "1")
+        .args([
+            "bench-codecs",
+            "--n", "20000",
+            "--group", "256",
+            "--workers", "3",
+            "--threads", "1,2",
+            "--codecs", "vgc:alpha=1.5+strom:tau=0.01",
+            "--json", json_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("| codec |"), "{text}");
+    assert!(text.contains("speedup"), "{text}");
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    let j = vgc::util::json::Json::parse(&json).unwrap();
+    let rows = j.expect("rows").unwrap();
+    assert_eq!(rows.as_arr().unwrap().len(), 4); // 2 codecs × 2 widths
+    // The repro binary installs the counting allocator, so allocation
+    // counts must be real numbers (not null) in at least the serial rows.
+    assert!(json.contains("allocs_per_step"));
+}
+
+#[test]
+fn bench_codecs_rejects_bad_flags() {
+    let out = repro()
+        .args(["bench-codecs", "--threads", "0"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let out = repro()
+        .args(["bench-codecs", "--codecs", "qsgd:bits=0"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn train_with_parallel_codec_engine_keeps_sync() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    // verify_sync cross-decodes serially every step: with
+    // --codec-threads 2 this asserts engine == serial bit-for-bit on a
+    // live training run.
+    let out = repro()
+        .args([
+            "train", "--model", "mlp", "--codec", "vgc:alpha=1.5", "--steps", "5",
+            "--eval-every", "0", "--log-every", "0",
+            "--codec-threads", "2", "--verify-sync",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("codec-threads=2"), "{text}");
+    assert!(text.contains("compression ratio"));
+}
+
+#[test]
 fn fig3_from_results_converts_json() {
     let dir = std::env::temp_dir();
     let json = r#"[{"table":"table1","method":"vgc alpha=1","optimizer":"adam",
