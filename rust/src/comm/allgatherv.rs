@@ -1,23 +1,25 @@
-//! Ring allgatherv: every node ends up holding every node's message.
+//! Allgatherv: every node ends up holding every node's message.
 //!
-//! This is now a thin front over the event-driven fabric's ring
-//! backend ([`crate::fabric::ring`]): the classic p−1-hop circulation
-//! where each node injects its own block rightward and forwards every
-//! block it receives except the one that completes its set. Bytes
-//! genuinely move between per-node endpoints, so a bug in block
-//! bookkeeping shows up as corrupted codec messages downstream, not
-//! just a wrong counter. Traffic accounting is unchanged from the
-//! pre-fabric lockstep implementation (Σ_j n_j − n_(i+1) per node,
-//! p−1 rounds).
+//! [`allgatherv`] is a thin front over the event-driven fabric: it
+//! builds the configured [`crate::fabric::Topology`] (ring by default
+//! — the paper's substrate — or star/tree/torus/hierarchy/mesh),
+//! wires per-link overrides and gather segmentation from the
+//! [`FabricConfig`], and moves the *actual bytes* between per-node
+//! endpoints — so a bug in block bookkeeping shows up as corrupted
+//! codec messages downstream, not just a wrong counter. The gathered
+//! matrix is topology-independent (every backend delivers the same
+//! bytes); traffic accounting and the simulated wall-clock
+//! ([`GatherResult::time_ps`]) come from the configured cluster shape.
+//! The trainer's comm phase calls this front, so `--topology` governs
+//! the fabric its decode path runs on.
 //!
-//! Wall-clock on this path stays *modeled* as before (the default
-//! fabric config is deterministic and contention-free here — see
-//! [`costmodel`] for the paper's pipelined-ring bound and its
-//! simulated cross-check); callers that want simulated time, jitter,
-//! stragglers or other topologies use `fabric` directly.
+//! [`ring_allgatherv`] keeps the classic default: the p−1-hop ring
+//! circulation with traffic `Σ_j n_j − n_(i+1)` per node and p−1
+//! rounds, byte- and bit-identical to the pre-fabric lockstep
+//! implementation.
 
 use super::Traffic;
-use crate::fabric::{build_topology, Fabric, FabricConfig, TopologyKind};
+use crate::fabric::{build_topology, Fabric, FabricConfig, Time};
 
 /// Result of one allgatherv: `gathered[dst][src]` is node `src`'s
 /// message as received by node `dst` (every row must be identical —
@@ -25,24 +27,35 @@ use crate::fabric::{build_topology, Fabric, FabricConfig, TopologyKind};
 pub struct GatherResult {
     pub gathered: Vec<Vec<Vec<u8>>>,
     pub traffic: Traffic,
+    /// Simulated completion time on the configured fabric, ps.
+    pub time_ps: Time,
 }
 
-/// Run a ring allgatherv over each node's input message.
-pub fn ring_allgatherv(inputs: &[Vec<u8>]) -> GatherResult {
+/// Run an allgatherv over each node's input message on the configured
+/// topology/link model.
+pub fn allgatherv(cfg: &FabricConfig, inputs: &[Vec<u8>]) -> GatherResult {
     let p = inputs.len();
     assert!(p > 0, "allgatherv needs at least one node");
-    let topo = build_topology(TopologyKind::Ring, p);
-    let mut fabric = Fabric::for_config(&FabricConfig::default(), topo.node_count());
+    let topo = build_topology(cfg.topology, p);
+    let mut fabric = Fabric::for_topology(cfg, &*topo);
     let sim = topo.allgatherv(&mut fabric, inputs);
     GatherResult {
         gathered: sim.gathered,
         traffic: sim.traffic,
+        time_ps: sim.time_ps,
     }
+}
+
+/// Run a ring allgatherv over each node's input message (the default
+/// fabric config: uniform GigE links, no segmentation).
+pub fn ring_allgatherv(inputs: &[Vec<u8>]) -> GatherResult {
+    allgatherv(&FabricConfig::default(), inputs)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fabric::TopologyKind;
     use crate::testkit;
     use crate::util::rng::Pcg32;
 
@@ -67,6 +80,7 @@ mod tests {
             }
         }
         assert_eq!(res.traffic.rounds, 3);
+        assert!(res.time_ps > 0);
     }
 
     #[test]
@@ -93,6 +107,21 @@ mod tests {
                 .sum();
             assert_eq!(res.traffic.bytes_sent_per_node[i], expected, "node {i}");
         }
+    }
+
+    #[test]
+    fn configured_topology_changes_timing_not_bytes() {
+        let inputs = msgs(&[64, 128, 32, 96]);
+        let ring = ring_allgatherv(&inputs);
+        let star = allgatherv(
+            &FabricConfig {
+                topology: TopologyKind::Star,
+                ..FabricConfig::default()
+            },
+            &inputs,
+        );
+        assert_eq!(ring.gathered, star.gathered, "bytes are topology-invariant");
+        assert_ne!(ring.time_ps, star.time_ps, "timing reflects the topology");
     }
 
     #[test]

@@ -130,6 +130,62 @@ pub fn ring_gatherv_bytes_per_node(sizes: &[u64]) -> Vec<u64> {
         .collect()
 }
 
+/// Analytic per-node egress bytes for the 2-D torus allgatherv
+/// (`fabric::torus`, node `(r, c)` = id `r·cols + c`): the row phase
+/// is a ring within row `r` (every row block except the one arriving
+/// on the last row hop, `Σ_{j∈row r} n_j − n_(r, (c+1) mod cols)`),
+/// and in the column phase the node sends every block whose origin
+/// row is not `(r+1) mod rows` exactly once
+/// (`Σ_j n_j − Σ_{j∈row (r+1) mod rows} n_j`). Totals match the flat
+/// ring's `p − 1` sends per block.
+pub fn torus_gatherv_bytes_per_node(sizes: &[u64], rows: usize, cols: usize) -> Vec<u64> {
+    assert_eq!(sizes.len(), rows * cols, "one size per torus node");
+    let total: u64 = sizes.iter().sum();
+    let row_total =
+        |r: usize| -> u64 { (0..cols).map(|c| sizes[r * cols + c]).sum() };
+    (0..rows * cols)
+        .map(|w| {
+            let (r, c) = (w / cols, w % cols);
+            let row_part = if cols > 1 {
+                row_total(r) - sizes[r * cols + (c + 1) % cols]
+            } else {
+                0
+            };
+            let col_part = if rows > 1 {
+                total - row_total((r + 1) % rows)
+            } else {
+                0
+            };
+            row_part + col_part
+        })
+        .collect()
+}
+
+/// Analytic per-node egress bytes for the hierarchy allgatherv
+/// (`fabric::hierarchy`, contiguous `(start, len)` group spans, lowest
+/// id leads): a member sends its block up once; a leader of a group
+/// with `m` members sends its own block `G−1+m` times, each member
+/// block `G−1+m−1` times, and every foreign block `m` times.
+pub fn hier_gatherv_bytes_per_node(sizes: &[u64], spans: &[(usize, usize)]) -> Vec<u64> {
+    let p: usize = spans.iter().map(|&(_, l)| l).sum();
+    assert_eq!(sizes.len(), p, "one size per hierarchy worker");
+    let total: u64 = sizes.iter().sum();
+    let groups = spans.len();
+    let mut out = vec![0u64; p];
+    for &(start, len) in spans {
+        let m = (len - 1) as u64;
+        let group_total: u64 = sizes[start..start + len].iter().sum();
+        let foreign = total - group_total;
+        out[start] = sizes[start] * (groups as u64 - 1 + m)
+            + (group_total - sizes[start]) * (groups as u64 - 1 + m).saturating_sub(1)
+            + foreign * m;
+        for w in start + 1..start + len {
+            out[w] = sizes[w];
+        }
+    }
+    out
+}
+
 /// Analytic-vs-simulated cross-check for one collective.
 #[derive(Debug, Clone, Copy)]
 pub struct SimCheck {
@@ -141,9 +197,12 @@ pub struct SimCheck {
 
 impl SimCheck {
     /// Whether the simulation respects the analytic upper bound. The
-    /// bound assumes pipelining with block size m; the fabric forwards
-    /// whole blocks (store-and-forward), so it holds whenever no single
-    /// message dwarfs the others (uniform codec messages in practice).
+    /// bound assumes pipelining with block size m; an *unsegmented*
+    /// fabric forwards whole blocks (store-and-forward), so this holds
+    /// whenever no single message dwarfs the others (uniform codec
+    /// messages in practice). The segmented crosscheck
+    /// ([`CostModel::crosscheck_ring_gatherv_segmented`]) holds — and
+    /// is tight — for skewed sizes too.
     pub fn within_bound(&self) -> bool {
         self.simulated_s <= self.analytic_s * (1.0 + 1e-9)
     }
@@ -153,14 +212,30 @@ impl CostModel {
     /// Cross-validate the Section-5 `T_v` bound against the fabric: run
     /// a real event-driven ring allgatherv with these per-node message
     /// sizes (bytes) over this model's link parameters and compare
-    /// wall-clocks.
+    /// wall-clocks. The fabric forwards whole messages here; see
+    /// [`CostModel::crosscheck_ring_gatherv_segmented`] for the
+    /// pipelined variant.
     pub fn crosscheck_ring_gatherv(&self, msg_bytes: &[u64]) -> SimCheck {
+        self.crosscheck_with_segments(msg_bytes, 0)
+    }
+
+    /// The pipelined crosscheck: messages circulate in segments of the
+    /// model's block size `m` (`m_bits / 8`), which is exactly the
+    /// pipelining the `T_v` bound assumes — so the simulated time
+    /// stays within (and converges to) the bound even when one node's
+    /// message dwarfs the others (asserted in `tests/fabric_sim.rs`).
+    pub fn crosscheck_ring_gatherv_segmented(&self, msg_bytes: &[u64]) -> SimCheck {
+        self.crosscheck_with_segments(msg_bytes, (self.m_bits / 8).max(1) as usize)
+    }
+
+    fn crosscheck_with_segments(&self, msg_bytes: &[u64], segment_bytes: usize) -> SimCheck {
         assert_eq!(msg_bytes.len(), self.p);
         let bits: Vec<u64> = msg_bytes.iter().map(|b| b * 8).collect();
         let analytic_s = self.t_allgatherv_bits(&bits);
         let inputs: Vec<Vec<u8>> = msg_bytes.iter().map(|&b| vec![0u8; b as usize]).collect();
         let cfg = crate::fabric::FabricConfig {
             link: crate::fabric::LinkSpec::from_cost_model(&self.link),
+            segment_bytes,
             ..crate::fabric::FabricConfig::default()
         };
         let topo = crate::fabric::build_topology(crate::fabric::TopologyKind::Ring, self.p);
@@ -292,6 +367,39 @@ mod tests {
             vec![550, 700, 350, 650]
         );
         assert_eq!(ring_gatherv_bytes_per_node(&[7]), vec![0]);
+    }
+
+    #[test]
+    fn torus_gatherv_bytes_formula() {
+        // 2x2: node (0,0) row-sends row0−n(0,1) = n0, col-sends
+        // total−row1 = n0+n1 → 2·n0 + n1.
+        let sizes = [10u64, 20, 30, 40];
+        let got = torus_gatherv_bytes_per_node(&sizes, 2, 2);
+        assert_eq!(got, vec![10 + 10 + 20, 20 + 20 + 10, 30 + 30 + 40, 40 + 40 + 30]);
+        // Total sends = (p−1) copies of every block.
+        let total: u64 = got.iter().sum();
+        assert_eq!(total, 3 * sizes.iter().sum::<u64>());
+        // 1×p degenerates to the ring formula.
+        let flat = [5u64, 9, 2];
+        assert_eq!(
+            torus_gatherv_bytes_per_node(&flat, 1, 3),
+            ring_gatherv_bytes_per_node(&flat)
+        );
+        assert_eq!(torus_gatherv_bytes_per_node(&[7], 1, 1), vec![0]);
+    }
+
+    #[test]
+    fn hier_gatherv_bytes_formula() {
+        // 2 groups of 2: leader 0 sends n0·(1+1) + n1·(1+1−1) + (n2+n3)·1;
+        // member 1 sends n1 once.
+        let sizes = [10u64, 20, 30, 40];
+        let spans = [(0usize, 2usize), (2, 2)];
+        let got = hier_gatherv_bytes_per_node(&sizes, &spans);
+        assert_eq!(got, vec![2 * 10 + 20 + 70, 20, 2 * 30 + 40 + 30, 40]);
+        assert_eq!(hier_gatherv_bytes_per_node(&[7], &[(0, 1)]), vec![0]);
+        // One group degenerates to a star with worker 0 as hub.
+        let got = hier_gatherv_bytes_per_node(&sizes, &[(0, 4)]);
+        assert_eq!(got, vec![3 * 10 + 2 * (20 + 30 + 40), 20, 30, 40]);
     }
 
     #[test]

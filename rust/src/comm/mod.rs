@@ -5,14 +5,17 @@
 //! The paper replaces allreduce with **allgatherv** (Sec. 4.3): each
 //! worker broadcasts its own sparse message, every worker decodes all
 //! of them locally. Both collectives are thin fronts over the
-//! event-driven fabric simulator's ring backend (`crate::fabric`):
-//! real data movement between per-node endpoints, traffic accounting
-//! per node, byte- and bit-identical to the original lockstep rounds.
-//! On this default path wall-clock stays *modeled* analytically
-//! exactly as the paper's own Section 5 does (DESIGN.md
-//! §Substitutions); [`costmodel`] additionally cross-validates the
-//! analytic bound against the fabric's simulated wall-clock, and other
-//! topologies/link models are reachable through `fabric` directly.
+//! event-driven fabric simulator (`crate::fabric`): real data movement
+//! between per-node endpoints, traffic accounting per node, byte- and
+//! bit-identical to the original lockstep rounds. `allgatherv::
+//! allgatherv` runs on whatever topology/link model the `FabricConfig`
+//! names (ring by default; star, tree, 2-D torus, NUMA hierarchy, full
+//! mesh; per-link overrides; segmented pipelining at the cost model's
+//! block size `m`) and reports the simulated wall-clock of that
+//! cluster shape — which is how the trainer's `--topology` flag
+//! reaches the comm phase. [`costmodel`] cross-validates the paper's
+//! analytic `T_v` bound against the simulated wall-clock, segmented
+//! and not.
 
 pub mod allgatherv;
 pub mod allreduce;

@@ -28,6 +28,34 @@
 //! steady-state step performs zero heap allocations in the codec
 //! kernels; the scoped thread fan-out itself costs O(threads) small
 //! allocations per phase (see `util::threadpool`).
+//!
+//! The parity contract, runnable:
+//!
+//! ```
+//! use vgc::compress::{Codec, CodecEngine, CodecSpec};
+//! use vgc::model::Layout;
+//!
+//! let layout = Layout::uniform(512, 128);
+//! let spec = CodecSpec::Vgc { alpha: 2.0, zeta: 0.999 };
+//! let grad: Vec<f32> = (0..512).map(|i| (i as f32 * 0.37).sin()).collect();
+//! let sq: Vec<f32> = grad.iter().map(|x| x * x * 0.5).collect();
+//!
+//! // The serial reference message…
+//! let mut serial = spec.build(&layout, 0);
+//! let want = serial.encode_step(&grad, &sq).bytes;
+//!
+//! // …and the engine's shard-parallel encode: bit-identical.
+//! let mut pooled = spec.build(&layout, 0);
+//! let mut engine = CodecEngine::new(4);
+//! let mut codecs: Vec<&mut dyn Codec> = vec![&mut *pooled];
+//! engine.encode_all(&mut codecs, &[grad.as_slice()], &[sq.as_slice()]);
+//! assert_eq!(engine.messages()[0], want);
+//!
+//! // Decoding the gathered messages overwrites the update vector,
+//! // bit-identical to the serial decode loop.
+//! let mut update = vec![0.0f32; 512];
+//! engine.decode_all(&*serial, &[want.clone()], &mut update).unwrap();
+//! ```
 
 use crate::util::threadpool::{Task, ThreadPool};
 

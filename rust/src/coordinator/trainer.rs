@@ -8,18 +8,25 @@
 //!    reduction is the L1 Pallas kernel).
 //! 2. **Encode** — each worker's codec ingests its increments, applies
 //!    the variance criterion, quantizes and packs its message.
-//! 3. **CommunicateAndUpdate** — messages travel a byte-accurate ring
-//!    allgatherv; every worker decodes all messages and sums them into
-//!    the global update; the optimizer applies it locally (Sec. 4.3).
+//! 3. **CommunicateAndUpdate** — messages travel a byte-accurate
+//!    allgatherv over the *configured* fabric topology (`--topology`:
+//!    ring by default, or star/tree/torus/hierarchy/mesh with per-link
+//!    overrides and optional segment pipelining); every worker decodes
+//!    all messages and sums them into the global update; the optimizer
+//!    applies it locally (Sec. 4.3). The fabric's simulated step time
+//!    accumulates in [`Trainer::sim_comm_ps`] for the run summary.
 //!
 //! All workers apply identical updates from identical gathered bytes,
 //! so one parameter vector represents them all; `verify_sync`
 //! cross-decodes from two workers' gathered views to prove it.
+//! Changing the topology never changes the gathered bytes — only the
+//! simulated wall-clock and traffic shape — so training math is
+//! fabric-invariant (asserted in `tests/training_integration.rs`).
 
 use anyhow::Result;
 
 use super::worker::WorkerState;
-use crate::comm::allgatherv::ring_allgatherv;
+use crate::comm::allgatherv::allgatherv;
 use crate::compress::{Aggregation, Codec, CodecEngine};
 use crate::config::TrainConfig;
 use crate::data::shard::Shard;
@@ -59,6 +66,9 @@ pub struct Trainer<'c> {
     data: DataSource,
     pub metrics: RunMetrics,
     pub phases: PhaseTimes,
+    /// Accumulated fabric-simulated comm time across steps, ps — the
+    /// step-communication wall-clock the configured topology predicts.
+    pub sim_comm_ps: u64,
     step: u64,
     /// Parallel sharded codec engine (`--codec-threads`); width 1 takes
     /// the exact legacy serial path.
@@ -78,6 +88,10 @@ impl<'c> Trainer<'c> {
         let layout = Layout::from_manifest(&entry)?;
         let params = manifest.load_params(&entry)?;
         let p = entry.workers;
+        // Fail before the run if the fabric config cannot host this
+        // model's cluster (e.g. --torus-dims that don't factor the
+        // workers, or an uplink on a single-group hierarchy).
+        cfg.fabric.validate(p)?;
 
         let data = match entry.sample_dtype {
             Dtype::F32 => DataSource::Images {
@@ -141,6 +155,7 @@ impl<'c> Trainer<'c> {
             layout,
             metrics: RunMetrics::new(n, p),
             phases: PhaseTimes::default(),
+            sim_comm_ps: 0,
             workers,
             optimizer,
             data,
@@ -254,13 +269,15 @@ impl<'c> Trainer<'c> {
         }
         self.phases.encode_s += t1.elapsed().as_secs_f64();
 
-        // (3) Communicate: byte-accurate ring allgatherv, then decode.
+        // (3) Communicate: byte-accurate allgatherv over the configured
+        // fabric topology, then decode.
         let t2 = std::time::Instant::now();
         let gathered = if parallel {
-            ring_allgatherv(self.engine.messages())
+            allgatherv(&self.cfg.fabric, self.engine.messages())
         } else {
-            ring_allgatherv(&msgs)
+            allgatherv(&self.cfg.fabric, &msgs)
         };
+        self.sim_comm_ps += gathered.time_ps;
         if parallel {
             // Parallel decode: parse each gathered message once, then
             // reduce disjoint index ranges in message order — bit-equal

@@ -6,8 +6,9 @@
 //! * [`print_table`] — paper-shaped console table.
 //! * [`fig3_csv`] — the Figure-3 scatter data (accuracy vs ratio).
 //! * [`costmodel_report`] — the Section-5 speedup analysis (A5).
-//! * [`fabric_sweep`] — simulated {topology × bandwidth × workers ×
-//!   codec} step times over the event-driven fabric (F1).
+//! * [`fabric_sweep`] — simulated {topology × bandwidth × uplink-skew
+//!   × workers × codec} step times over the event-driven fabric (F1),
+//!   optionally with segmented gather pipelining.
 //! * [`benchcodecs`] — §Perf codec-engine throughput sweep
 //!   (`repro bench-codecs`, serial vs parallel, `BENCH_codecs.json`).
 
@@ -19,7 +20,10 @@ pub use benchcodecs::{
 
 use anyhow::Result;
 
-use crate::comm::costmodel::{ring_gatherv_bytes_per_node, speedup_series, CostModel, LinkModel};
+use crate::comm::costmodel::{
+    hier_gatherv_bytes_per_node, ring_gatherv_bytes_per_node, speedup_series,
+    torus_gatherv_bytes_per_node, CostModel, LinkModel,
+};
 use crate::compress::CodecSpec;
 use crate::config::{codec_str, TrainConfig};
 use crate::coordinator::Trainer;
@@ -246,6 +250,11 @@ pub struct FabricSweepOpts {
     pub topologies: Vec<TopologyKind>,
     pub workers: Vec<usize>,
     pub bandwidths_gbps: Vec<f64>,
+    /// Bandwidth-skew axis: hierarchy cells are repeated per uplink
+    /// bandwidth (Gbps). Empty = the hierarchy's 10:1 default.
+    pub inter_rack_gbps: Vec<f64>,
+    /// Gather pipeline segment size, bytes (0 = whole messages).
+    pub segment_bytes: usize,
     pub codecs: Vec<CodecSpec>,
     /// Synthetic gradient dimension (paper-scale runs use 25.5M; the
     /// default keeps the sweep interactive).
@@ -267,9 +276,13 @@ impl Default for FabricSweepOpts {
                 TopologyKind::Star,
                 TopologyKind::Full,
                 TopologyKind::Tree { branch: 4 },
+                TopologyKind::Torus { rows: 0, cols: 0 },
+                TopologyKind::Hier { groups: 0 },
             ],
             workers: vec![8, 16],
             bandwidths_gbps: vec![1.0, 10.0],
+            inter_rack_gbps: Vec::new(),
+            segment_bytes: 0,
             codecs: vec![
                 CodecSpec::None,
                 CodecSpec::Vgc {
@@ -294,6 +307,8 @@ pub struct FabricSweepRow {
     pub topology: String,
     pub workers: usize,
     pub bandwidth_gbps: f64,
+    /// Hierarchy cells only: the uplink bandwidth of this cell.
+    pub inter_rack_gbps: Option<f64>,
     pub codec: String,
     /// Mean encoded message size per worker, bytes.
     pub wire_bytes_per_worker: f64,
@@ -346,10 +361,27 @@ fn sweep_messages(spec: &CodecSpec, grads: &[Vec<Vec<f32>>], n: usize, seed: u64
         .collect()
 }
 
-/// Run the full sweep. Ring cells are cross-checked against the
-/// analytic cost model: simulated per-node egress bytes must equal
-/// `Σ_j n_j − n_(i+1)` *exactly* (hard assertion — a mismatch is a
-/// fabric bug, not an experiment outcome).
+/// Per-worker egress byte counts every topology must reproduce
+/// *exactly* (a mismatch is a fabric bug, not an experiment outcome).
+/// Star/tree/mesh have no closed form recorded here yet.
+fn analytic_gatherv_bytes(kind: TopologyKind, sizes: &[u64]) -> Option<Vec<u64>> {
+    match kind {
+        TopologyKind::Ring => Some(ring_gatherv_bytes_per_node(sizes)),
+        TopologyKind::Torus { rows, cols } => {
+            Some(torus_gatherv_bytes_per_node(sizes, rows, cols))
+        }
+        TopologyKind::Hier { groups } => Some(hier_gatherv_bytes_per_node(
+            sizes,
+            &crate::fabric::hierarchy::group_spans(sizes.len(), groups),
+        )),
+        _ => None,
+    }
+}
+
+/// Run the full sweep. Ring, torus and hierarchy cells are
+/// cross-checked against the analytic cost model's byte counts (hard
+/// assertion); hierarchy cells additionally fan out over the
+/// `inter_rack_gbps` bandwidth-skew axis.
 pub fn fabric_sweep(opts: &FabricSweepOpts) -> Vec<FabricSweepRow> {
     let mut rows = Vec::new();
     for &p in &opts.workers {
@@ -371,58 +403,78 @@ pub fn fabric_sweep(opts: &FabricSweepOpts) -> Vec<FabricSweepRow> {
             })
             .collect();
         for &kind in &opts.topologies {
-            for &gbps in &opts.bandwidths_gbps {
-                let cfg = FabricConfig {
-                    topology: kind,
-                    link: LinkSpec {
-                        bandwidth_gbps: gbps,
-                        latency_us: opts.latency_us,
-                        jitter_us: opts.jitter_us,
-                    },
-                    seed: opts.seed,
-                    stragglers: opts.stragglers.clone(),
+            // Only the hierarchy has an uplink; other topologies get a
+            // single cell with the axis unset.
+            let uplinks: Vec<Option<f64>> =
+                if matches!(kind, TopologyKind::Hier { .. }) && !opts.inter_rack_gbps.is_empty() {
+                    opts.inter_rack_gbps.iter().copied().map(Some).collect()
+                } else {
+                    vec![None]
                 };
-                let topo = build_topology(kind, p);
-
-                let mut reduce_fabric = Fabric::for_config(&cfg, topo.node_count());
-                let dense = topo.allreduce(&mut reduce_fabric, &final_grads);
-                let dense_ms = dense.time_secs() * 1e3;
-
-                for (label, msgs, sizes, wire_per_worker) in &encoded {
-                    let mut gather_fabric = Fabric::for_config(&cfg, topo.node_count());
-                    let gather = topo.allgatherv(&mut gather_fabric, msgs);
-                    let max_link_bytes = gather_fabric.max_link_bytes();
-
-                    let analytic_ms = if kind == TopologyKind::Ring {
-                        let expect = ring_gatherv_bytes_per_node(sizes);
-                        assert_eq!(
-                            gather.traffic.bytes_sent_per_node, expect,
-                            "ring byte accounting diverged from the analytic model \
-                             (p={p}, codec={label})"
-                        );
-                        let model =
-                            CostModel::new(p, opts.n_params as u64, cfg.link.to_cost_model());
-                        let bits: Vec<u64> = sizes.iter().map(|b| b * 8).collect();
-                        Some(model.t_allgatherv_bits(&bits) * 1e3)
-                    } else {
-                        None
+            for &gbps in &opts.bandwidths_gbps {
+                for &uplink in &uplinks {
+                    let cfg = FabricConfig {
+                        topology: kind,
+                        link: LinkSpec {
+                            bandwidth_gbps: gbps,
+                            latency_us: opts.latency_us,
+                            jitter_us: opts.jitter_us,
+                        },
+                        segment_bytes: opts.segment_bytes,
+                        inter_rack_gbps: uplink,
+                        seed: opts.seed,
+                        stragglers: opts.stragglers.clone(),
+                        ..FabricConfig::default()
                     };
+                    let topo = build_topology(kind, p);
+                    // The backend resolves auto dims/groups; report and
+                    // cross-check against the resolved shape.
+                    let resolved = topo.kind();
 
-                    let sim_ms = gather.time_secs() * 1e3;
-                    rows.push(FabricSweepRow {
-                        topology: kind.label(),
-                        workers: p,
-                        bandwidth_gbps: gbps,
-                        codec: label.clone(),
-                        wire_bytes_per_worker: *wire_per_worker,
-                        traffic_bytes: gather.traffic.total_bytes(),
-                        max_link_bytes,
-                        sim_ms,
-                        dense_ms,
-                        speedup: if sim_ms > 0.0 { dense_ms / sim_ms } else { 0.0 },
-                        events: gather.events,
-                        analytic_ms,
-                    });
+                    let mut reduce_fabric = Fabric::for_topology(&cfg, &*topo);
+                    let dense = topo.allreduce(&mut reduce_fabric, &final_grads);
+                    let dense_ms = dense.time_secs() * 1e3;
+
+                    for (label, msgs, sizes, wire_per_worker) in &encoded {
+                        let mut gather_fabric = Fabric::for_topology(&cfg, &*topo);
+                        let gather = topo.allgatherv(&mut gather_fabric, msgs);
+                        let max_link_bytes = gather_fabric.max_link_bytes();
+
+                        if let Some(expect) = analytic_gatherv_bytes(resolved, sizes) {
+                            assert_eq!(
+                                gather.traffic.bytes_sent_per_node,
+                                expect,
+                                "{} byte accounting diverged from the analytic model \
+                                 (p={p}, codec={label})",
+                                resolved.label()
+                            );
+                        }
+                        let analytic_ms = if kind == TopologyKind::Ring {
+                            let model =
+                                CostModel::new(p, opts.n_params as u64, cfg.link.to_cost_model());
+                            let bits: Vec<u64> = sizes.iter().map(|b| b * 8).collect();
+                            Some(model.t_allgatherv_bits(&bits) * 1e3)
+                        } else {
+                            None
+                        };
+
+                        let sim_ms = gather.time_secs() * 1e3;
+                        rows.push(FabricSweepRow {
+                            topology: resolved.label(),
+                            workers: p,
+                            bandwidth_gbps: gbps,
+                            inter_rack_gbps: uplink,
+                            codec: label.clone(),
+                            wire_bytes_per_worker: *wire_per_worker,
+                            traffic_bytes: gather.traffic.total_bytes(),
+                            max_link_bytes,
+                            sim_ms,
+                            dense_ms,
+                            speedup: if sim_ms > 0.0 { dense_ms / sim_ms } else { 0.0 },
+                            events: gather.events,
+                            analytic_ms,
+                        });
+                    }
                 }
             }
         }
@@ -434,10 +486,15 @@ pub fn fabric_sweep(opts: &FabricSweepOpts) -> Vec<FabricSweepRow> {
 pub fn fabric_sweep_markdown(opts: &FabricSweepOpts, rows: &[FabricSweepRow]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "### fabric sweep — N={} params, latency {} us, jitter {} us{}\n\n",
+        "### fabric sweep — N={} params, latency {} us, jitter {} us{}{}\n\n",
         opts.n_params,
         opts.latency_us,
         opts.jitter_us,
+        if opts.segment_bytes > 0 {
+            format!(", segment {} B", opts.segment_bytes)
+        } else {
+            String::new()
+        },
         if opts.stragglers.is_empty() {
             String::new()
         } else {
@@ -445,16 +502,19 @@ pub fn fabric_sweep_markdown(opts: &FabricSweepOpts, rows: &[FabricSweepRow]) ->
         }
     ));
     out.push_str(
-        "| topology | p | Gbps | codec | wire/worker | sim gatherv | dense allreduce \
-         | speedup | analytic T_v | max link | events |\n",
+        "| topology | p | Gbps | uplink | codec | wire/worker | sim gatherv \
+         | dense allreduce | speedup | analytic T_v | max link | events |\n",
     );
-    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|\n");
+    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|\n");
     for r in rows {
         out.push_str(&format!(
-            "| {} | {} | {} | {} | {} | {:.3} ms | {:.3} ms | {:.2}x | {} | {} | {} |\n",
+            "| {} | {} | {} | {} | {} | {} | {:.3} ms | {:.3} ms | {:.2}x | {} | {} | {} |\n",
             r.topology,
             r.workers,
             r.bandwidth_gbps,
+            r.inter_rack_gbps
+                .map(|g| format!("{g}"))
+                .unwrap_or_else(|| "-".into()),
             r.codec,
             human_bytes(r.wire_bytes_per_worker),
             r.sim_ms,
@@ -489,6 +549,10 @@ pub fn fabric_sweep_json(rows: &[FabricSweepRow]) -> Json {
                     ("topology", s(&r.topology)),
                     ("workers", num(r.workers as f64)),
                     ("bandwidth_gbps", num(r.bandwidth_gbps)),
+                    (
+                        "inter_rack_gbps",
+                        r.inter_rack_gbps.map(num).unwrap_or(Json::Null),
+                    ),
                     ("codec", s(&r.codec)),
                     ("wire_bytes_per_worker", num(r.wire_bytes_per_worker)),
                     ("traffic_bytes", num(r.traffic_bytes as f64)),
@@ -582,6 +646,51 @@ mod tests {
             ring_none.speedup
         );
         assert!(ring_vgc.wire_bytes_per_worker < ring_none.wire_bytes_per_worker);
+    }
+
+    #[test]
+    fn fabric_sweep_covers_new_topologies_with_skew_axis() {
+        let opts = FabricSweepOpts {
+            topologies: vec![
+                TopologyKind::Torus { rows: 0, cols: 0 },
+                TopologyKind::Hier { groups: 2 },
+            ],
+            workers: vec![4],
+            bandwidths_gbps: vec![1.0],
+            inter_rack_gbps: vec![1.0, 0.05],
+            segment_bytes: 512,
+            codecs: vec![CodecSpec::None],
+            n_params: 2048,
+            ..FabricSweepOpts::default()
+        };
+        let rows = fabric_sweep(&opts);
+        // torus × 1 uplink-cell + hier × 2 uplink-cells.
+        assert_eq!(rows.len(), 3);
+        // Auto dims resolve in the report label.
+        assert!(rows.iter().any(|r| r.topology == "torus:2x2"), "{rows:?}");
+        let hier: Vec<&FabricSweepRow> = rows
+            .iter()
+            .filter(|r| r.topology == "hier:2")
+            .collect();
+        assert_eq!(hier.len(), 2);
+        assert!(hier.iter().all(|r| r.inter_rack_gbps.is_some()));
+        // A 20x slower uplink must slow the simulated gather.
+        let fast = hier.iter().find(|r| r.inter_rack_gbps == Some(1.0)).unwrap();
+        let slow = hier
+            .iter()
+            .find(|r| r.inter_rack_gbps == Some(0.05))
+            .unwrap();
+        assert!(
+            slow.sim_ms > fast.sim_ms,
+            "uplink skew had no effect: {} vs {}",
+            fast.sim_ms,
+            slow.sim_ms
+        );
+        // Non-hier rows leave the axis unset.
+        assert!(rows
+            .iter()
+            .filter(|r| r.topology.starts_with("torus"))
+            .all(|r| r.inter_rack_gbps.is_none()));
     }
 
     #[test]

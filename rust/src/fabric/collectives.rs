@@ -1,5 +1,6 @@
-//! Shared collective plumbing: result types, gather bookkeeping, and
-//! the chunking rule the ring allreduce inherits from `comm`.
+//! Shared collective plumbing: result types, (segmented) gather
+//! bookkeeping, and the chunking rule the ring allreduce inherits from
+//! `comm`.
 //!
 //! Every topology backend produces the same result shapes, so callers
 //! (the `comm` fronts, `fabric-sweep`, tests) are topology-agnostic:
@@ -7,6 +8,15 @@
 //! worker `dst`; `reduced[w]` is worker `w`'s copy of the elementwise
 //! sum. Byte identity with the lockstep `comm` implementations is a
 //! hard invariant (tested property-style in `tests/fabric_sim.rs`).
+//!
+//! Gather protocols optionally pipeline: when the fabric is configured
+//! with a segment size (`FabricConfig::segment_bytes`, the cost
+//! model's block size `m`), [`split_message`] cuts each wire message
+//! into segments that traverse the topology independently and
+//! [`GatherState`] reassembles them in order — so a long message no
+//! longer store-and-forwards whole at every hop, and the simulated
+//! ring time converges to the paper's pipelined `T_v` bound even for
+//! skewed per-node message sizes.
 
 use super::clock::Time;
 use super::Fabric;
@@ -53,47 +63,85 @@ pub fn traffic_from(fabric: &Fabric, rounds: u32) -> Traffic {
     }
 }
 
-/// Per-worker block bookkeeping for gather protocols: which origins
-/// each worker holds. Duplicate deliveries of conflicting content are
-/// protocol bugs and assert.
+/// Split one wire message into pipeline segments of at most
+/// `seg_bytes` bytes (`0` disables segmentation). Every message yields
+/// at least one segment, so empty messages still traverse the
+/// protocol and reassemble.
+pub fn split_message(bytes: &[u8], seg_bytes: usize) -> Vec<Vec<u8>> {
+    if seg_bytes == 0 || bytes.len() <= seg_bytes {
+        return vec![bytes.to_vec()];
+    }
+    bytes.chunks(seg_bytes).map(|c| c.to_vec()).collect()
+}
+
+/// Per-worker segment lists for a whole input set.
+pub fn split_all(inputs: &[Vec<u8>], seg_bytes: usize) -> Vec<Vec<Vec<u8>>> {
+    inputs.iter().map(|m| split_message(m, seg_bytes)).collect()
+}
+
+/// Segments `split_message` produces for a message of `len` bytes.
+fn seg_count(len: usize, seg_bytes: usize) -> usize {
+    if seg_bytes == 0 || len == 0 {
+        1
+    } else {
+        len.div_ceil(seg_bytes)
+    }
+}
+
+/// Per-worker block bookkeeping for gather protocols: which origin
+/// segments each worker holds. Duplicate deliveries of conflicting
+/// content are protocol bugs and assert. Segments may arrive out of
+/// order (jitter reorders same-link deliveries); reassembly is by
+/// segment index, not arrival order.
 pub struct GatherState {
-    blocks: Vec<Vec<Option<Vec<u8>>>>,
+    /// `blocks[worker][origin][seg]`.
+    blocks: Vec<Vec<Vec<Option<Vec<u8>>>>>,
 }
 
 impl GatherState {
-    /// Seed each worker with its own block.
-    pub fn new(inputs: &[Vec<u8>]) -> GatherState {
+    /// Seed each worker with its own (pre-split) block.
+    pub fn new(inputs: &[Vec<u8>], seg_bytes: usize) -> GatherState {
         let p = inputs.len();
         GatherState {
             blocks: (0..p)
                 .map(|i| {
-                    let mut row = vec![None; p];
-                    row[i] = Some(inputs[i].clone());
-                    row
+                    (0..p)
+                        .map(|o| {
+                            if o == i {
+                                split_message(&inputs[i], seg_bytes)
+                                    .into_iter()
+                                    .map(Some)
+                                    .collect()
+                            } else {
+                                vec![None; seg_count(inputs[o].len(), seg_bytes)]
+                            }
+                        })
+                        .collect()
                 })
                 .collect(),
         }
     }
 
-    /// Record that `worker` received `origin`'s block.
-    pub fn store(&mut self, worker: usize, origin: usize, bytes: &[u8]) {
-        let slot = &mut self.blocks[worker][origin];
+    /// Record that `worker` received segment `seg` of `origin`'s block.
+    pub fn store(&mut self, worker: usize, origin: usize, seg: usize, bytes: &[u8]) {
+        let slot = &mut self.blocks[worker][origin][seg];
         debug_assert!(
             slot.is_none() || slot.as_deref() == Some(bytes),
-            "conflicting delivery of origin {origin} at worker {worker}"
+            "conflicting delivery of origin {origin} segment {seg} at worker {worker}"
         );
         if slot.is_none() {
             *slot = Some(bytes.to_vec());
         }
     }
 
-    /// True once `worker` holds every origin.
+    /// True once `worker` holds every segment of every origin.
     pub fn complete(&self, worker: usize) -> bool {
-        self.blocks[worker].iter().all(|b| b.is_some())
+        self.blocks[worker].iter().flatten().all(|b| b.is_some())
     }
 
-    /// Consume into the `gathered[dst][src]` matrix; panics if any
-    /// block never arrived (the protocol under-delivered).
+    /// Consume into the `gathered[dst][src]` matrix, concatenating
+    /// segments in index order; panics if any segment never arrived
+    /// (the protocol under-delivered).
     pub fn into_gathered(self) -> Vec<Vec<Vec<u8>>> {
         self.blocks
             .into_iter()
@@ -101,8 +149,15 @@ impl GatherState {
             .map(|(w, row)| {
                 row.into_iter()
                     .enumerate()
-                    .map(|(o, b)| {
-                        b.unwrap_or_else(|| panic!("worker {w} never received origin {o}"))
+                    .map(|(o, segs)| {
+                        let mut msg = Vec::new();
+                        for (si, b) in segs.into_iter().enumerate() {
+                            let seg = b.unwrap_or_else(|| {
+                                panic!("worker {w} never received origin {o} segment {si}")
+                            });
+                            msg.extend_from_slice(&seg);
+                        }
+                        msg
                     })
                     .collect()
             })
@@ -125,15 +180,15 @@ mod tests {
     #[test]
     fn gather_state_tracks_completion() {
         let inputs = vec![vec![1u8], vec![2, 2], vec![]];
-        let mut gs = GatherState::new(&inputs);
+        let mut gs = GatherState::new(&inputs, 0);
         assert!(!gs.complete(0));
-        gs.store(0, 1, &[2, 2]);
-        gs.store(0, 2, &[]);
+        gs.store(0, 1, 0, &[2, 2]);
+        gs.store(0, 2, 0, &[]);
         assert!(gs.complete(0));
-        gs.store(1, 0, &[1]);
-        gs.store(1, 2, &[]);
-        gs.store(2, 0, &[1]);
-        gs.store(2, 1, &[2, 2]);
+        gs.store(1, 0, 0, &[1]);
+        gs.store(1, 2, 0, &[]);
+        gs.store(2, 0, 0, &[1]);
+        gs.store(2, 1, 0, &[2, 2]);
         let g = gs.into_gathered();
         for dst in 0..3 {
             for src in 0..3 {
@@ -145,8 +200,43 @@ mod tests {
     #[test]
     #[should_panic(expected = "never received")]
     fn incomplete_gather_panics_on_assembly() {
-        let gs = GatherState::new(&[vec![1u8], vec![2u8]]);
+        let gs = GatherState::new(&[vec![1u8], vec![2u8]], 0);
         let _ = gs.into_gathered();
+    }
+
+    #[test]
+    fn split_message_covers_edges() {
+        assert_eq!(split_message(&[], 0), vec![Vec::<u8>::new()]);
+        assert_eq!(split_message(&[], 4), vec![Vec::<u8>::new()]);
+        assert_eq!(split_message(&[1, 2, 3], 0), vec![vec![1, 2, 3]]);
+        assert_eq!(split_message(&[1, 2, 3], 3), vec![vec![1, 2, 3]]);
+        assert_eq!(split_message(&[1, 2, 3], 2), vec![vec![1, 2], vec![3]]);
+        for (len, seg) in [(0usize, 0usize), (0, 3), (7, 3), (7, 0), (6, 3), (1, 9)] {
+            let msg: Vec<u8> = (0..len as u8).collect();
+            let parts = split_message(&msg, seg);
+            assert_eq!(parts.len(), seg_count(len, seg), "len={len} seg={seg}");
+            assert_eq!(parts.concat(), msg, "len={len} seg={seg}");
+        }
+    }
+
+    #[test]
+    fn segmented_state_reassembles_out_of_order() {
+        let inputs = vec![vec![9u8; 5], vec![1, 2, 3, 4, 5, 6, 7]];
+        let mut gs = GatherState::new(&inputs, 3);
+        // Worker 0 receives origin 1's segments in reverse order.
+        gs.store(0, 1, 2, &[7]);
+        gs.store(0, 1, 1, &[4, 5, 6]);
+        assert!(!gs.complete(0));
+        gs.store(0, 1, 0, &[1, 2, 3]);
+        assert!(gs.complete(0));
+        gs.store(1, 0, 1, &[9, 9]);
+        gs.store(1, 0, 0, &[9, 9, 9]);
+        let g = gs.into_gathered();
+        for dst in 0..2 {
+            for src in 0..2 {
+                assert_eq!(g[dst][src], inputs[src], "dst={dst} src={src}");
+            }
+        }
     }
 
     #[test]

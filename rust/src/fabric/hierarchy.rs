@@ -1,0 +1,613 @@
+//! NUMA-aware hierarchy topology: workers partitioned into groups
+//! (racks / NUMA domains) with fast intra-group links and slow
+//! inter-group uplinks.
+//!
+//! `hier:<g>` splits the workers into `g` contiguous, balanced groups
+//! ([`group_spans`]); `hier` alone picks `≈ √p` groups
+//! ([`auto_groups`]). The lowest id of each group is its leader, and
+//! leaders are themselves workers — no extra infrastructure node.
+//! Collectives run the three NUMA phases:
+//!
+//! 1. **reduce/collect within** — members send to their group leader
+//!    over fast intra-group links;
+//! 2. **exchange across** — leaders swap group aggregates (or blocks)
+//!    pairwise over the slow uplinks, so each datum crosses the rack
+//!    boundary exactly once;
+//! 3. **broadcast within** — leaders fan results back to members.
+//!
+//! The bandwidth skew is what distinguishes this from [`super::tree`]:
+//! via [`Topology::link_overrides`] every leader↔leader edge resolves
+//! to an uplink [`LinkSpec`] whose bandwidth is
+//! `FabricConfig::inter_rack_gbps` (default: the base bandwidth / 10,
+//! the classic 10:1 oversubscription). Explicit
+//! `FabricConfig::link_overrides` still win (see `LinkTable`). Gather
+//! traffic pipelines per segment when `FabricConfig::segment_bytes`
+//! is set, so a long block starts crossing the uplink before it has
+//! fully climbed out of its rack.
+//!
+//! ```
+//! use vgc::fabric::{build_topology, Fabric, FabricConfig, TopologyKind};
+//!
+//! let cfg = FabricConfig {
+//!     topology: TopologyKind::Hier { groups: 2 },
+//!     inter_rack_gbps: Some(0.1),
+//!     ..FabricConfig::default()
+//! };
+//! let topo = build_topology(cfg.topology, 4);
+//! let mut fabric = Fabric::for_topology(&cfg, &*topo);
+//! // Leaders 0 and 2 talk over the 0.1 Gbps uplink; members don't.
+//! assert_eq!(fabric.link_table().spec(0, 2).bandwidth_gbps, 0.1);
+//! assert_eq!(fabric.link_table().spec(0, 1).bandwidth_gbps, 1.0);
+//! let inputs: Vec<Vec<u8>> = (0..4).map(|w| vec![w as u8; 16]).collect();
+//! let out = topo.allgatherv(&mut fabric, &inputs);
+//! assert_eq!(out.gathered[3][0], inputs[0]);
+//! ```
+
+use super::collectives::{split_all, traffic_from, GatherState, SimGather, SimReduce};
+use super::topology::{Topology, TopologyKind};
+use super::{Fabric, FabricConfig, LinkSpec, Msg, Payload, Protocol};
+
+/// Member block/vector travelling up to its group leader.
+const TAG_UP: u8 = 0;
+/// Leader-to-leader exchange across the uplinks.
+const TAG_XCHG: u8 = 1;
+/// Leader fan-out down to its members.
+const TAG_DOWN: u8 = 2;
+
+/// Uplink bandwidth when `FabricConfig::inter_rack_gbps` is unset:
+/// 10:1 oversubscription of the intra-group links.
+pub const DEFAULT_OVERSUBSCRIPTION: f64 = 10.0;
+
+/// Contiguous balanced partition of `p` workers into `groups` groups,
+/// as `(start, len)` spans; the first `p mod groups` groups take the
+/// extra worker.
+pub fn group_spans(p: usize, groups: usize) -> Vec<(usize, usize)> {
+    let g = groups.clamp(1, p.max(1));
+    let base = p / g;
+    let extra = p % g;
+    let mut out = Vec::with_capacity(g);
+    let mut start = 0;
+    for i in 0..g {
+        let len = base + usize::from(i < extra);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// The auto group count for `hier` with no explicit `:g`: `≈ √p`,
+/// balancing intra-group fan-in against uplink crossings.
+pub fn auto_groups(p: usize) -> usize {
+    ((p as f64).sqrt().round() as usize).clamp(1, p.max(1))
+}
+
+pub struct Hierarchy {
+    p: usize,
+    spans: Vec<(usize, usize)>,
+}
+
+impl Hierarchy {
+    /// `groups` of 0 means "auto" (see [`auto_groups`]).
+    pub fn new(workers: usize, groups: usize) -> Hierarchy {
+        assert!(workers > 0, "topology needs at least one worker");
+        let g = if groups == 0 {
+            auto_groups(workers)
+        } else {
+            groups
+        };
+        assert!(
+            g >= 1 && g <= workers,
+            "hier wants {g} groups but only {workers} workers"
+        );
+        Hierarchy {
+            p: workers,
+            spans: group_spans(workers, g),
+        }
+    }
+
+    fn groups(&self) -> usize {
+        self.spans.len()
+    }
+
+    fn group_of(&self, w: usize) -> usize {
+        self.spans
+            .iter()
+            .position(|&(s, l)| w >= s && w < s + l)
+            .expect("worker outside every span")
+    }
+
+    fn leader(&self, g: usize) -> usize {
+        self.spans[g].0
+    }
+
+    fn is_leader(&self, w: usize) -> bool {
+        self.spans.iter().any(|&(s, _)| s == w)
+    }
+
+    fn leaders(&self) -> Vec<usize> {
+        self.spans.iter().map(|&(s, _)| s).collect()
+    }
+
+    /// Members of group `g`, excluding its leader.
+    fn members(&self, g: usize) -> Vec<usize> {
+        let (s, l) = self.spans[g];
+        (s + 1..s + l).collect()
+    }
+}
+
+struct HierGather<'t> {
+    t: &'t Hierarchy,
+    segs: Vec<Vec<Vec<u8>>>,
+    state: GatherState,
+}
+
+impl HierGather<'_> {
+    fn msg(&self, origin: usize, seg: u32, hop: u32, tag: u8, payload: &Payload) -> Msg {
+        Msg {
+            origin,
+            seg,
+            hop,
+            tag,
+            payload: payload.clone(),
+        }
+    }
+}
+
+impl Protocol for HierGather<'_> {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        let mut out = Vec::new();
+        for w in 0..self.t.p {
+            let g = self.t.group_of(w);
+            for (si, sg) in self.segs[w].iter().enumerate() {
+                let si = si as u32;
+                let payload = Payload::Bytes(sg.clone());
+                if self.t.is_leader(w) {
+                    for l in self.t.leaders() {
+                        if l != w {
+                            out.push((w, l, self.msg(w, si, 1, TAG_XCHG, &payload)));
+                        }
+                    }
+                    for m in self.t.members(g) {
+                        out.push((w, m, self.msg(w, si, 1, TAG_DOWN, &payload)));
+                    }
+                } else {
+                    out.push((w, self.t.leader(g), self.msg(w, si, 1, TAG_UP, &payload)));
+                }
+            }
+        }
+        out
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        let Payload::Bytes(b) = &msg.payload else {
+            unreachable!("gather protocol only moves bytes")
+        };
+        self.state.store(node, msg.origin, msg.seg as usize, b);
+        if !self.t.is_leader(node) {
+            return Vec::new();
+        }
+        let g = self.t.group_of(node);
+        let mut out = Vec::new();
+        match msg.tag {
+            TAG_UP => {
+                // A member segment: cross the uplinks and fan to the
+                // rest of this group.
+                for l in self.t.leaders() {
+                    if l != node {
+                        out.push((
+                            l,
+                            self.msg(msg.origin, msg.seg, msg.hop + 1, TAG_XCHG, &msg.payload),
+                        ));
+                    }
+                }
+                for m in self.t.members(g) {
+                    if m != msg.origin {
+                        out.push((
+                            m,
+                            self.msg(msg.origin, msg.seg, msg.hop + 1, TAG_DOWN, &msg.payload),
+                        ));
+                    }
+                }
+            }
+            TAG_XCHG => {
+                // Another rack's segment: broadcast within.
+                for m in self.t.members(g) {
+                    out.push((
+                        m,
+                        self.msg(msg.origin, msg.seg, msg.hop + 1, TAG_DOWN, &msg.payload),
+                    ));
+                }
+            }
+            other => unreachable!("leader received unexpected tag {other}"),
+        }
+        out
+    }
+}
+
+struct HierReduce<'t> {
+    t: &'t Hierarchy,
+    n: usize,
+    inputs: Vec<Vec<f32>>,
+    /// Member vectors buffered at leaders, by member worker id.
+    up: Vec<Option<Vec<f32>>>,
+    /// Group partials buffered per receiving group, by sender group.
+    partials: Vec<Vec<Option<Vec<f32>>>>,
+    /// Final sums as seen by each worker.
+    totals: Vec<Option<Vec<f32>>>,
+}
+
+impl HierReduce<'_> {
+    /// Sum group `g` (leader + members, ascending id) — phase 1.
+    fn group_partial(&self, g: usize) -> Vec<f32> {
+        let mut sum = self.inputs[self.t.leader(g)].clone();
+        for m in self.t.members(g) {
+            let v = self.up[m].as_ref().expect("member vector missing");
+            for (k, x) in v.iter().enumerate() {
+                sum[k] += x;
+            }
+        }
+        sum
+    }
+
+    /// Once group `g`'s leader holds every group partial, the grand
+    /// total (ascending group order) and the phase-3 fan-out.
+    fn try_finish(&mut self, g: usize, hop: u32) -> Vec<(usize, Msg)> {
+        if self.partials[g].iter().any(|p| p.is_none()) {
+            return Vec::new();
+        }
+        let mut total = vec![0.0f32; self.n];
+        for slot in &self.partials[g] {
+            let v = slot.as_ref().unwrap();
+            for (k, x) in v.iter().enumerate() {
+                total[k] += x;
+            }
+        }
+        let leader = self.t.leader(g);
+        self.totals[leader] = Some(total.clone());
+        let payload = Payload::F32(total);
+        self.t
+            .members(g)
+            .into_iter()
+            .map(|m| {
+                (
+                    m,
+                    Msg {
+                        origin: leader,
+                        seg: 0,
+                        hop,
+                        tag: TAG_DOWN,
+                        payload: payload.clone(),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// Group `g` is reduced: record the partial, exchange it across
+    /// the uplinks (phase 2), and possibly finish (a single-group
+    /// hierarchy finishes immediately).
+    fn group_ready(&mut self, g: usize, hop: u32) -> Vec<(usize, Msg)> {
+        let partial = self.group_partial(g);
+        self.partials[g][g] = Some(partial.clone());
+        let leader = self.t.leader(g);
+        let payload = Payload::F32(partial);
+        let mut out: Vec<(usize, Msg)> = self
+            .t
+            .leaders()
+            .into_iter()
+            .filter(|&l| l != leader)
+            .map(|l| {
+                (
+                    l,
+                    Msg {
+                        origin: leader,
+                        seg: 0,
+                        hop,
+                        tag: TAG_XCHG,
+                        payload: payload.clone(),
+                    },
+                )
+            })
+            .collect();
+        out.extend(self.try_finish(g, hop + 1));
+        out
+    }
+}
+
+impl Protocol for HierReduce<'_> {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        let mut out = Vec::new();
+        for w in 0..self.t.p {
+            if !self.t.is_leader(w) {
+                out.push((
+                    w,
+                    self.t.leader(self.t.group_of(w)),
+                    Msg {
+                        origin: w,
+                        seg: 0,
+                        hop: 1,
+                        tag: TAG_UP,
+                        payload: Payload::F32(self.inputs[w].clone()),
+                    },
+                ));
+            }
+        }
+        // Single-worker groups are reduced at t = 0.
+        for g in 0..self.t.groups() {
+            if self.t.members(g).is_empty() {
+                let leader = self.t.leader(g);
+                for (dst, msg) in self.group_ready(g, 1) {
+                    out.push((leader, dst, msg));
+                }
+            }
+        }
+        out
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        let Payload::F32(v) = &msg.payload else {
+            unreachable!("reduce protocol only moves f32 vectors")
+        };
+        match msg.tag {
+            TAG_UP => {
+                self.up[msg.origin] = Some(v.clone());
+                let g = self.t.group_of(node);
+                let complete = self
+                    .t
+                    .members(g)
+                    .iter()
+                    .all(|&m| self.up[m].is_some());
+                if complete {
+                    self.group_ready(g, msg.hop + 1)
+                } else {
+                    Vec::new()
+                }
+            }
+            TAG_XCHG => {
+                let g = self.t.group_of(node);
+                self.partials[g][self.t.group_of(msg.origin)] = Some(v.clone());
+                self.try_finish(g, msg.hop + 1)
+            }
+            TAG_DOWN => {
+                self.totals[node] = Some(v.clone());
+                Vec::new()
+            }
+            other => unreachable!("unknown hier reduce tag {other}"),
+        }
+    }
+}
+
+impl Topology for Hierarchy {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Hier {
+            groups: self.groups(),
+        }
+    }
+
+    fn workers(&self) -> usize {
+        self.p
+    }
+
+    fn link_overrides(&self, cfg: &FabricConfig) -> Vec<(usize, usize, LinkSpec)> {
+        if self.groups() < 2 {
+            return Vec::new();
+        }
+        let uplink = LinkSpec {
+            bandwidth_gbps: cfg
+                .inter_rack_gbps
+                .unwrap_or(cfg.link.bandwidth_gbps / DEFAULT_OVERSUBSCRIPTION),
+            ..cfg.link
+        };
+        let leaders = self.leaders();
+        let mut out = Vec::new();
+        for &a in &leaders {
+            for &b in &leaders {
+                if a != b {
+                    out.push((a, b, uplink));
+                }
+            }
+        }
+        out
+    }
+
+    fn gather_rounds(&self) -> u32 {
+        if self.p > 1 {
+            3
+        } else {
+            0
+        }
+    }
+
+    fn reduce_rounds(&self) -> u32 {
+        if self.p > 1 {
+            3
+        } else {
+            0
+        }
+    }
+
+    fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
+        assert_eq!(inputs.len(), self.p, "one input message per worker");
+        let seg = fabric.segment_bytes();
+        let mut proto = HierGather {
+            t: self,
+            segs: split_all(inputs, seg),
+            state: GatherState::new(inputs, seg),
+        };
+        let time_ps = if self.p > 1 { fabric.run(&mut proto) } else { 0 };
+        SimGather {
+            gathered: proto.state.into_gathered(),
+            traffic: traffic_from(fabric, self.gather_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+
+    fn allreduce(&self, fabric: &mut Fabric, inputs: &[Vec<f32>]) -> SimReduce {
+        assert_eq!(inputs.len(), self.p);
+        let n = inputs[0].len();
+        assert!(inputs.iter().all(|v| v.len() == n), "length mismatch");
+        let mut proto = HierReduce {
+            t: self,
+            n,
+            inputs: inputs.to_vec(),
+            up: vec![None; self.p],
+            partials: vec![vec![None; self.groups()]; self.groups()],
+            totals: vec![None; self.p],
+        };
+        let time_ps = if self.p > 1 { fabric.run(&mut proto) } else { 0 };
+        let reduced: Vec<Vec<f32>> = if self.p == 1 {
+            vec![inputs[0].clone()]
+        } else {
+            proto
+                .totals
+                .iter()
+                .map(|slot| slot.clone().expect("hier reduce under-delivered"))
+                .collect()
+        };
+        SimReduce {
+            reduced,
+            traffic: traffic_from(fabric, self.reduce_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::FabricConfig;
+
+    fn fabric_for(topo: &Hierarchy, cfg: &FabricConfig) -> Fabric {
+        Fabric::for_topology(cfg, topo)
+    }
+
+    fn fast_cfg() -> FabricConfig {
+        FabricConfig {
+            link: LinkSpec {
+                bandwidth_gbps: 1.0,
+                latency_us: 1.0,
+                jitter_us: 0.0,
+            },
+            topology: TopologyKind::Hier { groups: 0 },
+            ..FabricConfig::default()
+        }
+    }
+
+    #[test]
+    fn spans_balance_and_cover() {
+        assert_eq!(group_spans(8, 3), vec![(0, 3), (3, 3), (6, 2)]);
+        assert_eq!(group_spans(4, 2), vec![(0, 2), (2, 2)]);
+        assert_eq!(group_spans(3, 5), vec![(0, 1), (1, 1), (2, 1)]); // clamped
+        assert_eq!(group_spans(5, 1), vec![(0, 5)]);
+        assert_eq!(auto_groups(9), 3);
+        assert_eq!(auto_groups(1), 1);
+        assert_eq!(auto_groups(6), 2);
+    }
+
+    #[test]
+    fn leadership_math() {
+        let h = Hierarchy::new(8, 3);
+        assert_eq!(h.leaders(), vec![0, 3, 6]);
+        assert_eq!(h.group_of(4), 1);
+        assert_eq!(h.members(2), vec![7]);
+        assert_eq!(h.members(0), vec![1, 2]);
+        assert!(h.is_leader(3));
+        assert!(!h.is_leader(4));
+    }
+
+    #[test]
+    fn uplink_overrides_cover_exactly_the_leader_pairs() {
+        let h = Hierarchy::new(8, 3);
+        let cfg = FabricConfig {
+            inter_rack_gbps: Some(0.25),
+            ..fast_cfg()
+        };
+        let ov = h.link_overrides(&cfg);
+        assert_eq!(ov.len(), 6); // 3 leaders, ordered pairs
+        assert!(ov.iter().all(|&(_, _, l)| l.bandwidth_gbps == 0.25));
+        let f = fabric_for(&h, &cfg);
+        assert_eq!(f.link_table().spec(0, 3).bandwidth_gbps, 0.25);
+        assert_eq!(f.link_table().spec(3, 6).bandwidth_gbps, 0.25);
+        assert_eq!(f.link_table().spec(0, 1).bandwidth_gbps, 1.0); // intra
+        // Default uplink: 10:1 oversubscription.
+        let f = fabric_for(&h, &fast_cfg());
+        assert_eq!(f.link_table().spec(0, 3).bandwidth_gbps, 0.1);
+    }
+
+    #[test]
+    fn gather_delivers_for_awkward_shapes() {
+        for (p, g) in [(7usize, 3usize), (8, 2), (5, 5), (5, 1), (2, 2), (1, 1)] {
+            let inputs: Vec<Vec<u8>> =
+                (0..p).map(|w| vec![w as u8 + 1; (w * 11) % 23 + 1]).collect();
+            let topo = Hierarchy::new(p, g);
+            let mut f = fabric_for(&topo, &fast_cfg());
+            let res = topo.allgatherv(&mut f, &inputs);
+            for dst in 0..p {
+                for src in 0..p {
+                    assert_eq!(
+                        res.gathered[dst][src], inputs[src],
+                        "p={p} g={g} dst={dst} src={src}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_matches_sum_for_awkward_shapes() {
+        for (p, g) in [(7usize, 3usize), (8, 2), (5, 5), (5, 1), (1, 1)] {
+            let inputs: Vec<Vec<f32>> = (0..p)
+                .map(|w| (0..6).map(|k| (w * 6 + k) as f32 * 0.5).collect())
+                .collect();
+            let topo = Hierarchy::new(p, g);
+            let mut f = fabric_for(&topo, &fast_cfg());
+            let res = topo.allreduce(&mut f, &inputs);
+            for k in 0..6 {
+                let want: f32 = inputs.iter().map(|v| v[k]).sum();
+                for node in 0..p {
+                    let got = res.reduced[node][k];
+                    assert!(
+                        (got - want).abs() < 1e-3,
+                        "p={p} g={g} node={node} k={k}: {got} != {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slower_uplinks_slow_the_collective() {
+        let p = 8;
+        let inputs: Vec<Vec<u8>> = (0..p).map(|_| vec![6u8; 10_000]).collect();
+        let topo = Hierarchy::new(p, 2);
+        let time_at = |uplink: f64| {
+            let cfg = FabricConfig {
+                inter_rack_gbps: Some(uplink),
+                ..fast_cfg()
+            };
+            let mut f = fabric_for(&topo, &cfg);
+            topo.allgatherv(&mut f, &inputs).time_ps
+        };
+        let fast = time_at(1.0); // uplink == intra bandwidth
+        let slow = time_at(0.05);
+        assert!(
+            slow > fast,
+            "uplink bandwidth had no effect: {fast} vs {slow}"
+        );
+    }
+
+    #[test]
+    fn cross_rack_traffic_crosses_each_uplink_once_per_block() {
+        // 4 workers in 2 racks: {0,1} and {2,3}. Worker 1's block must
+        // cross the 0→2 uplink exactly once.
+        let inputs: Vec<Vec<u8>> = (0..4).map(|w| vec![w as u8; 100]).collect();
+        let topo = Hierarchy::new(4, 2);
+        let mut f = fabric_for(&topo, &fast_cfg());
+        let res = topo.allgatherv(&mut f, &inputs);
+        assert_eq!(res.traffic.rounds, 3);
+        assert_eq!(f.links()[&(0, 2)].messages, 2); // blocks 0 and 1
+        assert_eq!(f.links()[&(2, 0)].messages, 2); // blocks 2 and 3
+    }
+}

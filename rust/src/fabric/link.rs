@@ -1,5 +1,5 @@
-//! Link model: bandwidth / latency / jitter per directed edge, plus
-//! per-link traffic accounting.
+//! Link model: bandwidth / latency / jitter per directed edge, per-link
+//! overrides ([`LinkTable`]), and per-link traffic accounting.
 //!
 //! The fabric uses a cut-through port model (see `fabric::Fabric`): a
 //! message occupies the sender's egress port for its serialization
@@ -10,12 +10,38 @@
 //! `ser + latency` store-and-forward hop; under fan-in/fan-out the
 //! port queues produce incast and broadcast bottlenecks (the
 //! parameter-server hub effect).
+//!
+//! # LinkTable semantics
+//!
+//! Every directed edge `(src, dst)` resolves to exactly one
+//! [`LinkSpec`]. A [`LinkTable`] holds one uniform *default* spec plus
+//! a sparse override map; [`LinkTable::spec`] returns the override when
+//! `(src, dst)` has one and the default otherwise. Overrides are
+//! directed — overriding `(0, 1)` leaves `(1, 0)` on the default — and
+//! layer in a fixed precedence order when a fabric is built
+//! (`Fabric::for_topology`): topology-derived overrides (e.g. the
+//! hierarchy's slow inter-rack uplinks) are applied first, then the
+//! explicit `FabricConfig::link_overrides`, so user configuration
+//! always wins. Serialization/latency/jitter of a hop are billed
+//! entirely at the resolved spec of that hop's directed edge.
+//!
+//! ```
+//! use vgc::fabric::{LinkSpec, LinkTable};
+//!
+//! let mut table = LinkTable::uniform(LinkSpec::gige());
+//! table.set(0, 1, LinkSpec::infiniband());
+//! assert_eq!(table.spec(0, 1).bandwidth_gbps, 100.0); // overridden
+//! assert_eq!(table.spec(1, 0).bandwidth_gbps, 1.0); // directed: default
+//! assert_eq!(table.overrides(), 1);
+//! ```
+
+use std::collections::BTreeMap;
 
 use super::clock::{Time, PS_PER_US};
 use crate::comm::costmodel::LinkModel;
 
-/// Uniform link parameters in human units. Conversions to picoseconds
-/// happen at send time.
+/// Link parameters in human units. Conversions to picoseconds happen
+/// at send time.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LinkSpec {
     /// Bandwidth in Gbit/s (1 Gbps ⇒ 1000 ps/bit).
@@ -78,6 +104,104 @@ impl LinkSpec {
     }
 }
 
+/// A directed-edge link resolver: one uniform default spec plus sparse
+/// per-link overrides (see the module docs for precedence semantics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkTable {
+    default: LinkSpec,
+    overrides: BTreeMap<(usize, usize), LinkSpec>,
+}
+
+impl LinkTable {
+    /// Every directed edge uses `default`.
+    pub fn uniform(default: LinkSpec) -> LinkTable {
+        LinkTable {
+            default,
+            overrides: BTreeMap::new(),
+        }
+    }
+
+    /// The spec used when no override matches.
+    pub fn default_spec(&self) -> &LinkSpec {
+        &self.default
+    }
+
+    /// Override the directed edge `src → dst`. Later calls win.
+    pub fn set(&mut self, src: usize, dst: usize, spec: LinkSpec) {
+        assert!(src != dst, "link override on self-edge {src}");
+        self.overrides.insert((src, dst), spec);
+    }
+
+    /// Resolve the spec for the directed edge `src → dst`.
+    pub fn spec(&self, src: usize, dst: usize) -> &LinkSpec {
+        self.overrides.get(&(src, dst)).unwrap_or(&self.default)
+    }
+
+    /// Number of overridden directed edges.
+    pub fn overrides(&self) -> usize {
+        self.overrides.len()
+    }
+
+    /// Largest node id named by an override, if any (for range checks).
+    pub fn max_node(&self) -> Option<usize> {
+        self.overrides.keys().map(|&(s, d)| s.max(d)).max()
+    }
+}
+
+/// Parse a comma-separated per-link override list:
+/// `SRC-DST:GBPS[:LAT_US[:JIT_US]]`, e.g. `0-1:0.1` (slow the directed
+/// edge 0→1 to 0.1 Gbps) or `0-1:0.1:200:5`. Omitted latency/jitter
+/// inherit `base`.
+pub fn parse_link_overrides(
+    spec: &str,
+    base: &LinkSpec,
+) -> anyhow::Result<Vec<(usize, usize, LinkSpec)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+        let fields: Vec<&str> = part.trim().split(':').collect();
+        anyhow::ensure!(
+            (2..=4).contains(&fields.len()),
+            "link override '{part}': want SRC-DST:GBPS[:LAT_US[:JIT_US]]"
+        );
+        let (src, dst) = fields[0]
+            .split_once('-')
+            .ok_or_else(|| anyhow::anyhow!("link override '{part}': want SRC-DST endpoints"))?;
+        let src: usize = src.trim().parse()?;
+        let dst: usize = dst.trim().parse()?;
+        anyhow::ensure!(src != dst, "link override '{part}': self-edge");
+        let mut link = *base;
+        link.bandwidth_gbps = fields[1].trim().parse()?;
+        anyhow::ensure!(
+            link.bandwidth_gbps > 0.0,
+            "link override '{part}': bandwidth must be positive"
+        );
+        if let Some(lat) = fields.get(2) {
+            link.latency_us = lat.trim().parse()?;
+            anyhow::ensure!(link.latency_us >= 0.0, "link override '{part}': latency < 0");
+        }
+        if let Some(jit) = fields.get(3) {
+            link.jitter_us = jit.trim().parse()?;
+            anyhow::ensure!(link.jitter_us >= 0.0, "link override '{part}': jitter < 0");
+        }
+        out.push((src, dst, link));
+    }
+    Ok(out)
+}
+
+/// Canonical string form of an override list (parses back via
+/// [`parse_link_overrides`]; always writes the full 4-field form).
+pub fn link_overrides_str(list: &[(usize, usize, LinkSpec)]) -> String {
+    list.iter()
+        .map(|(s, d, l)| {
+            format!(
+                "{s}-{d}:{}:{}:{}",
+                l.bandwidth_gbps, l.latency_us, l.jitter_us
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
 /// Traffic carried by one directed link over a collective.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct LinkStat {
@@ -121,5 +245,54 @@ mod tests {
     #[test]
     fn zero_bytes_serialize_instantly() {
         assert_eq!(LinkSpec::gige().ser_ps(0), 0);
+    }
+
+    #[test]
+    fn table_resolves_directed_overrides() {
+        let mut t = LinkTable::uniform(LinkSpec::gige());
+        assert_eq!(t.overrides(), 0);
+        assert_eq!(t.max_node(), None);
+        t.set(2, 5, LinkSpec::infiniband());
+        assert_eq!(t.spec(2, 5).bandwidth_gbps, 100.0);
+        assert_eq!(t.spec(5, 2).bandwidth_gbps, 1.0);
+        assert_eq!(t.spec(0, 1).latency_us, 50.0);
+        assert_eq!(t.overrides(), 1);
+        assert_eq!(t.max_node(), Some(5));
+        // Later set wins.
+        t.set(2, 5, LinkSpec::gige());
+        assert_eq!(t.spec(2, 5).bandwidth_gbps, 1.0);
+        assert_eq!(t.overrides(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-edge")]
+    fn table_rejects_self_edges() {
+        LinkTable::uniform(LinkSpec::gige()).set(3, 3, LinkSpec::gige());
+    }
+
+    #[test]
+    fn override_spec_roundtrip() {
+        let base = LinkSpec::gige();
+        let list = parse_link_overrides("0-1:0.1, 4-2:10:5:1", &base).unwrap();
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[0].0, 0);
+        assert_eq!(list[0].1, 1);
+        assert_eq!(list[0].2.bandwidth_gbps, 0.1);
+        assert_eq!(list[0].2.latency_us, base.latency_us); // inherited
+        assert_eq!(list[1].2.latency_us, 5.0);
+        assert_eq!(list[1].2.jitter_us, 1.0);
+        let s = link_overrides_str(&list);
+        assert_eq!(parse_link_overrides(&s, &base).unwrap(), list);
+        assert!(parse_link_overrides("", &base).unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_override_specs_are_loud() {
+        let base = LinkSpec::gige();
+        assert!(parse_link_overrides("0-1", &base).is_err()); // no rate
+        assert!(parse_link_overrides("01:5", &base).is_err()); // no edge
+        assert!(parse_link_overrides("2-2:5", &base).is_err()); // self-edge
+        assert!(parse_link_overrides("0-1:0", &base).is_err()); // zero rate
+        assert!(parse_link_overrides("0-1:1:-2", &base).is_err()); // neg lat
     }
 }

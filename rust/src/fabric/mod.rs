@@ -5,18 +5,22 @@
 //! this subsystem lets the repo *simulate* that claim instead of only
 //! asserting it. A cluster is a set of [`node::Node`] endpoints
 //! exchanging [`Msg`]s over links with configurable bandwidth, latency
-//! and jitter ([`link::LinkSpec`]), with per-node straggler injection
+//! and jitter ([`link::LinkSpec`], resolved per directed edge by a
+//! [`link::LinkTable`]), with per-node straggler injection
 //! ([`node::Straggler`]), driven by a deterministic discrete-event
 //! clock ([`clock::SimClock`]) — no real sleeping, reproducible under
 //! `util::rng` seeds.
 //!
 //! On top of the engine, pluggable [`topology::Topology`] backends
-//! (ring, fully-connected, parameter-server hub, 2-level tree) expose
-//! `allgatherv`/`allreduce` collectives that move the *actual bytes*,
-//! so the byte-accurate codec path runs unchanged over any topology.
-//! `comm::allgatherv`/`comm::allreduce` are thin fronts over the ring
-//! backend; `repro fabric-sweep` sweeps {topology × bandwidth ×
-//! workers × codec} end to end. See DESIGN.md §Fabric.
+//! (ring, fully-connected, parameter-server hub, 2-level tree, 2-D
+//! torus, NUMA-aware hierarchy) expose `allgatherv`/`allreduce`
+//! collectives that move the *actual bytes*, so the byte-accurate
+//! codec path runs unchanged over any topology. Gather messages can be
+//! pipelined in segments of the cost model's block size `m`
+//! ([`FabricConfig::segment_bytes`]). `comm::allgatherv` /
+//! `comm::allreduce` are thin fronts over the configured topology;
+//! `repro fabric-sweep` sweeps {topology × bandwidth × workers ×
+//! codec} end to end. See DESIGN.md §Fabric and docs/TOPOLOGIES.md.
 //!
 //! Timing model (cut-through ports):
 //!
@@ -28,21 +32,34 @@
 //!
 //! Uncontended, a hop costs the classic `ser + latency`; contention at
 //! ports reproduces hub incast and broadcast bottlenecks.
+//!
+//! ```
+//! use vgc::fabric::{build_topology, Fabric, LinkSpec, TopologyKind};
+//!
+//! let topo = build_topology(TopologyKind::Torus { rows: 2, cols: 2 }, 4);
+//! let mut fabric = Fabric::new(LinkSpec::gige(), topo.node_count(), 0);
+//! let inputs: Vec<Vec<u8>> = (0..4).map(|w| vec![w as u8; 32]).collect();
+//! let out = topo.allgatherv(&mut fabric, &inputs);
+//! assert_eq!(out.gathered[3][1], inputs[1]);
+//! assert!(out.time_ps > 0);
+//! ```
 
 pub mod clock;
 pub mod collectives;
+pub mod hierarchy;
 pub mod link;
 pub mod node;
 pub mod ring;
 pub mod star;
 pub mod topology;
+pub mod torus;
 pub mod tree;
 
 use std::collections::BTreeMap;
 
 pub use clock::{SimClock, Time};
 pub use collectives::{SimGather, SimReduce};
-pub use link::{LinkSpec, LinkStat};
+pub use link::{LinkSpec, LinkStat, LinkTable};
 pub use node::{Node, NodePerf, Straggler};
 pub use topology::{build_topology, Topology, TopologyKind};
 
@@ -68,11 +85,13 @@ impl Payload {
 }
 
 /// One in-flight message. `origin` identifies the block/chunk the
-/// payload represents; `hop` counts forwarding steps; `tag`
-/// distinguishes protocol phases (topology-specific).
+/// payload represents; `seg` its pipeline segment index (0 when
+/// unsegmented); `hop` counts forwarding steps; `tag` distinguishes
+/// protocol phases (topology-specific).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Msg {
     pub origin: usize,
+    pub seg: u32,
     pub hop: u32,
     pub tag: u8,
     pub payload: Payload,
@@ -105,9 +124,10 @@ pub trait Protocol {
     fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)>;
 }
 
-/// The simulated cluster: nodes + uniform link model + event clock.
+/// The simulated cluster: nodes + per-edge link model + event clock.
 pub struct Fabric {
-    pub link: LinkSpec,
+    table: LinkTable,
+    segment_bytes: usize,
     nodes: Vec<Node>,
     clock: SimClock<Delivery>,
     rng: Pcg32,
@@ -117,10 +137,12 @@ pub struct Fabric {
 
 impl Fabric {
     /// Build a fabric of `node_count` endpoints (workers plus any
-    /// infrastructure nodes the topology needs).
+    /// infrastructure nodes the topology needs) with a uniform link
+    /// model and no segmentation.
     pub fn new(link: LinkSpec, node_count: usize, seed: u64) -> Fabric {
         Fabric {
-            link,
+            table: LinkTable::uniform(link),
+            segment_bytes: 0,
             nodes: (0..node_count).map(Node::new).collect(),
             clock: SimClock::new(),
             rng: Pcg32::new(seed, 0xFAB),
@@ -130,11 +152,29 @@ impl Fabric {
     }
 
     /// Build from a config for a topology needing `node_count` nodes.
-    /// A straggler spec naming a node that does not exist is a config
-    /// error, not a no-op — silently dropping it would let `describe()`
-    /// report a degradation the simulation never applied.
+    /// A straggler spec or link override naming a node that does not
+    /// exist is a config error, not a no-op — silently dropping it
+    /// would let `describe()` report a degradation the simulation
+    /// never applied.
     pub fn for_config(cfg: &FabricConfig, node_count: usize) -> Fabric {
+        Fabric::build(cfg, node_count, &[])
+    }
+
+    /// Build for a concrete topology: like [`Fabric::for_config`], but
+    /// topology-derived link overrides (e.g. the hierarchy's slow
+    /// inter-rack uplinks) are applied first, so explicit
+    /// `FabricConfig::link_overrides` always win.
+    pub fn for_topology(cfg: &FabricConfig, topo: &dyn Topology) -> Fabric {
+        Fabric::build(cfg, topo.node_count(), &topo.link_overrides(cfg))
+    }
+
+    fn build(
+        cfg: &FabricConfig,
+        node_count: usize,
+        topo_overrides: &[(usize, usize, LinkSpec)],
+    ) -> Fabric {
         let mut f = Fabric::new(cfg.link, node_count, cfg.seed);
+        f.segment_bytes = cfg.segment_bytes;
         for s in &cfg.stragglers {
             assert!(
                 s.node < f.nodes.len(),
@@ -144,7 +184,33 @@ impl Fabric {
             );
             f.nodes[s.node].perf.slowdown = s.slowdown;
         }
+        for &(src, dst, spec) in topo_overrides {
+            f.set_link(src, dst, spec);
+        }
+        for &(src, dst, spec) in &cfg.link_overrides {
+            f.set_link(src, dst, spec);
+        }
         f
+    }
+
+    /// Override the link model of the directed edge `src → dst`.
+    pub fn set_link(&mut self, src: usize, dst: usize, spec: LinkSpec) {
+        assert!(
+            src < self.nodes.len() && dst < self.nodes.len(),
+            "link override {src}->{dst} out of range (fabric has {} nodes)",
+            self.nodes.len()
+        );
+        self.table.set(src, dst, spec);
+    }
+
+    /// The per-edge link resolver.
+    pub fn link_table(&self) -> &LinkTable {
+        &self.table
+    }
+
+    /// Gather pipeline segment size, bytes (0 = unsegmented).
+    pub fn segment_bytes(&self) -> usize {
+        self.segment_bytes
     }
 
     pub fn node_count(&self) -> usize {
@@ -192,8 +258,9 @@ impl Fabric {
     /// Schedule a message from `src` to `dst`, not before `ready`.
     fn send(&mut self, src: usize, dst: usize, msg: Msg, ready: Time) {
         assert!(src != dst, "self-send from node {src}");
+        let spec = *self.table.spec(src, dst);
         let bytes = msg.payload.size_bytes();
-        let ser = self.link.ser_ps(bytes);
+        let ser = spec.ser_ps(bytes);
 
         let tx_ser = self.nodes[src].scaled(ser);
         let start_tx = ready.max(self.nodes[src].egress_free);
@@ -201,13 +268,13 @@ impl Fabric {
         self.nodes[src].sent_bytes += bytes;
         self.nodes[src].sent_messages += 1;
 
-        let jitter_max = self.link.jitter_ps();
+        let jitter_max = spec.jitter_ps();
         let jitter = if jitter_max > 0 {
             (self.rng.next_f64() * jitter_max as f64) as Time
         } else {
             0
         };
-        let front = start_tx + self.link.latency_ps() + jitter;
+        let front = start_tx + spec.latency_ps() + jitter;
 
         // Delivery completes when the receiver has drained the message
         // (ingress queue + rx serialization) AND the sender has pushed
@@ -215,7 +282,7 @@ impl Fabric {
         // later. Uncontended equal-rate hops reduce to ser + latency.
         let rx_ser = self.nodes[dst].scaled(ser);
         let rx_start = front.max(self.nodes[dst].ingress_free);
-        let tx_tail = start_tx + tx_ser + self.link.latency_ps() + jitter;
+        let tx_tail = start_tx + tx_ser + spec.latency_ps() + jitter;
         let delivered = (rx_start + rx_ser).max(tx_tail);
         self.nodes[dst].ingress_free = delivered;
 
@@ -259,14 +326,27 @@ impl Fabric {
     }
 }
 
-/// Full fabric configuration: topology choice + link model + seeds +
-/// straggler injection. Serializes into the experiment record and
-/// parses from CLI flags (`--topology`, `--bandwidth-gbps`,
-/// `--latency-us`, `--jitter-us`, `--stragglers`, `--fabric-seed`).
+/// Full fabric configuration: topology choice + link model + per-link
+/// overrides + gather segmentation + seeds + straggler injection.
+/// Serializes into the experiment record and parses from CLI flags
+/// (`--topology`, `--torus-dims`, `--hier-groups`, `--bandwidth-gbps`,
+/// `--latency-us`, `--jitter-us`, `--inter-rack-gbps`,
+/// `--segment-bytes`, `--link-overrides`, `--stragglers`,
+/// `--fabric-seed`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FabricConfig {
     pub topology: TopologyKind,
     pub link: LinkSpec,
+    /// Explicit per-directed-edge link overrides (win over
+    /// topology-derived ones; see [`LinkTable`]).
+    pub link_overrides: Vec<(usize, usize, LinkSpec)>,
+    /// Gather pipeline segment size in bytes (0 = off). Set to the
+    /// cost model's block size `m` to make the simulated ring converge
+    /// to the pipelined `T_v` bound for skewed message sizes.
+    pub segment_bytes: usize,
+    /// Inter-group uplink bandwidth for the `hier` topology, Gbps
+    /// (`None` = a 10:1 oversubscribed default).
+    pub inter_rack_gbps: Option<f64>,
     pub seed: u64,
     pub stragglers: Vec<Straggler>,
 }
@@ -276,6 +356,9 @@ impl Default for FabricConfig {
         FabricConfig {
             topology: TopologyKind::Ring,
             link: LinkSpec::gige(),
+            link_overrides: Vec::new(),
+            segment_bytes: 0,
+            inter_rack_gbps: None,
             seed: 0,
             stragglers: Vec::new(),
         }
@@ -287,9 +370,14 @@ impl FabricConfig {
     /// `Args::check_known` lists).
     pub const FLAGS: &'static [&'static str] = &[
         "topology",
+        "torus-dims",
+        "hier-groups",
         "bandwidth-gbps",
         "latency-us",
         "jitter-us",
+        "inter-rack-gbps",
+        "segment-bytes",
+        "link-overrides",
         "stragglers",
         "fabric-seed",
     ];
@@ -299,9 +387,43 @@ impl FabricConfig {
         if let Some(t) = args.get("topology") {
             self.topology = TopologyKind::parse(t)?;
         }
+        if let Some(d) = args.get("torus-dims") {
+            anyhow::ensure!(
+                matches!(self.topology, TopologyKind::Torus { .. }),
+                "--torus-dims requires --topology torus"
+            );
+            let (rows, cols) = topology::parse_dims(d)?;
+            self.topology = TopologyKind::Torus { rows, cols };
+        }
+        if let Some(g) = args.get("hier-groups") {
+            anyhow::ensure!(
+                matches!(self.topology, TopologyKind::Hier { .. }),
+                "--hier-groups requires --topology hier"
+            );
+            let groups: usize = g
+                .parse()
+                .map_err(|e| anyhow::anyhow!("hier groups '{g}': {e}"))?;
+            anyhow::ensure!(groups >= 1, "--hier-groups must be >= 1");
+            self.topology = TopologyKind::Hier { groups };
+        }
         self.link.bandwidth_gbps = args.parse_or("bandwidth-gbps", self.link.bandwidth_gbps)?;
         self.link.latency_us = args.parse_or("latency-us", self.link.latency_us)?;
         self.link.jitter_us = args.parse_or("jitter-us", self.link.jitter_us)?;
+        if let Some(g) = args.get("inter-rack-gbps") {
+            anyhow::ensure!(
+                matches!(self.topology, TopologyKind::Hier { .. }),
+                "--inter-rack-gbps only applies to --topology hier"
+            );
+            let gbps: f64 = g
+                .parse()
+                .map_err(|e| anyhow::anyhow!("inter-rack gbps '{g}': {e}"))?;
+            anyhow::ensure!(gbps > 0.0, "--inter-rack-gbps must be positive");
+            self.inter_rack_gbps = Some(gbps);
+        }
+        self.segment_bytes = args.parse_or("segment-bytes", self.segment_bytes)?;
+        if let Some(spec) = args.get("link-overrides") {
+            self.link_overrides = link::parse_link_overrides(spec, &self.link)?;
+        }
         self.seed = args.parse_or("fabric-seed", self.seed)?;
         if let Some(spec) = args.get("stragglers") {
             self.stragglers = Straggler::parse_list(spec)?;
@@ -315,6 +437,34 @@ impl FabricConfig {
         Ok(self)
     }
 
+    /// Validate the whole config against a concrete worker count: the
+    /// topology shape must host `workers`, and every knob must reach a
+    /// link it names — an uplink on a hierarchy that resolves to a
+    /// single group would be silently unused while `describe()` still
+    /// advertised it, which is a config error, not a no-op (the same
+    /// contract as out-of-range stragglers).
+    pub fn validate(&self, workers: usize) -> anyhow::Result<()> {
+        self.topology.validate(workers)?;
+        if let Some(gbps) = self.inter_rack_gbps {
+            let groups = match self.topology {
+                TopologyKind::Hier { groups: 0 } => hierarchy::auto_groups(workers),
+                TopologyKind::Hier { groups } => groups,
+                _ => anyhow::bail!(
+                    "inter-rack uplink ({gbps} Gbps) only applies to the hier topology, \
+                     not {}",
+                    self.topology.label()
+                ),
+            };
+            anyhow::ensure!(
+                groups >= 2,
+                "inter-rack uplink ({gbps} Gbps) has no inter-group link to apply: \
+                 hier resolves to a single group for {workers} worker{}",
+                if workers == 1 { "" } else { "s" }
+            );
+        }
+        Ok(())
+    }
+
     /// One-line human description for run summaries.
     pub fn describe(&self) -> String {
         let mut out = format!(
@@ -325,6 +475,19 @@ impl FabricConfig {
         );
         if self.link.jitter_us > 0.0 {
             out.push_str(&format!(", jitter {} us", self.link.jitter_us));
+        }
+        if let Some(g) = self.inter_rack_gbps {
+            out.push_str(&format!(", uplink {g} Gbps"));
+        }
+        if self.segment_bytes > 0 {
+            out.push_str(&format!(", segment {} B", self.segment_bytes));
+        }
+        if !self.link_overrides.is_empty() {
+            out.push_str(&format!(
+                ", {} link override{}",
+                self.link_overrides.len(),
+                if self.link_overrides.len() == 1 { "" } else { "s" }
+            ));
         }
         if !self.stragglers.is_empty() {
             out.push_str(&format!(
@@ -341,19 +504,46 @@ impl FabricConfig {
             ("bandwidth_gbps", num(self.link.bandwidth_gbps)),
             ("latency_us", num(self.link.latency_us)),
             ("jitter_us", num(self.link.jitter_us)),
+            (
+                "inter_rack_gbps",
+                self.inter_rack_gbps.map(num).unwrap_or(Json::Null),
+            ),
+            ("segment_bytes", num(self.segment_bytes as f64)),
+            (
+                "link_overrides",
+                s(&link::link_overrides_str(&self.link_overrides)),
+            ),
             ("seed", num(self.seed as f64)),
             ("stragglers", s(&Straggler::list_str(&self.stragglers))),
         ])
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<FabricConfig> {
+        let link = LinkSpec {
+            bandwidth_gbps: j.expect("bandwidth_gbps")?.as_f64()?,
+            latency_us: j.expect("latency_us")?.as_f64()?,
+            jitter_us: j.expect("jitter_us")?.as_f64()?,
+        };
+        // New fields are optional so configs recorded before they
+        // existed still load.
+        let inter_rack_gbps = match j.get("inter_rack_gbps") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_f64()?),
+        };
+        let segment_bytes = match j.get("segment_bytes") {
+            None => 0,
+            Some(v) => v.as_usize()?,
+        };
+        let link_overrides = match j.get("link_overrides") {
+            None => Vec::new(),
+            Some(v) => link::parse_link_overrides(v.as_str()?, &link)?,
+        };
         Ok(FabricConfig {
             topology: TopologyKind::parse(j.expect("topology")?.as_str()?)?,
-            link: LinkSpec {
-                bandwidth_gbps: j.expect("bandwidth_gbps")?.as_f64()?,
-                latency_us: j.expect("latency_us")?.as_f64()?,
-                jitter_us: j.expect("jitter_us")?.as_f64()?,
-            },
+            link,
+            link_overrides,
+            segment_bytes,
+            inter_rack_gbps,
             seed: j.expect("seed")?.as_f64()? as u64,
             stragglers: Straggler::parse_list(j.expect("stragglers")?.as_str()?)?,
         })
@@ -375,6 +565,7 @@ mod tests {
                 1,
                 Msg {
                     origin: 0,
+                    seg: 0,
                     hop: 0,
                     tag: 0,
                     payload: Payload::Bytes(vec![0u8; 125]), // 1000 bits
@@ -406,6 +597,44 @@ mod tests {
         assert_eq!(f.node(1).recv_bytes, 125);
         assert_eq!(f.links()[&(0, 1)].messages, 1);
         assert_eq!(f.events(), 1);
+    }
+
+    #[test]
+    fn link_override_slows_only_its_directed_edge() {
+        let link = LinkSpec {
+            bandwidth_gbps: 1.0,
+            latency_us: 1.0,
+            jitter_us: 0.0,
+        };
+        let slow = LinkSpec {
+            bandwidth_gbps: 0.1,
+            ..link
+        };
+        let mut f = Fabric::for_config(
+            &FabricConfig {
+                link,
+                link_overrides: vec![(0, 1, slow)],
+                ..FabricConfig::default()
+            },
+            2,
+        );
+        let mut p = OneShot {
+            delivered: Vec::new(),
+        };
+        // 1000 bits at 0.1 Gbps = 10 us ser; + 1 us latency = 11 us.
+        assert_eq!(f.run(&mut p), 11_000_000);
+        // The reverse edge is untouched.
+        assert_eq!(f.link_table().spec(1, 0).bandwidth_gbps, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn link_override_beyond_fabric_panics() {
+        let cfg = FabricConfig {
+            link_overrides: vec![(0, 9, LinkSpec::gige())],
+            ..FabricConfig::default()
+        };
+        Fabric::for_config(&cfg, 2);
     }
 
     #[test]
@@ -446,6 +675,10 @@ mod tests {
             "5",
             "--jitter-us",
             "2",
+            "--segment-bytes",
+            "8192",
+            "--link-overrides",
+            "0-1:0.5,2-0:20:1:0",
             "--stragglers",
             "1:4",
             "--fabric-seed",
@@ -458,6 +691,12 @@ mod tests {
         let cfg = FabricConfig::default().override_from(&args).unwrap();
         assert_eq!(cfg.topology, TopologyKind::Tree { branch: 8 });
         assert_eq!(cfg.link.bandwidth_gbps, 10.0);
+        assert_eq!(cfg.segment_bytes, 8192);
+        assert_eq!(cfg.link_overrides.len(), 2);
+        assert_eq!(cfg.link_overrides[0].2.bandwidth_gbps, 0.5);
+        // Unspecified override fields inherit the (overridden) base.
+        assert_eq!(cfg.link_overrides[0].2.latency_us, 5.0);
+        assert_eq!(cfg.link_overrides[1].2.latency_us, 1.0);
         assert_eq!(cfg.stragglers.len(), 1);
         assert_eq!(cfg.seed, 9);
 
@@ -467,8 +706,70 @@ mod tests {
     }
 
     #[test]
-    fn describe_mentions_topology_and_stragglers() {
+    fn torus_and_hier_flags_shape_the_topology() {
+        let parse = |raw: &[&str]| {
+            let raw: Vec<String> = raw.iter().map(|s| s.to_string()).collect();
+            let args = Args::parse(&raw, &[]).unwrap();
+            FabricConfig::default().override_from(&args)
+        };
+        let cfg = parse(&["--topology", "torus", "--torus-dims", "4x2"]).unwrap();
+        assert_eq!(cfg.topology, TopologyKind::Torus { rows: 4, cols: 2 });
+        let cfg = parse(&["--topology", "hier", "--hier-groups", "3"]).unwrap();
+        assert_eq!(cfg.topology, TopologyKind::Hier { groups: 3 });
+        let cfg = parse(&["--topology", "hier:2", "--inter-rack-gbps", "0.25"]).unwrap();
+        assert_eq!(cfg.inter_rack_gbps, Some(0.25));
+        // The modifier flags demand their topology.
+        assert!(parse(&["--torus-dims", "2x2"]).is_err());
+        assert!(parse(&["--topology", "ring", "--hier-groups", "2"]).is_err());
+        assert!(parse(&["--topology", "ring", "--inter-rack-gbps", "1"]).is_err());
+        assert!(parse(&["--topology", "hier", "--inter-rack-gbps", "0"]).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_uplinks_that_reach_no_link() {
+        let hier_uplink = |groups: usize| FabricConfig {
+            topology: TopologyKind::Hier { groups },
+            inter_rack_gbps: Some(0.5),
+            ..FabricConfig::default()
+        };
+        assert!(hier_uplink(2).validate(4).is_ok());
+        // Auto groups resolve to 1 for 2 workers: the uplink would be
+        // silently unused while describe() still advertised it.
+        let err = hier_uplink(0).validate(2).unwrap_err().to_string();
+        assert!(err.contains("single group"), "{err}");
+        assert!(hier_uplink(1).validate(8).is_err());
+        // An uplink on a non-hier topology is just as unreachable.
         let cfg = FabricConfig {
+            topology: TopologyKind::Ring,
+            inter_rack_gbps: Some(0.5),
+            ..FabricConfig::default()
+        };
+        assert!(cfg.validate(4).is_err());
+        // The shape check still runs first.
+        assert!(FabricConfig {
+            topology: TopologyKind::Torus { rows: 2, cols: 3 },
+            ..FabricConfig::default()
+        }
+        .validate(7)
+        .is_err());
+    }
+
+    #[test]
+    fn pre_fabric_json_configs_still_load() {
+        // Recorded before link_overrides/segment_bytes/inter_rack
+        // existed: absent keys default off.
+        let old = r#"{"topology":"ring","bandwidth_gbps":1,"latency_us":50,
+            "jitter_us":0,"seed":0,"stragglers":""}"#;
+        let cfg = FabricConfig::from_json(&Json::parse(old).unwrap()).unwrap();
+        assert_eq!(cfg, FabricConfig::default());
+    }
+
+    #[test]
+    fn describe_mentions_topology_and_degradations() {
+        let cfg = FabricConfig {
+            segment_bytes: 8192,
+            inter_rack_gbps: Some(0.5),
+            link_overrides: vec![(0, 1, LinkSpec::gige())],
             stragglers: vec![Straggler {
                 node: 2,
                 slowdown: 2.0,
@@ -478,5 +779,8 @@ mod tests {
         let d = cfg.describe();
         assert!(d.contains("ring"), "{d}");
         assert!(d.contains("2:2"), "{d}");
+        assert!(d.contains("segment 8192 B"), "{d}");
+        assert!(d.contains("uplink 0.5 Gbps"), "{d}");
+        assert!(d.contains("1 link override"), "{d}");
     }
 }

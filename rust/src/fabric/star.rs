@@ -2,13 +2,15 @@
 //!
 //! Workers 0..p are leaves; node `p` is a dedicated hub (it holds no
 //! gradient of its own). Allgatherv relays every block through the hub
-//! (up, then fan-out); allreduce ships full vectors up, reduces at the
-//! hub in worker order, and fans the sum back out. The hub's ingress
-//! port serializes the p-way incast and its egress port the p·(p−1)
+//! (up, then fan-out), per pipeline segment when the fabric configures
+//! one — so a long block starts fanning out before it has fully
+//! arrived; allreduce ships full vectors up, reduces at the hub in
+//! worker order, and fans the sum back out. The hub's ingress port
+//! serializes the p-way incast and its egress port the p·(p−1)
 //! fan-out — the classic PS bottleneck the sweep quantifies against
 //! the ring.
 
-use super::collectives::{traffic_from, GatherState, SimGather, SimReduce};
+use super::collectives::{split_all, traffic_from, GatherState, SimGather, SimReduce};
 use super::topology::{Topology, TopologyKind};
 use super::{Fabric, Msg, Payload, Protocol};
 
@@ -35,7 +37,7 @@ impl Star {
 struct StarGather {
     p: usize,
     hub: usize,
-    inputs: Vec<Vec<u8>>,
+    segs: Vec<Vec<Vec<u8>>>,
     state: GatherState,
 }
 
@@ -44,25 +46,28 @@ impl Protocol for StarGather {
         if self.p == 1 {
             return Vec::new();
         }
-        (0..self.p)
-            .map(|w| {
-                (
+        let mut out = Vec::new();
+        for w in 0..self.p {
+            for (si, sg) in self.segs[w].iter().enumerate() {
+                out.push((
                     w,
                     self.hub,
                     Msg {
                         origin: w,
+                        seg: si as u32,
                         hop: 1,
                         tag: TAG_UP,
-                        payload: Payload::Bytes(self.inputs[w].clone()),
+                        payload: Payload::Bytes(sg.clone()),
                     },
-                )
-            })
-            .collect()
+                ));
+            }
+        }
+        out
     }
 
     fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
         if node == self.hub {
-            // Fan the block out to every worker that lacks it.
+            // Fan the segment out to every worker that lacks it.
             (0..self.p)
                 .filter(|&v| v != msg.origin)
                 .map(|v| {
@@ -70,6 +75,7 @@ impl Protocol for StarGather {
                         v,
                         Msg {
                             origin: msg.origin,
+                            seg: msg.seg,
                             hop: msg.hop + 1,
                             tag: TAG_DOWN,
                             payload: msg.payload.clone(),
@@ -81,7 +87,7 @@ impl Protocol for StarGather {
             let Payload::Bytes(b) = &msg.payload else {
                 unreachable!("gather protocol only moves bytes")
             };
-            self.state.store(node, msg.origin, b);
+            self.state.store(node, msg.origin, msg.seg as usize, b);
             Vec::new()
         }
     }
@@ -106,6 +112,7 @@ impl Protocol for StarReduce {
                     self.hub,
                     Msg {
                         origin: w,
+                        seg: 0,
                         hop: 1,
                         tag: TAG_UP,
                         payload: Payload::F32(self.inputs[w].clone()),
@@ -139,6 +146,7 @@ impl Protocol for StarReduce {
                         w,
                         Msg {
                             origin: w,
+                            seg: 0,
                             hop: msg.hop + 1,
                             tag: TAG_DOWN,
                             payload: Payload::F32(sum.clone()),
@@ -180,11 +188,12 @@ impl Topology for Star {
 
     fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
         assert_eq!(inputs.len(), self.p, "one input message per worker");
+        let seg = fabric.segment_bytes();
         let mut proto = StarGather {
             p: self.p,
             hub: self.hub(),
-            inputs: inputs.to_vec(),
-            state: GatherState::new(inputs),
+            segs: split_all(inputs, seg),
+            state: GatherState::new(inputs, seg),
         };
         let time_ps = fabric.run(&mut proto);
         SimGather {

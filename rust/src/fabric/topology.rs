@@ -6,22 +6,55 @@
 //! per-link traffic. Ring ([`super::ring`]) is the paper's substrate;
 //! star ([`super::star`]) models a parameter server; tree
 //! ([`super::tree`]) a 2-level hierarchical cluster (e.g. rack-local
-//! leaders); [`FullMesh`] here is the contention-free upper bound.
+//! leaders); torus ([`super::torus`]) a 2-D wraparound grid;
+//! hierarchy ([`super::hierarchy`]) a NUMA-aware group topology with
+//! slow inter-rack uplinks; [`FullMesh`] here is the contention-free
+//! upper bound. See docs/TOPOLOGIES.md for per-topology cost formulas
+//! and when-to-use guidance.
 
-use super::collectives::{traffic_from, GatherState, SimGather, SimReduce};
-use super::{Fabric, Msg, Payload, Protocol};
+use super::collectives::{split_all, traffic_from, GatherState, SimGather, SimReduce};
+use super::{Fabric, FabricConfig, LinkSpec, Msg, Payload, Protocol};
 
 /// Topology selector, parsed from `--topology`.
+///
+/// `Torus { rows: 0, cols: 0 }` and `Hier { groups: 0 }` mean "auto":
+/// the dimensions/group count are derived from the worker count when
+/// the backend is built ([`build_topology`]), and the backend's
+/// [`Topology::kind`] reports the resolved values.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TopologyKind {
     Ring,
     Full,
     Star,
     Tree { branch: usize },
+    Torus { rows: usize, cols: usize },
+    Hier { groups: usize },
+}
+
+/// Every accepted `--topology` form, for error messages and usage.
+pub const TOPOLOGY_FORMS: &str = "ring|full|star|tree[:branch]|torus[:RxC]|hier[:groups]";
+
+/// Parse a `RxC` torus dimension spec (e.g. `4x2`).
+pub fn parse_dims(s: &str) -> anyhow::Result<(usize, usize)> {
+    let (r, c) = s
+        .split_once('x')
+        .ok_or_else(|| anyhow::anyhow!("torus dims '{s}': want RxC (e.g. 4x2)"))?;
+    let rows: usize = r
+        .trim()
+        .parse()
+        .map_err(|e| anyhow::anyhow!("torus rows '{r}': {e}"))?;
+    let cols: usize = c
+        .trim()
+        .parse()
+        .map_err(|e| anyhow::anyhow!("torus cols '{c}': {e}"))?;
+    anyhow::ensure!(rows >= 1 && cols >= 1, "torus dims must be >= 1 (got {s})");
+    Ok((rows, cols))
 }
 
 impl TopologyKind {
-    /// Parse `ring`, `full`, `star`, `tree` (branch 4) or `tree:<b>`.
+    /// Parse `ring`, `full`, `star`, `tree` (branch 4) or `tree:<b>`,
+    /// `torus` (near-square auto dims) or `torus:<R>x<C>`, `hier`
+    /// (auto group count) or `hier:<g>`.
     pub fn parse(s: &str) -> anyhow::Result<TopologyKind> {
         let (head, rest) = match s.split_once(':') {
             Some((h, r)) => (h, Some(r)),
@@ -39,7 +72,20 @@ impl TopologyKind {
                 anyhow::ensure!(branch >= 1, "tree branch must be >= 1");
                 Ok(TopologyKind::Tree { branch })
             }
-            _ => anyhow::bail!("unknown topology '{s}' (ring|full|star|tree[:branch])"),
+            ("torus", None) => Ok(TopologyKind::Torus { rows: 0, cols: 0 }),
+            ("torus", Some(d)) => {
+                let (rows, cols) = parse_dims(d)?;
+                Ok(TopologyKind::Torus { rows, cols })
+            }
+            ("hier", None) => Ok(TopologyKind::Hier { groups: 0 }),
+            ("hier", Some(g)) => {
+                let groups: usize = g
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("hier groups '{g}': {e}"))?;
+                anyhow::ensure!(groups >= 1, "hier groups must be >= 1");
+                Ok(TopologyKind::Hier { groups })
+            }
+            _ => anyhow::bail!("unknown topology '{s}' ({TOPOLOGY_FORMS})"),
         }
     }
 
@@ -50,18 +96,52 @@ impl TopologyKind {
             TopologyKind::Full => "full".into(),
             TopologyKind::Star => "star".into(),
             TopologyKind::Tree { branch } => format!("tree:{branch}"),
+            TopologyKind::Torus { rows: 0, cols: 0 } => "torus".into(),
+            TopologyKind::Torus { rows, cols } => format!("torus:{rows}x{cols}"),
+            TopologyKind::Hier { groups: 0 } => "hier".into(),
+            TopologyKind::Hier { groups } => format!("hier:{groups}"),
         }
+    }
+
+    /// Check that this kind can be instantiated for `workers`
+    /// endpoints (a CLI-friendly version of the constructor asserts).
+    pub fn validate(&self, workers: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(workers > 0, "topology needs at least one worker");
+        match *self {
+            TopologyKind::Torus { rows, cols } if rows > 0 && cols > 0 => {
+                anyhow::ensure!(
+                    rows * cols == workers,
+                    "torus {rows}x{cols} needs {} workers, got {workers}",
+                    rows * cols
+                );
+            }
+            TopologyKind::Hier { groups } if groups > 0 => {
+                anyhow::ensure!(
+                    groups <= workers,
+                    "hier wants {groups} groups but only {workers} workers"
+                );
+            }
+            _ => {}
+        }
+        Ok(())
     }
 }
 
 /// A cluster wiring + collective protocol implementation.
 pub trait Topology {
+    /// The (auto-resolved) selector this backend was built from.
     fn kind(&self) -> TopologyKind;
     /// Participating workers (collective endpoints).
     fn workers(&self) -> usize;
     /// Total simulated nodes, including infrastructure (e.g. the hub).
     fn node_count(&self) -> usize {
         self.workers()
+    }
+    /// Per-link specs this topology imposes on its fabric (e.g. slow
+    /// inter-rack uplinks); explicit `FabricConfig::link_overrides`
+    /// are applied on top (see `Fabric::for_topology`).
+    fn link_overrides(&self, _cfg: &FabricConfig) -> Vec<(usize, usize, LinkSpec)> {
+        Vec::new()
     }
     /// Logical round count for gatherv (`Traffic::rounds`).
     fn gather_rounds(&self) -> u32;
@@ -80,6 +160,12 @@ pub fn build_topology(kind: TopologyKind, workers: usize) -> Box<dyn Topology> {
         TopologyKind::Full => Box::new(FullMesh::new(workers)),
         TopologyKind::Star => Box::new(super::star::Star::new(workers)),
         TopologyKind::Tree { branch } => Box::new(super::tree::Tree::new(workers, branch)),
+        TopologyKind::Torus { rows, cols } => {
+            Box::new(super::torus::Torus::new(workers, rows, cols))
+        }
+        TopologyKind::Hier { groups } => {
+            Box::new(super::hierarchy::Hierarchy::new(workers, groups))
+        }
     }
 }
 
@@ -102,7 +188,7 @@ impl FullMesh {
 
 struct MeshGather {
     p: usize,
-    inputs: Vec<Vec<u8>>,
+    segs: Vec<Vec<Vec<u8>>>,
     state: GatherState,
 }
 
@@ -112,16 +198,19 @@ impl Protocol for MeshGather {
         for w in 0..self.p {
             for v in 0..self.p {
                 if v != w {
-                    out.push((
-                        w,
-                        v,
-                        Msg {
-                            origin: w,
-                            hop: 0,
-                            tag: 0,
-                            payload: Payload::Bytes(self.inputs[w].clone()),
-                        },
-                    ));
+                    for (si, sg) in self.segs[w].iter().enumerate() {
+                        out.push((
+                            w,
+                            v,
+                            Msg {
+                                origin: w,
+                                seg: si as u32,
+                                hop: 0,
+                                tag: 0,
+                                payload: Payload::Bytes(sg.clone()),
+                            },
+                        ));
+                    }
                 }
             }
         }
@@ -130,7 +219,7 @@ impl Protocol for MeshGather {
 
     fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
         if let Payload::Bytes(b) = &msg.payload {
-            self.state.store(node, msg.origin, b);
+            self.state.store(node, msg.origin, msg.seg as usize, b);
         }
         Vec::new()
     }
@@ -153,6 +242,7 @@ impl Protocol for MeshReduce {
                         v,
                         Msg {
                             origin: w,
+                            seg: 0,
                             hop: 0,
                             tag: 0,
                             payload: Payload::F32(self.inputs[w].clone()),
@@ -191,10 +281,11 @@ impl Topology for FullMesh {
 
     fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
         assert_eq!(inputs.len(), self.p, "one input message per worker");
+        let seg = fabric.segment_bytes();
         let mut proto = MeshGather {
             p: self.p,
-            inputs: inputs.to_vec(),
-            state: GatherState::new(inputs),
+            segs: split_all(inputs, seg),
+            state: GatherState::new(inputs, seg),
         };
         let time_ps = fabric.run(&mut proto);
         SimGather {
@@ -270,6 +361,10 @@ mod tests {
             TopologyKind::Star,
             TopologyKind::Tree { branch: 4 },
             TopologyKind::Tree { branch: 8 },
+            TopologyKind::Torus { rows: 0, cols: 0 },
+            TopologyKind::Torus { rows: 4, cols: 2 },
+            TopologyKind::Hier { groups: 0 },
+            TopologyKind::Hier { groups: 3 },
         ] {
             assert_eq!(TopologyKind::parse(&k.label()).unwrap(), k);
         }
@@ -277,8 +372,38 @@ mod tests {
             TopologyKind::parse("tree").unwrap(),
             TopologyKind::Tree { branch: 4 }
         );
-        assert!(TopologyKind::parse("torus").is_err());
+        // The one-time `torus` parse bug: it must now resolve to the
+        // auto-dims torus instead of an error.
+        assert_eq!(
+            TopologyKind::parse("torus").unwrap(),
+            TopologyKind::Torus { rows: 0, cols: 0 }
+        );
+        assert_eq!(
+            TopologyKind::parse("hier").unwrap(),
+            TopologyKind::Hier { groups: 0 }
+        );
         assert!(TopologyKind::parse("tree:0").is_err());
+        assert!(TopologyKind::parse("torus:0x2").is_err());
+        assert!(TopologyKind::parse("torus:4").is_err());
+        assert!(TopologyKind::parse("hier:0").is_err());
+    }
+
+    #[test]
+    fn parse_errors_enumerate_the_accepted_set() {
+        let err = TopologyKind::parse("moebius").unwrap_err().to_string();
+        for form in ["ring", "full", "star", "tree", "torus", "hier"] {
+            assert!(err.contains(form), "'{form}' missing from: {err}");
+        }
+    }
+
+    #[test]
+    fn validate_checks_shape_against_workers() {
+        assert!(TopologyKind::Torus { rows: 2, cols: 3 }.validate(6).is_ok());
+        assert!(TopologyKind::Torus { rows: 2, cols: 3 }.validate(7).is_err());
+        assert!(TopologyKind::Torus { rows: 0, cols: 0 }.validate(7).is_ok()); // auto
+        assert!(TopologyKind::Hier { groups: 4 }.validate(3).is_err());
+        assert!(TopologyKind::Hier { groups: 0 }.validate(3).is_ok()); // auto
+        assert!(TopologyKind::Ring.validate(0).is_err());
     }
 
     #[test]

@@ -1,0 +1,531 @@
+//! 2-D torus topology: a `rows × cols` wraparound grid, the
+//! fixed-degree fabric of TPU pods and many HPC interconnects.
+//!
+//! Node `(r, c)` is id `r·cols + c` and has four neighbours (right and
+//! down are used by the collectives; the wraparound keeps every node's
+//! degree constant). Allgatherv runs in two pipelined ring phases per
+//! block: the origin circulates its block rightward along its **row**
+//! (`cols − 1` hops), and every node of that row — origin included —
+//! injects the block downward along its **column** (`rows − 1` hops).
+//! Each of the other `p − 1` nodes therefore receives every block
+//! exactly once, and per-block traffic is the p−1-send optimum of the
+//! flat ring while the longest route shrinks from `p − 1` to
+//! `(rows − 1) + (cols − 1)` hops. The two phases overlap per block —
+//! a column injection starts the moment a row hop lands, without
+//! waiting for the row circulation to finish — and per segment when
+//! the fabric configures gather segmentation
+//! (`FabricConfig::segment_bytes`).
+//!
+//! Allreduce is dimension-wise: every node exchanges vectors within
+//! its row and sums in ascending column order (identical bits on every
+//! node of a row), then exchanges the row-sums within its column and
+//! sums in ascending row order — `(rows − 1) + (cols − 1)` vector
+//! sends per node versus the flat mesh's `p − 1`.
+//!
+//! `torus` (no dims) picks the most-square factorization of the worker
+//! count ([`auto_dims`]); `torus:RxC` pins the shape and requires
+//! `R·C` workers. A `1×p` torus degenerates to the ring's hop
+//! structure; a `p×1` likewise by columns.
+//!
+//! ```
+//! use vgc::fabric::{build_topology, Fabric, FabricConfig, TopologyKind};
+//!
+//! let topo = build_topology(TopologyKind::Torus { rows: 0, cols: 0 }, 6);
+//! assert_eq!(topo.kind(), TopologyKind::Torus { rows: 2, cols: 3 });
+//! let mut fabric = Fabric::for_topology(&FabricConfig::default(), &*topo);
+//! let inputs: Vec<Vec<u8>> = (0..6).map(|w| vec![w as u8; 16]).collect();
+//! let out = topo.allgatherv(&mut fabric, &inputs);
+//! assert_eq!(out.gathered[5][0], inputs[0]);
+//! ```
+
+use super::collectives::{split_all, traffic_from, GatherState, SimGather, SimReduce};
+use super::topology::{Topology, TopologyKind};
+use super::{Fabric, Msg, Payload, Protocol};
+use crate::comm::Traffic;
+
+/// Block circulating rightward along the origin's row.
+const TAG_ROW: u8 = 0;
+/// Block circulating downward along a column.
+const TAG_COL: u8 = 1;
+
+/// The most-square `rows × cols = p` factorization (`rows ≤ cols`):
+/// the largest divisor of `p` not exceeding `√p`. Primes degenerate to
+/// `1 × p` (a ring).
+pub fn auto_dims(p: usize) -> (usize, usize) {
+    assert!(p > 0, "topology needs at least one worker");
+    let mut rows = (p as f64).sqrt() as usize;
+    while rows > 1 && p % rows != 0 {
+        rows -= 1;
+    }
+    let rows = rows.max(1);
+    (rows, p / rows)
+}
+
+pub struct Torus {
+    rows: usize,
+    cols: usize,
+}
+
+impl Torus {
+    /// `rows`/`cols` of 0 mean "auto" (see [`auto_dims`]); explicit
+    /// dims must factor the worker count exactly.
+    pub fn new(workers: usize, rows: usize, cols: usize) -> Torus {
+        assert!(workers > 0, "topology needs at least one worker");
+        let (rows, cols) = if rows == 0 || cols == 0 {
+            auto_dims(workers)
+        } else {
+            (rows, cols)
+        };
+        assert_eq!(
+            rows * cols,
+            workers,
+            "torus {rows}x{cols} needs {} workers, got {workers}",
+            rows * cols
+        );
+        Torus { rows, cols }
+    }
+
+    fn p(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    fn row_of(&self, w: usize) -> usize {
+        w / self.cols
+    }
+
+    fn col_of(&self, w: usize) -> usize {
+        w % self.cols
+    }
+
+    /// Right neighbour within the row (wraps).
+    fn right(&self, w: usize) -> usize {
+        self.row_of(w) * self.cols + (self.col_of(w) + 1) % self.cols
+    }
+
+    /// Down neighbour within the column (wraps).
+    fn down(&self, w: usize) -> usize {
+        ((self.row_of(w) + 1) % self.rows) * self.cols + self.col_of(w)
+    }
+}
+
+struct TorusGather<'t> {
+    t: &'t Torus,
+    segs: Vec<Vec<Vec<u8>>>,
+    state: GatherState,
+}
+
+impl Protocol for TorusGather<'_> {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        let mut out = Vec::new();
+        for w in 0..self.t.p() {
+            for (si, sg) in self.segs[w].iter().enumerate() {
+                let payload = Payload::Bytes(sg.clone());
+                if self.t.cols > 1 {
+                    out.push((
+                        w,
+                        self.t.right(w),
+                        Msg {
+                            origin: w,
+                            seg: si as u32,
+                            hop: 1,
+                            tag: TAG_ROW,
+                            payload: payload.clone(),
+                        },
+                    ));
+                }
+                if self.t.rows > 1 {
+                    out.push((
+                        w,
+                        self.t.down(w),
+                        Msg {
+                            origin: w,
+                            seg: si as u32,
+                            hop: 1,
+                            tag: TAG_COL,
+                            payload,
+                        },
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        let Payload::Bytes(b) = &msg.payload else {
+            unreachable!("gather protocol only moves bytes")
+        };
+        self.state.store(node, msg.origin, msg.seg as usize, b);
+        let mut out = Vec::new();
+        match msg.tag {
+            TAG_ROW => {
+                // Keep the row circulation going…
+                if msg.hop < (self.t.cols - 1) as u32 {
+                    out.push((
+                        self.t.right(node),
+                        Msg {
+                            origin: msg.origin,
+                            seg: msg.seg,
+                            hop: msg.hop + 1,
+                            tag: TAG_ROW,
+                            payload: msg.payload.clone(),
+                        },
+                    ));
+                }
+                // …and inject the block into this node's column.
+                if self.t.rows > 1 {
+                    out.push((
+                        self.t.down(node),
+                        Msg {
+                            origin: msg.origin,
+                            seg: msg.seg,
+                            hop: 1,
+                            tag: TAG_COL,
+                            payload: msg.payload.clone(),
+                        },
+                    ));
+                }
+            }
+            TAG_COL => {
+                if msg.hop < (self.t.rows - 1) as u32 {
+                    out.push((
+                        self.t.down(node),
+                        Msg {
+                            origin: msg.origin,
+                            seg: msg.seg,
+                            hop: msg.hop + 1,
+                            tag: TAG_COL,
+                            payload: msg.payload.clone(),
+                        },
+                    ));
+                }
+            }
+            other => unreachable!("unknown torus gather tag {other}"),
+        }
+        out
+    }
+}
+
+struct TorusReduce<'t> {
+    t: &'t Torus,
+    inputs: Vec<Vec<f32>>,
+    /// Row-phase vectors at each node, by column index of the sender.
+    row_got: Vec<Vec<Option<Vec<f32>>>>,
+    /// Column-phase row-sums at each node, by row index of the sender.
+    col_got: Vec<Vec<Option<Vec<f32>>>>,
+}
+
+impl TorusReduce<'_> {
+    /// Sum this node's row set in ascending column order — identical
+    /// bits on every node of the row.
+    fn row_sum(&self, node: usize) -> Vec<f32> {
+        let n = self.inputs[node].len();
+        let mut sum = vec![0.0f32; n];
+        for slot in &self.row_got[node] {
+            let v = slot.as_ref().expect("row vector missing");
+            for (k, x) in v.iter().enumerate() {
+                sum[k] += x;
+            }
+        }
+        sum
+    }
+
+    /// The row phase finished at `node`: record its row-sum and fan it
+    /// down the column.
+    fn row_ready(&mut self, node: usize, hop: u32) -> Vec<(usize, Msg)> {
+        let sum = self.row_sum(node);
+        let r = self.t.row_of(node);
+        self.col_got[node][r] = Some(sum.clone());
+        let payload = Payload::F32(sum);
+        (0..self.t.rows)
+            .filter(|&r2| r2 != r)
+            .map(|r2| {
+                (
+                    r2 * self.t.cols + self.t.col_of(node),
+                    Msg {
+                        origin: node,
+                        seg: 0,
+                        hop,
+                        tag: TAG_COL,
+                        payload: payload.clone(),
+                    },
+                )
+            })
+            .collect()
+    }
+}
+
+impl Protocol for TorusReduce<'_> {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        let mut out = Vec::new();
+        for w in 0..self.t.p() {
+            let payload = Payload::F32(self.inputs[w].clone());
+            let r = self.t.row_of(w);
+            for c2 in 0..self.t.cols {
+                let peer = r * self.t.cols + c2;
+                if peer != w {
+                    out.push((
+                        w,
+                        peer,
+                        Msg {
+                            origin: w,
+                            seg: 0,
+                            hop: 1,
+                            tag: TAG_ROW,
+                            payload: payload.clone(),
+                        },
+                    ));
+                }
+            }
+        }
+        // Single-column rows are complete at t = 0.
+        if self.t.cols == 1 {
+            for w in 0..self.t.p() {
+                for (dst, msg) in self.row_ready(w, 1) {
+                    out.push((w, dst, msg));
+                }
+            }
+        }
+        out
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        let Payload::F32(v) = &msg.payload else {
+            unreachable!("reduce protocol only moves f32 vectors")
+        };
+        match msg.tag {
+            TAG_ROW => {
+                self.row_got[node][self.t.col_of(msg.origin)] = Some(v.clone());
+                if self.row_got[node].iter().all(|s| s.is_some()) {
+                    self.row_ready(node, msg.hop + 1)
+                } else {
+                    Vec::new()
+                }
+            }
+            TAG_COL => {
+                self.col_got[node][self.t.row_of(msg.origin)] = Some(v.clone());
+                Vec::new()
+            }
+            other => unreachable!("unknown torus reduce tag {other}"),
+        }
+    }
+}
+
+impl Topology for Torus {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Torus {
+            rows: self.rows,
+            cols: self.cols,
+        }
+    }
+
+    fn workers(&self) -> usize {
+        self.p()
+    }
+
+    fn gather_rounds(&self) -> u32 {
+        (self.rows - 1 + self.cols - 1) as u32
+    }
+
+    fn reduce_rounds(&self) -> u32 {
+        u32::from(self.cols > 1) + u32::from(self.rows > 1)
+    }
+
+    fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
+        assert_eq!(inputs.len(), self.p(), "one input message per worker");
+        let seg = fabric.segment_bytes();
+        let mut proto = TorusGather {
+            t: self,
+            segs: split_all(inputs, seg),
+            state: GatherState::new(inputs, seg),
+        };
+        let time_ps = if self.p() > 1 { fabric.run(&mut proto) } else { 0 };
+        SimGather {
+            gathered: proto.state.into_gathered(),
+            traffic: traffic_from(fabric, self.gather_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+
+    fn allreduce(&self, fabric: &mut Fabric, inputs: &[Vec<f32>]) -> SimReduce {
+        assert_eq!(inputs.len(), self.p());
+        let n = inputs[0].len();
+        assert!(inputs.iter().all(|v| v.len() == n), "length mismatch");
+        if self.p() == 1 {
+            return SimReduce {
+                reduced: vec![inputs[0].clone()],
+                traffic: Traffic {
+                    bytes_sent_per_node: vec![0],
+                    rounds: 0,
+                },
+                time_ps: 0,
+                events: 0,
+            };
+        }
+        let mut proto = TorusReduce {
+            t: self,
+            inputs: inputs.to_vec(),
+            row_got: (0..self.p())
+                .map(|w| {
+                    let mut row = vec![None; self.cols];
+                    row[self.col_of(w)] = Some(inputs[w].clone());
+                    row
+                })
+                .collect(),
+            col_got: vec![vec![None; self.rows]; self.p()],
+        };
+        let time_ps = fabric.run(&mut proto);
+        let reduced: Vec<Vec<f32>> = proto
+            .col_got
+            .iter()
+            .map(|slots| {
+                let mut out = vec![0.0f32; n];
+                for slot in slots {
+                    let v = slot.as_ref().expect("torus reduce under-delivered");
+                    for (k, x) in v.iter().enumerate() {
+                        out[k] += x;
+                    }
+                }
+                out
+            })
+            .collect();
+        SimReduce {
+            reduced,
+            traffic: traffic_from(fabric, self.reduce_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{FabricConfig, LinkSpec};
+
+    fn fabric(nodes: usize) -> Fabric {
+        Fabric::for_config(
+            &FabricConfig {
+                link: LinkSpec {
+                    bandwidth_gbps: 1.0,
+                    latency_us: 1.0,
+                    jitter_us: 0.0,
+                },
+                ..FabricConfig::default()
+            },
+            nodes,
+        )
+    }
+
+    #[test]
+    fn auto_dims_prefers_square() {
+        assert_eq!(auto_dims(1), (1, 1));
+        assert_eq!(auto_dims(4), (2, 2));
+        assert_eq!(auto_dims(6), (2, 3));
+        assert_eq!(auto_dims(8), (2, 4));
+        assert_eq!(auto_dims(12), (3, 4));
+        assert_eq!(auto_dims(16), (4, 4));
+        assert_eq!(auto_dims(7), (1, 7)); // prime ⇒ ring
+    }
+
+    #[test]
+    #[should_panic(expected = "needs 6 workers")]
+    fn explicit_dims_must_factor_workers() {
+        Torus::new(7, 2, 3);
+    }
+
+    #[test]
+    fn neighbour_math_wraps() {
+        let t = Torus::new(6, 2, 3);
+        assert_eq!(t.right(0), 1);
+        assert_eq!(t.right(2), 0); // row wrap
+        assert_eq!(t.down(0), 3);
+        assert_eq!(t.down(4), 1); // column wrap
+    }
+
+    #[test]
+    fn gather_delivers_for_awkward_shapes() {
+        for (rows, cols) in [(1usize, 1usize), (1, 5), (5, 1), (2, 2), (2, 3), (3, 3)] {
+            let p = rows * cols;
+            let inputs: Vec<Vec<u8>> =
+                (0..p).map(|w| vec![w as u8 + 1; (w * 17) % 31 + 1]).collect();
+            let topo = Torus::new(p, rows, cols);
+            let mut f = fabric(topo.node_count());
+            let res = topo.allgatherv(&mut f, &inputs);
+            for dst in 0..p {
+                for src in 0..p {
+                    assert_eq!(
+                        res.gathered[dst][src], inputs[src],
+                        "{rows}x{cols} dst={dst} src={src}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_block_traffic_is_p_minus_1_sends() {
+        // Every block is sent exactly p−1 times in total (the flat
+        // ring's optimum), whatever the grid shape.
+        let (rows, cols) = (2, 3);
+        let p = rows * cols;
+        let inputs: Vec<Vec<u8>> = (0..p).map(|_| vec![9u8; 10]).collect();
+        let topo = Torus::new(p, rows, cols);
+        let mut f = fabric(topo.node_count());
+        let res = topo.allgatherv(&mut f, &inputs);
+        assert_eq!(res.traffic.total_bytes(), (p * (p - 1) * 10) as u64);
+        assert_eq!(res.events as usize, p * (p - 1));
+        assert_eq!(res.traffic.rounds, (rows - 1 + cols - 1) as u32);
+    }
+
+    #[test]
+    fn reduce_matches_sum_for_awkward_shapes() {
+        for (rows, cols) in [(1usize, 1usize), (1, 4), (4, 1), (2, 2), (2, 3), (3, 2)] {
+            let p = rows * cols;
+            let inputs: Vec<Vec<f32>> = (0..p)
+                .map(|w| (0..5).map(|k| (w * 5 + k) as f32 * 0.25).collect())
+                .collect();
+            let topo = Torus::new(p, rows, cols);
+            let mut f = fabric(topo.node_count());
+            let res = topo.allreduce(&mut f, &inputs);
+            for k in 0..5 {
+                let want: f32 = inputs.iter().map(|v| v[k]).sum();
+                for node in 0..p {
+                    let got = res.reduced[node][k];
+                    assert!(
+                        (got - want).abs() < 1e-3,
+                        "{rows}x{cols} node={node} k={k}: {got} != {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn torus_shortens_the_longest_route() {
+        // 4x4 torus: max 6 hops vs the 16-ring's 15. Per-node egress
+        // load is identical (p−1 blocks), so a latency-dominated link
+        // isolates the hop-count win.
+        let p = 16;
+        let high_latency = FabricConfig {
+            link: LinkSpec {
+                bandwidth_gbps: 1.0,
+                latency_us: 500.0,
+                jitter_us: 0.0,
+            },
+            ..FabricConfig::default()
+        };
+        let inputs: Vec<Vec<u8>> = (0..p).map(|_| vec![3u8; 125]).collect();
+        let torus = Torus::new(p, 4, 4);
+        let ring = crate::fabric::ring::Ring::new(p);
+        let mut ft = Fabric::for_config(&high_latency, p);
+        let mut fr = Fabric::for_config(&high_latency, p);
+        let tt = torus.allgatherv(&mut ft, &inputs).time_ps;
+        let tr = ring.allgatherv(&mut fr, &inputs).time_ps;
+        assert!(
+            tt * 2 < tr,
+            "torus {tt} ps not clearly faster than ring {tr} ps"
+        );
+    }
+}

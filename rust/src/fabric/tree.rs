@@ -4,15 +4,18 @@
 //! Group `g` spans workers `[g·b, min((g+1)·b, p))` for branch factor
 //! `b`; the lowest id in each group is its leader (leaders are
 //! themselves workers — no extra infrastructure node). Blocks flow
-//! member → leader → other leaders → their members, so cross-group
-//! traffic crosses each leader pair exactly once per block — the
-//! bandwidth hierarchy a flat ring or mesh cannot express.
+//! member → leader → other leaders → their members (segment-wise when
+//! the fabric configures gather segmentation), so cross-group traffic
+//! crosses each leader pair exactly once per block — the bandwidth
+//! hierarchy a flat ring or mesh cannot express. For the
+//! group-count-parameterized variant with *slow inter-group uplinks*
+//! see [`super::hierarchy`].
 //!
 //! Degenerate branches recover the other topologies: `b = 1` is a full
 //! mesh over all workers; `b ≥ p` is a single star with worker 0 as
 //! hub.
 
-use super::collectives::{traffic_from, GatherState, SimGather, SimReduce};
+use super::collectives::{split_all, traffic_from, GatherState, SimGather, SimReduce};
 use super::topology::{Topology, TopologyKind};
 use super::{Fabric, Msg, Payload, Protocol};
 
@@ -55,14 +58,15 @@ impl Tree {
 
 struct TreeGather<'t> {
     t: &'t Tree,
-    inputs: Vec<Vec<u8>>,
+    segs: Vec<Vec<Vec<u8>>>,
     state: GatherState,
 }
 
 impl TreeGather<'_> {
-    fn msg(&self, origin: usize, hop: u32, tag: u8, payload: &Payload) -> Msg {
+    fn msg(&self, origin: usize, seg: u32, hop: u32, tag: u8, payload: &Payload) -> Msg {
         Msg {
             origin,
+            seg,
             hop,
             tag,
             payload: payload.clone(),
@@ -74,18 +78,21 @@ impl Protocol for TreeGather<'_> {
     fn start(&mut self) -> Vec<(usize, usize, Msg)> {
         let mut out = Vec::new();
         for w in 0..self.t.p {
-            let payload = Payload::Bytes(self.inputs[w].clone());
-            if self.t.is_leader(w) {
-                for l in self.t.leaders() {
-                    if l != w {
-                        out.push((w, l, self.msg(w, 1, TAG_XCHG, &payload)));
+            for (si, sg) in self.segs[w].iter().enumerate() {
+                let si = si as u32;
+                let payload = Payload::Bytes(sg.clone());
+                if self.t.is_leader(w) {
+                    for l in self.t.leaders() {
+                        if l != w {
+                            out.push((w, l, self.msg(w, si, 1, TAG_XCHG, &payload)));
+                        }
                     }
+                    for m in self.t.members(w) {
+                        out.push((w, m, self.msg(w, si, 1, TAG_DOWN, &payload)));
+                    }
+                } else {
+                    out.push((w, self.t.leader_of(w), self.msg(w, si, 1, TAG_UP, &payload)));
                 }
-                for m in self.t.members(w) {
-                    out.push((w, m, self.msg(w, 1, TAG_DOWN, &payload)));
-                }
-            } else {
-                out.push((w, self.t.leader_of(w), self.msg(w, 1, TAG_UP, &payload)));
             }
         }
         out
@@ -95,30 +102,39 @@ impl Protocol for TreeGather<'_> {
         let Payload::Bytes(b) = &msg.payload else {
             unreachable!("gather protocol only moves bytes")
         };
-        self.state.store(node, msg.origin, b);
+        self.state.store(node, msg.origin, msg.seg as usize, b);
         if !self.t.is_leader(node) {
             return Vec::new();
         }
         let mut out = Vec::new();
         match msg.tag {
             TAG_UP => {
-                // A member block: cross to the other leaders and to the
-                // rest of this group.
+                // A member segment: cross to the other leaders and to
+                // the rest of this group.
                 for l in self.t.leaders() {
                     if l != node {
-                        out.push((l, self.msg(msg.origin, msg.hop + 1, TAG_XCHG, &msg.payload)));
+                        out.push((
+                            l,
+                            self.msg(msg.origin, msg.seg, msg.hop + 1, TAG_XCHG, &msg.payload),
+                        ));
                     }
                 }
                 for m in self.t.members(node) {
                     if m != msg.origin {
-                        out.push((m, self.msg(msg.origin, msg.hop + 1, TAG_DOWN, &msg.payload)));
+                        out.push((
+                            m,
+                            self.msg(msg.origin, msg.seg, msg.hop + 1, TAG_DOWN, &msg.payload),
+                        ));
                     }
                 }
             }
             TAG_XCHG => {
-                // Another group's block: fan down to this group.
+                // Another group's segment: fan down to this group.
                 for m in self.t.members(node) {
-                    out.push((m, self.msg(msg.origin, msg.hop + 1, TAG_DOWN, &msg.payload)));
+                    out.push((
+                        m,
+                        self.msg(msg.origin, msg.seg, msg.hop + 1, TAG_DOWN, &msg.payload),
+                    ));
                 }
             }
             other => unreachable!("leader received unexpected tag {other}"),
@@ -176,6 +192,7 @@ impl TreeReduce<'_> {
                     m,
                     Msg {
                         origin: leader,
+                        seg: 0,
                         hop,
                         tag: TAG_DOWN,
                         payload: payload.clone(),
@@ -201,6 +218,7 @@ impl TreeReduce<'_> {
                     l,
                     Msg {
                         origin: leader,
+                        seg: 0,
                         hop,
                         tag: TAG_XCHG,
                         payload: payload.clone(),
@@ -223,6 +241,7 @@ impl Protocol for TreeReduce<'_> {
                     self.t.leader_of(w),
                     Msg {
                         origin: w,
+                        seg: 0,
                         hop: 1,
                         tag: TAG_UP,
                         payload: Payload::F32(self.inputs[w].clone()),
@@ -301,10 +320,11 @@ impl Topology for Tree {
 
     fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
         assert_eq!(inputs.len(), self.p, "one input message per worker");
+        let seg = fabric.segment_bytes();
         let mut proto = TreeGather {
             t: self,
-            inputs: inputs.to_vec(),
-            state: GatherState::new(inputs),
+            segs: split_all(inputs, seg),
+            state: GatherState::new(inputs, seg),
         };
         let time_ps = if self.p > 1 { fabric.run(&mut proto) } else { 0 };
         SimGather {

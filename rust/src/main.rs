@@ -18,7 +18,7 @@ use vgc::compress::CodecSpec;
 use vgc::config::TrainConfig;
 use vgc::coordinator::Trainer;
 use vgc::experiments::{self, BenchCodecsOpts, FabricSweepOpts};
-use vgc::fabric::{build_topology, Fabric, FabricConfig, Straggler, TopologyKind};
+use vgc::fabric::{build_topology, FabricConfig, Straggler, TopologyKind};
 use vgc::runtime::{Client, Manifest};
 use vgc::util::alloc::CountingAlloc;
 use vgc::util::cli::Args;
@@ -41,15 +41,20 @@ USAGE:
                   [--eval-every K] [--log-every K] [--verify-sync]
                   [--codec-threads N]   (0 = auto, 1 = serial wire path)
                   [--loss-curve FILE.csv] [--artifacts DIR]
-                  [--topology TOPO] [--bandwidth-gbps G] [--latency-us L]
-                  [--jitter-us J] [--stragglers NODE:SLOW,..] [--fabric-seed S]
+                  [--topology TOPO] [--torus-dims RxC] [--hier-groups G]
+                  [--bandwidth-gbps G] [--latency-us L] [--jitter-us J]
+                  [--inter-rack-gbps G] [--segment-bytes N]
+                  [--link-overrides SRC-DST:GBPS[:LAT[:JIT]],..]
+                  [--stragglers NODE:SLOW,..] [--fabric-seed S]
   repro table1    [--optimizers adam,momentum] [--steps N] [--out FILE.json]
   repro table2    [--optimizers adam,momentum] [--steps N] [--out FILE.json]
   repro fig3      [--steps N] [--out FILE.csv]
   repro costmodel
   repro fabric-sweep
-                  [--topologies ring,star,full,tree:4] [--workers 8,16]
-                  [--bandwidth-gbps 1,10] [--codecs SPEC+SPEC+..]
+                  [--topologies ring,star,full,tree:4,torus,hier:2]
+                  [--workers 8,16] [--bandwidth-gbps 1,10]
+                  [--inter-rack-gbps G1,G2,..]  (hier uplink skew axis)
+                  [--segment-bytes N] [--codecs SPEC+SPEC+..]
                   [--n PARAMS] [--latency-us L] [--jitter-us J]
                   [--stragglers NODE:SLOW,..] [--seed S] [--warmup K]
                   [--out FILE.json] [--md FILE.md]
@@ -63,7 +68,8 @@ Codec SPECs: none | vgc:alpha=A[,zeta=Z] | strom:tau=T |
              hybrid:tau=T,alpha=A | qsgd:bits=B,d=D | terngrad
              (fabric-sweep separates codec specs with '+')
 LR SCHEDs:   const:LR | step:LR,FACTOR,EVERY | warmup:LR,STEPS
-Topologies:  ring | full | star | tree[:branch]
+Topologies:  ring | full | star | tree[:branch] | torus[:RxC] | hier[:groups]
+             (see docs/TOPOLOGIES.md for cost formulas and guidance)
 ";
 
 const TRAIN_FLAGS: &[&str] = &[
@@ -157,19 +163,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         "wall {wall:.1}s  (compute {:.1}s, encode {:.1}s, comm+decode {:.1}s, update {:.1}s)",
         ph.compute_s, ph.encode_s, ph.comm_decode_s, ph.update_s
     );
-    // Replay the run's average message size through the configured
-    // fabric: simulated step-communication time on that cluster shape.
-    let p = trainer.workers();
-    if p > 0 {
-        let fabric_cfg = trainer.cfg.fabric.clone();
-        let avg = m.avg_wire_bytes_per_worker_step().round() as usize;
-        let topo = build_topology(fabric_cfg.topology, p);
-        let mut fab = Fabric::for_config(&fabric_cfg, topo.node_count());
-        let sim = topo.allgatherv(&mut fab, &vec![vec![0u8; avg]; p]);
+    // The comm phase ran every step's allgatherv on the configured
+    // fabric topology; report the simulated step-communication time it
+    // accumulated on that cluster shape.
+    let steps = trainer.step_count();
+    if steps > 0 {
+        let total_ms = trainer.sim_comm_ps as f64 * 1e-9;
         println!(
-            "fabric sim         {}: step comm {:.3} ms ({avg} B per worker)",
-            fabric_cfg.describe(),
-            sim.time_secs() * 1e3,
+            "fabric sim         {}: step comm {:.3} ms/step ({:.3} ms over {steps} steps)",
+            trainer.cfg.fabric.describe(),
+            total_ms / steps as f64,
+            total_ms,
         );
     }
     if let Some(path) = args.get("loss-curve") {
@@ -181,8 +185,9 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_fabric_sweep(args: &Args) -> Result<()> {
     args.check_known(&[
-        "topologies", "workers", "bandwidth-gbps", "codecs", "n", "latency-us",
-        "jitter-us", "stragglers", "seed", "warmup", "out", "md",
+        "topologies", "workers", "bandwidth-gbps", "inter-rack-gbps", "segment-bytes",
+        "codecs", "n", "latency-us", "jitter-us", "stragglers", "seed", "warmup",
+        "out", "md",
     ])?;
     let mut opts = FabricSweepOpts::default();
     let topologies = args
@@ -205,6 +210,32 @@ fn cmd_fabric_sweep(args: &Args) -> Result<()> {
         );
         opts.bandwidths_gbps = bandwidths;
     }
+    let uplinks = args.parse_list::<f64>("inter-rack-gbps")?;
+    if !uplinks.is_empty() {
+        anyhow::ensure!(
+            uplinks.iter().all(|g| *g > 0.0),
+            "--inter-rack-gbps values must be positive"
+        );
+        opts.inter_rack_gbps = uplinks;
+    }
+    // Every swept cell must be a valid fabric config for every worker
+    // count: pinned torus dims must factor each p, and an uplink axis
+    // must reach a hierarchy with at least two groups (the sweep only
+    // applies the axis to hier cells, so probe those).
+    for &kind in &opts.topologies {
+        let probe = FabricConfig {
+            topology: kind,
+            inter_rack_gbps: match kind {
+                TopologyKind::Hier { .. } => opts.inter_rack_gbps.first().copied(),
+                _ => None,
+            },
+            ..FabricConfig::default()
+        };
+        for &p in &opts.workers {
+            probe.validate(p)?;
+        }
+    }
+    opts.segment_bytes = args.parse_or("segment-bytes", opts.segment_bytes)?;
     // Codec specs contain commas (vgc:alpha=1.5,zeta=0.999), so the
     // list separator here is '+'.
     if let Some(spec) = args.get("codecs") {

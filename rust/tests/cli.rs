@@ -56,14 +56,61 @@ fn fabric_sweep_runs_end_to_end() {
 }
 
 #[test]
+fn fabric_sweep_runs_torus_and_hier_end_to_end() {
+    let json_path = std::env::temp_dir().join("vgc_fabric_sweep_new.json");
+    let out = repro()
+        .args([
+            "fabric-sweep",
+            "--topologies", "torus,hier:2",
+            "--workers", "4",
+            "--bandwidth-gbps", "1",
+            "--inter-rack-gbps", "0.1",
+            "--segment-bytes", "2048",
+            "--codecs", "none+vgc:alpha=2",
+            "--n", "4096",
+            "--out", json_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    // Auto torus dims resolve in the report; hier keeps its groups.
+    assert!(text.contains("| torus:2x2 |"), "{text}");
+    assert!(text.contains("| hier:2 |"), "{text}");
+    assert!(text.contains("segment 2048 B"), "{text}");
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    let rows = vgc::util::json::Json::parse(&json).unwrap();
+    // 2 topologies × 1 bandwidth × 1 uplink × 2 codecs.
+    assert_eq!(rows.as_arr().unwrap().len(), 4);
+    assert!(json.contains("inter_rack_gbps"));
+}
+
+#[test]
 fn fabric_sweep_rejects_bad_topology() {
     let out = repro()
-        .args(["fabric-sweep", "--topologies", "torus"])
+        .args(["fabric-sweep", "--topologies", "moebius"])
         .output()
         .unwrap();
     assert!(!out.status.success());
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("topology"), "{err}");
+    // The error enumerates the accepted set, new topologies included.
+    assert!(err.contains("torus"), "{err}");
+    assert!(err.contains("hier"), "{err}");
+
+    // A pinned torus shape that cannot host the worker count is a CLI
+    // error, not a panic.
+    let out = repro()
+        .args(["fabric-sweep", "--topologies", "torus:3x3", "--workers", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("torus 3x3"), "{err}");
 }
 
 #[test]

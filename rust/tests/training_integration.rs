@@ -5,6 +5,7 @@
 use vgc::compress::CodecSpec;
 use vgc::config::TrainConfig;
 use vgc::coordinator::Trainer;
+use vgc::fabric::TopologyKind;
 use vgc::optim::LrSchedule;
 use vgc::runtime::{Client, Manifest};
 
@@ -162,6 +163,40 @@ fn eval_accuracy_improves_with_training() {
         after > before + 0.3,
         "accuracy {before} -> {after}: no learning"
     );
+}
+
+#[test]
+fn trainer_comm_phase_honors_configured_topology() {
+    // The comm phase runs its allgatherv on the configured fabric: a
+    // non-ring topology must change the simulated step time while the
+    // training math (identical gathered bytes) stays bit-identical.
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    let run = |topology: TopologyKind| {
+        let mut cfg = mlp_cfg(CodecSpec::Vgc { alpha: 1.5, zeta: 0.999 }, 8);
+        cfg.fabric.topology = topology;
+        let mut t = Trainer::new(&client, &man, cfg).unwrap();
+        let workers = t.workers();
+        t.run(true).unwrap();
+        (t.params.clone(), t.sim_comm_ps, workers)
+    };
+    let (ring_params, ring_ps, workers) = run(TopologyKind::Ring);
+    if workers < 2 {
+        eprintln!("SKIP: single-worker model has no comm phase");
+        return;
+    }
+    for topology in [TopologyKind::Star, TopologyKind::Hier { groups: 2 }] {
+        let (params, sim_ps, _) = run(topology);
+        assert_eq!(
+            ring_params, params,
+            "{topology:?}: topology changed the training math"
+        );
+        assert!(ring_ps > 0 && sim_ps > 0);
+        assert_ne!(
+            ring_ps, sim_ps,
+            "{topology:?}: simulated comm time ignored the topology"
+        );
+    }
 }
 
 #[test]
