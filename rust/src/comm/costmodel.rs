@@ -186,6 +186,171 @@ pub fn hier_gatherv_bytes_per_node(sizes: &[u64], spans: &[(usize, usize)]) -> V
     out
 }
 
+/// Completion-time bracket (seconds) for one simulated allgatherv
+/// under the fabric's cut-through port model (uniform latency `L`,
+/// zero jitter, no stragglers, unsegmented messages).
+///
+/// * **Lower**: every port is work-conserving and must serialize each
+///   byte it carries exactly once, and no first bit lands before `L`
+///   — so completion is at least `L` plus the busiest port's total
+///   serialization work.
+/// * **Upper**: sends are issued in nondecreasing ready order, so a
+///   message starts transmitting within its egress port's total work
+///   of its ready time and is delivered within the destination
+///   ingress port's total work of the last front arrival. With `T_h`
+///   the latest hop-`h` delivery this gives the recurrence
+///   `T_h ≤ T_{h−1} + L + W_out_max + W_in_max`, hence
+///   `T ≤ hops · (L + W_out_max + W_in_max)`.
+#[derive(Debug, Clone, Copy)]
+pub struct GatherTimeBound {
+    pub lower_s: f64,
+    pub upper_s: f64,
+}
+
+impl GatherTimeBound {
+    /// Whether a simulated wall-clock falls inside the bracket,
+    /// tolerating the fabric's per-message picosecond rounding.
+    pub fn brackets(&self, sim_s: f64) -> bool {
+        let lo = self.lower_s - 1e-9 * self.lower_s.abs() - 1e-6;
+        let hi = self.upper_s + 1e-9 * self.upper_s.abs() + 1e-6;
+        (lo..=hi).contains(&sim_s)
+    }
+}
+
+/// The generic port-work bracket (see [`GatherTimeBound`] for the
+/// derivation). `lat_lower`/`lat_upper` bound the per-hop propagation
+/// latency across the links involved; `hops` is the protocol's
+/// longest origin→destination relay chain.
+fn port_work_bound(
+    lat_lower: f64,
+    lat_upper: f64,
+    hops: f64,
+    w_out: &[f64],
+    w_in: &[f64],
+) -> GatherTimeBound {
+    if hops == 0.0 {
+        return GatherTimeBound {
+            lower_s: 0.0,
+            upper_s: 0.0,
+        };
+    }
+    let max_out = w_out.iter().cloned().fold(0.0, f64::max);
+    let max_in = w_in.iter().cloned().fold(0.0, f64::max);
+    GatherTimeBound {
+        lower_s: lat_lower + max_out.max(max_in),
+        upper_s: hops * (lat_upper + max_out + max_in),
+    }
+}
+
+/// Closed-form completion-time bracket for the star
+/// (parameter-server) allgatherv: the hub ingress drains the p-way
+/// incast serially (its first delivery completes `L + ser(n_0)` in,
+/// the last `L + Σ ser` in), its egress then pushes the whole
+/// `(p−1)·Σ ser` fan-out, and the final front still needs `L` — so
+/// `2L + (p−1)·Σ ser ≤ T ≤ 2L + (p+1)·Σ ser` (the extra `2·Σ ser`
+/// headroom covers the incast that precedes the fan-out and the
+/// receivers' own ingress drain).
+pub fn star_gather_time_bounds(link: &LinkModel, msg_bytes: &[u64]) -> GatherTimeBound {
+    let p = msg_bytes.len();
+    if p <= 1 {
+        return GatherTimeBound {
+            lower_s: 0.0,
+            upper_s: 0.0,
+        };
+    }
+    let sum_ser: f64 = msg_bytes.iter().map(|&b| (b * 8) as f64 * link.beta).sum();
+    GatherTimeBound {
+        lower_s: 2.0 * link.latency + (p as f64 - 1.0) * sum_ser,
+        upper_s: 2.0 * link.latency + (p as f64 + 1.0) * sum_ser,
+    }
+}
+
+/// Leader-group spans for `fabric::tree` with this branch factor:
+/// group `g` spans `[g·b, min((g+1)·b, p))`, leaders at multiples of
+/// `b` (mirrors `Tree::leader_of`).
+pub fn tree_spans(p: usize, branch: usize) -> Vec<(usize, usize)> {
+    assert!(branch >= 1, "tree branch must be >= 1");
+    let starts = (0..p).step_by(branch);
+    starts.map(|s| (s, branch.min(p - s))).collect()
+}
+
+/// Closed-form completion-time bracket for the two-level tree
+/// allgatherv: identical protocol to the hierarchy with the uplink at
+/// the base rate (see [`hier_gather_time_bounds`]).
+pub fn tree_gather_time_bounds(
+    link: &LinkModel,
+    msg_bytes: &[u64],
+    branch: usize,
+) -> GatherTimeBound {
+    let spans = tree_spans(msg_bytes.len(), branch);
+    hier_gather_time_bounds(link, link, msg_bytes, &spans)
+}
+
+/// Closed-form completion-time bracket for the hierarchy allgatherv
+/// (member → leader → leaders over the uplink → members). Per-port
+/// serialization work for the leader of a group with `m` members,
+/// group bytes `B_g` (own block `n_l`), and `F = Σ − B_g` foreign
+/// bytes across `G` groups:
+///
+/// * egress: `B_g·(G−1)` bytes at the uplink rate (cross-rack
+///   exchange) plus `n_l·m + (B_g−n_l)·(m−1) + F·m` at the base rate
+///   (intra-group fan-out);
+/// * ingress: `B_g − n_l` at the base rate (member up-sends) plus `F`
+///   at the uplink rate.
+///
+/// Members send their own block once and receive everything else at
+/// the base rate. The bracket then follows from the generic port-work
+/// argument on [`GatherTimeBound`] with a 3-hop relay chain (2 for a
+/// single group, 1 when every group is a singleton — a leader mesh).
+pub fn hier_gather_time_bounds(
+    link: &LinkModel,
+    uplink: &LinkModel,
+    msg_bytes: &[u64],
+    spans: &[(usize, usize)],
+) -> GatherTimeBound {
+    let p: usize = spans.iter().map(|&(_, len)| len).sum();
+    assert_eq!(msg_bytes.len(), p, "one size per hierarchy worker");
+    let groups = spans.len() as f64;
+    let ser = |bytes: f64, beta: f64| bytes * 8.0 * beta;
+    let total: f64 = msg_bytes.iter().map(|&b| b as f64).sum();
+    let mut w_out = vec![0.0f64; p];
+    let mut w_in = vec![0.0f64; p];
+    let mut any_members = false;
+    for &(start, len) in spans {
+        any_members |= len > 1;
+        let m = (len - 1) as f64;
+        let own = msg_bytes[start] as f64;
+        let slab = &msg_bytes[start..start + len];
+        let group: f64 = slab.iter().map(|&b| b as f64).sum();
+        let members = group - own;
+        let foreign = total - group;
+        w_out[start] = ser(group * (groups - 1.0), uplink.beta)
+            + ser(own * m + members * (m - 1.0).max(0.0) + foreign * m, link.beta);
+        w_in[start] = ser(members, link.beta) + ser(foreign, uplink.beta);
+        for u in start + 1..start + len {
+            let b = msg_bytes[u] as f64;
+            w_out[u] = ser(b, link.beta);
+            w_in[u] = ser(total - b, link.beta);
+        }
+    }
+    let hops = if p <= 1 {
+        0.0
+    } else if spans.len() == 1 {
+        2.0
+    } else if any_members {
+        3.0
+    } else {
+        1.0
+    };
+    port_work_bound(
+        link.latency.min(uplink.latency),
+        link.latency.max(uplink.latency),
+        hops,
+        &w_out,
+        &w_in,
+    )
+}
+
 /// Analytic-vs-simulated cross-check for one collective.
 #[derive(Debug, Clone, Copy)]
 pub struct SimCheck {
@@ -400,6 +565,71 @@ mod tests {
         // One group degenerates to a star with worker 0 as hub.
         let got = hier_gatherv_bytes_per_node(&sizes, &[(0, 4)]);
         assert_eq!(got, vec![3 * 10 + 2 * (20 + 30 + 40), 20, 30, 40]);
+    }
+
+    #[test]
+    fn star_time_bounds_formula() {
+        let link = LinkModel {
+            beta: 1e-9,
+            latency: 1e-5,
+        };
+        let b = star_gather_time_bounds(&link, &[1000, 2000, 1000]);
+        // Σ ser = 4000 B · 8 b/B · 1e-9 s/b = 32 µs.
+        let sum = 32e-6;
+        assert!((b.lower_s - (2e-5 + 2.0 * sum)).abs() < 1e-12);
+        assert!((b.upper_s - (2e-5 + 4.0 * sum)).abs() < 1e-12);
+        assert!(b.lower_s < b.upper_s);
+        // Single worker: nothing moves.
+        let b1 = star_gather_time_bounds(&link, &[1000]);
+        assert_eq!(b1.lower_s, 0.0);
+        assert_eq!(b1.upper_s, 0.0);
+        assert!(b1.brackets(0.0));
+    }
+
+    #[test]
+    fn tree_spans_mirror_fabric_grouping() {
+        assert_eq!(tree_spans(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
+        assert_eq!(tree_spans(3, 1), vec![(0, 1), (1, 1), (2, 1)]);
+        assert_eq!(tree_spans(3, 8), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn hier_time_bounds_shape() {
+        let link = LinkModel {
+            beta: 1e-9,
+            latency: 1e-5,
+        };
+        let slow = LinkModel {
+            beta: 1e-8,
+            latency: 1e-5,
+        };
+        let sizes = [1000u64, 1000, 1000, 1000];
+        let spans = [(0usize, 2usize), (2, 2)];
+        let fast = hier_gather_time_bounds(&link, &link, &sizes, &spans);
+        let oversub = hier_gather_time_bounds(&link, &slow, &sizes, &spans);
+        assert!(fast.lower_s <= fast.upper_s);
+        assert!(oversub.lower_s <= oversub.upper_s);
+        // A slower uplink raises both ends of the bracket.
+        assert!(oversub.lower_s > fast.lower_s);
+        assert!(oversub.upper_s > fast.upper_s);
+        // The uniform-rate tree form is the hierarchy with uplink=base.
+        let tree = tree_gather_time_bounds(&link, &sizes, 2);
+        assert_eq!(tree.lower_s, fast.lower_s);
+        assert_eq!(tree.upper_s, fast.upper_s);
+    }
+
+    #[test]
+    fn time_bound_brackets_tolerance() {
+        let b = GatherTimeBound {
+            lower_s: 1.0,
+            upper_s: 2.0,
+        };
+        assert!(b.brackets(1.0));
+        assert!(b.brackets(2.0));
+        assert!(b.brackets(1.5));
+        assert!(b.brackets(1.0 - 1e-7)); // within abs tolerance
+        assert!(!b.brackets(0.5));
+        assert!(!b.brackets(2.5));
     }
 
     #[test]

@@ -184,6 +184,16 @@ impl DecodeBuf {
     }
 }
 
+/// One engine shared across concurrent jobs (the service daemon's
+/// mode): callers lock for the span of a whole encode→gather→decode
+/// step so a job's three phases run against a consistent buffer set.
+pub type SharedEngine = std::sync::Arc<std::sync::Mutex<CodecEngine>>;
+
+/// Build a [`SharedEngine`] of the given width.
+pub fn shared_engine(threads: usize) -> SharedEngine {
+    std::sync::Arc::new(std::sync::Mutex::new(CodecEngine::new(threads)))
+}
+
 /// The engine: a thread pool plus reusable per-worker buffers.
 pub struct CodecEngine {
     pool: ThreadPool,

@@ -25,7 +25,7 @@ pub mod strom;
 pub mod terngrad;
 pub mod vgc;
 
-pub use engine::{CodecEngine, DecodeBuf, EncodeStats};
+pub use engine::{shared_engine, CodecEngine, DecodeBuf, EncodeStats, SharedEngine};
 
 use crate::model::Layout;
 use crate::util::rng::Pcg32;

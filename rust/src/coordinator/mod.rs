@@ -8,5 +8,5 @@
 pub mod trainer;
 pub mod worker;
 
-pub use trainer::{PhaseTimes, Trainer};
+pub use trainer::{PhaseTimes, RunEvent, Trainer};
 pub use worker::WorkerState;

@@ -27,7 +27,7 @@ use anyhow::Result;
 
 use super::worker::WorkerState;
 use crate::comm::allgatherv::allgatherv;
-use crate::compress::{Aggregation, Codec, CodecEngine};
+use crate::compress::{shared_engine, Aggregation, Codec, SharedEngine};
 use crate::config::TrainConfig;
 use crate::data::shard::Shard;
 use crate::data::{ImageDataset, TokenDataset};
@@ -56,6 +56,14 @@ pub struct PhaseTimes {
     pub update_s: f64,
 }
 
+/// What [`Trainer::run_with`] reports to its observer after each step
+/// or evaluation. The observer returns `false` to stop the run at that
+/// step boundary (cooperative cancellation).
+pub enum RunEvent<'a> {
+    Step { step: u64, loss: f32, lr: f32 },
+    Eval { record: &'a EvalRecord },
+}
+
 pub struct Trainer<'c> {
     rt: ModelRuntime<'c>,
     layout: Layout,
@@ -71,8 +79,12 @@ pub struct Trainer<'c> {
     pub sim_comm_ps: u64,
     step: u64,
     /// Parallel sharded codec engine (`--codec-threads`); width 1 takes
-    /// the exact legacy serial path.
-    engine: CodecEngine,
+    /// the exact legacy serial path. Behind `Arc<Mutex>` so the service
+    /// daemon can share one engine across concurrent jobs — each step
+    /// locks it for the whole encode→gather→decode span, and engine
+    /// output is bit-identical at any width, so sharing never changes
+    /// results.
+    engine: SharedEngine,
     // Reused step buffers (hot path: no per-step allocation).
     xs_f32: Vec<f32>,
     xs_i32: Vec<i32>,
@@ -83,6 +95,19 @@ pub struct Trainer<'c> {
 
 impl<'c> Trainer<'c> {
     pub fn new(client: &'c Client, manifest: &Manifest, cfg: TrainConfig) -> Result<Self> {
+        let engine = shared_engine(cfg.resolved_codec_threads());
+        Trainer::with_engine(client, manifest, cfg, engine)
+    }
+
+    /// Build against an existing (possibly shared) codec engine — the
+    /// service daemon's path. The engine width may differ from
+    /// `cfg.codec_threads`; results are identical either way.
+    pub fn with_engine(
+        client: &'c Client,
+        manifest: &Manifest,
+        cfg: TrainConfig,
+        engine: SharedEngine,
+    ) -> Result<Self> {
         let rt = ModelRuntime::load(client, manifest, &cfg.model)?;
         let entry = rt.entry.clone();
         let layout = Layout::from_manifest(&entry)?;
@@ -148,7 +173,6 @@ impl<'c> Trainer<'c> {
         let n = entry.n_params;
         let b = entry.batch;
         let elems = entry.sample_elems();
-        let engine = CodecEngine::new(cfg.resolved_codec_threads());
         Ok(Trainer {
             engine,
             rt,
@@ -231,9 +255,12 @@ impl<'c> Trainer<'c> {
 
         // (2) Encode per worker — fanned out across workers (and
         // group-aligned shards) when `--codec-threads` > 1; the engine
-        // produces bytes bit-identical to the serial path.
+        // produces bytes bit-identical to the serial path. The lock
+        // spans encode→gather→decode so a shared engine's buffers stay
+        // consistent for the whole step even with concurrent jobs.
         let t1 = std::time::Instant::now();
-        let parallel = self.engine.threads() > 1;
+        let mut engine = self.engine.lock().unwrap_or_else(|e| e.into_inner());
+        let parallel = engine.threads() > 1;
         let mut elements = 0u64;
         let mut payload_bits = 0u64;
         let mut wire_bytes = 0u64;
@@ -247,12 +274,12 @@ impl<'c> Trainer<'c> {
             let gsums: Vec<&[f32]> = (0..e.workers).map(|w| moments.gsum_of(w)).collect();
             let gsumsqs: Vec<&[f32]> =
                 (0..e.workers).map(|w| moments.gsumsq_of(w)).collect();
-            self.engine.encode_all(&mut codecs, &gsums, &gsumsqs);
-            for st in self.engine.stats() {
+            engine.encode_all(&mut codecs, &gsums, &gsumsqs);
+            for st in engine.stats() {
                 elements += st.elements;
                 payload_bits += st.payload_bits;
             }
-            for m in self.engine.messages() {
+            for m in engine.messages() {
                 wire_bytes += m.len() as u64;
             }
         } else {
@@ -273,7 +300,7 @@ impl<'c> Trainer<'c> {
         // fabric topology, then decode.
         let t2 = std::time::Instant::now();
         let gathered = if parallel {
-            allgatherv(&self.cfg.fabric, self.engine.messages())
+            allgatherv(&self.cfg.fabric, engine.messages())
         } else {
             allgatherv(&self.cfg.fabric, &msgs)
         };
@@ -283,7 +310,7 @@ impl<'c> Trainer<'c> {
             // reduce disjoint index ranges in message order — bit-equal
             // to the serial loop below (verify_sync cross-checks it
             // against a serial decode every step when enabled).
-            self.engine.decode_all(
+            engine.decode_all(
                 &*self.workers[0].codec,
                 &gathered.gathered[0],
                 &mut self.update,
@@ -320,6 +347,7 @@ impl<'c> Trainer<'c> {
             );
         }
         self.phases.comm_decode_s += t2.elapsed().as_secs_f64();
+        drop(engine); // release the shared engine before the local math
 
         // (4) Update locally (identical on all workers).
         let t3 = std::time::Instant::now();
@@ -412,14 +440,28 @@ impl<'c> Trainer<'c> {
 
     /// Run the configured number of steps with periodic eval + logging.
     pub fn run(&mut self, quiet: bool) -> Result<()> {
+        self.run_with(quiet, &mut |_| true).map(|_| ())
+    }
+
+    /// [`Trainer::run`] with an observer: called after every step and
+    /// evaluation; returning `false` stops the run at that step
+    /// boundary. Returns `Ok(true)` if the run completed, `Ok(false)`
+    /// if the observer stopped it. The service daemon uses this to
+    /// publish live progress and honor cancellation.
+    pub fn run_with(
+        &mut self,
+        quiet: bool,
+        observe: &mut dyn FnMut(RunEvent<'_>) -> bool,
+    ) -> Result<bool> {
         let steps = self.cfg.steps;
         for _ in 0..steps {
             let loss = self.train_step()?;
             let s = self.step;
+            let lr = self.cfg.schedule.at(s - 1);
             if !quiet && self.cfg.log_every > 0 && s % self.cfg.log_every == 0 {
                 println!(
                     "step {s:>5}  loss {loss:>8.4}  lr {:>8.5}  ratio {:>10.1}  residual_l1 {:.3e}",
-                    self.cfg.schedule.at(s - 1),
+                    lr,
                     self.metrics.compression_ratio(),
                     self.residual_l1(),
                 );
@@ -433,12 +475,19 @@ impl<'c> Trainer<'c> {
                         println!("eval  step {s:>5}  accuracy {:.4}", rec.accuracy);
                     }
                 }
+                if !observe(RunEvent::Eval { record: &rec }) {
+                    return Ok(false);
+                }
+            }
+            if !observe(RunEvent::Step { step: s, loss, lr }) {
+                return Ok(false);
             }
         }
         // Final eval if the loop didn't land on an eval step.
         if self.cfg.eval_every > 0 && self.step % self.cfg.eval_every != 0 {
-            self.evaluate()?;
+            let rec = self.evaluate()?;
+            let _ = observe(RunEvent::Eval { record: &rec });
         }
-        Ok(())
+        Ok(true)
     }
 }

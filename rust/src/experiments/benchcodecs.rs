@@ -20,6 +20,7 @@ use crate::util::json::{num, obj, s, Json};
 use crate::util::rng::Pcg32;
 use crate::util::threadpool::ThreadPool;
 
+#[derive(Debug, Clone)]
 pub struct BenchCodecsOpts {
     /// Gradient elements per worker stream.
     pub n: usize,
@@ -51,6 +52,63 @@ impl Default for BenchCodecsOpts {
                 CodecSpec::None,
             ],
         }
+    }
+}
+
+impl BenchCodecsOpts {
+    /// Serialize for job specs; inverse of [`BenchCodecsOpts::from_json`].
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("n", num(self.n as f64)),
+            ("group", num(self.group as f64)),
+            ("workers", num(self.workers as f64)),
+            (
+                "threads",
+                Json::Arr(self.threads.iter().map(|&t| num(t as f64)).collect()),
+            ),
+            ("alloc_steps", num(self.alloc_steps as f64)),
+            (
+                "codecs",
+                Json::Arr(
+                    self.codecs
+                        .iter()
+                        .map(|c| s(&crate::config::codec_str(c)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Load from JSON; absent keys keep the CLI defaults.
+    pub fn from_json(j: &Json) -> anyhow::Result<BenchCodecsOpts> {
+        let mut o = BenchCodecsOpts::default();
+        if let Some(v) = j.get("n") {
+            o.n = v.as_usize()?;
+        }
+        if let Some(v) = j.get("group") {
+            o.group = v.as_usize()?;
+        }
+        if let Some(v) = j.get("workers") {
+            o.workers = v.as_usize()?;
+        }
+        if let Some(t) = j.get("threads") {
+            o.threads = t
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = j.get("alloc_steps") {
+            o.alloc_steps = v.as_usize()? as u32;
+        }
+        if let Some(c) = j.get("codecs") {
+            o.codecs = c
+                .as_arr()?
+                .iter()
+                .map(|x| CodecSpec::parse(x.as_str()?))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        Ok(o)
     }
 }
 

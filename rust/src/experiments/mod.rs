@@ -301,6 +301,158 @@ impl Default for FabricSweepOpts {
     }
 }
 
+impl FabricSweepOpts {
+    /// Serialize for job specs and experiment records.
+    pub fn to_json(&self) -> Json {
+        let labels: Vec<String> = self.topologies.iter().map(|t| t.label()).collect();
+        obj(vec![
+            ("topologies", s(&labels.join(","))),
+            (
+                "workers",
+                Json::Arr(self.workers.iter().map(|&w| num(w as f64)).collect()),
+            ),
+            (
+                "bandwidths_gbps",
+                Json::Arr(self.bandwidths_gbps.iter().map(|&b| num(b)).collect()),
+            ),
+            (
+                "inter_rack_gbps",
+                Json::Arr(self.inter_rack_gbps.iter().map(|&b| num(b)).collect()),
+            ),
+            ("segment_bytes", num(self.segment_bytes as f64)),
+            (
+                "codecs",
+                Json::Arr(self.codecs.iter().map(|c| s(&codec_str(c))).collect()),
+            ),
+            ("n_params", num(self.n_params as f64)),
+            ("latency_us", num(self.latency_us)),
+            ("jitter_us", num(self.jitter_us)),
+            ("stragglers", s(&Straggler::list_str(&self.stragglers))),
+            ("seed", num(self.seed as f64)),
+            ("warmup_steps", num(self.warmup_steps as f64)),
+        ])
+    }
+
+    /// Load from JSON written by [`FabricSweepOpts::to_json`] (or
+    /// hand-written job specs); absent keys keep the CLI defaults.
+    pub fn from_json(j: &Json) -> Result<FabricSweepOpts> {
+        let mut o = FabricSweepOpts::default();
+        if let Some(t) = j.get("topologies") {
+            o.topologies = t
+                .as_str()?
+                .split(',')
+                .filter(|x| !x.trim().is_empty())
+                .map(|x| TopologyKind::parse(x.trim()))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(w) = j.get("workers") {
+            o.workers = w
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(b) = j.get("bandwidths_gbps") {
+            o.bandwidths_gbps = b
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(b) = j.get("inter_rack_gbps") {
+            o.inter_rack_gbps = b
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(v) = j.get("segment_bytes") {
+            o.segment_bytes = v.as_usize()?;
+        }
+        if let Some(c) = j.get("codecs") {
+            o.codecs = c
+                .as_arr()?
+                .iter()
+                .map(|x| CodecSpec::parse(x.as_str()?))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(v) = j.get("n_params") {
+            o.n_params = v.as_usize()?;
+        }
+        if let Some(v) = j.get("latency_us") {
+            o.latency_us = v.as_f64()?;
+        }
+        if let Some(v) = j.get("jitter_us") {
+            o.jitter_us = v.as_f64()?;
+        }
+        if let Some(v) = j.get("stragglers") {
+            o.stragglers = Straggler::parse_list(v.as_str()?)?;
+        }
+        if let Some(v) = j.get("seed") {
+            o.seed = v.as_usize()? as u64;
+        }
+        if let Some(v) = j.get("warmup_steps") {
+            o.warmup_steps = v.as_usize()? as u32;
+        }
+        Ok(o)
+    }
+}
+
+/// Sanity-check a sweep before running it — shared by the CLI and the
+/// service daemon's job executor so HTTP submissions get the same
+/// errors as flags. Catches empty axes, non-positive bandwidths,
+/// fabric configs that cannot host a swept worker count, and straggler
+/// nodes outside the smallest swept fabric.
+pub fn validate_sweep(opts: &FabricSweepOpts) -> Result<()> {
+    anyhow::ensure!(!opts.topologies.is_empty(), "sweep lists no topologies");
+    anyhow::ensure!(!opts.workers.is_empty(), "sweep lists no worker counts");
+    anyhow::ensure!(!opts.codecs.is_empty(), "sweep lists no codecs");
+    anyhow::ensure!(opts.n_params > 0, "n_params must be positive");
+    anyhow::ensure!(
+        opts.bandwidths_gbps.iter().all(|b| *b > 0.0) && !opts.bandwidths_gbps.is_empty(),
+        "bandwidth-gbps values must be positive"
+    );
+    anyhow::ensure!(
+        opts.inter_rack_gbps.iter().all(|g| *g > 0.0),
+        "inter-rack-gbps values must be positive"
+    );
+    // Every swept cell must be a valid fabric config for every worker
+    // count: pinned torus dims must factor each p, and an uplink axis
+    // must reach a hierarchy with at least two groups (the sweep only
+    // applies the axis to hier cells, so probe those).
+    for &kind in &opts.topologies {
+        let probe = FabricConfig {
+            topology: kind,
+            inter_rack_gbps: match kind {
+                TopologyKind::Hier { .. } => opts.inter_rack_gbps.first().copied(),
+                _ => None,
+            },
+            ..FabricConfig::default()
+        };
+        for &p in &opts.workers {
+            probe.validate(p)?;
+        }
+    }
+    if let Some(&min_p) = opts.workers.iter().min() {
+        // Every swept fabric must contain every straggler node.
+        let min_nodes = opts
+            .topologies
+            .iter()
+            .map(|&k| build_topology(k, min_p).node_count())
+            .min()
+            .unwrap_or(min_p);
+        for st in &opts.stragglers {
+            anyhow::ensure!(
+                st.node < min_nodes,
+                "stragglers name node {} but the smallest swept fabric has {} nodes",
+                st.node,
+                min_nodes
+            );
+        }
+    }
+    Ok(())
+}
+
 /// One sweep cell: simulated step communication on one cluster shape.
 #[derive(Debug, Clone)]
 pub struct FabricSweepRow {

@@ -29,3 +29,4 @@ pub mod config;
 pub mod coordinator;
 pub mod metrics;
 pub mod experiments;
+pub mod service;

@@ -20,8 +20,11 @@ use vgc::coordinator::Trainer;
 use vgc::experiments::{self, BenchCodecsOpts, FabricSweepOpts};
 use vgc::fabric::{build_topology, FabricConfig, Straggler, TopologyKind};
 use vgc::runtime::{Client, Manifest};
+use vgc::service::http::{http_request, http_stream};
+use vgc::service::{Daemon, DaemonConfig, JobSpec, QueueConfig};
 use vgc::util::alloc::CountingAlloc;
 use vgc::util::cli::Args;
+use vgc::util::json::Json;
 use vgc::util::threadpool::ThreadPool;
 
 /// Counting allocator so `repro bench-codecs` can report steady-state
@@ -63,6 +66,16 @@ USAGE:
                   [--threads T1,T2,..] [--codecs SPEC+SPEC+..]
                   [--alloc-steps K] [--json FILE.json]
   repro inspect   [--artifacts DIR]
+  repro serve     --listen ADDR:PORT  (0 picks an ephemeral port)
+                  [--queues name=limit,..] [--sched-threads N]
+                  [--codec-threads N] [--artifacts DIR] [--state FILE.json]
+                  [--retry-base-ms M] [--retry-factor F] [--retry-max-ms M]
+                  [--topology TOPO] [... fabric flags as for train]
+  repro submit    --addr HOST:PORT (--spec FILE.json | --json '{..}')
+                  [--watch]    (stream NDJSON events until terminal)
+  repro status    --addr HOST:PORT [--job ID]
+  repro cancel    --addr HOST:PORT --job ID
+  repro shutdown  --addr HOST:PORT
 
 Codec SPECs: none | vgc:alpha=A[,zeta=Z] | strom:tau=T |
              hybrid:tau=T,alpha=A | qsgd:bits=B,d=D | terngrad
@@ -91,7 +104,7 @@ fn artifacts_dir(args: &Args) -> String {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["verify-sync", "quiet"])?;
+    let args = Args::from_env(&["verify-sync", "quiet", "watch"])?;
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("");
     match cmd {
         "train" => cmd_train(&args),
@@ -105,6 +118,11 @@ fn main() -> Result<()> {
         "fabric-sweep" => cmd_fabric_sweep(&args),
         "bench-codecs" => cmd_bench_codecs(&args),
         "inspect" => cmd_inspect(&args),
+        "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
+        "status" => cmd_status(&args),
+        "cancel" => cmd_cancel(&args),
+        "shutdown" => cmd_shutdown(&args),
         "" | "help" | "--help" => {
             print!("{USAGE}");
             Ok(())
@@ -204,36 +222,11 @@ fn cmd_fabric_sweep(args: &Args) -> Result<()> {
     }
     let bandwidths = args.parse_list::<f64>("bandwidth-gbps")?;
     if !bandwidths.is_empty() {
-        anyhow::ensure!(
-            bandwidths.iter().all(|b| *b > 0.0),
-            "--bandwidth-gbps values must be positive"
-        );
         opts.bandwidths_gbps = bandwidths;
     }
     let uplinks = args.parse_list::<f64>("inter-rack-gbps")?;
     if !uplinks.is_empty() {
-        anyhow::ensure!(
-            uplinks.iter().all(|g| *g > 0.0),
-            "--inter-rack-gbps values must be positive"
-        );
         opts.inter_rack_gbps = uplinks;
-    }
-    // Every swept cell must be a valid fabric config for every worker
-    // count: pinned torus dims must factor each p, and an uplink axis
-    // must reach a hierarchy with at least two groups (the sweep only
-    // applies the axis to hier cells, so probe those).
-    for &kind in &opts.topologies {
-        let probe = FabricConfig {
-            topology: kind,
-            inter_rack_gbps: match kind {
-                TopologyKind::Hier { .. } => opts.inter_rack_gbps.first().copied(),
-                _ => None,
-            },
-            ..FabricConfig::default()
-        };
-        for &p in &opts.workers {
-            probe.validate(p)?;
-        }
     }
     opts.segment_bytes = args.parse_or("segment-bytes", opts.segment_bytes)?;
     // Codec specs contain commas (vgc:alpha=1.5,zeta=0.999), so the
@@ -244,34 +237,17 @@ fn cmd_fabric_sweep(args: &Args) -> Result<()> {
             .filter(|s| !s.trim().is_empty())
             .map(|s| CodecSpec::parse(s.trim()))
             .collect::<Result<Vec<_>>>()?;
-        anyhow::ensure!(!opts.codecs.is_empty(), "--codecs lists no specs");
     }
     opts.n_params = args.parse_or("n", opts.n_params)?;
-    anyhow::ensure!(opts.n_params > 0, "--n must be positive");
     opts.latency_us = args.parse_or("latency-us", opts.latency_us)?;
     opts.jitter_us = args.parse_or("jitter-us", opts.jitter_us)?;
     if let Some(spec) = args.get("stragglers") {
         opts.stragglers = Straggler::parse_list(spec)?;
     }
-    if let Some(&min_p) = opts.workers.iter().min() {
-        // Every swept fabric must contain every straggler node.
-        let min_nodes = opts
-            .topologies
-            .iter()
-            .map(|&k| build_topology(k, min_p).node_count())
-            .min()
-            .unwrap_or(min_p);
-        for s in &opts.stragglers {
-            anyhow::ensure!(
-                s.node < min_nodes,
-                "--stragglers names node {} but the smallest swept fabric has {} nodes",
-                s.node,
-                min_nodes
-            );
-        }
-    }
     opts.seed = args.parse_or("seed", opts.seed)?;
     opts.warmup_steps = args.parse_or("warmup", opts.warmup_steps)?;
+    // Same validation the service daemon applies to HTTP submissions.
+    experiments::validate_sweep(&opts)?;
 
     let rows = experiments::fabric_sweep(&opts);
     let md = experiments::fabric_sweep_markdown(&opts, &rows);
@@ -460,5 +436,96 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     for e in &manifest.criterion {
         println!("  [bench] criterion n={} ({})", e.n, e.hlo);
     }
+    Ok(())
+}
+
+/// Serve accepts its own flags plus the fabric overrides (the daemon's
+/// shared cluster model), mirroring `train_flags`.
+fn serve_flags() -> Vec<&'static str> {
+    let mut flags = vec!["listen", "queues", "sched-threads", "codec-threads", "artifacts"];
+    flags.extend_from_slice(&["state", "retry-base-ms", "retry-factor", "retry-max-ms"]);
+    flags.extend_from_slice(FabricConfig::FLAGS);
+    flags
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.check_known(&serve_flags())?;
+    let listen = args.str_or("listen", "127.0.0.1:7077");
+    let mut cfg = DaemonConfig {
+        codec_threads: args.parse_or("codec-threads", 0usize)?,
+        artifacts_dir: artifacts_dir(args),
+        state_path: args.get("state").map(|p| p.to_string()),
+        fabric: FabricConfig::default().override_from(args)?,
+        ..DaemonConfig::default()
+    };
+    if let Some(qspec) = args.get("queues") {
+        cfg.scheduler.queues = QueueConfig::parse_list(qspec)?;
+    }
+    cfg.scheduler.threads = args.parse_or("sched-threads", cfg.scheduler.threads)?;
+    cfg.scheduler.retry.base_ms = args.parse_or("retry-base-ms", cfg.scheduler.retry.base_ms)?;
+    cfg.scheduler.retry.factor = args.parse_or("retry-factor", cfg.scheduler.retry.factor)?;
+    cfg.scheduler.retry.max_ms = args.parse_or("retry-max-ms", cfg.scheduler.retry.max_ms)?;
+    let daemon = Daemon::start(cfg);
+    daemon.run(&listen)
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    args.check_known(&["addr", "spec", "json", "watch"])?;
+    let addr = args.require("addr")?;
+    let body = if let Some(path) = args.get("spec") {
+        std::fs::read_to_string(path)?
+    } else if let Some(inline) = args.get("json") {
+        inline.to_string()
+    } else {
+        anyhow::bail!("submit needs --spec FILE.json or --json '{{..}}'");
+    };
+    // Validate client-side so a typo fails fast with a parse error
+    // instead of a 400 from the daemon.
+    JobSpec::from_json(&Json::parse(&body)?)?;
+    let (code, resp) = http_request(addr, "POST", "/jobs", Some(&body))?;
+    anyhow::ensure!(code == 200, "submit failed: HTTP {code}: {resp}");
+    println!("{resp}");
+    if args.has("watch") {
+        let id = Json::parse(&resp)?.expect("job")?.as_usize()?;
+        http_stream(addr, &format!("/jobs/{id}/events"), &mut |line| {
+            println!("{line}");
+        })?;
+    }
+    Ok(())
+}
+
+fn cmd_status(args: &Args) -> Result<()> {
+    args.check_known(&["addr", "job"])?;
+    let addr = args.require("addr")?;
+    if let Some(job) = args.get("job") {
+        let (code, resp) = http_request(addr, "GET", &format!("/jobs/{job}"), None)?;
+        anyhow::ensure!(code == 200, "HTTP {code}: {resp}");
+        println!("{resp}");
+    } else {
+        for path in ["/healthz", "/queues", "/jobs", "/fabric"] {
+            let (code, resp) = http_request(addr, "GET", path, None)?;
+            anyhow::ensure!(code == 200, "HTTP {code}: {resp}");
+            println!("{path} {resp}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_cancel(args: &Args) -> Result<()> {
+    args.check_known(&["addr", "job"])?;
+    let addr = args.require("addr")?;
+    let job = args.require("job")?;
+    let (code, resp) = http_request(addr, "POST", &format!("/jobs/{job}/cancel"), None)?;
+    anyhow::ensure!(code == 200, "HTTP {code}: {resp}");
+    println!("{resp}");
+    Ok(())
+}
+
+fn cmd_shutdown(args: &Args) -> Result<()> {
+    args.check_known(&["addr"])?;
+    let addr = args.require("addr")?;
+    let (code, resp) = http_request(addr, "POST", "/shutdown", None)?;
+    anyhow::ensure!(code == 200, "HTTP {code}: {resp}");
+    println!("{resp}");
     Ok(())
 }

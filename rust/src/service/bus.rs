@@ -1,0 +1,286 @@
+//! Typed broadcast event bus for the training service.
+//!
+//! The daemon's single source of truth for *what happened when*: the
+//! scheduler publishes job state transitions, executors publish live
+//! step metrics, and every consumer — the NDJSON streaming endpoint,
+//! tests, the drain path — observes the same totally-ordered stream.
+//!
+//! Publishers stamp each event with a global sequence number and fan it
+//! out to all live subscribers over `std::sync::mpsc` channels. A
+//! bounded replay history lets late subscribers (a client asking for
+//! `/jobs/:id/events` after the job already ran) see the full life of a
+//! job without racing the scheduler: [`Bus::subscribe`] atomically
+//! snapshots the history *and* registers the live channel, so backlog
+//! and live stream never gap and never overlap. Disconnected
+//! subscribers are pruned on the next publish.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::{num, obj, s, Json};
+
+use super::scheduler::JobState;
+
+/// Events older than this are dropped from the replay history (bounded
+/// memory for long-running daemons); live subscribers are unaffected.
+const HISTORY_CAP: usize = 16_384;
+
+/// An event plus its global publish order.
+#[derive(Debug)]
+pub struct Stamped<T> {
+    pub seq: u64,
+    pub event: T,
+}
+
+/// Broadcast bus. Events are `Arc`-shared, so publishing to many
+/// subscribers clones nothing but the pointer.
+pub struct Bus<T> {
+    inner: Mutex<BusInner<T>>,
+}
+
+struct BusInner<T> {
+    subs: Vec<Sender<Arc<Stamped<T>>>>,
+    history: Vec<Arc<Stamped<T>>>,
+    next_seq: u64,
+}
+
+/// One subscription: everything published before the subscribe call
+/// (up to the history cap) plus a live channel for everything after.
+pub struct Tap<T> {
+    pub backlog: Vec<Arc<Stamped<T>>>,
+    pub live: Receiver<Arc<Stamped<T>>>,
+}
+
+impl<T> Bus<T> {
+    pub fn new() -> Bus<T> {
+        Bus {
+            inner: Mutex::new(BusInner {
+                subs: Vec::new(),
+                history: Vec::new(),
+                next_seq: 0,
+            }),
+        }
+    }
+
+    /// Publish an event to every live subscriber; returns its sequence
+    /// number. Subscribers whose receiver was dropped are pruned here.
+    pub fn publish(&self, event: T) -> u64 {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        let ev = Arc::new(Stamped { seq, event });
+        inner.subs.retain(|tx| tx.send(ev.clone()).is_ok());
+        inner.history.push(ev);
+        if inner.history.len() > HISTORY_CAP {
+            let drop_n = inner.history.len() - HISTORY_CAP;
+            inner.history.drain(..drop_n);
+        }
+        seq
+    }
+
+    /// Snapshot the history and register a live channel, atomically.
+    pub fn subscribe(&self) -> Tap<T> {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let (tx, rx) = channel();
+        inner.subs.push(tx);
+        Tap {
+            backlog: inner.history.clone(),
+            live: rx,
+        }
+    }
+
+    /// Events published so far (monotone; not reduced by history drops).
+    pub fn published(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).next_seq
+    }
+}
+
+impl<T> Default for Bus<T> {
+    fn default() -> Self {
+        Bus::new()
+    }
+}
+
+/// The service's typed event vocabulary. Every variant names the job it
+/// concerns; `to_json` is the NDJSON wire shape of `/jobs/:id/events`.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// Accepted into a queue.
+    JobQueued {
+        job: u64,
+        name: String,
+        kind: &'static str,
+        queue: String,
+    },
+    /// An executor picked the job up (attempt counts from 1).
+    JobStarted { job: u64, attempt: u32 },
+    /// Live progress from inside an executor (step metrics).
+    JobProgress {
+        job: u64,
+        done: u64,
+        total: u64,
+        detail: String,
+    },
+    /// The attempt failed and the job re-queued with backoff.
+    JobRetry {
+        job: u64,
+        attempt: u32,
+        delay_ms: u64,
+        error: String,
+    },
+    /// Terminal transition; `summary` is the run summary on success.
+    JobFinished {
+        job: u64,
+        state: JobState,
+        summary: Option<Json>,
+        error: Option<String>,
+    },
+    /// The scheduler stopped accepting new jobs (graceful shutdown).
+    Drain,
+}
+
+impl Event {
+    /// The job this event concerns (`None` for daemon-wide events).
+    pub fn job(&self) -> Option<u64> {
+        match self {
+            Event::JobQueued { job, .. }
+            | Event::JobStarted { job, .. }
+            | Event::JobProgress { job, .. }
+            | Event::JobRetry { job, .. }
+            | Event::JobFinished { job, .. } => Some(*job),
+            Event::Drain => None,
+        }
+    }
+
+    /// True when this event ends the life of `job` (closes its stream).
+    pub fn is_terminal_for(&self, job: u64) -> bool {
+        matches!(self, Event::JobFinished { job: j, .. } if *j == job)
+    }
+
+    /// One NDJSON line of the event stream.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Event::JobQueued {
+                job,
+                name,
+                kind,
+                queue,
+            } => obj(vec![
+                ("event", s("queued")),
+                ("job", num(*job as f64)),
+                ("name", s(name)),
+                ("kind", s(kind)),
+                ("queue", s(queue)),
+            ]),
+            Event::JobStarted { job, attempt } => obj(vec![
+                ("event", s("started")),
+                ("job", num(*job as f64)),
+                ("attempt", num(*attempt as f64)),
+            ]),
+            Event::JobProgress {
+                job,
+                done,
+                total,
+                detail,
+            } => obj(vec![
+                ("event", s("progress")),
+                ("job", num(*job as f64)),
+                ("done", num(*done as f64)),
+                ("total", num(*total as f64)),
+                ("detail", s(detail)),
+            ]),
+            Event::JobRetry {
+                job,
+                attempt,
+                delay_ms,
+                error,
+            } => obj(vec![
+                ("event", s("retry")),
+                ("job", num(*job as f64)),
+                ("attempt", num(*attempt as f64)),
+                ("delay_ms", num(*delay_ms as f64)),
+                ("error", s(error)),
+            ]),
+            Event::JobFinished {
+                job,
+                state,
+                summary,
+                error,
+            } => obj(vec![
+                ("event", s("finished")),
+                ("job", num(*job as f64)),
+                ("state", s(state.label())),
+                ("summary", summary.clone().unwrap_or(Json::Null)),
+                (
+                    "error",
+                    error.as_deref().map(s).unwrap_or(Json::Null),
+                ),
+            ]),
+            Event::Drain => obj(vec![("event", s("drain"))]),
+        }
+    }
+}
+
+/// The daemon's bus instantiation.
+pub type EventBus = Bus<Event>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backlog_and_live_partition_the_stream() {
+        let bus: Bus<u32> = Bus::new();
+        bus.publish(1);
+        bus.publish(2);
+        let tap = bus.subscribe();
+        bus.publish(3);
+        let backlog: Vec<u32> = tap.backlog.iter().map(|e| e.event).collect();
+        assert_eq!(backlog, vec![1, 2]);
+        let live = tap.live.recv().unwrap();
+        assert_eq!(live.event, 3);
+        assert_eq!(live.seq, 2);
+        // Sequence numbers are dense across the backlog/live boundary.
+        assert_eq!(tap.backlog.last().unwrap().seq, 1);
+        assert_eq!(bus.published(), 3);
+    }
+
+    #[test]
+    fn dropped_subscribers_are_pruned() {
+        let bus: Bus<u32> = Bus::new();
+        let tap = bus.subscribe();
+        drop(tap);
+        bus.publish(7); // must not panic or leak the dead sender
+        let tap2 = bus.subscribe();
+        bus.publish(8);
+        assert_eq!(tap2.live.recv().unwrap().event, 8);
+    }
+
+    #[test]
+    fn event_json_shapes() {
+        let ev = Event::JobQueued {
+            job: 3,
+            name: "sweep".into(),
+            kind: "fabric-sweep",
+            queue: "default".into(),
+        };
+        assert_eq!(ev.job(), Some(3));
+        let j = ev.to_json();
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "queued");
+        assert_eq!(j.get("job").unwrap().as_usize().unwrap(), 3);
+
+        let fin = Event::JobFinished {
+            job: 3,
+            state: JobState::Succeeded,
+            summary: Some(obj(vec![("x", num(1.0))])),
+            error: None,
+        };
+        assert!(fin.is_terminal_for(3));
+        assert!(!fin.is_terminal_for(4));
+        let j = fin.to_json();
+        assert_eq!(j.get("state").unwrap().as_str().unwrap(), "succeeded");
+        assert_eq!(j.get("error"), Some(&Json::Null));
+        assert!(!Event::Drain.is_terminal_for(3));
+        assert_eq!(Event::Drain.job(), None);
+    }
+}

@@ -1,0 +1,384 @@
+//! Hand-rolled HTTP/1.1 control plane over `std::net::TcpListener`.
+//!
+//! Deliberately tiny, matching the repo's no-heavy-deps style: blocking
+//! accept loop, one thread per connection, `Connection: close` on every
+//! response, no keep-alive, no TLS, no chunked bodies. Routes:
+//!
+//! | method | path                | effect                              |
+//! |--------|---------------------|-------------------------------------|
+//! | GET    | `/healthz`          | daemon status JSON                  |
+//! | POST   | `/jobs`             | submit a [`JobSpec`] envelope       |
+//! | GET    | `/jobs`             | list all jobs                       |
+//! | GET    | `/jobs/:id`         | one job's snapshot                  |
+//! | GET    | `/jobs/:id/events`  | NDJSON event stream until terminal  |
+//! | POST   | `/jobs/:id/cancel`  | cancel                              |
+//! | GET    | `/queues`           | queue depths                        |
+//! | GET    | `/fabric`           | shared fabric config + usage ledger |
+//! | POST   | `/shutdown`         | drain and exit (same as SIGTERM)    |
+//!
+//! The event stream replays the job's full history (the bus keeps a
+//! replay window), then follows live events, and closes after the
+//! job's terminal event — end-of-stream *is* the completion signal.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::jobspec::JobSpec;
+use super::queue::JobId;
+use super::Daemon;
+
+/// Submission bodies larger than this are rejected outright.
+const MAX_BODY: usize = 4 << 20;
+
+/// A parsed request line + body; headers beyond Content-Length are
+/// read and discarded.
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("empty request line")?.to_string();
+    let path = parts.next().context("request line has no path")?.to_string();
+    let mut content_len = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header)?;
+        let header = header.trim();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_len = value.trim().parse().context("bad Content-Length")?;
+            }
+        }
+    }
+    if content_len > MAX_BODY {
+        bail!("body too large ({content_len} bytes)");
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, body })
+}
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+fn respond_json(stream: &mut TcpStream, code: u16, body: &Json) -> std::io::Result<()> {
+    let text = body.to_string();
+    write!(
+        stream,
+        "HTTP/1.1 {code} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{text}",
+        status_text(code),
+        text.len(),
+    )?;
+    stream.flush()
+}
+
+fn error_json(message: &str) -> Json {
+    crate::util::json::obj(vec![("error", crate::util::json::s(message))])
+}
+
+/// The accept loop + its listener address.
+pub struct ControlPlane {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ControlPlane {
+    /// Bind `listen` (port 0 picks an ephemeral port) and serve the
+    /// daemon until [`ControlPlane::stop`].
+    pub fn start(listen: &str, daemon: Arc<Daemon>) -> Result<ControlPlane> {
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_in = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("http-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_in.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Ok(mut stream) = conn else { continue };
+                    let daemon = daemon.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("http-conn".into())
+                        .spawn(move || {
+                            // Broken pipes and parse failures only kill
+                            // this connection's thread.
+                            let _ = handle_connection(&mut stream, &daemon);
+                        });
+                }
+            })
+            .context("spawn accept loop")?;
+        Ok(ControlPlane {
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// Stop accepting; a self-connection unblocks the blocking accept.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn parse_job_path(path: &str) -> Option<(JobId, Option<&str>)> {
+    let rest = path.strip_prefix("/jobs/")?;
+    let (id_str, action) = match rest.split_once('/') {
+        Some((id, act)) => (id, Some(act)),
+        None => (rest, None),
+    };
+    id_str.parse().ok().map(|id| (id, action))
+}
+
+fn handle_connection(stream: &mut TcpStream, daemon: &Daemon) -> std::io::Result<()> {
+    let req = match read_request(stream) {
+        Ok(r) => r,
+        Err(e) => return respond_json(stream, 400, &error_json(&format!("{e:#}"))),
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => respond_json(stream, 200, &daemon.health_json()),
+        ("GET", "/queues") => respond_json(stream, 200, &daemon.queues_json()),
+        ("GET", "/fabric") => respond_json(stream, 200, &daemon.fabric_json()),
+        ("GET", "/jobs") => respond_json(stream, 200, &daemon.jobs_json()),
+        ("POST", "/jobs") => handle_submit(stream, daemon, &req.body),
+        ("POST", "/shutdown") => {
+            respond_json(
+                stream,
+                200,
+                &crate::util::json::obj(vec![(
+                    "status",
+                    crate::util::json::s("draining"),
+                )]),
+            )?;
+            daemon.begin_shutdown();
+            Ok(())
+        }
+        ("GET", path) => match parse_job_path(path) {
+            Some((id, None)) => match daemon.scheduler().job(id) {
+                Some(snap) => respond_json(stream, 200, &snap.to_json()),
+                None => respond_json(stream, 404, &error_json("unknown job")),
+            },
+            Some((id, Some("events"))) => stream_events(stream, daemon, id),
+            _ => respond_json(stream, 404, &error_json("no such route")),
+        },
+        ("POST", path) => match parse_job_path(path) {
+            Some((id, Some("cancel"))) => match daemon.scheduler().cancel(id) {
+                Ok(state) => respond_json(
+                    stream,
+                    200,
+                    &crate::util::json::obj(vec![
+                        ("job", crate::util::json::num(id as f64)),
+                        ("state", crate::util::json::s(state.label())),
+                    ]),
+                ),
+                Err(e) => respond_json(stream, 404, &error_json(&format!("{e:#}"))),
+            },
+            _ => respond_json(stream, 404, &error_json("no such route")),
+        },
+        _ => respond_json(stream, 405, &error_json("method not allowed")),
+    }
+}
+
+fn handle_submit(
+    stream: &mut TcpStream,
+    daemon: &Daemon,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let parsed = std::str::from_utf8(body)
+        .map_err(|_| anyhow::anyhow!("body is not UTF-8"))
+        .and_then(|text| Json::parse(text).map_err(anyhow::Error::from))
+        .and_then(|j| JobSpec::from_json(&j));
+    let spec = match parsed {
+        Ok(sp) => sp,
+        Err(e) => return respond_json(stream, 400, &error_json(&format!("{e:#}"))),
+    };
+    match daemon.scheduler().submit(spec) {
+        Ok(id) => respond_json(
+            stream,
+            200,
+            &crate::util::json::obj(vec![
+                ("job", crate::util::json::num(id as f64)),
+                ("state", crate::util::json::s("queued")),
+            ]),
+        ),
+        // submit only fails while draining — that's 503, try elsewhere.
+        Err(e) => respond_json(stream, 503, &error_json(&format!("{e:#}"))),
+    }
+}
+
+/// Stream a job's events as NDJSON: replay its history, then follow
+/// live until the job's terminal event or the daemon stops.
+fn stream_events(stream: &mut TcpStream, daemon: &Daemon, id: JobId) -> std::io::Result<()> {
+    if daemon.scheduler().job(id).is_none() {
+        return respond_json(stream, 404, &error_json("unknown job"));
+    }
+    // Subscribe BEFORE checking terminality: the tap's backlog+live is
+    // gap-free, so however the race with the scheduler falls, the
+    // terminal event is in exactly one of the two.
+    let tap = daemon.bus().subscribe();
+    write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nConnection: close\r\n\r\n"
+    )?;
+    let mut done = false;
+    for ev in &tap.backlog {
+        if ev.event.job() == Some(id) || ev.event.job().is_none() {
+            writeln!(stream, "{}", ev.event.to_json())?;
+            if ev.event.is_terminal_for(id) {
+                done = true;
+            }
+        }
+    }
+    stream.flush()?;
+    while !done {
+        match tap.live.recv_timeout(Duration::from_secs(1)) {
+            Ok(ev) => {
+                if ev.event.job() == Some(id) || ev.event.job().is_none() {
+                    writeln!(stream, "{}", ev.event.to_json())?;
+                    stream.flush()?;
+                    if ev.event.is_terminal_for(id) {
+                        done = true;
+                    }
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if daemon.stopping() {
+                    break;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Ok(())
+}
+
+/// Minimal blocking HTTP client for `repro submit`/`status`/`cancel`
+/// and the integration tests. Returns `(status_code, body)`.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(u16, String)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    let body = body.unwrap_or("");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+    )?;
+    stream.flush()?;
+    let mut response = String::new();
+    stream.read_to_string(&mut response)?;
+    parse_response(&response)
+}
+
+/// Open `/jobs/:id/events` and hand each NDJSON line to `on_line`;
+/// returns when the stream closes (job terminal or daemon gone).
+pub fn http_stream(
+    addr: &str,
+    path: &str,
+    on_line: &mut dyn FnMut(&str),
+) -> Result<u16> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    write!(
+        stream,
+        "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+    )?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let code: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .context("bad status line")?
+        .parse()?;
+    // Skip headers.
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header)? == 0 || header.trim().is_empty() {
+            break;
+        }
+    }
+    for line in reader.lines() {
+        let line = line?;
+        if !line.trim().is_empty() {
+            on_line(line.trim());
+        }
+    }
+    Ok(code)
+}
+
+fn parse_response(raw: &str) -> Result<(u16, String)> {
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .context("malformed HTTP response")?;
+    let code: u16 = head
+        .lines()
+        .next()
+        .context("empty response")?
+        .split_whitespace()
+        .nth(1)
+        .context("bad status line")?
+        .parse()?;
+    Ok((code, body.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_paths_parse() {
+        assert_eq!(parse_job_path("/jobs/7"), Some((7, None)));
+        assert_eq!(parse_job_path("/jobs/7/events"), Some((7, Some("events"))));
+        assert_eq!(parse_job_path("/jobs/7/cancel"), Some((7, Some("cancel"))));
+        assert_eq!(parse_job_path("/jobs/x"), None);
+        assert_eq!(parse_job_path("/queues"), None);
+    }
+
+    #[test]
+    fn responses_parse() {
+        let (code, body) =
+            parse_response("HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\n{}").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, "{}");
+        assert!(parse_response("garbage").is_err());
+    }
+}

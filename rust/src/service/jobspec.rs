@@ -1,0 +1,174 @@
+//! Job specifications: the serde types the control plane accepts.
+//!
+//! A job spec is an envelope (`job` kind, `name`, `queue`, `priority`,
+//! `max_retries`) around one of the existing experiment configurations,
+//! so the `experiments/` entry points become executors without learning
+//! anything about HTTP or queues. The `spec` object reuses each
+//! config's own JSON round-trip (`TrainConfig::from_json`,
+//! `FabricSweepOpts::from_json`, `BenchCodecsOpts::from_json`); for the
+//! sweep/bench kinds it is optional — absent keys fall back to the same
+//! defaults the CLI uses, so `{"job":"bench-codecs"}` is a valid spec.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::experiments::benchcodecs::BenchCodecsOpts;
+use crate::experiments::FabricSweepOpts;
+use crate::util::json::{num, obj, s, Json};
+
+/// What the job runs, mirroring the one-shot CLI subcommands.
+#[derive(Debug, Clone)]
+pub enum JobPayload {
+    Train(TrainConfig),
+    FabricSweep(FabricSweepOpts),
+    BenchCodecs(BenchCodecsOpts),
+}
+
+/// One schedulable unit of work.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Human label echoed in events and listings.
+    pub name: String,
+    /// Target queue; unknown names auto-create a concurrency-1 queue.
+    pub queue: String,
+    /// Higher runs first within the queue; ties are FIFO.
+    pub priority: i32,
+    /// Re-attempts after failure (0 = fail on first error).
+    pub max_retries: u32,
+    pub payload: JobPayload,
+}
+
+impl JobSpec {
+    /// The wire name of the payload kind.
+    pub fn kind(&self) -> &'static str {
+        match self.payload {
+            JobPayload::Train(_) => "train",
+            JobPayload::FabricSweep(_) => "fabric-sweep",
+            JobPayload::BenchCodecs(_) => "bench-codecs",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let spec = match &self.payload {
+            JobPayload::Train(cfg) => cfg.to_json(),
+            JobPayload::FabricSweep(opts) => opts.to_json(),
+            JobPayload::BenchCodecs(opts) => opts.to_json(),
+        };
+        obj(vec![
+            ("job", s(self.kind())),
+            ("name", s(&self.name)),
+            ("queue", s(&self.queue)),
+            ("priority", num(self.priority as f64)),
+            ("max_retries", num(self.max_retries as f64)),
+            ("spec", spec),
+        ])
+    }
+
+    /// Parse a submission envelope. `spec` is required for `train`
+    /// (there is no meaningful default model) and optional otherwise.
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        let kind = j
+            .expect("job")
+            .context("job spec needs a \"job\" kind")?
+            .as_str()?
+            .to_string();
+        let spec = j.get("spec");
+        let payload = match kind.as_str() {
+            "train" => {
+                let spec = spec.context("train jobs need a \"spec\" object")?;
+                JobPayload::Train(TrainConfig::from_json(spec)?)
+            }
+            "fabric-sweep" => JobPayload::FabricSweep(match spec {
+                Some(sp) => FabricSweepOpts::from_json(sp)?,
+                None => FabricSweepOpts::default(),
+            }),
+            "bench-codecs" => JobPayload::BenchCodecs(match spec {
+                Some(sp) => BenchCodecsOpts::from_json(sp)?,
+                None => BenchCodecsOpts::default(),
+            }),
+            other => bail!(
+                "unknown job kind '{other}' (expected train, fabric-sweep, or bench-codecs)"
+            ),
+        };
+        let name = match j.get("name") {
+            Some(n) => n.as_str()?.to_string(),
+            None => kind.clone(),
+        };
+        let queue = match j.get("queue") {
+            Some(q) => q.as_str()?.to_string(),
+            None => "default".to_string(),
+        };
+        let priority = match j.get("priority") {
+            Some(p) => p.as_f64()? as i32,
+            None => 0,
+        };
+        let max_retries = match j.get("max_retries") {
+            Some(r) => r.as_usize()? as u32,
+            None => 0,
+        };
+        Ok(JobSpec {
+            name,
+            queue,
+            priority,
+            max_retries,
+            payload,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_envelopes_parse_with_defaults() {
+        let j = Json::parse(r#"{"job":"bench-codecs"}"#).unwrap();
+        let spec = JobSpec::from_json(&j).unwrap();
+        assert_eq!(spec.kind(), "bench-codecs");
+        assert_eq!(spec.name, "bench-codecs");
+        assert_eq!(spec.queue, "default");
+        assert_eq!(spec.priority, 0);
+        assert_eq!(spec.max_retries, 0);
+
+        let j = Json::parse(r#"{"job":"fabric-sweep","queue":"sweeps","priority":3}"#).unwrap();
+        let spec = JobSpec::from_json(&j).unwrap();
+        assert_eq!(spec.queue, "sweeps");
+        assert_eq!(spec.priority, 3);
+    }
+
+    #[test]
+    fn train_requires_spec() {
+        let j = Json::parse(r#"{"job":"train"}"#).unwrap();
+        assert!(JobSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn unknown_kind_is_rejected() {
+        let j = Json::parse(r#"{"job":"mine-bitcoin"}"#).unwrap();
+        let err = JobSpec::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("unknown job kind"), "{err}");
+    }
+
+    #[test]
+    fn envelope_round_trips() {
+        let opts = FabricSweepOpts {
+            workers: vec![4],
+            n_params: 4096,
+            ..FabricSweepOpts::default()
+        };
+        let spec = JobSpec {
+            name: "tiny-sweep".into(),
+            queue: "sweeps".into(),
+            priority: -2,
+            max_retries: 1,
+            payload: JobPayload::FabricSweep(opts),
+        };
+        let j = spec.to_json();
+        let back = JobSpec::from_json(&j).unwrap();
+        assert_eq!(back.name, "tiny-sweep");
+        assert_eq!(back.priority, -2);
+        assert_eq!(back.max_retries, 1);
+        // Payload round-trips bit-for-bit through its own serializer.
+        assert_eq!(back.to_json().to_string(), j.to_string());
+    }
+}

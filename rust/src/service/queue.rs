@@ -1,0 +1,271 @@
+//! Named job queues: FIFO + priority ordering, per-queue concurrency
+//! limits, and delayed (backoff) re-entry.
+//!
+//! A queue is a passive data structure — the scheduler owns the clock
+//! and the worker threads; the queue only answers "who runs next".
+//! Ordering is max-priority first, then submission order (FIFO) within
+//! a priority band. Retried jobs park in a `delayed` list until their
+//! backoff deadline, then [`JobQueue::promote`] moves them back into
+//! the ready heap with their original submission sequence, so a retried
+//! job does not lose its place to later arrivals of equal priority.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+/// Job handle, unique per daemon lifetime, allocated by the scheduler.
+pub type JobId = u64;
+
+/// Static description of one named queue.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QueueConfig {
+    pub name: String,
+    pub max_concurrent: usize,
+}
+
+impl QueueConfig {
+    /// Parse `"train=1,sweeps=2"` — the `--queues` CLI flag shape.
+    pub fn parse_list(text: &str) -> Result<Vec<QueueConfig>> {
+        let mut out = Vec::new();
+        for part in text.split(',').filter(|p| !p.trim().is_empty()) {
+            let (name, cap) = match part.split_once('=') {
+                Some((n, c)) => (n.trim(), c.trim()),
+                None => bail!("queue spec '{part}' is not name=limit"),
+            };
+            ensure!(!name.is_empty(), "queue spec '{part}' has an empty name");
+            let max_concurrent: usize = cap
+                .parse()
+                .map_err(|_| anyhow::anyhow!("queue '{name}': bad limit '{cap}'"))?;
+            ensure!(max_concurrent >= 1, "queue '{name}': limit must be >= 1");
+            out.push(QueueConfig {
+                name: name.to_string(),
+                max_concurrent,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Inverse of [`QueueConfig::parse_list`].
+    pub fn list_str(configs: &[QueueConfig]) -> String {
+        configs
+            .iter()
+            .map(|q| format!("{}={}", q.name, q.max_concurrent))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// Heap entry: higher priority wins; ties break to the earlier seq.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Entry {
+    priority: i32,
+    seq: u64,
+    job: JobId,
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: larger compares pop first. Flip the
+        // seq comparison so the *older* entry is the larger one.
+        self.priority
+            .cmp(&other.priority)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// One named queue: a ready heap, a backoff parking lot, and a running
+/// counter enforced against `max_concurrent` by the scheduler.
+#[derive(Debug)]
+pub struct JobQueue {
+    pub name: String,
+    pub max_concurrent: usize,
+    ready: BinaryHeap<Entry>,
+    delayed: Vec<(Instant, Entry)>,
+    next_seq: u64,
+    running: usize,
+}
+
+impl JobQueue {
+    pub fn new(name: &str, max_concurrent: usize) -> JobQueue {
+        JobQueue {
+            name: name.to_string(),
+            max_concurrent: max_concurrent.max(1),
+            ready: BinaryHeap::new(),
+            delayed: Vec::new(),
+            next_seq: 0,
+            running: 0,
+        }
+    }
+
+    /// Enqueue immediately runnable work.
+    pub fn push(&mut self, job: JobId, priority: i32) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.ready.push(Entry { priority, seq, job });
+    }
+
+    /// Park work until `at` (retry backoff). Keeps FIFO seq allocation
+    /// so promoted entries sort by original arrival within a band.
+    pub fn push_after(&mut self, job: JobId, priority: i32, at: Instant) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.delayed.push((at, Entry { priority, seq, job }));
+    }
+
+    /// Move every delayed entry whose deadline has passed into the
+    /// ready heap; returns how many were promoted.
+    pub fn promote(&mut self, now: Instant) -> usize {
+        let mut promoted = 0;
+        let mut i = 0;
+        while i < self.delayed.len() {
+            if self.delayed[i].0 <= now {
+                let (_, entry) = self.delayed.swap_remove(i);
+                self.ready.push(entry);
+                promoted += 1;
+            } else {
+                i += 1;
+            }
+        }
+        promoted
+    }
+
+    /// Earliest backoff deadline still parked, if any — the scheduler's
+    /// wait-timeout hint.
+    pub fn next_delayed(&self) -> Option<Instant> {
+        self.delayed.iter().map(|(at, _)| *at).min()
+    }
+
+    pub fn has_capacity(&self) -> bool {
+        self.running < self.max_concurrent
+    }
+
+    /// Pop the best ready job (priority desc, then FIFO). Does not
+    /// check capacity — callers pair this with [`JobQueue::start`].
+    pub fn pop_ready(&mut self) -> Option<JobId> {
+        self.ready.pop().map(|e| e.job)
+    }
+
+    pub fn start(&mut self) {
+        self.running += 1;
+    }
+
+    pub fn finish(&mut self) {
+        debug_assert!(self.running > 0);
+        self.running = self.running.saturating_sub(1);
+    }
+
+    /// Drop a job from ready or delayed (cancellation). Returns true if
+    /// it was present.
+    pub fn remove(&mut self, job: JobId) -> bool {
+        let before = self.ready.len() + self.delayed.len();
+        self.ready = self
+            .ready
+            .drain()
+            .filter(|e| e.job != job)
+            .collect();
+        self.delayed.retain(|(_, e)| e.job != job);
+        before != self.ready.len() + self.delayed.len()
+    }
+
+    pub fn ready_len(&self) -> usize {
+        self.ready.len()
+    }
+
+    pub fn delayed_len(&self) -> usize {
+        self.delayed.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.running
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_within_priority_band() {
+        let mut q = JobQueue::new("default", 1);
+        q.push(10, 0);
+        q.push(11, 0);
+        q.push(12, 0);
+        assert_eq!(q.pop_ready(), Some(10));
+        assert_eq!(q.pop_ready(), Some(11));
+        assert_eq!(q.pop_ready(), Some(12));
+        assert_eq!(q.pop_ready(), None);
+    }
+
+    #[test]
+    fn higher_priority_preempts_fifo() {
+        let mut q = JobQueue::new("default", 1);
+        q.push(1, 0);
+        q.push(2, 5);
+        q.push(3, 0);
+        q.push(4, 5);
+        assert_eq!(q.pop_ready(), Some(2)); // priority 5, earliest
+        assert_eq!(q.pop_ready(), Some(4)); // priority 5, later
+        assert_eq!(q.pop_ready(), Some(1));
+        assert_eq!(q.pop_ready(), Some(3));
+    }
+
+    #[test]
+    fn delayed_entries_promote_after_deadline() {
+        let mut q = JobQueue::new("default", 1);
+        let now = Instant::now();
+        q.push_after(7, 0, now + Duration::from_millis(50));
+        assert_eq!(q.pop_ready(), None);
+        assert_eq!(q.promote(now), 0);
+        assert_eq!(q.delayed_len(), 1);
+        assert_eq!(q.next_delayed(), Some(now + Duration::from_millis(50)));
+        assert_eq!(q.promote(now + Duration::from_millis(51)), 1);
+        assert_eq!(q.pop_ready(), Some(7));
+        assert_eq!(q.next_delayed(), None);
+    }
+
+    #[test]
+    fn capacity_tracks_running_count() {
+        let mut q = JobQueue::new("default", 2);
+        assert!(q.has_capacity());
+        q.start();
+        assert!(q.has_capacity());
+        q.start();
+        assert!(!q.has_capacity());
+        q.finish();
+        assert!(q.has_capacity());
+    }
+
+    #[test]
+    fn remove_drops_ready_and_delayed() {
+        let mut q = JobQueue::new("default", 1);
+        q.push(1, 0);
+        q.push(2, 0);
+        q.push_after(3, 0, Instant::now() + Duration::from_secs(60));
+        assert!(q.remove(1));
+        assert!(q.remove(3));
+        assert!(!q.remove(99));
+        assert_eq!(q.pop_ready(), Some(2));
+        assert_eq!(q.delayed_len(), 0);
+    }
+
+    #[test]
+    fn parse_list_round_trips() {
+        let qs = QueueConfig::parse_list("train=1, sweeps=2").unwrap();
+        assert_eq!(qs.len(), 2);
+        assert_eq!(qs[0].name, "train");
+        assert_eq!(qs[1].max_concurrent, 2);
+        assert_eq!(QueueConfig::list_str(&qs), "train=1,sweeps=2");
+        assert!(QueueConfig::parse_list("oops").is_err());
+        assert!(QueueConfig::parse_list("x=0").is_err());
+        assert!(QueueConfig::parse_list("=3").is_err());
+    }
+}

@@ -1,0 +1,980 @@
+//! Job scheduler: worker threads claiming from named queues, bounded
+//! retry with exponential backoff, cancellation, and graceful drain.
+//!
+//! The scheduler is the only writer of job state. All transitions
+//! happen under one lock and are published to the event bus *inside*
+//! that critical section, so the bus order is the transition order —
+//! tests and streaming clients can reconstruct scheduling decisions
+//! from events alone. Executors are injected as a closure over
+//! [`JobSpec`]; the scheduler knows nothing about training or sweeps.
+//!
+//! Lifecycle: `Queued → Running → {Succeeded | Cancelled | Backoff →
+//! Queued…  | Failed}`. A failed attempt re-queues with delay
+//! `base · factor^(attempt−1)` (capped) until `max_retries` re-attempts
+//! are spent. Cancellation of a queued job is immediate; cancellation
+//! of a running job sets a flag the executor observes at its next step
+//! boundary. [`Scheduler::drain`] rejects new submissions, cancels
+//! everything not yet started, lets running jobs finish, then the
+//! worker threads exit and [`Scheduler::join`] returns.
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{num, obj, s, Json};
+
+use super::bus::{Event, EventBus};
+use super::jobspec::JobSpec;
+use super::queue::{JobId, JobQueue, QueueConfig};
+
+/// Job lifecycle states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    /// Failed an attempt; parked until the backoff deadline.
+    Backoff,
+    Succeeded,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Backoff => "backoff",
+            JobState::Succeeded => "succeeded",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            JobState::Succeeded | JobState::Failed | JobState::Cancelled
+        )
+    }
+}
+
+/// Exponential backoff between retry attempts.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    pub base_ms: u64,
+    pub factor: f64,
+    pub max_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            base_ms: 500,
+            factor: 2.0,
+            max_ms: 30_000,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Delay before re-attempt after `failures` failed attempts
+    /// (`failures` counts from 1): `base · factor^(failures−1)`, capped.
+    pub fn delay_ms(&self, failures: u32) -> u64 {
+        let exp = failures.saturating_sub(1).min(63);
+        let raw = self.base_ms as f64 * self.factor.powi(exp as i32);
+        (raw as u64).min(self.max_ms).max(self.base_ms.min(self.max_ms))
+    }
+}
+
+/// Handed to the executor: identity, cancellation, and a progress path
+/// onto the bus. Executors must poll [`JobCtx::check`] (or
+/// [`JobCtx::cancelled`]) at step boundaries for cancellation to work.
+pub struct JobCtx {
+    pub id: JobId,
+    pub attempt: u32,
+    pub bus: Arc<EventBus>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl JobCtx {
+    /// A context owned by no scheduler — for tests and direct executor
+    /// invocation. Never cancelled.
+    pub fn detached(bus: &Arc<EventBus>) -> JobCtx {
+        JobCtx {
+            id: 0,
+            attempt: 1,
+            bus: bus.clone(),
+            cancel: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    /// Bail with a recognizable error if cancellation was requested.
+    pub fn check(&self) -> Result<()> {
+        if self.cancelled() {
+            bail!("cancelled at step boundary");
+        }
+        Ok(())
+    }
+
+    /// Publish a live progress event (step metrics, sweep cells, …).
+    pub fn progress(&self, done: u64, total: u64, detail: &str) {
+        self.bus.publish(Event::JobProgress {
+            job: self.id,
+            done,
+            total,
+            detail: detail.to_string(),
+        });
+    }
+}
+
+/// The injected work function. Returns the job's summary JSON.
+pub type Executor = Arc<dyn Fn(&JobSpec, &JobCtx) -> Result<Json> + Send + Sync>;
+
+struct JobRecord {
+    spec: Arc<JobSpec>,
+    state: JobState,
+    attempts: u32,
+    error: Option<String>,
+    result: Option<Json>,
+    cancel: Arc<AtomicBool>,
+}
+
+/// Cloneable read view of one job.
+#[derive(Debug, Clone)]
+pub struct JobSnapshot {
+    pub id: JobId,
+    pub name: String,
+    pub kind: &'static str,
+    pub queue: String,
+    pub priority: i32,
+    pub state: JobState,
+    pub attempts: u32,
+    pub error: Option<String>,
+    pub result: Option<Json>,
+}
+
+impl JobSnapshot {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("id", num(self.id as f64)),
+            ("name", s(&self.name)),
+            ("kind", s(self.kind)),
+            ("queue", s(&self.queue)),
+            ("priority", num(self.priority as f64)),
+            ("state", s(self.state.label())),
+            ("attempts", num(self.attempts as f64)),
+            (
+                "error",
+                self.error.as_deref().map(s).unwrap_or(Json::Null),
+            ),
+            ("result", self.result.clone().unwrap_or(Json::Null)),
+        ])
+    }
+}
+
+/// Read view of one queue's depths.
+#[derive(Debug, Clone)]
+pub struct QueueSnapshot {
+    pub name: String,
+    pub max_concurrent: usize,
+    pub running: usize,
+    pub ready: usize,
+    pub delayed: usize,
+}
+
+impl QueueSnapshot {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("max_concurrent", num(self.max_concurrent as f64)),
+            ("running", num(self.running as f64)),
+            ("ready", num(self.ready as f64)),
+            ("delayed", num(self.delayed as f64)),
+        ])
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Pre-declared queues; submissions to unknown names auto-create a
+    /// concurrency-1 queue.
+    pub queues: Vec<QueueConfig>,
+    pub retry: RetryPolicy,
+    /// Worker threads; the global concurrency ceiling across queues.
+    pub threads: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            queues: Vec::new(),
+            retry: RetryPolicy::default(),
+            threads: 2,
+        }
+    }
+}
+
+struct Inner {
+    jobs: BTreeMap<JobId, JobRecord>,
+    queues: BTreeMap<String, JobQueue>,
+    next_id: JobId,
+    draining: bool,
+}
+
+struct Shared {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    bus: Arc<EventBus>,
+    exec: Executor,
+    retry: RetryPolicy,
+}
+
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+fn lock_inner(shared: &Shared) -> MutexGuard<'_, Inner> {
+    shared.inner.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl Scheduler {
+    /// Spawn the worker pool and return the handle.
+    pub fn start(cfg: SchedulerConfig, exec: Executor, bus: Arc<EventBus>) -> Scheduler {
+        let mut queues = BTreeMap::new();
+        for q in &cfg.queues {
+            queues.insert(q.name.clone(), JobQueue::new(&q.name, q.max_concurrent));
+        }
+        let shared = Arc::new(Shared {
+            inner: Mutex::new(Inner {
+                jobs: BTreeMap::new(),
+                queues,
+                next_id: 1,
+                draining: false,
+            }),
+            cv: Condvar::new(),
+            bus,
+            exec,
+            retry: cfg.retry,
+        });
+        let mut threads = Vec::new();
+        for i in 0..cfg.threads.max(1) {
+            let sh = shared.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("sched-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn scheduler worker"),
+            );
+        }
+        Scheduler {
+            shared,
+            threads: Mutex::new(threads),
+        }
+    }
+
+    /// Accept a job; errors while draining.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobId> {
+        let mut inner = lock_inner(&self.shared);
+        if inner.draining {
+            bail!("scheduler is draining: not accepting new jobs");
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let queue_name = spec.queue.clone();
+        let priority = spec.priority;
+        let q = inner
+            .queues
+            .entry(queue_name.clone())
+            .or_insert_with(|| JobQueue::new(&queue_name, 1));
+        q.push(id, priority);
+        let kind = spec.kind();
+        let name = spec.name.clone();
+        inner.jobs.insert(
+            id,
+            JobRecord {
+                spec: Arc::new(spec),
+                state: JobState::Queued,
+                attempts: 0,
+                error: None,
+                result: None,
+                cancel: Arc::new(AtomicBool::new(false)),
+            },
+        );
+        self.shared.bus.publish(Event::JobQueued {
+            job: id,
+            name,
+            kind,
+            queue: queue_name,
+        });
+        self.shared.cv.notify_all();
+        Ok(id)
+    }
+
+    /// Cancel a job. Queued/backed-off jobs cancel immediately; running
+    /// jobs get the flag set and cancel at their next step boundary.
+    /// Returns the state *after* this call.
+    pub fn cancel(&self, id: JobId) -> Result<JobState> {
+        let mut inner = lock_inner(&self.shared);
+        let Some(rec) = inner.jobs.get(&id) else {
+            bail!("unknown job {id}");
+        };
+        match rec.state {
+            JobState::Queued | JobState::Backoff => {
+                let queue_name = rec.spec.queue.clone();
+                if let Some(q) = inner.queues.get_mut(&queue_name) {
+                    q.remove(id);
+                }
+                let rec = inner.jobs.get_mut(&id).expect("job exists");
+                rec.state = JobState::Cancelled;
+                rec.error = Some("cancelled before start".into());
+                self.shared.bus.publish(Event::JobFinished {
+                    job: id,
+                    state: JobState::Cancelled,
+                    summary: None,
+                    error: rec.error.clone(),
+                });
+                self.shared.cv.notify_all();
+                Ok(JobState::Cancelled)
+            }
+            JobState::Running => {
+                rec.cancel.store(true, Ordering::Relaxed);
+                Ok(JobState::Running)
+            }
+            terminal => Ok(terminal),
+        }
+    }
+
+    pub fn job(&self, id: JobId) -> Option<JobSnapshot> {
+        let inner = lock_inner(&self.shared);
+        inner.jobs.get(&id).map(|r| snapshot(id, r))
+    }
+
+    pub fn jobs(&self) -> Vec<JobSnapshot> {
+        let inner = lock_inner(&self.shared);
+        inner.jobs.iter().map(|(id, r)| snapshot(*id, r)).collect()
+    }
+
+    pub fn queues(&self) -> Vec<QueueSnapshot> {
+        let inner = lock_inner(&self.shared);
+        inner
+            .queues
+            .values()
+            .map(|q| QueueSnapshot {
+                name: q.name.clone(),
+                max_concurrent: q.max_concurrent,
+                running: q.running(),
+                ready: q.ready_len(),
+                delayed: q.delayed_len(),
+            })
+            .collect()
+    }
+
+    pub fn draining(&self) -> bool {
+        lock_inner(&self.shared).draining
+    }
+
+    /// Block until `id` is terminal or `timeout` elapses. Returns the
+    /// last observed state (`None` for unknown jobs); callers decide
+    /// whether a non-terminal state means timeout.
+    pub fn wait_terminal(&self, id: JobId, timeout: Duration) -> Option<JobState> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = lock_inner(&self.shared);
+        loop {
+            match inner.jobs.get(&id) {
+                None => return None,
+                Some(r) if r.state.is_terminal() => return Some(r.state),
+                Some(r) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Some(r.state);
+                    }
+                    let wait = deadline - now;
+                    inner = match self.shared.cv.wait_timeout(inner, wait) {
+                        Ok((g, _)) => g,
+                        Err(p) => p.into_inner().0,
+                    };
+                }
+            }
+        }
+    }
+
+    /// Stop accepting jobs, cancel everything not yet started, let
+    /// running jobs finish. Idempotent.
+    pub fn drain(&self) {
+        let mut inner = lock_inner(&self.shared);
+        if inner.draining {
+            return;
+        }
+        inner.draining = true;
+        let pending: Vec<JobId> = inner
+            .jobs
+            .iter()
+            .filter(|(_, r)| matches!(r.state, JobState::Queued | JobState::Backoff))
+            .map(|(id, _)| *id)
+            .collect();
+        for id in pending {
+            let queue_name = inner.jobs[&id].spec.queue.clone();
+            if let Some(q) = inner.queues.get_mut(&queue_name) {
+                q.remove(id);
+            }
+            let rec = inner.jobs.get_mut(&id).expect("job exists");
+            rec.state = JobState::Cancelled;
+            rec.error = Some("drained before start".into());
+            self.shared.bus.publish(Event::JobFinished {
+                job: id,
+                state: JobState::Cancelled,
+                summary: None,
+                error: rec.error.clone(),
+            });
+        }
+        self.shared.bus.publish(Event::Drain);
+        self.shared.cv.notify_all();
+    }
+
+    /// Join the worker pool; call after [`Scheduler::drain`].
+    pub fn join(&self) {
+        let handles: Vec<JoinHandle<()>> = {
+            let mut guard = self.threads.lock().unwrap_or_else(|e| e.into_inner());
+            guard.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    /// Full state dump: jobs (terminal states included), queue depths,
+    /// drain flag. This is what the daemon persists on shutdown.
+    pub fn snapshot_json(&self) -> Json {
+        let jobs = Json::Arr(self.jobs().iter().map(|j| j.to_json()).collect());
+        let queues = Json::Arr(self.queues().iter().map(|q| q.to_json()).collect());
+        obj(vec![
+            ("jobs", jobs),
+            ("queues", queues),
+            ("draining", Json::Bool(self.draining())),
+        ])
+    }
+}
+
+fn snapshot(id: JobId, r: &JobRecord) -> JobSnapshot {
+    JobSnapshot {
+        id,
+        name: r.spec.name.clone(),
+        kind: r.spec.kind(),
+        queue: r.spec.queue.clone(),
+        priority: r.spec.priority,
+        state: r.state,
+        attempts: r.attempts,
+        error: r.error.clone(),
+        result: r.result.clone(),
+    }
+}
+
+/// Claim the best runnable job: queues in name order, each queue
+/// priority-then-FIFO, capacity respected. Stale entries (cancelled
+/// while queued) are dropped on the way.
+fn claim_next(inner: &mut Inner) -> Option<(String, JobId)> {
+    let names: Vec<String> = inner.queues.keys().cloned().collect();
+    for name in names {
+        loop {
+            let q = inner.queues.get_mut(&name).expect("queue exists");
+            if !q.has_capacity() {
+                break;
+            }
+            let Some(job) = q.pop_ready() else {
+                break;
+            };
+            let runnable = matches!(
+                inner.jobs.get(&job).map(|r| r.state),
+                Some(JobState::Queued) | Some(JobState::Backoff)
+            );
+            if runnable {
+                return Some((name, job));
+            }
+        }
+    }
+    None
+}
+
+fn total_pending(inner: &Inner) -> usize {
+    inner
+        .queues
+        .values()
+        .map(|q| q.running() + q.ready_len() + q.delayed_len())
+        .sum()
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        // Phase 1: claim a job (or exit when drained dry).
+        let claimed = {
+            let mut inner = lock_inner(shared);
+            loop {
+                let now = Instant::now();
+                for q in inner.queues.values_mut() {
+                    q.promote(now);
+                }
+                if let Some((queue_name, job)) = claim_next(&mut inner) {
+                    inner
+                        .queues
+                        .get_mut(&queue_name)
+                        .expect("queue exists")
+                        .start();
+                    let rec = inner.jobs.get_mut(&job).expect("job exists");
+                    rec.state = JobState::Running;
+                    rec.attempts += 1;
+                    let ctx = JobCtx {
+                        id: job,
+                        attempt: rec.attempts,
+                        bus: shared.bus.clone(),
+                        cancel: rec.cancel.clone(),
+                    };
+                    let spec = rec.spec.clone();
+                    shared.bus.publish(Event::JobStarted {
+                        job,
+                        attempt: ctx.attempt,
+                    });
+                    shared.cv.notify_all();
+                    break Some((queue_name, job, spec, ctx));
+                }
+                if inner.draining && total_pending(&inner) == 0 {
+                    shared.cv.notify_all();
+                    break None;
+                }
+                let next_deadline = inner
+                    .queues
+                    .values()
+                    .filter_map(|q| q.next_delayed())
+                    .min();
+                inner = match next_deadline {
+                    Some(at) => {
+                        let wait = at
+                            .saturating_duration_since(Instant::now())
+                            .max(Duration::from_millis(1));
+                        match shared.cv.wait_timeout(inner, wait) {
+                            Ok((g, _)) => g,
+                            Err(p) => p.into_inner().0,
+                        }
+                    }
+                    None => match shared.cv.wait(inner) {
+                        Ok(g) => g,
+                        Err(p) => p.into_inner(),
+                    },
+                };
+            }
+        };
+        let Some((queue_name, job, spec, ctx)) = claimed else {
+            return;
+        };
+
+        // Phase 2: run the executor outside the lock; panics become
+        // ordinary failures so one bad job cannot kill the pool.
+        let cancelled_flag = ctx.cancel.clone();
+        let outcome = catch_unwind(AssertUnwindSafe(|| (shared.exec)(&spec, &ctx)));
+        let outcome: Result<Json> = match outcome {
+            Ok(r) => r,
+            Err(panic) => {
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|m| m.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "executor panicked".to_string());
+                Err(anyhow::anyhow!("executor panicked: {msg}"))
+            }
+        };
+
+        // Phase 3: record the transition.
+        let mut inner = lock_inner(shared);
+        if let Some(q) = inner.queues.get_mut(&queue_name) {
+            q.finish();
+        }
+        let draining = inner.draining;
+        let retry = shared.retry;
+        let rec = inner.jobs.get_mut(&job).expect("job exists");
+        match outcome {
+            Ok(summary) => {
+                rec.state = JobState::Succeeded;
+                rec.result = Some(summary.clone());
+                shared.bus.publish(Event::JobFinished {
+                    job,
+                    state: JobState::Succeeded,
+                    summary: Some(summary),
+                    error: None,
+                });
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                if cancelled_flag.load(Ordering::Relaxed) {
+                    rec.state = JobState::Cancelled;
+                    rec.error = Some(msg.clone());
+                    shared.bus.publish(Event::JobFinished {
+                        job,
+                        state: JobState::Cancelled,
+                        summary: None,
+                        error: Some(msg),
+                    });
+                } else if !draining && rec.attempts <= rec.spec.max_retries {
+                    let delay_ms = retry.delay_ms(rec.attempts);
+                    rec.state = JobState::Backoff;
+                    rec.error = Some(msg.clone());
+                    let priority = rec.spec.priority;
+                    let attempt = rec.attempts;
+                    let at = Instant::now() + Duration::from_millis(delay_ms);
+                    if let Some(q) = inner.queues.get_mut(&queue_name) {
+                        q.push_after(job, priority, at);
+                    }
+                    shared.bus.publish(Event::JobRetry {
+                        job,
+                        attempt,
+                        delay_ms,
+                        error: msg,
+                    });
+                } else {
+                    rec.state = JobState::Failed;
+                    rec.error = Some(msg.clone());
+                    shared.bus.publish(Event::JobFinished {
+                        job,
+                        state: JobState::Failed,
+                        summary: None,
+                        error: Some(msg),
+                    });
+                }
+            }
+        }
+        shared.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::benchcodecs::BenchCodecsOpts;
+    use crate::service::jobspec::JobPayload;
+    use std::sync::atomic::AtomicUsize;
+
+    /// A spec whose payload the test executors ignore; behavior is
+    /// keyed on `name`.
+    fn spec(name: &str, queue: &str, priority: i32, max_retries: u32) -> JobSpec {
+        JobSpec {
+            name: name.into(),
+            queue: queue.into(),
+            priority,
+            max_retries,
+            payload: JobPayload::BenchCodecs(BenchCodecsOpts::default()),
+        }
+    }
+
+    fn fast_retry() -> RetryPolicy {
+        RetryPolicy {
+            base_ms: 20,
+            factor: 2.0,
+            max_ms: 10_000,
+        }
+    }
+
+    fn started_order(bus: &EventBus) -> Vec<JobId> {
+        bus.subscribe()
+            .backlog
+            .iter()
+            .filter_map(|ev| match &ev.event {
+                Event::JobStarted { job, .. } => Some(*job),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn retries_with_increasing_backoff_then_succeeds() {
+        let bus = Arc::new(EventBus::new());
+        let fails = Arc::new(AtomicUsize::new(0));
+        let fails_in = fails.clone();
+        let exec: Executor = Arc::new(move |_spec, _ctx| {
+            if fails_in.fetch_add(1, Ordering::SeqCst) < 2 {
+                bail!("flaky");
+            }
+            Ok(Json::Null)
+        });
+        let cfg = SchedulerConfig {
+            retry: fast_retry(),
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::start(cfg, exec, bus.clone());
+        let t0 = Instant::now();
+        let id = sched.submit(spec("flaky", "default", 0, 2)).unwrap();
+        let state = sched.wait_terminal(id, Duration::from_secs(10)).unwrap();
+        assert_eq!(state, JobState::Succeeded);
+        // Two backoffs of 20 ms and 40 ms must have elapsed.
+        assert!(t0.elapsed() >= Duration::from_millis(55), "{:?}", t0.elapsed());
+        let snap = sched.job(id).unwrap();
+        assert_eq!(snap.attempts, 3);
+        let delays: Vec<u64> = bus
+            .subscribe()
+            .backlog
+            .iter()
+            .filter_map(|ev| match &ev.event {
+                Event::JobRetry { delay_ms, .. } => Some(*delay_ms),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(delays, vec![20, 40], "backoff must increase");
+        sched.drain();
+        sched.join();
+    }
+
+    #[test]
+    fn gives_up_after_max_retries() {
+        let bus = Arc::new(EventBus::new());
+        let exec: Executor = Arc::new(|_spec, _ctx| bail!("always broken"));
+        let cfg = SchedulerConfig {
+            retry: fast_retry(),
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::start(cfg, exec, bus);
+        let id = sched.submit(spec("doomed", "default", 0, 2)).unwrap();
+        let state = sched.wait_terminal(id, Duration::from_secs(10)).unwrap();
+        assert_eq!(state, JobState::Failed);
+        let snap = sched.job(id).unwrap();
+        assert_eq!(snap.attempts, 3); // 1 initial + 2 retries
+        assert!(snap.error.unwrap().contains("always broken"));
+        sched.drain();
+        sched.join();
+    }
+
+    #[test]
+    fn drain_completes_in_flight_and_cancels_queued() {
+        let bus = Arc::new(EventBus::new());
+        let exec: Executor = Arc::new(|_spec, ctx| {
+            for _ in 0..10 {
+                std::thread::sleep(Duration::from_millis(5));
+                ctx.check()?;
+            }
+            Ok(Json::Bool(true))
+        });
+        let cfg = SchedulerConfig {
+            queues: vec![QueueConfig {
+                name: "q".into(),
+                max_concurrent: 1,
+            }],
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::start(cfg, exec, bus);
+        let running = sched.submit(spec("in-flight", "q", 0, 0)).unwrap();
+        let queued = sched.submit(spec("never-starts", "q", 0, 0)).unwrap();
+        // Wait until the first job is actually running.
+        let t0 = Instant::now();
+        while sched.job(running).unwrap().state != JobState::Running {
+            assert!(t0.elapsed() < Duration::from_secs(5), "never started");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        sched.drain();
+        assert!(sched.submit(spec("late", "q", 0, 0)).is_err());
+        sched.join(); // workers exit once drained dry
+        // In-flight job finished its work; queued one was cancelled,
+        // and both terminal states persist in the snapshot.
+        assert_eq!(sched.job(running).unwrap().state, JobState::Succeeded);
+        let q = sched.job(queued).unwrap();
+        assert_eq!(q.state, JobState::Cancelled);
+        assert_eq!(q.error.as_deref(), Some("drained before start"));
+        let snap = sched.snapshot_json().to_string();
+        assert!(snap.contains("\"succeeded\""), "{snap}");
+        assert!(snap.contains("\"cancelled\""), "{snap}");
+        assert!(snap.contains("\"draining\":true"), "{snap}");
+    }
+
+    #[test]
+    fn cancel_running_is_observed_within_one_step() {
+        let bus = Arc::new(EventBus::new());
+        let exec: Executor = Arc::new(|_spec, ctx| {
+            for _ in 0..400 {
+                std::thread::sleep(Duration::from_millis(5));
+                ctx.check()?; // step boundary
+            }
+            Ok(Json::Null)
+        });
+        let sched = Scheduler::start(SchedulerConfig::default(), exec, bus);
+        let id = sched.submit(spec("long", "default", 0, 0)).unwrap();
+        let t0 = Instant::now();
+        while sched.job(id).unwrap().state != JobState::Running {
+            assert!(t0.elapsed() < Duration::from_secs(5), "never started");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let cancel_at = Instant::now();
+        assert_eq!(sched.cancel(id).unwrap(), JobState::Running);
+        let state = sched.wait_terminal(id, Duration::from_secs(10)).unwrap();
+        assert_eq!(state, JobState::Cancelled);
+        // Observed within a handful of 5 ms step boundaries, not after
+        // the job's full 2 s natural runtime.
+        assert!(
+            cancel_at.elapsed() < Duration::from_millis(500),
+            "{:?}",
+            cancel_at.elapsed()
+        );
+        let snap = sched.job(id).unwrap();
+        assert!(snap.error.unwrap().contains("cancelled at step boundary"));
+        sched.drain();
+        sched.join();
+    }
+
+    #[test]
+    fn cancel_queued_is_immediate_and_cancel_is_idempotent() {
+        let bus = Arc::new(EventBus::new());
+        let exec: Executor = Arc::new(|_spec, _ctx| {
+            std::thread::sleep(Duration::from_millis(40));
+            Ok(Json::Null)
+        });
+        let cfg = SchedulerConfig {
+            queues: vec![QueueConfig {
+                name: "q".into(),
+                max_concurrent: 1,
+            }],
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::start(cfg, exec, bus);
+        let blocker = sched.submit(spec("blocker", "q", 0, 0)).unwrap();
+        let victim = sched.submit(spec("victim", "q", 0, 0)).unwrap();
+        assert_eq!(sched.cancel(victim).unwrap(), JobState::Cancelled);
+        assert_eq!(sched.cancel(victim).unwrap(), JobState::Cancelled);
+        assert!(sched.cancel(9999).is_err());
+        let state = sched.wait_terminal(blocker, Duration::from_secs(10)).unwrap();
+        assert_eq!(state, JobState::Succeeded);
+        // The cancelled job never ran.
+        assert_eq!(sched.job(victim).unwrap().attempts, 0);
+        sched.drain();
+        sched.join();
+    }
+
+    #[test]
+    fn priority_then_fifo_within_a_queue() {
+        let bus = Arc::new(EventBus::new());
+        let gate = Arc::new(AtomicBool::new(false));
+        let gate_in = gate.clone();
+        let exec: Executor = Arc::new(move |sp, _ctx| {
+            if sp.name == "blocker" {
+                while !gate_in.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+            Ok(Json::Null)
+        });
+        let cfg = SchedulerConfig {
+            queues: vec![QueueConfig {
+                name: "q".into(),
+                max_concurrent: 1,
+            }],
+            threads: 1,
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::start(cfg, exec, bus.clone());
+        // The blocker occupies the queue's single slot while the rest
+        // pile up, so ordering is decided by the queue, not by racing.
+        let b = sched.submit(spec("blocker", "q", 0, 0)).unwrap();
+        let c = sched.submit(spec("c", "q", 0, 0)).unwrap();
+        let d = sched.submit(spec("d", "q", 5, 0)).unwrap();
+        let e = sched.submit(spec("e", "q", 0, 0)).unwrap();
+        gate.store(true, Ordering::SeqCst);
+        for id in [b, c, d, e] {
+            let st = sched.wait_terminal(id, Duration::from_secs(10)).unwrap();
+            assert_eq!(st, JobState::Succeeded);
+        }
+        assert_eq!(started_order(&bus), vec![b, d, c, e]);
+        sched.drain();
+        sched.join();
+    }
+
+    #[test]
+    fn per_queue_concurrency_limit_holds() {
+        let bus = Arc::new(EventBus::new());
+        let cur = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let (cur_in, peak_in) = (cur.clone(), peak.clone());
+        let exec: Executor = Arc::new(move |_sp, _ctx| {
+            let now = cur_in.fetch_add(1, Ordering::SeqCst) + 1;
+            peak_in.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(20));
+            cur_in.fetch_sub(1, Ordering::SeqCst);
+            Ok(Json::Null)
+        });
+        let cfg = SchedulerConfig {
+            queues: vec![QueueConfig {
+                name: "narrow".into(),
+                max_concurrent: 2,
+            }],
+            threads: 4,
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::start(cfg, exec, bus);
+        let ids: Vec<JobId> = (0..6)
+            .map(|i| {
+                sched
+                    .submit(spec(&format!("j{i}"), "narrow", 0, 0))
+                    .unwrap()
+            })
+            .collect();
+        for id in ids {
+            let st = sched.wait_terminal(id, Duration::from_secs(10)).unwrap();
+            assert_eq!(st, JobState::Succeeded);
+        }
+        assert!(
+            peak.load(Ordering::SeqCst) <= 2,
+            "queue limit violated: peak {}",
+            peak.load(Ordering::SeqCst)
+        );
+        sched.drain();
+        sched.join();
+    }
+
+    #[test]
+    fn executor_panic_becomes_failure_not_pool_death() {
+        let bus = Arc::new(EventBus::new());
+        let exec: Executor = Arc::new(|sp, _ctx| {
+            if sp.name == "bomb" {
+                panic!("boom");
+            }
+            Ok(Json::Null)
+        });
+        let sched = Scheduler::start(SchedulerConfig::default(), exec, bus);
+        let bomb = sched.submit(spec("bomb", "default", 0, 0)).unwrap();
+        let ok = sched.submit(spec("fine", "default", 0, 0)).unwrap();
+        assert_eq!(
+            sched.wait_terminal(bomb, Duration::from_secs(10)).unwrap(),
+            JobState::Failed
+        );
+        // The pool survived the panic and still runs jobs.
+        assert_eq!(
+            sched.wait_terminal(ok, Duration::from_secs(10)).unwrap(),
+            JobState::Succeeded
+        );
+        assert!(sched
+            .job(bomb)
+            .unwrap()
+            .error
+            .unwrap()
+            .contains("boom"));
+        sched.drain();
+        sched.join();
+    }
+
+    #[test]
+    fn backoff_delay_formula() {
+        let r = RetryPolicy {
+            base_ms: 100,
+            factor: 2.0,
+            max_ms: 450,
+        };
+        assert_eq!(r.delay_ms(1), 100);
+        assert_eq!(r.delay_ms(2), 200);
+        assert_eq!(r.delay_ms(3), 400);
+        assert_eq!(r.delay_ms(4), 450); // capped
+        assert_eq!(r.delay_ms(63), 450); // no overflow
+    }
+}

@@ -12,13 +12,17 @@
 //!   segment shrinks toward the cost model's block size `m`, and the
 //!   segmented time lands within 5% of the analytic pipelined `T_v`
 //!   bound where whole-message forwarding overshoots it;
+//! * star/tree/hier completion times fall inside the closed-form
+//!   port-work brackets (`costmodel::star_gather_time_bounds` et al.)
+//!   for random sizes, branches, group counts, and uplink rates;
 //! * the trainer-facing `comm::allgatherv` front honors the configured
 //!   topology (same bytes, topology-shaped timing).
 
 use vgc::comm::allgatherv::{allgatherv, ring_allgatherv};
 use vgc::comm::costmodel::{
-    hier_gatherv_bytes_per_node, ring_gatherv_bytes_per_node, torus_gatherv_bytes_per_node,
-    CostModel, LinkModel,
+    hier_gather_time_bounds, hier_gatherv_bytes_per_node, ring_gatherv_bytes_per_node,
+    star_gather_time_bounds, torus_gatherv_bytes_per_node, tree_gather_time_bounds, CostModel,
+    LinkModel,
 };
 use vgc::fabric::hierarchy::group_spans;
 use vgc::fabric::{
@@ -352,6 +356,73 @@ fn simulated_ring_within_analytic_bound_for_uniform_messages() {
             );
         }
     }
+}
+
+#[test]
+fn star_tree_hier_times_fall_within_closed_form_brackets() {
+    testkit::for_all(
+        "gather time within closed-form port-work brackets",
+        |rng: &mut Pcg32| {
+            let p = testkit::usize_in(rng, 2, 10);
+            let branch = testkit::usize_in(rng, 1, p);
+            let groups = testkit::usize_in(rng, 1, p);
+            let uplink_gbps = [0.1, 0.5, 1.0][testkit::usize_in(rng, 0, 2)];
+            (branch, groups, uplink_gbps, rand_messages(rng, p, 4000))
+        },
+        |(branch, groups, uplink_gbps, inputs)| {
+            let p = inputs.len();
+            let sizes: Vec<u64> = inputs.iter().map(|m| m.len() as u64).collect();
+            let base = FabricConfig::default(); // GigE, zero jitter, unsegmented
+            let link = base.link.to_cost_model();
+            let check = |label: &str, sim_s: f64, b: vgc::comm::costmodel::GatherTimeBound| {
+                if b.brackets(sim_s) {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "{label}: simulated {sim_s} s outside [{}, {}] s",
+                        b.lower_s, b.upper_s
+                    ))
+                }
+            };
+
+            let topo = build_topology(TopologyKind::Star, p);
+            let mut fabric = Fabric::for_topology(&base, &*topo);
+            let sim = topo.allgatherv(&mut fabric, inputs);
+            check(
+                &format!("star p={p}"),
+                sim.time_secs(),
+                star_gather_time_bounds(&link, &sizes),
+            )?;
+
+            let kind = TopologyKind::Tree { branch: *branch };
+            let topo = build_topology(kind, p);
+            let mut fabric = Fabric::for_topology(&base, &*topo);
+            let sim = topo.allgatherv(&mut fabric, inputs);
+            check(
+                &format!("tree p={p} b={branch}"),
+                sim.time_secs(),
+                tree_gather_time_bounds(&link, &sizes, *branch),
+            )?;
+
+            let cfg = FabricConfig {
+                topology: TopologyKind::Hier { groups: *groups },
+                inter_rack_gbps: Some(*uplink_gbps),
+                ..FabricConfig::default()
+            };
+            let topo = build_topology(cfg.topology, p);
+            let mut fabric = Fabric::for_topology(&cfg, &*topo);
+            let sim = topo.allgatherv(&mut fabric, inputs);
+            let uplink = LinkModel {
+                beta: 1e-9 / uplink_gbps,
+                latency: link.latency,
+            };
+            check(
+                &format!("hier p={p} g={groups} up={uplink_gbps}"),
+                sim.time_secs(),
+                hier_gather_time_bounds(&link, &uplink, &sizes, &group_spans(p, *groups)),
+            )
+        },
+    );
 }
 
 #[test]

@@ -1,0 +1,442 @@
+//! End-to-end tests for the training service daemon: boot `repro serve`
+//! on an ephemeral port, drive it purely over HTTP, and check that
+//!
+//! - concurrent jobs sharing one daemon produce summaries bit-identical
+//!   to one-shot CLI runs of the same specs,
+//! - per-queue concurrency limits hold under load,
+//! - failed jobs retry with exponentially increasing backoff,
+//! - cancellation takes queued jobs instantly and running jobs at the
+//!   next step boundary,
+//! - SIGTERM drains in-flight work and persists a terminal snapshot.
+
+use std::io::{BufRead, BufReader};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use vgc::experiments::{fabric_sweep, fabric_sweep_json, FabricSweepOpts};
+use vgc::service::http::{http_request, http_stream};
+use vgc::util::json::Json;
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+/// Unique scratch path per test (tests share one process; names must
+/// not collide across parallel test threads).
+fn scratch(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("vgc_service_{}_{tag}.json", std::process::id()))
+}
+
+/// `j[key]` as a string, panicking with context on absence.
+fn sget<'a>(j: &'a Json, key: &str) -> &'a str {
+    j.get(key).unwrap_or_else(|| panic!("no key '{key}'")).as_str().unwrap()
+}
+
+/// `j[key]` as an unsigned number.
+fn nget(j: &Json, key: &str) -> u64 {
+    j.get(key).unwrap_or_else(|| panic!("no key '{key}'")).as_usize().unwrap() as u64
+}
+
+fn is_terminal(state: &str) -> bool {
+    matches!(state, "succeeded" | "failed" | "cancelled")
+}
+
+/// A `repro serve` child on an ephemeral port. Stdout is consumed by a
+/// drain thread after the listen line so the child never blocks on a
+/// full pipe; the process is killed on drop if a test panics early.
+struct DaemonProc {
+    child: Child,
+    addr: String,
+}
+
+impl DaemonProc {
+    fn spawn(extra: &[&str]) -> DaemonProc {
+        let mut cmd = repro();
+        cmd.args(["serve", "--listen", "127.0.0.1:0"])
+            .args(extra)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null());
+        let mut child = cmd.spawn().expect("spawn repro serve");
+        let stdout = child.stdout.take().expect("daemon stdout");
+        let mut reader = BufReader::new(stdout);
+        let mut addr = None;
+        let mut line = String::new();
+        while reader.read_line(&mut line).unwrap_or(0) > 0 {
+            if let Some(rest) = line.trim().strip_prefix("serve: listening on ") {
+                addr = Some(rest.to_string());
+                break;
+            }
+            line.clear();
+        }
+        let addr = addr.expect("daemon never announced its listen address");
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            loop {
+                sink.clear();
+                if reader.read_line(&mut sink).unwrap_or(0) == 0 {
+                    break;
+                }
+            }
+        });
+        DaemonProc { child, addr }
+    }
+
+    /// POST /shutdown, wait for exit, and assert a clean drain.
+    fn shutdown(mut self) {
+        let (code, _) = http_request(&self.addr, "POST", "/shutdown", None).expect("shutdown");
+        assert_eq!(code, 200);
+        let status = self.child.wait().expect("wait for daemon exit");
+        assert!(status.success(), "daemon exited uncleanly: {status:?}");
+    }
+}
+
+impl Drop for DaemonProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// POST a job envelope; return the assigned job id.
+fn submit(addr: &str, envelope: &str) -> u64 {
+    let (code, body) = http_request(addr, "POST", "/jobs", Some(envelope)).expect("POST /jobs");
+    assert_eq!(code, 200, "submit rejected: {body}");
+    nget(&Json::parse(&body).expect("submit response json"), "job")
+}
+
+fn get_job(addr: &str, id: u64) -> Json {
+    let (code, body) = http_request(addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+    assert_eq!(code, 200, "job {id} lookup failed: {body}");
+    Json::parse(&body).expect("job snapshot json")
+}
+
+/// Poll `GET /jobs/:id` until the job reaches a terminal state.
+fn wait_terminal(addr: &str, id: u64, timeout: Duration) -> Json {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let snap = get_job(addr, id);
+        if is_terminal(sget(&snap, "state")) {
+            return snap;
+        }
+        assert!(Instant::now() < deadline, "job {id} not terminal after {timeout:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Poll `GET /jobs/:id` until the job is observed `running`.
+fn wait_running(addr: &str, id: u64, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let state = sget(&get_job(addr, id), "state").to_string();
+        if state == "running" {
+            return;
+        }
+        assert!(!is_terminal(&state), "job {id} terminal '{state}' before it was seen running");
+        assert!(Instant::now() < deadline, "job {id} never started");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Stream `GET /jobs/:id/events` to completion, parsing each NDJSON
+/// line. The server closes the stream after the job's terminal event.
+fn stream_to_end(addr: &str, id: u64) -> Vec<Json> {
+    let mut events = Vec::new();
+    let code = http_stream(addr, &format!("/jobs/{id}/events"), &mut |line| {
+        events.push(Json::parse(line).expect("event line json"));
+    })
+    .expect("stream events");
+    assert_eq!(code, 200);
+    events
+}
+
+/// The sweep spec used for the bit-identity check: the daemon job, the
+/// in-process run, and the CLI flags below all describe this spec, so
+/// any divergence between the three paths is the code's, not the test's.
+const SWEEP_SPEC: &str = concat!(
+    r#"{"topologies":"ring,star","workers":[3,4],"bandwidths_gbps":[1.0],"#,
+    r#""codecs":["none","vgc:alpha=2"],"n_params":4096}"#,
+);
+
+#[test]
+fn concurrent_http_jobs_match_one_shot_runs_bit_for_bit() {
+    let state = scratch("concurrent");
+    let _ = std::fs::remove_file(&state);
+    let state_flag = state.to_str().unwrap().to_string();
+    let d = DaemonProc::spawn(&["--queues", "sweeps=2,bench=2", "--state", &state_flag]);
+
+    let (code, body) = http_request(&d.addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(code, 200);
+    let health = Json::parse(&body).unwrap();
+    assert_eq!(sget(&health, "status"), "ok");
+    assert!(nget(&health, "engine_threads") >= 1);
+
+    // Two jobs in flight at once, on different queues, sharing the
+    // daemon's codec engine and fabric model.
+    let sweep_env =
+        format!(r#"{{"job":"fabric-sweep","name":"s","queue":"sweeps","spec":{SWEEP_SPEC}}}"#);
+    const BENCH_ENV: &str = concat!(
+        r#"{"job":"bench-codecs","name":"b","queue":"bench","spec":"#,
+        r#"{"n":4096,"group":256,"workers":2,"threads":[1],"alloc_steps":1,"#,
+        r#""codecs":["vgc:alpha=1.5","strom:tau=0.01"]}}"#,
+    );
+    let sweep_id = submit(&d.addr, &sweep_env);
+    let bench_id = submit(&d.addr, BENCH_ENV);
+
+    // Stream the sweep's events while it runs; the server ends the
+    // stream at the job's terminal event.
+    let addr = d.addr.clone();
+    let streamer = std::thread::spawn(move || stream_to_end(&addr, sweep_id));
+
+    let sweep = wait_terminal(&d.addr, sweep_id, Duration::from_secs(120));
+    let bench = wait_terminal(&d.addr, bench_id, Duration::from_secs(120));
+    assert_eq!(sget(&sweep, "state"), "succeeded", "sweep: {:?}", sweep.get("error"));
+    assert_eq!(sget(&bench, "state"), "succeeded", "bench: {:?}", bench.get("error"));
+
+    let events = streamer.join().expect("event stream thread");
+    let kinds: Vec<&str> = events.iter().map(|e| sget(e, "event")).collect();
+    assert!(kinds.contains(&"queued"), "missing queued event: {kinds:?}");
+    assert!(kinds.contains(&"started"), "missing started event: {kinds:?}");
+    assert!(kinds.contains(&"progress"), "missing progress event: {kinds:?}");
+    let last = events.last().expect("stream delivered no events");
+    assert_eq!(sget(last, "event"), "finished");
+    assert_eq!(sget(last, "state"), "succeeded");
+
+    // Bit-identity #1: daemon sweep rows vs an in-process one-shot run
+    // of the identical spec.
+    let opts = FabricSweepOpts::from_json(&Json::parse(SWEEP_SPEC).unwrap()).unwrap();
+    let expected = fabric_sweep_json(&fabric_sweep(&opts)).to_string();
+    let result = sweep.get("result").expect("sweep result");
+    let daemon_rows = result.get("rows").expect("result rows").to_string();
+    assert_eq!(daemon_rows, expected, "daemon sweep diverged from one-shot");
+
+    // Bit-identity #2: vs the one-shot CLI's --out file.
+    let out = scratch("cli_sweep");
+    let mut cli = repro();
+    cli.args(["fabric-sweep", "--topologies", "ring,star", "--workers", "3,4"])
+        .args(["--bandwidth-gbps", "1", "--codecs", "none+vgc:alpha=2", "--n", "4096"])
+        .args(["--out", out.to_str().unwrap()]);
+    let cli = cli.output().expect("run one-shot fabric-sweep");
+    assert!(cli.status.success(), "{}", String::from_utf8_lossy(&cli.stderr));
+    let file = std::fs::read_to_string(&out).expect("read CLI --out file");
+    assert_eq!(file.trim_end(), expected, "daemon sweep diverged from the CLI");
+    let _ = std::fs::remove_file(&out);
+
+    // Bench summary sanity (timing fields are measurements; the full
+    // deterministic-field equality lives in the service unit tests).
+    let report = bench.get("result").expect("bench result");
+    assert_eq!(sget(report, "kind"), "bench-codecs");
+    let inner = report.get("report").expect("bench report");
+    let rows = inner.get("rows").expect("bench rows").as_arr().unwrap();
+    assert_eq!(rows.len(), 2, "one bench row per codec");
+
+    // Control-plane reads.
+    let (code, body) = http_request(&d.addr, "GET", "/queues", None).unwrap();
+    assert_eq!(code, 200);
+    let queues = Json::parse(&body).unwrap();
+    let arr = queues.as_arr().unwrap();
+    let sweeps_q = arr.iter().find(|q| sget(q, "name") == "sweeps").expect("sweeps queue");
+    assert_eq!(nget(sweeps_q, "max_concurrent"), 2);
+
+    let (code, body) = http_request(&d.addr, "GET", "/fabric", None).unwrap();
+    assert_eq!(code, 200);
+    let fabric = Json::parse(&body).unwrap();
+    assert!(nget(fabric.get("usage").unwrap(), "jobs") >= 1);
+
+    // Error paths.
+    let (code, _) = http_request(&d.addr, "GET", "/jobs/999999", None).unwrap();
+    assert_eq!(code, 404);
+    let (code, _) = http_request(&d.addr, "POST", "/jobs", Some("{not json")).unwrap();
+    assert_eq!(code, 400);
+
+    d.shutdown();
+    let snap = Json::parse(&std::fs::read_to_string(&state).expect("state file")).unwrap();
+    for job in snap.get("jobs").unwrap().as_arr().unwrap() {
+        let st = sget(job, "state");
+        assert!(is_terminal(st), "non-terminal state '{st}' persisted");
+    }
+    let _ = std::fs::remove_file(&state);
+}
+
+#[test]
+fn per_queue_concurrency_limit_holds_under_load() {
+    let d = DaemonProc::spawn(&["--queues", "solo=1", "--sched-threads", "4"]);
+    const SPEC: &str = concat!(
+        r#"{"job":"fabric-sweep","queue":"solo","spec":"#,
+        r#"{"topologies":"ring","workers":[6],"bandwidths_gbps":[1.0],"#,
+        r#""codecs":["none","vgc:alpha=2"],"n_params":65536}}"#,
+    );
+    let ids: Vec<u64> = (0..3).map(|_| submit(&d.addr, SPEC)).collect();
+
+    // Sample the queue while the jobs flow through it: the `solo` queue
+    // must never report more than its limit running. Sampling cannot
+    // falsely fail — every observation is a real scheduler state.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut max_running = 0;
+    loop {
+        let (code, body) = http_request(&d.addr, "GET", "/queues", None).unwrap();
+        assert_eq!(code, 200);
+        let queues = Json::parse(&body).unwrap();
+        let arr = queues.as_arr().unwrap();
+        let solo = arr.iter().find(|q| sget(q, "name") == "solo").expect("solo queue");
+        let running = nget(solo, "running");
+        assert!(running <= 1, "solo queue ran {running} jobs at once");
+        max_running = max_running.max(running);
+
+        let (_, body) = http_request(&d.addr, "GET", "/jobs", None).unwrap();
+        let jobs = Json::parse(&body).unwrap();
+        let arr = jobs.as_arr().unwrap();
+        let done = arr.iter().filter(|j| is_terminal(sget(j, "state"))).count();
+        if done == ids.len() {
+            break;
+        }
+        assert!(Instant::now() < deadline, "jobs did not finish in time");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(max_running >= 1, "sampler never saw a job running");
+    for id in ids {
+        assert_eq!(sget(&get_job(&d.addr, id), "state"), "succeeded");
+    }
+    d.shutdown();
+}
+
+#[test]
+fn failed_jobs_retry_with_exponential_backoff() {
+    let flags = ["--retry-base-ms", "40", "--retry-factor", "2", "--retry-max-ms", "1000"];
+    let d = DaemonProc::spawn(&flags);
+    // n_params = 0 passes spec parsing but fails sweep validation at
+    // execution time, so every attempt fails.
+    let env = r#"{"job":"fabric-sweep","max_retries":2,"spec":{"n_params":0}}"#;
+    let id = submit(&d.addr, env);
+    let events = stream_to_end(&d.addr, id);
+    let delays: Vec<u64> = events
+        .iter()
+        .filter(|e| sget(e, "event") == "retry")
+        .map(|e| nget(e, "delay_ms"))
+        .collect();
+    assert_eq!(delays, vec![40, 80], "retry delays must grow base·factor^k");
+
+    let snap = wait_terminal(&d.addr, id, Duration::from_secs(30));
+    assert_eq!(sget(&snap, "state"), "failed");
+    assert_eq!(nget(&snap, "attempts"), 3);
+    assert!(sget(&snap, "error").contains("n_params"));
+    d.shutdown();
+}
+
+#[test]
+fn cancel_takes_queued_jobs_instantly_and_running_jobs_at_a_step_boundary() {
+    let d = DaemonProc::spawn(&["--queues", "default=1"]);
+    // Heavy enough that a cancel issued the moment the job is seen
+    // running lands well before its first worker-count cell completes.
+    const HEAVY: &str = concat!(
+        r#"{"job":"fabric-sweep","name":"heavy","spec":"#,
+        r#"{"topologies":"ring","workers":[4,5,6],"bandwidths_gbps":[1.0],"#,
+        r#""codecs":["none","vgc:alpha=2"],"n_params":2000000}}"#,
+    );
+    const LIGHT: &str = concat!(
+        r#"{"job":"fabric-sweep","name":"light","spec":"#,
+        r#"{"topologies":"ring","workers":[4],"bandwidths_gbps":[1.0],"#,
+        r#""codecs":["none"],"n_params":4096}}"#,
+    );
+    let running_id = submit(&d.addr, HEAVY);
+    let queued_id = submit(&d.addr, LIGHT);
+    wait_running(&d.addr, running_id, Duration::from_secs(30));
+
+    // The queued job (parked behind the heavy one on a width-1 queue)
+    // cancels immediately, without ever starting.
+    let path = format!("/jobs/{queued_id}/cancel");
+    let (code, body) = http_request(&d.addr, "POST", &path, None).unwrap();
+    assert_eq!(code, 200, "cancel rejected: {body}");
+    assert_eq!(sget(&Json::parse(&body).unwrap(), "state"), "cancelled");
+    let snap = wait_terminal(&d.addr, queued_id, Duration::from_secs(10));
+    assert_eq!(nget(&snap, "attempts"), 0, "cancelled job must never have started");
+
+    // The running job stops cooperatively at its next cell boundary.
+    let path = format!("/jobs/{running_id}/cancel");
+    let (code, _) = http_request(&d.addr, "POST", &path, None).unwrap();
+    assert_eq!(code, 200);
+    let snap = wait_terminal(&d.addr, running_id, Duration::from_secs(120));
+    assert_eq!(sget(&snap, "state"), "cancelled");
+    d.shutdown();
+}
+
+#[cfg(unix)]
+#[test]
+fn sigterm_drains_in_flight_work_and_persists_state() {
+    let state = scratch("sigterm");
+    let _ = std::fs::remove_file(&state);
+    let state_flag = state.to_str().unwrap().to_string();
+    let mut d = DaemonProc::spawn(&["--queues", "default=1", "--state", &state_flag]);
+    const BUSY: &str = concat!(
+        r#"{"job":"fabric-sweep","name":"busy","spec":"#,
+        r#"{"topologies":"ring","workers":[4,5],"bandwidths_gbps":[1.0],"#,
+        r#""codecs":["none","vgc:alpha=2"],"n_params":500000}}"#,
+    );
+    const LIGHT: &str = concat!(
+        r#"{"job":"fabric-sweep","name":"light","spec":"#,
+        r#"{"topologies":"ring","workers":[4],"bandwidths_gbps":[1.0],"#,
+        r#""codecs":["none"],"n_params":4096}}"#,
+    );
+    let busy_id = submit(&d.addr, BUSY);
+    let light_id = submit(&d.addr, LIGHT);
+    wait_running(&d.addr, busy_id, Duration::from_secs(30));
+
+    let pid = d.child.id().to_string();
+    let kill = Command::new("kill").args(["-TERM", &pid]).status().expect("send SIGTERM");
+    assert!(kill.success());
+    let status = d.child.wait().expect("wait after SIGTERM");
+    assert!(status.success(), "SIGTERM drain exited uncleanly: {status:?}");
+
+    // Drain semantics: the in-flight job finished; the queued one was
+    // cancelled before it could start. Both are terminal on disk.
+    let snap = Json::parse(&std::fs::read_to_string(&state).expect("state file")).unwrap();
+    let jobs = snap.get("jobs").unwrap().as_arr().unwrap();
+    let state_of = |id: u64| {
+        let job = jobs.iter().find(|j| nget(j, "id") == id).expect("job in snapshot");
+        sget(job, "state")
+    };
+    assert_eq!(state_of(busy_id), "succeeded", "in-flight job not drained to completion");
+    assert_eq!(state_of(light_id), "cancelled", "queued job not cancelled by the drain");
+    let _ = std::fs::remove_file(&state);
+}
+
+#[test]
+fn train_job_over_http_matches_in_process_run() {
+    if !have_artifacts() {
+        eprintln!("skipping: no compiled artifacts (run tools/compile_models.py)");
+        return;
+    }
+    let client = match vgc::runtime::Client::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping: no CPU client: {e:#}");
+            return;
+        }
+    };
+
+    let mut cfg = vgc::config::TrainConfig::defaults("mlp");
+    cfg.codec = vgc::compress::CodecSpec::parse("vgc:alpha=1.5").unwrap();
+    cfg.steps = 5;
+    cfg.codec_threads = 1;
+    let spec = cfg.to_json().to_string();
+
+    let d = DaemonProc::spawn(&["--codec-threads", "1"]);
+    let id = submit(&d.addr, &format!(r#"{{"job":"train","spec":{spec}}}"#));
+    let snap = wait_terminal(&d.addr, id, Duration::from_secs(300));
+    assert_eq!(sget(&snap, "state"), "succeeded", "train: {:?}", snap.get("error"));
+    let result = snap.get("result").expect("train result");
+    d.shutdown();
+
+    let manifest = vgc::runtime::Manifest::load("artifacts").unwrap();
+    let mut trainer = vgc::coordinator::Trainer::new(&client, &manifest, cfg).unwrap();
+    trainer.run(true).unwrap();
+    let fnv = format!("{:016x}", vgc::service::fnv64_f32(&trainer.params));
+    assert_eq!(sget(&result, "params_fnv64"), fnv, "daemon train diverged from in-process");
+    assert_eq!(nget(&result, "steps"), trainer.step_count());
+}
