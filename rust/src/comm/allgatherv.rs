@@ -19,7 +19,7 @@
 //! implementation.
 
 use super::Traffic;
-use crate::fabric::{build_topology, Fabric, FabricConfig, Time};
+use crate::fabric::{build_topology, degraded_topology, Fabric, FabricConfig, FabricReport, Time};
 
 /// Result of one allgatherv: `gathered[dst][src]` is node `src`'s
 /// message as received by node `dst` (every row must be identical —
@@ -29,10 +29,15 @@ pub struct GatherResult {
     pub traffic: Traffic,
     /// Simulated completion time on the configured fabric, ps.
     pub time_ps: Time,
+    /// Fault/recovery counters from the fabric (all zero when the
+    /// chaos plan is empty or nothing fired).
+    pub report: FabricReport,
 }
 
 /// Run an allgatherv over each node's input message on the configured
-/// topology/link model.
+/// topology/link model. Link faults in `cfg.faults` are masked by
+/// retransmission — the gathered bytes are unchanged, only timing and
+/// the [`FabricReport`] counters move.
 pub fn allgatherv(cfg: &FabricConfig, inputs: &[Vec<u8>]) -> GatherResult {
     let p = inputs.len();
     assert!(p > 0, "allgatherv needs at least one node");
@@ -43,6 +48,40 @@ pub fn allgatherv(cfg: &FabricConfig, inputs: &[Vec<u8>]) -> GatherResult {
         gathered: sim.gathered,
         traffic: sim.traffic,
         time_ps: sim.time_ps,
+        report: fabric.report(),
+    }
+}
+
+/// Allgatherv over the survivors of a crash: nodes in `dead` take no
+/// part, the topology re-spans the live set
+/// ([`degraded_topology`] — route-around for ring/torus, leader
+/// re-election for star/tree/hier), and the gathered matrix keeps the
+/// original worker indexing with empty rows/columns for the dead.
+/// `dead` may also name a star's hub (`inputs.len()`). An empty `dead`
+/// takes exactly the plain [`allgatherv`] path.
+pub fn allgatherv_faulty(cfg: &FabricConfig, inputs: &[Vec<u8>], dead: &[usize]) -> GatherResult {
+    if dead.is_empty() {
+        return allgatherv(cfg, inputs);
+    }
+    let p = inputs.len();
+    assert!(p > 0, "allgatherv needs at least one node");
+    let (topo, rank_map, phys) = degraded_topology(cfg.topology, p, dead);
+    let live: Vec<usize> = (0..p).filter(|w| !dead.contains(w)).collect();
+    let sub_inputs: Vec<Vec<u8>> = live.iter().map(|&w| inputs[w].clone()).collect();
+    let mut fabric = Fabric::for_degraded(cfg, &*topo, rank_map, phys);
+    fabric.note_reroutes(dead.len() as u64);
+    let sim = topo.allgatherv(&mut fabric, &sub_inputs);
+    let mut gathered = vec![vec![Vec::new(); p]; p];
+    for (li, &dst) in live.iter().enumerate() {
+        for (lj, &src) in live.iter().enumerate() {
+            gathered[dst][src] = sim.gathered[li][lj].clone();
+        }
+    }
+    GatherResult {
+        gathered,
+        traffic: sim.traffic,
+        time_ps: sim.time_ps,
+        report: fabric.report(),
     }
 }
 
@@ -122,6 +161,67 @@ mod tests {
         );
         assert_eq!(ring.gathered, star.gathered, "bytes are topology-invariant");
         assert_ne!(ring.time_ps, star.time_ps, "timing reflects the topology");
+    }
+
+    #[test]
+    fn link_faults_are_masked_in_the_gathered_bytes() {
+        let inputs = msgs(&[64, 128, 32, 96]);
+        let clean = ring_allgatherv(&inputs);
+        let mut fired = false;
+        for seed in 0..4 {
+            let res = allgatherv(
+                &FabricConfig {
+                    seed,
+                    faults: crate::fabric::FaultPlan::parse("drop:0-1:0.5,corrupt:2-3:0.4")
+                        .unwrap(),
+                    ..FabricConfig::default()
+                },
+                &inputs,
+            );
+            assert_eq!(res.gathered, clean.gathered, "seed {seed}: bytes fault-invariant");
+            assert!(res.time_ps >= clean.time_ps, "seed {seed}");
+            fired |= !res.report.is_clean();
+        }
+        assert!(fired, "faults never fired across 4 seeds");
+        assert!(clean.report.is_clean());
+    }
+
+    #[test]
+    fn degraded_gather_routes_around_the_dead() {
+        let inputs = msgs(&[10, 20, 30, 40]);
+        for kind in [
+            TopologyKind::Ring,
+            TopologyKind::Full,
+            TopologyKind::Star,
+            TopologyKind::Tree { branch: 2 },
+            TopologyKind::Torus { rows: 2, cols: 2 },
+            TopologyKind::Hier { groups: 2 },
+        ] {
+            let cfg = FabricConfig {
+                topology: kind,
+                ..FabricConfig::default()
+            };
+            let res = allgatherv_faulty(&cfg, &inputs, &[1]);
+            for &dst in &[0usize, 2, 3] {
+                for &src in &[0usize, 2, 3] {
+                    assert_eq!(res.gathered[dst][src], inputs[src], "{kind:?} {dst}<-{src}");
+                }
+                assert!(res.gathered[dst][1].is_empty(), "{kind:?}");
+            }
+            assert!(res.gathered[1].iter().all(|m| m.is_empty()), "{kind:?}");
+            assert_eq!(res.report.reroutes, 1, "{kind:?}");
+        }
+        // Killing the star's hub re-elects a worker leader.
+        let cfg = FabricConfig {
+            topology: TopologyKind::Star,
+            ..FabricConfig::default()
+        };
+        let res = allgatherv_faulty(&cfg, &inputs, &[4]);
+        for dst in 0..4 {
+            for src in 0..4 {
+                assert_eq!(res.gathered[dst][src], inputs[src], "{dst}<-{src}");
+            }
+        }
     }
 
     #[test]

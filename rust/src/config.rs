@@ -12,6 +12,41 @@ use crate::optim::LrSchedule;
 use crate::util::cli::Args;
 use crate::util::json::{num, obj, s, Json};
 
+/// What the trainer does when the fault plan kills a worker mid-run
+/// (`--on-crash`; see docs/FAULTS.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CrashPolicy {
+    /// Steps complete over the survivor set with the aggregation
+    /// renormalized to the live count; the dead worker's codec
+    /// residual is discarded (rebuilt from scratch on rejoin). Training
+    /// math degrades measurably.
+    #[default]
+    Renorm,
+    /// Every worker crash must rejoin; the rejoining peer replays the
+    /// missed work from the replicated state and flushes the residual
+    /// back in, so training math stays bit-identical to the fault-free
+    /// run and only simulated time degrades.
+    FlushRejoin,
+}
+
+impl CrashPolicy {
+    pub fn parse(s: &str) -> anyhow::Result<CrashPolicy> {
+        match s {
+            "renorm" => Ok(CrashPolicy::Renorm),
+            "flush-rejoin" => Ok(CrashPolicy::FlushRejoin),
+            other => anyhow::bail!("unknown crash policy '{other}' (renorm|flush-rejoin)"),
+        }
+    }
+
+    /// Canonical string form (parses back).
+    pub fn label(&self) -> &'static str {
+        match self {
+            CrashPolicy::Renorm => "renorm",
+            CrashPolicy::FlushRejoin => "flush-rejoin",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub model: String,
@@ -38,8 +73,10 @@ pub struct TrainConfig {
     /// exact serial path, N > 1 = parallel sharded encode/decode.
     pub codec_threads: usize,
     /// Cluster/network model for the simulated-wall-clock report
-    /// (topology, link bandwidth/latency/jitter, stragglers).
+    /// (topology, link bandwidth/latency/jitter, stragglers, faults).
     pub fabric: FabricConfig,
+    /// Degradation policy when the fault plan kills a worker.
+    pub on_crash: CrashPolicy,
 }
 
 impl TrainConfig {
@@ -72,6 +109,7 @@ impl TrainConfig {
             verify_sync: false,
             codec_threads: 0,
             fabric: FabricConfig::default(),
+            on_crash: CrashPolicy::Renorm,
         }
     }
 
@@ -107,6 +145,9 @@ impl TrainConfig {
             self.verify_sync = true;
         }
         self.codec_threads = args.parse_or("codec-threads", self.codec_threads)?;
+        if let Some(p) = args.get("on-crash") {
+            self.on_crash = CrashPolicy::parse(p)?;
+        }
         self.fabric = self.fabric.override_from(args)?;
         Ok(self)
     }
@@ -125,6 +166,7 @@ impl TrainConfig {
             ("test_size", num(self.test_size as f64)),
             ("signal", num(self.signal as f64)),
             ("codec_threads", num(self.codec_threads as f64)),
+            ("on_crash", s(self.on_crash.label())),
             ("fabric", self.fabric.to_json()),
         ])
     }
@@ -145,6 +187,10 @@ impl TrainConfig {
         // Absent in configs recorded before the engine existed.
         if let Some(t) = j.get("codec_threads") {
             cfg.codec_threads = t.as_usize()?;
+        }
+        // Absent in configs recorded before crash policies existed.
+        if let Some(p) = j.get("on_crash") {
+            cfg.on_crash = CrashPolicy::parse(p.as_str()?)?;
         }
         // Absent in configs recorded before the fabric existed.
         if let Some(f) = j.get("fabric") {
@@ -283,6 +329,28 @@ mod tests {
         let back =
             TrainConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back.fabric, cfg.fabric);
+    }
+
+    #[test]
+    fn crash_policy_flag_and_json_roundtrip() {
+        let raw: Vec<String> = ["--on-crash", "flush-rejoin", "--faults", "crash:1@5+3"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&raw, &[]).unwrap();
+        let cfg = TrainConfig::defaults("mlp").override_from(&args).unwrap();
+        assert_eq!(cfg.on_crash, CrashPolicy::FlushRejoin);
+        assert_eq!(cfg.fabric.faults.crashes.len(), 1);
+        let back =
+            TrainConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.on_crash, CrashPolicy::FlushRejoin);
+        assert_eq!(back.fabric.faults, cfg.fabric.faults);
+        // Defaults and bad values.
+        assert_eq!(TrainConfig::defaults("mlp").on_crash, CrashPolicy::Renorm);
+        assert!(CrashPolicy::parse("explode").is_err());
+        for p in [CrashPolicy::Renorm, CrashPolicy::FlushRejoin] {
+            assert_eq!(CrashPolicy::parse(p.label()).unwrap(), p);
+        }
     }
 
     #[test]

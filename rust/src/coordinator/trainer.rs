@@ -26,11 +26,12 @@
 use anyhow::Result;
 
 use super::worker::WorkerState;
-use crate::comm::allgatherv::allgatherv;
+use crate::comm::allgatherv::{allgatherv, allgatherv_faulty};
 use crate::compress::{shared_engine, Aggregation, Codec, SharedEngine};
-use crate::config::TrainConfig;
+use crate::config::{CrashPolicy, TrainConfig};
 use crate::data::shard::Shard;
 use crate::data::{ImageDataset, TokenDataset};
+use crate::fabric::FabricReport;
 use crate::metrics::{EvalRecord, RunMetrics, StepRecord};
 use crate::model::Layout;
 use crate::optim::{apply_weight_decay, build as build_optimizer, Optimizer};
@@ -60,8 +61,28 @@ pub struct PhaseTimes {
 /// or evaluation. The observer returns `false` to stop the run at that
 /// step boundary (cooperative cancellation).
 pub enum RunEvent<'a> {
-    Step { step: u64, loss: f32, lr: f32 },
-    Eval { record: &'a EvalRecord },
+    Step {
+        step: u64,
+        loss: f32,
+        lr: f32,
+    },
+    Eval {
+        record: &'a EvalRecord,
+    },
+    /// A fault-plan membership change at this step: `kind` is
+    /// `"crash"` or `"rejoin"`.
+    Fault {
+        step: u64,
+        kind: &'static str,
+        node: usize,
+    },
+    /// The step's collective ran over a reduced membership
+    /// (`--on-crash renorm` with dead workers).
+    Degraded {
+        step: u64,
+        live: usize,
+        total: usize,
+    },
 }
 
 pub struct Trainer<'c> {
@@ -77,6 +98,9 @@ pub struct Trainer<'c> {
     /// Accumulated fabric-simulated comm time across steps, ps — the
     /// step-communication wall-clock the configured topology predicts.
     pub sim_comm_ps: u64,
+    /// Accumulated fault/recovery counters across steps (all zero on a
+    /// fault-free run).
+    pub fault_report: FabricReport,
     step: u64,
     /// Parallel sharded codec engine (`--codec-threads`); width 1 takes
     /// the exact legacy serial path. Behind `Arc<Mutex>` so the service
@@ -117,6 +141,18 @@ impl<'c> Trainer<'c> {
         // model's cluster (e.g. --torus-dims that don't factor the
         // workers, or an uplink on a single-group hierarchy).
         cfg.fabric.validate(p)?;
+        // flush-rejoin can only mask a crash whose worker comes back.
+        if cfg.on_crash == CrashPolicy::FlushRejoin {
+            for c in &cfg.fabric.faults.crashes {
+                anyhow::ensure!(
+                    c.node >= p || c.rejoin_step.is_some(),
+                    "--on-crash flush-rejoin requires every worker crash to rejoin \
+                     (crash:{}@{} has no +delta)",
+                    c.node,
+                    c.at_step
+                );
+            }
+        }
 
         let data = match entry.sample_dtype {
             Dtype::F32 => DataSource::Images {
@@ -180,6 +216,7 @@ impl<'c> Trainer<'c> {
             metrics: RunMetrics::new(n, p),
             phases: PhaseTimes::default(),
             sim_comm_ps: 0,
+            fault_report: FabricReport::default(),
             workers,
             optimizer,
             data,
@@ -215,11 +252,16 @@ impl<'c> Trainer<'c> {
         self.workers.iter().map(|w| w.codec.residual_l1()).sum()
     }
 
-    fn fill_batches(&mut self) {
+    fn fill_batches(&mut self, dead_workers: &[usize]) {
         let e = &self.rt.entry;
         let b = e.batch;
         let elems = e.sample_elems();
         for w in 0..e.workers {
+            if dead_workers.contains(&w) {
+                // A dead worker's shard cursor freezes: it resumes from
+                // where it left off when it rejoins.
+                continue;
+            }
             let idxs = self.workers[w].shard.next_batch(b);
             match &self.data {
                 DataSource::Images { train, .. } => {
@@ -240,10 +282,58 @@ impl<'c> Trainer<'c> {
         }
     }
 
+    /// Workers the fault plan takes out of this step's membership
+    /// epoch under the active crash policy, plus any dead
+    /// infrastructure node (a star hub). Under `flush-rejoin` worker
+    /// crashes are masked (the rejoining peer replays the work), so
+    /// only infrastructure deaths reach the collective.
+    fn membership(&self, step: u64) -> (Vec<usize>, Vec<usize>) {
+        let p = self.workers.len();
+        let dead_all = self.cfg.fabric.faults.dead_at_step(step);
+        let dead_gather: Vec<usize> = match self.cfg.on_crash {
+            CrashPolicy::Renorm => dead_all,
+            CrashPolicy::FlushRejoin => dead_all.into_iter().filter(|&d| d >= p).collect(),
+        };
+        let dead_workers: Vec<usize> =
+            dead_gather.iter().copied().filter(|&d| d < p).collect();
+        (dead_gather, dead_workers)
+    }
+
     /// Run one full synchronous step; returns the step's mean loss.
     pub fn train_step(&mut self) -> Result<f32> {
-        self.fill_batches();
         let e = self.rt.entry.clone();
+        let (dead_gather, dead_workers) = self.membership(self.step);
+        // A worker that dies under renorm loses its codec state: the
+        // residual is discarded, not flushed (docs/FAULTS.md).
+        if self.cfg.on_crash == CrashPolicy::Renorm {
+            for i in 0..self.cfg.fabric.faults.crashes.len() {
+                let c = self.cfg.fabric.faults.crashes[i].clone();
+                if c.at_step == self.step && c.node < e.workers {
+                    self.workers[c.node].codec = self
+                        .cfg
+                        .codec
+                        .build(&self.layout, self.cfg.seed.wrapping_add(c.node as u64));
+                }
+            }
+        }
+        // A rejoining worker pulls the replicated state (params +, under
+        // flush-rejoin, the flushed residual) from a peer: bill one
+        // state transfer on the base link per rejoin.
+        let rejoins = self
+            .cfg
+            .fabric
+            .faults
+            .rejoining_at_step(self.step)
+            .iter()
+            .filter(|&&n| n < e.workers)
+            .count() as u64;
+        if rejoins > 0 {
+            let state_bytes = e.n_params as u64 * 4;
+            let transfer =
+                self.cfg.fabric.link.ser_ps(state_bytes) + self.cfg.fabric.link.latency_ps();
+            self.sim_comm_ps += transfer * rejoins;
+        }
+        self.fill_batches(&dead_workers);
 
         // (1) CalcGrad: batched multi-worker moments via PJRT.
         let t0 = std::time::Instant::now();
@@ -260,7 +350,10 @@ impl<'c> Trainer<'c> {
         // consistent for the whole step even with concurrent jobs.
         let t1 = std::time::Instant::now();
         let mut engine = self.engine.lock().unwrap_or_else(|e| e.into_inner());
-        let parallel = engine.threads() > 1;
+        // Degraded steps take the serial path: the sharded engine
+        // assumes full membership, and serial/parallel encodes are
+        // bit-identical so mixing them across steps changes nothing.
+        let parallel = engine.threads() > 1 && dead_workers.is_empty();
         let mut elements = 0u64;
         let mut payload_bits = 0u64;
         let mut wire_bytes = 0u64;
@@ -285,6 +378,12 @@ impl<'c> Trainer<'c> {
         } else {
             msgs.reserve(e.workers);
             for w in 0..e.workers {
+                if dead_workers.contains(&w) {
+                    // Dead workers contribute nothing this epoch; the
+                    // gather carries an empty slot for them.
+                    msgs.push(Vec::new());
+                    continue;
+                }
                 let msg = self.workers[w]
                     .codec
                     .encode_step(moments.gsum_of(w), moments.gsumsq_of(w));
@@ -300,11 +399,19 @@ impl<'c> Trainer<'c> {
         // fabric topology, then decode.
         let t2 = std::time::Instant::now();
         let gathered = if parallel {
-            allgatherv(&self.cfg.fabric, engine.messages())
+            allgatherv_faulty(&self.cfg.fabric, engine.messages(), &dead_gather)
         } else {
-            allgatherv(&self.cfg.fabric, &msgs)
+            allgatherv_faulty(&self.cfg.fabric, &msgs, &dead_gather)
         };
         self.sim_comm_ps += gathered.time_ps;
+        self.fault_report.absorb(&gathered.report);
+        let live = e.workers - dead_workers.len();
+        anyhow::ensure!(live > 0, "no surviving workers at step {}", self.step);
+        // The decoding representative must be a survivor (worker 0 on
+        // fault-free steps — the exact legacy path).
+        let decoder = (0..e.workers)
+            .find(|w| !dead_workers.contains(w))
+            .expect("live > 0 guarantees a survivor");
         if parallel {
             // Parallel decode: parse each gathered message once, then
             // reduce disjoint index ranges in message order — bit-equal
@@ -317,27 +424,39 @@ impl<'c> Trainer<'c> {
             )?;
         } else {
             self.update.iter_mut().for_each(|u| *u = 0.0);
-            for src_msg in &gathered.gathered[0] {
-                self.workers[0].codec.decode_into(src_msg, &mut self.update)?;
+            for src_msg in &gathered.gathered[decoder] {
+                if src_msg.is_empty() {
+                    continue; // a dead worker's slot
+                }
+                self.workers[decoder]
+                    .codec
+                    .decode_into(src_msg, &mut self.update)?;
             }
         }
-        if self.workers[0].codec.aggregation() == Aggregation::Mean {
-            let inv = 1.0 / e.workers as f32;
+        if self.workers[decoder].codec.aggregation() == Aggregation::Mean {
+            let inv = 1.0 / live as f32;
             self.update.iter_mut().for_each(|u| *u *= inv);
         }
-        if self.cfg.verify_sync && e.workers > 1 {
-            // A different worker decodes its own gathered view; the
-            // updates must be bit-identical (synchrony invariant).
+        if self.cfg.verify_sync && live > 1 {
+            // A different surviving worker decodes its own gathered
+            // view; the updates must be bit-identical (synchrony
+            // invariant over the live membership).
             self.update_check.clear();
             self.update_check.resize(e.n_params, 0.0);
-            let last = e.workers - 1;
+            let last = (0..e.workers)
+                .rev()
+                .find(|w| !dead_workers.contains(w))
+                .expect("live > 1 guarantees a second survivor");
             for src_msg in &gathered.gathered[last] {
+                if src_msg.is_empty() {
+                    continue;
+                }
                 self.workers[last]
                     .codec
                     .decode_into(src_msg, &mut self.update_check)?;
             }
             if self.workers[last].codec.aggregation() == Aggregation::Mean {
-                let inv = 1.0 / e.workers as f32;
+                let inv = 1.0 / live as f32;
                 self.update_check.iter_mut().for_each(|u| *u *= inv);
             }
             anyhow::ensure!(
@@ -458,6 +577,42 @@ impl<'c> Trainer<'c> {
             let loss = self.train_step()?;
             let s = self.step;
             let lr = self.cfg.schedule.at(s - 1);
+            // Surface the fault plan's membership events for the step
+            // just executed (step index s − 1).
+            if !self.cfg.fabric.faults.is_empty() {
+                let fstep = s - 1;
+                let crashes = self.cfg.fabric.faults.crashes.clone();
+                for c in &crashes {
+                    if c.at_step == fstep
+                        && !observe(RunEvent::Fault {
+                            step: fstep,
+                            kind: "crash",
+                            node: c.node,
+                        })
+                    {
+                        return Ok(false);
+                    }
+                    if c.rejoin_step == Some(fstep)
+                        && !observe(RunEvent::Fault {
+                            step: fstep,
+                            kind: "rejoin",
+                            node: c.node,
+                        })
+                    {
+                        return Ok(false);
+                    }
+                }
+                let (_, dead_workers) = self.membership(fstep);
+                if !dead_workers.is_empty()
+                    && !observe(RunEvent::Degraded {
+                        step: fstep,
+                        live: self.workers.len() - dead_workers.len(),
+                        total: self.workers.len(),
+                    })
+                {
+                    return Ok(false);
+                }
+            }
             if !quiet && self.cfg.log_every > 0 && s % self.cfg.log_every == 0 {
                 println!(
                     "step {s:>5}  loss {loss:>8.4}  lr {:>8.5}  ratio {:>10.1}  residual_l1 {:.3e}",

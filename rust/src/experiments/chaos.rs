@@ -1,0 +1,502 @@
+//! Chaos sweep (`repro chaos-sweep`): a {topology × fault-scenario ×
+//! codec} grid over the fault-tolerant fabric.
+//!
+//! Each cell drives a short synthetic training stream (the same
+//! deterministic gradients as the fabric sweep) through the codec and
+//! the chaos-enabled allgatherv, then compares the *accumulated
+//! aggregated update* against the fault-free run of the same cell:
+//!
+//! * **masked** — the update is bit-identical to the fault-free run.
+//!   Link faults (drops, corruption, flaps) must always be masked:
+//!   retransmission recovers the bytes and only timing moves.
+//! * **divergence** — relative L2 distance of the accumulated update
+//!   from the fault-free baseline. Non-zero only for membership
+//!   changes (`crash:`), where renormalized aggregation over the
+//!   survivors is a *different* (still correct-on-average) estimator.
+//! * **inflation** — total simulated comm time over the fault-free
+//!   baseline. `max_step_inflation` isolates the worst single step:
+//!   a crash bills a detection bracket (two delivery timeouts of the
+//!   largest in-flight message) at the step it fires, while later
+//!   steps run a smaller collective and may individually be *faster*.
+//!
+//! Crashed workers follow `--on-crash renorm` semantics: their
+//! residual state dies with them, the step aggregates over survivors
+//! with `1/live` weighting, and a rejoining worker restarts from a
+//! fresh codec state.
+
+use anyhow::{ensure, Result};
+
+use crate::comm::allgatherv::allgatherv_faulty;
+use crate::compress::{Codec, CodecSpec};
+use crate::config::codec_str;
+use crate::fabric::{build_topology, FabricConfig, FabricReport, FaultPlan, LinkSpec, TopologyKind};
+use crate::model::Layout;
+use crate::util::json::{num, obj, s, Json};
+
+/// Sweep dimensions for the chaos experiment.
+#[derive(Debug, Clone)]
+pub struct ChaosSweepOpts {
+    pub topologies: Vec<TopologyKind>,
+    /// One worker count per sweep (membership is the varying axis).
+    pub workers: usize,
+    /// Fault scenarios in the `--faults` spec grammar; `none` (or the
+    /// empty string) is the fault-free control row.
+    pub scenarios: Vec<String>,
+    pub codecs: Vec<CodecSpec>,
+    /// Synthetic gradient dimension.
+    pub n_params: usize,
+    /// Simulated training steps per cell.
+    pub steps: u32,
+    pub bandwidth_gbps: f64,
+    pub latency_us: f64,
+    pub seed: u64,
+}
+
+impl Default for ChaosSweepOpts {
+    fn default() -> Self {
+        ChaosSweepOpts {
+            topologies: vec![
+                TopologyKind::Ring,
+                TopologyKind::Star,
+                TopologyKind::Hier { groups: 0 },
+            ],
+            workers: 8,
+            scenarios: vec![
+                "none".into(),
+                "drop:0-1:0.3".into(),
+                "flap:0-1@0..40".into(),
+                "crash:1@2+2".into(),
+                "crash:1@2".into(),
+            ],
+            codecs: vec![
+                CodecSpec::None,
+                CodecSpec::Vgc {
+                    alpha: 2.0,
+                    zeta: 0.999,
+                },
+            ],
+            n_params: 16_384,
+            steps: 6,
+            bandwidth_gbps: 1.0,
+            latency_us: 50.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Parse one scenario cell (`none` means an empty plan).
+pub fn parse_scenario(spec: &str) -> Result<FaultPlan> {
+    let t = spec.trim();
+    if t.is_empty() || t == "none" {
+        return Ok(FaultPlan::default());
+    }
+    FaultPlan::parse(t)
+}
+
+/// Sanity-check a chaos sweep before running it: every scenario must
+/// parse, fit every swept topology, and leave at least one live worker
+/// at every step.
+pub fn validate_chaos(opts: &ChaosSweepOpts) -> Result<()> {
+    ensure!(!opts.topologies.is_empty(), "chaos sweep lists no topologies");
+    ensure!(!opts.scenarios.is_empty(), "chaos sweep lists no scenarios");
+    ensure!(!opts.codecs.is_empty(), "chaos sweep lists no codecs");
+    ensure!(opts.workers >= 2, "chaos sweep needs at least 2 workers");
+    ensure!(opts.n_params > 0, "n_params must be positive");
+    ensure!(opts.steps >= 1, "chaos sweep needs at least one step");
+    ensure!(opts.bandwidth_gbps > 0.0, "bandwidth-gbps must be positive");
+    ensure!(opts.latency_us >= 0.0, "latency-us must be non-negative");
+    for scen in &opts.scenarios {
+        let plan = parse_scenario(scen)?;
+        for step in 0..opts.steps as u64 {
+            let dead_workers = plan
+                .dead_at_step(step)
+                .iter()
+                .filter(|&&d| d < opts.workers)
+                .count();
+            ensure!(
+                dead_workers < opts.workers,
+                "scenario '{scen}' leaves no live workers at step {step}"
+            );
+        }
+        for &kind in &opts.topologies {
+            let probe = FabricConfig {
+                topology: kind,
+                faults: plan.clone(),
+                ..FabricConfig::default()
+            };
+            probe.validate(opts.workers)?;
+        }
+    }
+    Ok(())
+}
+
+/// One chaos cell's outcome.
+#[derive(Debug, Clone)]
+pub struct ChaosSweepRow {
+    pub topology: String,
+    pub codec: String,
+    /// Canonical scenario spec (`none` for the control row).
+    pub scenario: String,
+    /// Accumulated update bit-identical to the fault-free run.
+    pub masked: bool,
+    /// Relative L2 distance of the accumulated update from the
+    /// fault-free baseline (0 when masked).
+    pub divergence: f64,
+    /// Total simulated comm time, ms.
+    pub sim_ms: f64,
+    /// Fault-free baseline total, ms.
+    pub clean_ms: f64,
+    /// `sim_ms / clean_ms` — may be < 1 for permanent crashes, where
+    /// the surviving collective is smaller.
+    pub inflation: f64,
+    /// Worst single-step time over the same step of the baseline.
+    pub max_step_inflation: f64,
+    pub report: FabricReport,
+}
+
+/// Run one cell: `steps` of encode → chaos gather → renormalized
+/// decode-accumulate. Returns the accumulated aggregated update, the
+/// per-step simulated times, and the fault counters.
+fn chaos_cell(
+    opts: &ChaosSweepOpts,
+    kind: TopologyKind,
+    spec: &CodecSpec,
+    plan: &FaultPlan,
+) -> (Vec<f32>, Vec<u64>, FabricReport) {
+    let p = opts.workers;
+    let n = opts.n_params;
+    let layout = Layout::uniform(n, 256);
+    let grads = super::sweep_gradients(p, n, opts.seed, opts.steps);
+    let link = LinkSpec {
+        bandwidth_gbps: opts.bandwidth_gbps,
+        latency_us: opts.latency_us,
+        jitter_us: 0.0,
+    };
+    let cfg = FabricConfig {
+        topology: kind,
+        link,
+        seed: opts.seed,
+        faults: plan.clone(),
+        ..FabricConfig::default()
+    };
+    let mut codecs: Vec<Box<dyn Codec>> = (0..p)
+        .map(|w| spec.build(&layout, opts.seed.wrapping_add(w as u64)))
+        .collect();
+    let mut acc = vec![0.0f32; n];
+    let mut step_ps = Vec::with_capacity(opts.steps as usize);
+    let mut report = FabricReport::default();
+    for step in 0..opts.steps as u64 {
+        // Renorm semantics: a crashing worker's residual dies with it;
+        // a rejoining worker restarts from fresh codec state.
+        for c in &plan.crashes {
+            if c.at_step == step && c.node < p {
+                codecs[c.node] = spec.build(&layout, opts.seed.wrapping_add(c.node as u64));
+            }
+        }
+        let dead = plan.dead_at_step(step);
+        let dead_workers: Vec<usize> = dead.iter().copied().filter(|&d| d < p).collect();
+        let msgs: Vec<Vec<u8>> = (0..p)
+            .map(|w| {
+                if dead_workers.contains(&w) {
+                    Vec::new()
+                } else {
+                    let g = &grads[w][step as usize];
+                    let sq: Vec<f32> = g.iter().map(|x| x * x * 0.5).collect();
+                    codecs[w].encode_step(g, &sq).bytes
+                }
+            })
+            .collect();
+        let res = allgatherv_faulty(&cfg, &msgs, &dead);
+        let mut t = res.time_ps;
+        if plan.crashes.iter().any(|c| c.at_step == step) {
+            // Detection bracket: the survivors time out on the dead
+            // peer before rerouting — bill two delivery timeouts of
+            // the largest in-flight message at the crash step.
+            let largest = msgs.iter().map(|m| m.len() as u64).max().unwrap_or(0);
+            t += 2 * (link.ser_ps(largest) + link.latency_ps());
+        }
+        step_ps.push(t);
+        report.absorb(&res.report);
+
+        let live = p - dead_workers.len();
+        let viewer = (0..p)
+            .find(|w| !dead_workers.contains(w))
+            .expect("validated: at least one live worker");
+        let mut upd = vec![0.0f32; n];
+        for bytes in &res.gathered[viewer] {
+            if bytes.is_empty() {
+                continue;
+            }
+            codecs[viewer]
+                .decode_into(bytes, &mut upd)
+                .expect("decode gathered chaos message");
+        }
+        let inv = 1.0 / live as f32;
+        for (a, u) in acc.iter_mut().zip(&upd) {
+            *a += u * inv;
+        }
+    }
+    (acc, step_ps, report)
+}
+
+fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    let mut diff = 0.0f64;
+    let mut norm = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        diff += (*x as f64 - *y as f64).powi(2);
+        norm += (*y as f64).powi(2);
+    }
+    if norm > 0.0 {
+        (diff / norm).sqrt()
+    } else if diff > 0.0 {
+        f64::INFINITY
+    } else {
+        0.0
+    }
+}
+
+/// Run the full chaos sweep (validates first).
+pub fn chaos_sweep(opts: &ChaosSweepOpts) -> Result<Vec<ChaosSweepRow>> {
+    validate_chaos(opts)?;
+    let mut rows = Vec::new();
+    for &kind in &opts.topologies {
+        let label = build_topology(kind, opts.workers).kind().label();
+        for spec in &opts.codecs {
+            let clean = FaultPlan::default();
+            let (base, base_ps, _) = chaos_cell(opts, kind, spec, &clean);
+            let clean_total: u64 = base_ps.iter().sum();
+            let clean_ms = clean_total as f64 * 1e-9;
+            for scen in &opts.scenarios {
+                let plan = parse_scenario(scen)?;
+                let (acc, step_ps, report) = if plan.is_empty() {
+                    (base.clone(), base_ps.clone(), FabricReport::default())
+                } else {
+                    chaos_cell(opts, kind, spec, &plan)
+                };
+                let total: u64 = step_ps.iter().sum();
+                let sim_ms = total as f64 * 1e-9;
+                let masked = acc
+                    .iter()
+                    .zip(&base)
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                let max_step_inflation = step_ps
+                    .iter()
+                    .zip(&base_ps)
+                    .map(|(&t, &c)| if c > 0 { t as f64 / c as f64 } else { 0.0 })
+                    .fold(0.0f64, f64::max);
+                rows.push(ChaosSweepRow {
+                    topology: label.clone(),
+                    codec: codec_str(spec),
+                    scenario: if plan.is_empty() {
+                        "none".into()
+                    } else {
+                        plan.spec_str()
+                    },
+                    masked,
+                    divergence: rel_l2(&acc, &base),
+                    sim_ms,
+                    clean_ms,
+                    inflation: if clean_total > 0 {
+                        total as f64 / clean_total as f64
+                    } else {
+                        0.0
+                    },
+                    max_step_inflation,
+                    report,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Markdown table of the sweep (the `repro chaos-sweep` report).
+pub fn chaos_sweep_markdown(opts: &ChaosSweepOpts, rows: &[ChaosSweepRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "### chaos sweep — p={}, N={} params, {} steps, {} Gbps, latency {} us, seed {}\n\n",
+        opts.workers, opts.n_params, opts.steps, opts.bandwidth_gbps, opts.latency_us, opts.seed
+    ));
+    out.push_str(
+        "| topology | codec | scenario | masked | divergence | sim comm | clean \
+         | inflation | worst step | retries | retx bytes | drops | corrupt | reroutes |\n",
+    );
+    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {:.3e} | {:.3} ms | {:.3} ms | {:.2}x | {:.2}x \
+             | {} | {} | {} | {} | {} |\n",
+            r.topology,
+            r.codec,
+            r.scenario,
+            if r.masked { "yes" } else { "NO" },
+            r.divergence,
+            r.sim_ms,
+            r.clean_ms,
+            r.inflation,
+            r.max_step_inflation,
+            r.report.retries,
+            r.report.retransmitted_bytes,
+            r.report.drops,
+            r.report.corruptions,
+            r.report.reroutes,
+        ));
+    }
+    out
+}
+
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// Serialize chaos rows for EXPERIMENTS.md tooling and CI smoke.
+pub fn chaos_sweep_json(rows: &[ChaosSweepRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("topology", s(&r.topology)),
+                    ("codec", s(&r.codec)),
+                    ("scenario", s(&r.scenario)),
+                    ("masked", Json::Bool(r.masked)),
+                    ("divergence", num_or_null(r.divergence)),
+                    ("sim_ms", num(r.sim_ms)),
+                    ("clean_ms", num(r.clean_ms)),
+                    ("inflation", num(r.inflation)),
+                    ("max_step_inflation", num(r.max_step_inflation)),
+                    ("report", r.report.to_json()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> ChaosSweepOpts {
+        ChaosSweepOpts {
+            topologies: vec![TopologyKind::Ring],
+            workers: 4,
+            scenarios: vec!["none".into()],
+            codecs: vec![CodecSpec::None],
+            n_params: 512,
+            steps: 3,
+            ..ChaosSweepOpts::default()
+        }
+    }
+
+    #[test]
+    fn control_row_is_trivially_masked() {
+        let rows = chaos_sweep(&tiny_opts()).unwrap();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert!(r.masked);
+        assert_eq!(r.divergence, 0.0);
+        assert_eq!(r.inflation, 1.0);
+        assert!(r.report.is_clean());
+    }
+
+    #[test]
+    fn link_faults_are_masked_but_slower() {
+        let mut fired = false;
+        for seed in 0..4 {
+            let opts = ChaosSweepOpts {
+                scenarios: vec!["drop:0-1:0.7,corrupt:1-2:0.5".into()],
+                seed,
+                ..tiny_opts()
+            };
+            let rows = chaos_sweep(&opts).unwrap();
+            let r = &rows[0];
+            assert!(r.masked, "seed {seed}: link faults must be masked");
+            assert_eq!(r.divergence, 0.0, "seed {seed}");
+            assert!(r.inflation >= 1.0, "seed {seed}");
+            fired |= !r.report.is_clean();
+            assert_eq!(r.report.retries, r.report.drops + r.report.corruptions);
+        }
+        assert!(fired, "chaos never fired across 4 seeds");
+    }
+
+    #[test]
+    fn permanent_crash_diverges_and_inflates_the_crash_step() {
+        let opts = ChaosSweepOpts {
+            topologies: vec![TopologyKind::Ring, TopologyKind::Star],
+            scenarios: vec!["crash:1@1".into()],
+            codecs: vec![CodecSpec::Vgc {
+                alpha: 2.0,
+                zeta: 0.999,
+            }],
+            ..tiny_opts()
+        };
+        let rows = chaos_sweep(&opts).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(!r.masked, "{}: renorm over survivors must diverge", r.topology);
+            assert!(r.divergence > 0.0, "{}", r.topology);
+            assert!(
+                r.max_step_inflation > 1.0,
+                "{}: crash step bills a detection bracket ({})",
+                r.topology,
+                r.max_step_inflation
+            );
+            assert!(r.report.reroutes > 0, "{}", r.topology);
+        }
+    }
+
+    #[test]
+    fn transient_crash_recovers_membership() {
+        // crash:1@1+1 — dead only for step 1, back at step 2. The
+        // update diverges (renorm at step 1) but reroutes stop firing
+        // after the rejoin: exactly one degraded step.
+        let opts = ChaosSweepOpts {
+            scenarios: vec!["crash:1@1+1".into()],
+            ..tiny_opts()
+        };
+        let rows = chaos_sweep(&opts).unwrap();
+        let r = &rows[0];
+        assert!(!r.masked);
+        assert_eq!(r.report.reroutes, 1);
+    }
+
+    #[test]
+    fn validate_rejects_bad_scenarios() {
+        let mut opts = tiny_opts();
+        opts.scenarios = vec!["crash:0@0,crash:1@0,crash:2@0,crash:3@0".into()];
+        let err = chaos_sweep(&opts).unwrap_err().to_string();
+        assert!(err.contains("no live workers"), "{err}");
+
+        let mut opts = tiny_opts();
+        opts.scenarios = vec!["drop:9-0:0.5".into()];
+        let err = chaos_sweep(&opts).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+
+        let mut opts = tiny_opts();
+        opts.scenarios = vec!["explode:everything".into()];
+        assert!(chaos_sweep(&opts).is_err());
+    }
+
+    #[test]
+    fn report_shapes_roundtrip() {
+        let opts = ChaosSweepOpts {
+            scenarios: vec!["none".into(), "crash:1@1".into()],
+            ..tiny_opts()
+        };
+        let rows = chaos_sweep(&opts).unwrap();
+        let md = chaos_sweep_markdown(&opts, &rows);
+        assert!(md.contains("| topology |"), "{md}");
+        assert_eq!(
+            md.lines().filter(|l| l.starts_with("| ")).count(),
+            1 + rows.len()
+        );
+        let j = chaos_sweep_json(&rows);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.as_arr().unwrap().len(), rows.len());
+        let first = &back.as_arr().unwrap()[0];
+        assert_eq!(first.get("masked").unwrap(), &Json::Bool(true));
+    }
+}

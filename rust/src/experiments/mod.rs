@@ -11,11 +11,18 @@
 //!   optionally with segmented gather pipelining.
 //! * [`benchcodecs`] — §Perf codec-engine throughput sweep
 //!   (`repro bench-codecs`, serial vs parallel, `BENCH_codecs.json`).
+//! * [`chaos`] — fault-injection sweep over the chaos fabric
+//!   (`repro chaos-sweep`, masking/divergence/inflation per scenario).
 
 pub mod benchcodecs;
+pub mod chaos;
 
 pub use benchcodecs::{
     bench_codecs, bench_codecs_json, bench_codecs_markdown, BenchCodecsOpts, BenchCodecsRow,
+};
+pub use chaos::{
+    chaos_sweep, chaos_sweep_json, chaos_sweep_markdown, validate_chaos, ChaosSweepOpts,
+    ChaosSweepRow,
 };
 
 use anyhow::Result;

@@ -1,0 +1,567 @@
+//! Deterministic fault injection: the chaos plan and its counters.
+//!
+//! A [`FaultPlan`] describes everything the fabric and trainer may
+//! throw at a run: node crashes at a training step (with optional
+//! rejoin after a delta), directed-link outage windows ("flaps",
+//! microseconds relative to each collective's start), and per-link
+//! random message drop/corruption rates. Plans parse from a compact
+//! `--faults` spec, round-trip through JSON plan files, and are
+//! validated like stragglers — a fault naming a node or edge the
+//! fabric does not have is a config error, not a no-op. Everything
+//! randomized draws from a dedicated fault RNG stream seeded from the
+//! fabric seed, so a `(seed, plan)` pair replays bit-for-bit.
+//!
+//! Spec grammar (comma-separated entries):
+//!
+//! * `crash:N@S` — node `N` crashes at step `S` and never returns;
+//! * `crash:N@S+D` — …and rejoins at step `S+D`;
+//! * `flap:A-B@T1..T2` — the directed link `A → B` is down during
+//!   `[T1, T2)` µs of every collective;
+//! * `drop:A-B:R` — each message on `A → B` is lost with probability
+//!   `R`;
+//! * `corrupt:A-B:R` — …or delivered corrupted (and discarded by the
+//!   receiver) with probability `R`.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::{num, obj, s, Json};
+
+/// Ceiling on per-link drop + corruption probability: above this the
+/// retransmit loop's geometric progress guarantee gets too weak to
+/// bound simulation work.
+pub const MAX_LOSS_RATE: f64 = 0.9;
+
+/// A node crash at training step `at_step`; the node is dead for steps
+/// `[at_step, rejoin_step)` and back from `rejoin_step` on (`None` =
+/// never returns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Crash {
+    pub node: usize,
+    pub at_step: u64,
+    pub rejoin_step: Option<u64>,
+}
+
+/// A directed-link outage window, µs relative to each collective's
+/// start: messages whose transmission begins inside `[down_us, up_us)`
+/// are lost and retransmitted after the link comes back.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkFlap {
+    pub src: usize,
+    pub dst: usize,
+    pub down_us: f64,
+    pub up_us: f64,
+}
+
+/// Per-directed-link random loss: each message is dropped with
+/// probability `drop`, else delivered corrupted (receiver discards it)
+/// with probability `corrupt`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkChaos {
+    pub src: usize,
+    pub dst: usize,
+    pub drop: f64,
+    pub corrupt: f64,
+}
+
+/// The full fault schedule for a run. Empty (the default) is
+/// guaranteed zero-cost: the fabric takes exactly the fault-free code
+/// path and disturbs no RNG stream.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub crashes: Vec<Crash>,
+    pub flaps: Vec<LinkFlap>,
+    pub chaos: Vec<LinkChaos>,
+}
+
+impl FaultPlan {
+    /// Parse the `--faults` spec grammar (see module docs). The empty
+    /// string is the empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind, rest) = entry
+                .split_once(':')
+                .with_context(|| format!("fault entry '{entry}' needs KIND:ARGS"))?;
+            match kind {
+                "crash" => {
+                    let (node, when) = rest
+                        .split_once('@')
+                        .with_context(|| format!("crash '{entry}' needs NODE@STEP"))?;
+                    let node: usize = node
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("crash node '{node}': {e}"))?;
+                    let (step, delta) = match when.split_once('+') {
+                        Some((st, d)) => (st, Some(d)),
+                        None => (when, None),
+                    };
+                    let at_step: u64 = step
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("crash step '{step}': {e}"))?;
+                    let rejoin_step = match delta {
+                        None => None,
+                        Some(d) => {
+                            let d: u64 = d
+                                .parse()
+                                .map_err(|e| anyhow::anyhow!("crash rejoin delta '{d}': {e}"))?;
+                            ensure!(d >= 1, "crash rejoin delta must be >= 1 in '{entry}'");
+                            Some(at_step + d)
+                        }
+                    };
+                    plan.crashes.push(Crash {
+                        node,
+                        at_step,
+                        rejoin_step,
+                    });
+                }
+                "flap" => {
+                    let (edge, window) = rest
+                        .split_once('@')
+                        .with_context(|| format!("flap '{entry}' needs SRC-DST@T1..T2"))?;
+                    let (src, dst) = parse_edge(edge)?;
+                    let (t1, t2) = window
+                        .split_once("..")
+                        .with_context(|| format!("flap window '{window}' needs T1..T2"))?;
+                    let down_us: f64 = t1
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("flap start '{t1}': {e}"))?;
+                    let up_us: f64 = t2
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("flap end '{t2}': {e}"))?;
+                    ensure!(
+                        down_us >= 0.0 && up_us.is_finite() && up_us > down_us,
+                        "flap window must satisfy 0 <= T1 < T2 in '{entry}'"
+                    );
+                    plan.flaps.push(LinkFlap {
+                        src,
+                        dst,
+                        down_us,
+                        up_us,
+                    });
+                }
+                "drop" | "corrupt" => {
+                    let (edge, rate) = rest
+                        .rsplit_once(':')
+                        .with_context(|| format!("{kind} '{entry}' needs SRC-DST:RATE"))?;
+                    let (src, dst) = parse_edge(edge)?;
+                    let rate: f64 = rate
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("{kind} rate '{rate}': {e}"))?;
+                    ensure!(
+                        rate > 0.0 && rate <= MAX_LOSS_RATE,
+                        "{kind} rate must be in (0, {MAX_LOSS_RATE}] in '{entry}'"
+                    );
+                    let idx = match plan.chaos.iter().position(|c| c.src == src && c.dst == dst) {
+                        Some(i) => i,
+                        None => {
+                            plan.chaos.push(LinkChaos {
+                                src,
+                                dst,
+                                drop: 0.0,
+                                corrupt: 0.0,
+                            });
+                            plan.chaos.len() - 1
+                        }
+                    };
+                    let slot = &mut plan.chaos[idx];
+                    if kind == "drop" {
+                        slot.drop = rate;
+                    } else {
+                        slot.corrupt = rate;
+                    }
+                }
+                other => bail!("unknown fault kind '{other}' in '{entry}'"),
+            }
+        }
+        plan.validate_shape()?;
+        Ok(plan)
+    }
+
+    /// The canonical spec string (parses back via [`FaultPlan::parse`]).
+    pub fn spec_str(&self) -> String {
+        let mut out: Vec<String> = Vec::new();
+        for c in &self.crashes {
+            match c.rejoin_step {
+                None => out.push(format!("crash:{}@{}", c.node, c.at_step)),
+                Some(r) => out.push(format!("crash:{}@{}+{}", c.node, c.at_step, r - c.at_step)),
+            }
+        }
+        for f in &self.flaps {
+            out.push(format!("flap:{}-{}@{}..{}", f.src, f.dst, f.down_us, f.up_us));
+        }
+        for c in &self.chaos {
+            if c.drop > 0.0 {
+                out.push(format!("drop:{}-{}:{}", c.src, c.dst, c.drop));
+            }
+            if c.corrupt > 0.0 {
+                out.push(format!("corrupt:{}-{}:{}", c.src, c.dst, c.corrupt));
+            }
+        }
+        out.join(",")
+    }
+
+    /// No faults at all.
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty() && self.flaps.is_empty() && self.chaos.is_empty()
+    }
+
+    /// No link-level faults (the part of the plan the transport layer
+    /// handles; crashes are membership-level).
+    pub fn link_faults_empty(&self) -> bool {
+        self.flaps.is_empty() && self.chaos.is_empty()
+    }
+
+    /// Physical nodes dead for training step `step`, ascending and
+    /// deduplicated.
+    pub fn dead_at_step(&self, step: u64) -> Vec<usize> {
+        let mut dead: Vec<usize> = self
+            .crashes
+            .iter()
+            .filter(|c| {
+                step >= c.at_step
+                    && match c.rejoin_step {
+                        Some(r) => step < r,
+                        None => true,
+                    }
+            })
+            .map(|c| c.node)
+            .collect();
+        dead.sort_unstable();
+        dead.dedup();
+        dead
+    }
+
+    /// Nodes that rejoin exactly at `step` (for residual-flush
+    /// accounting under `--on-crash flush-rejoin`).
+    pub fn rejoining_at_step(&self, step: u64) -> Vec<usize> {
+        let mut back: Vec<usize> = self
+            .crashes
+            .iter()
+            .filter(|c| c.rejoin_step == Some(step))
+            .map(|c| c.node)
+            .collect();
+        back.sort_unstable();
+        back.dedup();
+        back
+    }
+
+    /// Internal consistency (rates, windows, orderings) — everything
+    /// that does not need a node count.
+    fn validate_shape(&self) -> Result<()> {
+        for c in &self.crashes {
+            if let Some(r) = c.rejoin_step {
+                ensure!(
+                    r > c.at_step,
+                    "crash of node {} rejoins at step {r}, not after its crash step {}",
+                    c.node,
+                    c.at_step
+                );
+            }
+        }
+        for f in &self.flaps {
+            ensure!(f.src != f.dst, "flap names the self-edge {}-{}", f.src, f.dst);
+            ensure!(
+                f.down_us >= 0.0 && f.up_us.is_finite() && f.up_us > f.down_us,
+                "flap {}-{} window must satisfy 0 <= T1 < T2",
+                f.src,
+                f.dst
+            );
+        }
+        for c in &self.chaos {
+            ensure!(c.src != c.dst, "loss names the self-edge {}-{}", c.src, c.dst);
+            ensure!(
+                c.drop >= 0.0 && c.corrupt >= 0.0 && c.drop + c.corrupt <= MAX_LOSS_RATE,
+                "combined drop+corrupt rate on {}-{} exceeds {MAX_LOSS_RATE}",
+                c.src,
+                c.dst
+            );
+        }
+        Ok(())
+    }
+
+    /// Validate against a concrete fabric size, like stragglers: every
+    /// fault must name nodes the fabric actually has.
+    pub fn validate(&self, nodes: usize) -> Result<()> {
+        self.validate_shape()?;
+        for c in &self.crashes {
+            ensure!(
+                c.node < nodes,
+                "crash node {} out of range (fabric has {nodes} nodes)",
+                c.node
+            );
+        }
+        for f in &self.flaps {
+            ensure!(
+                f.src < nodes && f.dst < nodes,
+                "flap edge {}-{} out of range (fabric has {nodes} nodes)",
+                f.src,
+                f.dst
+            );
+        }
+        for c in &self.chaos {
+            ensure!(
+                c.src < nodes && c.dst < nodes,
+                "loss edge {}-{} out of range (fabric has {nodes} nodes)",
+                c.src,
+                c.dst
+            );
+        }
+        Ok(())
+    }
+
+    /// Structured JSON for plan files (round-trips via
+    /// [`FaultPlan::from_json`]).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "crashes",
+                Json::Arr(
+                    self.crashes
+                        .iter()
+                        .map(|c| {
+                            obj(vec![
+                                ("node", num(c.node as f64)),
+                                ("at_step", num(c.at_step as f64)),
+                                (
+                                    "rejoin_step",
+                                    c.rejoin_step.map(|r| num(r as f64)).unwrap_or(Json::Null),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "flaps",
+                Json::Arr(
+                    self.flaps
+                        .iter()
+                        .map(|f| {
+                            obj(vec![
+                                ("src", num(f.src as f64)),
+                                ("dst", num(f.dst as f64)),
+                                ("down_us", num(f.down_us)),
+                                ("up_us", num(f.up_us)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "chaos",
+                Json::Arr(
+                    self.chaos
+                        .iter()
+                        .map(|c| {
+                            obj(vec![
+                                ("src", num(c.src as f64)),
+                                ("dst", num(c.dst as f64)),
+                                ("drop", num(c.drop)),
+                                ("corrupt", num(c.corrupt)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Load a plan file: either the structured object written by
+    /// [`FaultPlan::to_json`] or a plain `"spec string"`.
+    pub fn from_json(j: &Json) -> Result<FaultPlan> {
+        if let Json::Str(spec) = j {
+            return FaultPlan::parse(spec);
+        }
+        let mut plan = FaultPlan::default();
+        if let Some(arr) = j.get("crashes") {
+            for c in expect_arr(arr, "crashes")? {
+                plan.crashes.push(Crash {
+                    node: c.expect("node")?.as_usize()?,
+                    at_step: c.expect("at_step")?.as_usize()? as u64,
+                    rejoin_step: match c.get("rejoin_step") {
+                        None | Some(Json::Null) => None,
+                        Some(v) => Some(v.as_usize()? as u64),
+                    },
+                });
+            }
+        }
+        if let Some(arr) = j.get("flaps") {
+            for f in expect_arr(arr, "flaps")? {
+                plan.flaps.push(LinkFlap {
+                    src: f.expect("src")?.as_usize()?,
+                    dst: f.expect("dst")?.as_usize()?,
+                    down_us: f.expect("down_us")?.as_f64()?,
+                    up_us: f.expect("up_us")?.as_f64()?,
+                });
+            }
+        }
+        if let Some(arr) = j.get("chaos") {
+            for c in expect_arr(arr, "chaos")? {
+                plan.chaos.push(LinkChaos {
+                    src: c.expect("src")?.as_usize()?,
+                    dst: c.expect("dst")?.as_usize()?,
+                    drop: c.expect("drop")?.as_f64()?,
+                    corrupt: c.expect("corrupt")?.as_f64()?,
+                });
+            }
+        }
+        plan.validate_shape()?;
+        Ok(plan)
+    }
+}
+
+fn parse_edge(edge: &str) -> Result<(usize, usize)> {
+    let (a, b) = edge
+        .split_once('-')
+        .with_context(|| format!("edge '{edge}' needs SRC-DST"))?;
+    let src: usize = a
+        .parse()
+        .map_err(|e| anyhow::anyhow!("edge src '{a}': {e}"))?;
+    let dst: usize = b
+        .parse()
+        .map_err(|e| anyhow::anyhow!("edge dst '{b}': {e}"))?;
+    ensure!(src != dst, "edge '{edge}' is a self-edge");
+    Ok((src, dst))
+}
+
+fn expect_arr<'j>(j: &'j Json, what: &str) -> Result<&'j [Json]> {
+    match j {
+        Json::Arr(v) => Ok(v),
+        other => bail!("fault plan key '{what}' must be an array, got {other:?}"),
+    }
+}
+
+/// Counters for everything the fault layer did during a run: how much
+/// chaos was injected and how much work masking it cost.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FabricReport {
+    /// Messages lost outright (flap windows + random drops).
+    pub drops: u64,
+    /// Messages delivered corrupted and discarded by the receiver.
+    pub corruptions: u64,
+    /// Retransmission attempts issued.
+    pub retries: u64,
+    /// Bytes re-pushed onto egress ports by retransmissions.
+    pub retransmitted_bytes: u64,
+    /// Collective-level route-arounds (degraded-topology rebuilds
+    /// after node loss).
+    pub reroutes: u64,
+}
+
+impl FabricReport {
+    /// Accumulate another report (per-step reports into a run total).
+    pub fn absorb(&mut self, other: &FabricReport) {
+        self.drops += other.drops;
+        self.corruptions += other.corruptions;
+        self.retries += other.retries;
+        self.retransmitted_bytes += other.retransmitted_bytes;
+        self.reroutes += other.reroutes;
+    }
+
+    /// True when nothing at all happened (the fault-free fingerprint).
+    pub fn is_clean(&self) -> bool {
+        *self == FabricReport::default()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("drops", num(self.drops as f64)),
+            ("corruptions", num(self.corruptions as f64)),
+            ("retries", num(self.retries as f64)),
+            ("retransmitted_bytes", num(self.retransmitted_bytes as f64)),
+            ("reroutes", num(self.reroutes as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trips_through_parse_and_str() {
+        let spec = "crash:1@3+2,crash:4@10,flap:0-1@10..50,drop:0-2:0.2,corrupt:2-0:0.05";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.crashes.len(), 2);
+        assert_eq!(plan.crashes[0].rejoin_step, Some(5));
+        assert_eq!(plan.crashes[1].rejoin_step, None);
+        assert_eq!(plan.flaps.len(), 1);
+        assert_eq!(plan.chaos.len(), 2);
+        let back = FaultPlan::parse(&plan.spec_str()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn drop_and_corrupt_on_one_edge_merge() {
+        let plan = FaultPlan::parse("drop:0-1:0.2,corrupt:0-1:0.1").unwrap();
+        assert_eq!(plan.chaos.len(), 1);
+        assert_eq!(plan.chaos[0].drop, 0.2);
+        assert_eq!(plan.chaos[0].corrupt, 0.1);
+        assert_eq!(FaultPlan::parse(&plan.spec_str()).unwrap(), plan);
+    }
+
+    #[test]
+    fn bad_specs_are_loud() {
+        assert!(FaultPlan::parse("crash:1").is_err()); // no step
+        assert!(FaultPlan::parse("crash:1@3+0").is_err()); // zero delta
+        assert!(FaultPlan::parse("flap:0-0@1..2").is_err()); // self-edge
+        assert!(FaultPlan::parse("flap:0-1@5..5").is_err()); // empty window
+        assert!(FaultPlan::parse("drop:0-1:0.99").is_err()); // above ceiling
+        assert!(FaultPlan::parse("drop:0-1:0.5,corrupt:0-1:0.5").is_err()); // combined
+        assert!(FaultPlan::parse("meteor:0-1:1").is_err()); // unknown kind
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn validate_checks_node_ranges() {
+        let plan = FaultPlan::parse("crash:5@1,drop:0-1:0.1").unwrap();
+        assert!(plan.validate(6).is_ok());
+        let err = plan.validate(4).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn membership_windows() {
+        let plan = FaultPlan::parse("crash:1@3+2,crash:2@4").unwrap();
+        assert!(plan.dead_at_step(2).is_empty());
+        assert_eq!(plan.dead_at_step(3), vec![1]);
+        assert_eq!(plan.dead_at_step(4), vec![1, 2]);
+        assert_eq!(plan.dead_at_step(5), vec![2]); // node 1 rejoined
+        assert_eq!(plan.rejoining_at_step(5), vec![1]);
+        assert!(plan.rejoining_at_step(4).is_empty());
+    }
+
+    #[test]
+    fn json_round_trips_both_shapes() {
+        let plan = FaultPlan::parse("crash:1@3+2,flap:0-1@10..50,drop:0-2:0.2").unwrap();
+        let j = Json::parse(&plan.to_json().to_string()).unwrap();
+        assert_eq!(FaultPlan::from_json(&j).unwrap(), plan);
+        // A bare spec string is also a valid plan file body.
+        let j = Json::parse("\"crash:1@3+2\"").unwrap();
+        assert_eq!(
+            FaultPlan::from_json(&j).unwrap(),
+            FaultPlan::parse("crash:1@3+2").unwrap()
+        );
+    }
+
+    #[test]
+    fn report_absorbs_and_fingerprints() {
+        let mut total = FabricReport::default();
+        assert!(total.is_clean());
+        total.absorb(&FabricReport {
+            drops: 2,
+            retries: 3,
+            retransmitted_bytes: 100,
+            ..FabricReport::default()
+        });
+        total.absorb(&FabricReport {
+            corruptions: 1,
+            reroutes: 1,
+            ..FabricReport::default()
+        });
+        assert!(!total.is_clean());
+        assert_eq!(total.drops, 2);
+        assert_eq!(total.retries, 3);
+        let j = total.to_json();
+        assert_eq!(j.get("retransmitted_bytes").unwrap().as_usize().unwrap(), 100);
+    }
+}

@@ -1,0 +1,404 @@
+//! Shared group-span machinery for the leader-based topologies.
+//!
+//! `tree` (fixed-width groups from a branch factor) and `hierarchy`
+//! (count-parameterized balanced spans) run the *same* three-phase
+//! leader protocol — members send up to their leader, leaders exchange
+//! pairwise, leaders fan back down — and differ only in how workers
+//! are partitioned into groups and which links are overridden.
+//! [`GroupSpans`] captures the partition once and
+//! [`GroupGather`]/[`GroupReduce`] implement the protocol once, so
+//! fault handling lands in a single place: leader re-election after a
+//! crash is simply rebuilding the spans over the survivor set, where
+//! the lowest surviving id of each span leads.
+
+use super::collectives::{split_all, GatherState};
+use super::{Msg, Payload, Protocol};
+
+/// Member block/vector travelling up to its group leader.
+const TAG_UP: u8 = 0;
+/// Leader-to-leader exchange.
+const TAG_XCHG: u8 = 1;
+/// Leader fan-out down to its members.
+const TAG_DOWN: u8 = 2;
+
+/// A contiguous partition of `p` workers into leader-led groups, as
+/// `(start, len)` spans. The lowest id of each span is its leader;
+/// leaders are themselves workers — no extra infrastructure node.
+#[derive(Debug, Clone)]
+pub struct GroupSpans {
+    p: usize,
+    spans: Vec<(usize, usize)>,
+}
+
+impl GroupSpans {
+    /// Fixed-width grouping (tree): group `g` spans
+    /// `[g·branch, min((g+1)·branch, p))`.
+    pub fn from_branch(p: usize, branch: usize) -> GroupSpans {
+        assert!(p > 0, "topology needs at least one worker");
+        assert!(branch >= 1, "group branch must be >= 1");
+        let mut spans = Vec::new();
+        let mut start = 0;
+        while start < p {
+            let len = branch.min(p - start);
+            spans.push((start, len));
+            start += len;
+        }
+        GroupSpans { p, spans }
+    }
+
+    /// Grouping from precomputed spans (hier's balanced partition).
+    /// The spans must tile `0..p` contiguously.
+    pub fn from_spans(p: usize, spans: Vec<(usize, usize)>) -> GroupSpans {
+        assert!(p > 0, "topology needs at least one worker");
+        debug_assert_eq!(
+            spans.iter().map(|&(_, l)| l).sum::<usize>(),
+            p,
+            "spans must cover every worker exactly once"
+        );
+        GroupSpans { p, spans }
+    }
+
+    /// Worker count.
+    pub fn workers(&self) -> usize {
+        self.p
+    }
+
+    /// Number of groups.
+    pub fn groups(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// The group containing worker `w`.
+    pub fn group_of(&self, w: usize) -> usize {
+        self.spans
+            .iter()
+            .position(|&(s, l)| w >= s && w < s + l)
+            .expect("worker outside every span")
+    }
+
+    /// The leader (lowest id) of group `g`.
+    pub fn leader(&self, g: usize) -> usize {
+        self.spans[g].0
+    }
+
+    /// Whether worker `w` leads its group.
+    pub fn is_leader(&self, w: usize) -> bool {
+        self.spans.iter().any(|&(s, _)| s == w)
+    }
+
+    /// All group leaders, in ascending group order.
+    pub fn leaders(&self) -> Vec<usize> {
+        self.spans.iter().map(|&(s, _)| s).collect()
+    }
+
+    /// Members of group `g`, excluding its leader.
+    pub fn members(&self, g: usize) -> Vec<usize> {
+        let (s, l) = self.spans[g];
+        (s + 1..s + l).collect()
+    }
+}
+
+/// The three-phase leader-based allgatherv: members up, leaders
+/// exchange, leaders fan down (segment-wise when the fabric configures
+/// gather segmentation).
+pub struct GroupGather<'g> {
+    g: &'g GroupSpans,
+    segs: Vec<Vec<Vec<u8>>>,
+    state: GatherState,
+}
+
+impl<'g> GroupGather<'g> {
+    pub fn new(g: &'g GroupSpans, inputs: &[Vec<u8>], seg: usize) -> GroupGather<'g> {
+        GroupGather {
+            g,
+            segs: split_all(inputs, seg),
+            state: GatherState::new(inputs, seg),
+        }
+    }
+
+    pub fn into_gathered(self) -> Vec<Vec<Vec<u8>>> {
+        self.state.into_gathered()
+    }
+
+    fn msg(&self, origin: usize, seg: u32, hop: u32, tag: u8, payload: &Payload) -> Msg {
+        Msg {
+            origin,
+            seg,
+            hop,
+            tag,
+            payload: payload.clone(),
+        }
+    }
+}
+
+impl Protocol for GroupGather<'_> {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        let mut out = Vec::new();
+        for w in 0..self.g.workers() {
+            let grp = self.g.group_of(w);
+            for (si, sg) in self.segs[w].iter().enumerate() {
+                let si = si as u32;
+                let payload = Payload::Bytes(sg.clone());
+                if self.g.is_leader(w) {
+                    for l in self.g.leaders() {
+                        if l != w {
+                            out.push((w, l, self.msg(w, si, 1, TAG_XCHG, &payload)));
+                        }
+                    }
+                    for m in self.g.members(grp) {
+                        out.push((w, m, self.msg(w, si, 1, TAG_DOWN, &payload)));
+                    }
+                } else {
+                    out.push((w, self.g.leader(grp), self.msg(w, si, 1, TAG_UP, &payload)));
+                }
+            }
+        }
+        out
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        let Payload::Bytes(b) = &msg.payload else {
+            unreachable!("gather protocol only moves bytes")
+        };
+        self.state.store(node, msg.origin, msg.seg as usize, b);
+        if !self.g.is_leader(node) {
+            return Vec::new();
+        }
+        let grp = self.g.group_of(node);
+        let mut out = Vec::new();
+        match msg.tag {
+            TAG_UP => {
+                // A member segment: cross to the other leaders and to
+                // the rest of this group.
+                for l in self.g.leaders() {
+                    if l != node {
+                        out.push((
+                            l,
+                            self.msg(msg.origin, msg.seg, msg.hop + 1, TAG_XCHG, &msg.payload),
+                        ));
+                    }
+                }
+                for m in self.g.members(grp) {
+                    if m != msg.origin {
+                        out.push((
+                            m,
+                            self.msg(msg.origin, msg.seg, msg.hop + 1, TAG_DOWN, &msg.payload),
+                        ));
+                    }
+                }
+            }
+            TAG_XCHG => {
+                // Another group's segment: fan down to this group.
+                for m in self.g.members(grp) {
+                    out.push((
+                        m,
+                        self.msg(msg.origin, msg.seg, msg.hop + 1, TAG_DOWN, &msg.payload),
+                    ));
+                }
+            }
+            other => unreachable!("leader received unexpected tag {other}"),
+        }
+        out
+    }
+}
+
+/// The three-phase leader-based allreduce: group partials at the
+/// leader (leader + members, ascending id), pairwise exchange of
+/// partials, grand total in ascending group order, fan-out down.
+pub struct GroupReduce<'g> {
+    g: &'g GroupSpans,
+    n: usize,
+    inputs: Vec<Vec<f32>>,
+    /// Member vectors buffered at leaders, by member worker id.
+    up: Vec<Option<Vec<f32>>>,
+    /// Group partials buffered per receiving group, by sender group.
+    partials: Vec<Vec<Option<Vec<f32>>>>,
+    /// Final sums as seen by each worker.
+    totals: Vec<Option<Vec<f32>>>,
+}
+
+impl<'g> GroupReduce<'g> {
+    pub fn new(g: &'g GroupSpans, inputs: &[Vec<f32>]) -> GroupReduce<'g> {
+        let p = g.workers();
+        let gn = g.groups();
+        GroupReduce {
+            g,
+            n: inputs[0].len(),
+            inputs: inputs.to_vec(),
+            up: vec![None; p],
+            partials: vec![vec![None; gn]; gn],
+            totals: vec![None; p],
+        }
+    }
+
+    pub fn into_totals(self) -> Vec<Vec<f32>> {
+        self.totals
+            .into_iter()
+            .map(|slot| slot.expect("group reduce under-delivered"))
+            .collect()
+    }
+
+    /// Sum group `grp` (leader + members, ascending id) — phase 1.
+    fn group_partial(&self, grp: usize) -> Vec<f32> {
+        let mut sum = self.inputs[self.g.leader(grp)].clone();
+        for m in self.g.members(grp) {
+            let v = self.up[m].as_ref().expect("member vector missing");
+            for (k, x) in v.iter().enumerate() {
+                sum[k] += x;
+            }
+        }
+        sum
+    }
+
+    /// Once group `grp`'s leader holds every group partial, the grand
+    /// total (ascending group order) and the phase-3 fan-out.
+    fn try_finish(&mut self, grp: usize, hop: u32) -> Vec<(usize, Msg)> {
+        if self.partials[grp].iter().any(|p| p.is_none()) {
+            return Vec::new();
+        }
+        let mut total = vec![0.0f32; self.n];
+        for slot in &self.partials[grp] {
+            let v = slot.as_ref().unwrap();
+            for (k, x) in v.iter().enumerate() {
+                total[k] += x;
+            }
+        }
+        let leader = self.g.leader(grp);
+        self.totals[leader] = Some(total.clone());
+        let payload = Payload::F32(total);
+        self.g
+            .members(grp)
+            .into_iter()
+            .map(|m| {
+                (
+                    m,
+                    Msg {
+                        origin: leader,
+                        seg: 0,
+                        hop,
+                        tag: TAG_DOWN,
+                        payload: payload.clone(),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// Group `grp` is reduced: record the partial, exchange it across
+    /// the leader links (phase 2), and possibly finish (a single-group
+    /// partition finishes immediately).
+    fn group_ready(&mut self, grp: usize, hop: u32) -> Vec<(usize, Msg)> {
+        let partial = self.group_partial(grp);
+        self.partials[grp][grp] = Some(partial.clone());
+        let leader = self.g.leader(grp);
+        let payload = Payload::F32(partial);
+        let mut out: Vec<(usize, Msg)> = self
+            .g
+            .leaders()
+            .into_iter()
+            .filter(|&l| l != leader)
+            .map(|l| {
+                (
+                    l,
+                    Msg {
+                        origin: leader,
+                        seg: 0,
+                        hop,
+                        tag: TAG_XCHG,
+                        payload: payload.clone(),
+                    },
+                )
+            })
+            .collect();
+        out.extend(self.try_finish(grp, hop + 1));
+        out
+    }
+}
+
+impl Protocol for GroupReduce<'_> {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        let mut out = Vec::new();
+        for w in 0..self.g.workers() {
+            if !self.g.is_leader(w) {
+                out.push((
+                    w,
+                    self.g.leader(self.g.group_of(w)),
+                    Msg {
+                        origin: w,
+                        seg: 0,
+                        hop: 1,
+                        tag: TAG_UP,
+                        payload: Payload::F32(self.inputs[w].clone()),
+                    },
+                ));
+            }
+        }
+        // Groups that are just their leader are reduced at t = 0.
+        for grp in 0..self.g.groups() {
+            if self.g.members(grp).is_empty() {
+                let leader = self.g.leader(grp);
+                for (dst, msg) in self.group_ready(grp, 1) {
+                    out.push((leader, dst, msg));
+                }
+            }
+        }
+        out
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        let Payload::F32(v) = &msg.payload else {
+            unreachable!("reduce protocol only moves f32 vectors")
+        };
+        match msg.tag {
+            TAG_UP => {
+                self.up[msg.origin] = Some(v.clone());
+                let grp = self.g.group_of(node);
+                let complete = self
+                    .g
+                    .members(grp)
+                    .iter()
+                    .all(|&m| self.up[m].is_some());
+                if complete {
+                    self.group_ready(grp, msg.hop + 1)
+                } else {
+                    Vec::new()
+                }
+            }
+            TAG_XCHG => {
+                let grp = self.g.group_of(node);
+                self.partials[grp][self.g.group_of(msg.origin)] = Some(v.clone());
+                self.try_finish(grp, msg.hop + 1)
+            }
+            TAG_DOWN => {
+                self.totals[node] = Some(v.clone());
+                Vec::new()
+            }
+            other => unreachable!("unknown group reduce tag {other}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn branch_spans_tile_the_workers() {
+        let g = GroupSpans::from_branch(10, 4);
+        assert_eq!(g.groups(), 3);
+        assert_eq!(g.leaders(), vec![0, 4, 8]);
+        assert_eq!(g.members(2), vec![9]);
+        assert_eq!(g.group_of(5), 1);
+        assert!(g.is_leader(8));
+        assert!(!g.is_leader(9));
+    }
+
+    #[test]
+    fn span_constructor_round_trips_hier_partitions() {
+        let g = GroupSpans::from_spans(5, vec![(0, 2), (2, 2), (4, 1)]);
+        assert_eq!(g.groups(), 3);
+        assert_eq!(g.leaders(), vec![0, 2, 4]);
+        assert_eq!(g.members(0), vec![1]);
+        assert!(g.members(2).is_empty());
+    }
+}

@@ -6,7 +6,8 @@
 //! ([`group_spans`]); `hier` alone picks `≈ √p` groups
 //! ([`auto_groups`]). The lowest id of each group is its leader, and
 //! leaders are themselves workers — no extra infrastructure node.
-//! Collectives run the three NUMA phases:
+//! Collectives run the three NUMA phases (shared with [`super::tree`]
+//! via `fabric::groups`):
 //!
 //! 1. **reduce/collect within** — members send to their group leader
 //!    over fast intra-group links;
@@ -43,16 +44,10 @@
 //! assert_eq!(out.gathered[3][0], inputs[0]);
 //! ```
 
-use super::collectives::{split_all, traffic_from, GatherState, SimGather, SimReduce};
+use super::collectives::{traffic_from, SimGather, SimReduce};
+use super::groups::{GroupGather, GroupReduce, GroupSpans};
 use super::topology::{Topology, TopologyKind};
-use super::{Fabric, FabricConfig, LinkSpec, Msg, Payload, Protocol};
-
-/// Member block/vector travelling up to its group leader.
-const TAG_UP: u8 = 0;
-/// Leader-to-leader exchange across the uplinks.
-const TAG_XCHG: u8 = 1;
-/// Leader fan-out down to its members.
-const TAG_DOWN: u8 = 2;
+use super::{Fabric, FabricConfig, LinkSpec};
 
 /// Uplink bandwidth when `FabricConfig::inter_rack_gbps` is unset:
 /// 10:1 oversubscription of the intra-group links.
@@ -83,7 +78,7 @@ pub fn auto_groups(p: usize) -> usize {
 
 pub struct Hierarchy {
     p: usize,
-    spans: Vec<(usize, usize)>,
+    spans: GroupSpans,
 }
 
 impl Hierarchy {
@@ -101,279 +96,29 @@ impl Hierarchy {
         );
         Hierarchy {
             p: workers,
-            spans: group_spans(workers, g),
+            spans: GroupSpans::from_spans(workers, group_spans(workers, g)),
         }
     }
 
     fn groups(&self) -> usize {
-        self.spans.len()
+        self.spans.groups()
     }
 
     fn group_of(&self, w: usize) -> usize {
-        self.spans
-            .iter()
-            .position(|&(s, l)| w >= s && w < s + l)
-            .expect("worker outside every span")
-    }
-
-    fn leader(&self, g: usize) -> usize {
-        self.spans[g].0
+        self.spans.group_of(w)
     }
 
     fn is_leader(&self, w: usize) -> bool {
-        self.spans.iter().any(|&(s, _)| s == w)
+        self.spans.is_leader(w)
     }
 
     fn leaders(&self) -> Vec<usize> {
-        self.spans.iter().map(|&(s, _)| s).collect()
+        self.spans.leaders()
     }
 
     /// Members of group `g`, excluding its leader.
     fn members(&self, g: usize) -> Vec<usize> {
-        let (s, l) = self.spans[g];
-        (s + 1..s + l).collect()
-    }
-}
-
-struct HierGather<'t> {
-    t: &'t Hierarchy,
-    segs: Vec<Vec<Vec<u8>>>,
-    state: GatherState,
-}
-
-impl HierGather<'_> {
-    fn msg(&self, origin: usize, seg: u32, hop: u32, tag: u8, payload: &Payload) -> Msg {
-        Msg {
-            origin,
-            seg,
-            hop,
-            tag,
-            payload: payload.clone(),
-        }
-    }
-}
-
-impl Protocol for HierGather<'_> {
-    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
-        let mut out = Vec::new();
-        for w in 0..self.t.p {
-            let g = self.t.group_of(w);
-            for (si, sg) in self.segs[w].iter().enumerate() {
-                let si = si as u32;
-                let payload = Payload::Bytes(sg.clone());
-                if self.t.is_leader(w) {
-                    for l in self.t.leaders() {
-                        if l != w {
-                            out.push((w, l, self.msg(w, si, 1, TAG_XCHG, &payload)));
-                        }
-                    }
-                    for m in self.t.members(g) {
-                        out.push((w, m, self.msg(w, si, 1, TAG_DOWN, &payload)));
-                    }
-                } else {
-                    out.push((w, self.t.leader(g), self.msg(w, si, 1, TAG_UP, &payload)));
-                }
-            }
-        }
-        out
-    }
-
-    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
-        let Payload::Bytes(b) = &msg.payload else {
-            unreachable!("gather protocol only moves bytes")
-        };
-        self.state.store(node, msg.origin, msg.seg as usize, b);
-        if !self.t.is_leader(node) {
-            return Vec::new();
-        }
-        let g = self.t.group_of(node);
-        let mut out = Vec::new();
-        match msg.tag {
-            TAG_UP => {
-                // A member segment: cross the uplinks and fan to the
-                // rest of this group.
-                for l in self.t.leaders() {
-                    if l != node {
-                        out.push((
-                            l,
-                            self.msg(msg.origin, msg.seg, msg.hop + 1, TAG_XCHG, &msg.payload),
-                        ));
-                    }
-                }
-                for m in self.t.members(g) {
-                    if m != msg.origin {
-                        out.push((
-                            m,
-                            self.msg(msg.origin, msg.seg, msg.hop + 1, TAG_DOWN, &msg.payload),
-                        ));
-                    }
-                }
-            }
-            TAG_XCHG => {
-                // Another rack's segment: broadcast within.
-                for m in self.t.members(g) {
-                    out.push((
-                        m,
-                        self.msg(msg.origin, msg.seg, msg.hop + 1, TAG_DOWN, &msg.payload),
-                    ));
-                }
-            }
-            other => unreachable!("leader received unexpected tag {other}"),
-        }
-        out
-    }
-}
-
-struct HierReduce<'t> {
-    t: &'t Hierarchy,
-    n: usize,
-    inputs: Vec<Vec<f32>>,
-    /// Member vectors buffered at leaders, by member worker id.
-    up: Vec<Option<Vec<f32>>>,
-    /// Group partials buffered per receiving group, by sender group.
-    partials: Vec<Vec<Option<Vec<f32>>>>,
-    /// Final sums as seen by each worker.
-    totals: Vec<Option<Vec<f32>>>,
-}
-
-impl HierReduce<'_> {
-    /// Sum group `g` (leader + members, ascending id) — phase 1.
-    fn group_partial(&self, g: usize) -> Vec<f32> {
-        let mut sum = self.inputs[self.t.leader(g)].clone();
-        for m in self.t.members(g) {
-            let v = self.up[m].as_ref().expect("member vector missing");
-            for (k, x) in v.iter().enumerate() {
-                sum[k] += x;
-            }
-        }
-        sum
-    }
-
-    /// Once group `g`'s leader holds every group partial, the grand
-    /// total (ascending group order) and the phase-3 fan-out.
-    fn try_finish(&mut self, g: usize, hop: u32) -> Vec<(usize, Msg)> {
-        if self.partials[g].iter().any(|p| p.is_none()) {
-            return Vec::new();
-        }
-        let mut total = vec![0.0f32; self.n];
-        for slot in &self.partials[g] {
-            let v = slot.as_ref().unwrap();
-            for (k, x) in v.iter().enumerate() {
-                total[k] += x;
-            }
-        }
-        let leader = self.t.leader(g);
-        self.totals[leader] = Some(total.clone());
-        let payload = Payload::F32(total);
-        self.t
-            .members(g)
-            .into_iter()
-            .map(|m| {
-                (
-                    m,
-                    Msg {
-                        origin: leader,
-                        seg: 0,
-                        hop,
-                        tag: TAG_DOWN,
-                        payload: payload.clone(),
-                    },
-                )
-            })
-            .collect()
-    }
-
-    /// Group `g` is reduced: record the partial, exchange it across
-    /// the uplinks (phase 2), and possibly finish (a single-group
-    /// hierarchy finishes immediately).
-    fn group_ready(&mut self, g: usize, hop: u32) -> Vec<(usize, Msg)> {
-        let partial = self.group_partial(g);
-        self.partials[g][g] = Some(partial.clone());
-        let leader = self.t.leader(g);
-        let payload = Payload::F32(partial);
-        let mut out: Vec<(usize, Msg)> = self
-            .t
-            .leaders()
-            .into_iter()
-            .filter(|&l| l != leader)
-            .map(|l| {
-                (
-                    l,
-                    Msg {
-                        origin: leader,
-                        seg: 0,
-                        hop,
-                        tag: TAG_XCHG,
-                        payload: payload.clone(),
-                    },
-                )
-            })
-            .collect();
-        out.extend(self.try_finish(g, hop + 1));
-        out
-    }
-}
-
-impl Protocol for HierReduce<'_> {
-    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
-        let mut out = Vec::new();
-        for w in 0..self.t.p {
-            if !self.t.is_leader(w) {
-                out.push((
-                    w,
-                    self.t.leader(self.t.group_of(w)),
-                    Msg {
-                        origin: w,
-                        seg: 0,
-                        hop: 1,
-                        tag: TAG_UP,
-                        payload: Payload::F32(self.inputs[w].clone()),
-                    },
-                ));
-            }
-        }
-        // Single-worker groups are reduced at t = 0.
-        for g in 0..self.t.groups() {
-            if self.t.members(g).is_empty() {
-                let leader = self.t.leader(g);
-                for (dst, msg) in self.group_ready(g, 1) {
-                    out.push((leader, dst, msg));
-                }
-            }
-        }
-        out
-    }
-
-    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
-        let Payload::F32(v) = &msg.payload else {
-            unreachable!("reduce protocol only moves f32 vectors")
-        };
-        match msg.tag {
-            TAG_UP => {
-                self.up[msg.origin] = Some(v.clone());
-                let g = self.t.group_of(node);
-                let complete = self
-                    .t
-                    .members(g)
-                    .iter()
-                    .all(|&m| self.up[m].is_some());
-                if complete {
-                    self.group_ready(g, msg.hop + 1)
-                } else {
-                    Vec::new()
-                }
-            }
-            TAG_XCHG => {
-                let g = self.t.group_of(node);
-                self.partials[g][self.t.group_of(msg.origin)] = Some(v.clone());
-                self.try_finish(g, msg.hop + 1)
-            }
-            TAG_DOWN => {
-                self.totals[node] = Some(v.clone());
-                Vec::new()
-            }
-            other => unreachable!("unknown hier reduce tag {other}"),
-        }
+        self.spans.members(g)
     }
 }
 
@@ -429,14 +174,10 @@ impl Topology for Hierarchy {
     fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
         assert_eq!(inputs.len(), self.p, "one input message per worker");
         let seg = fabric.segment_bytes();
-        let mut proto = HierGather {
-            t: self,
-            segs: split_all(inputs, seg),
-            state: GatherState::new(inputs, seg),
-        };
+        let mut proto = GroupGather::new(&self.spans, inputs, seg);
         let time_ps = if self.p > 1 { fabric.run(&mut proto) } else { 0 };
         SimGather {
-            gathered: proto.state.into_gathered(),
+            gathered: proto.into_gathered(),
             traffic: traffic_from(fabric, self.gather_rounds()),
             time_ps,
             events: fabric.events(),
@@ -447,23 +188,12 @@ impl Topology for Hierarchy {
         assert_eq!(inputs.len(), self.p);
         let n = inputs[0].len();
         assert!(inputs.iter().all(|v| v.len() == n), "length mismatch");
-        let mut proto = HierReduce {
-            t: self,
-            n,
-            inputs: inputs.to_vec(),
-            up: vec![None; self.p],
-            partials: vec![vec![None; self.groups()]; self.groups()],
-            totals: vec![None; self.p],
-        };
+        let mut proto = GroupReduce::new(&self.spans, inputs);
         let time_ps = if self.p > 1 { fabric.run(&mut proto) } else { 0 };
         let reduced: Vec<Vec<f32>> = if self.p == 1 {
             vec![inputs[0].clone()]
         } else {
-            proto
-                .totals
-                .iter()
-                .map(|slot| slot.clone().expect("hier reduce under-delivered"))
-                .collect()
+            proto.into_totals()
         };
         SimReduce {
             reduced,

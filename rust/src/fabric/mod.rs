@@ -46,6 +46,8 @@
 
 pub mod clock;
 pub mod collectives;
+pub mod faults;
+pub mod groups;
 pub mod hierarchy;
 pub mod link;
 pub mod node;
@@ -59,13 +61,22 @@ use std::collections::BTreeMap;
 
 pub use clock::{SimClock, Time};
 pub use collectives::{SimGather, SimReduce};
+pub use faults::{FabricReport, FaultPlan};
 pub use link::{LinkSpec, LinkStat, LinkTable};
 pub use node::{Node, NodePerf, Straggler};
-pub use topology::{build_topology, Topology, TopologyKind};
+pub use topology::{build_topology, degraded_topology, Topology, TopologyKind};
 
+use crate::util::backoff::Backoff;
 use crate::util::cli::Args;
 use crate::util::json::{num, obj, s, Json};
 use crate::util::rng::Pcg32;
+
+/// Failed transmissions of one message on one hop after which the
+/// simulation gives up. With loss rates capped at
+/// [`faults::MAX_LOSS_RATE`] the chance of hitting this is
+/// astronomically small; reaching it means the plan describes a link
+/// that cannot make progress.
+const MAX_SEND_ATTEMPTS: u32 = 1_000;
 
 /// Message payloads: wire bytes (codec messages) or f32 vectors
 /// (dense allreduce partials). Sizes are what the links bill for.
@@ -97,10 +108,71 @@ pub struct Msg {
     pub payload: Payload,
 }
 
-/// A delivery event in the clock queue.
-struct Delivery {
-    dst: usize,
-    msg: Msg,
+/// Events in the clock queue: a successful delivery handed to the
+/// protocol, or a retransmit timer for a message the chaos plan
+/// dropped or corrupted in flight. `dst`/`src` are logical ranks (see
+/// [`Fabric::for_degraded`]).
+enum Ev {
+    Delivery {
+        dst: usize,
+        msg: Msg,
+    },
+    Retransmit {
+        src: usize,
+        dst: usize,
+        msg: Msg,
+        attempt: u32,
+    },
+}
+
+/// Transport-level fault state compiled from a [`FaultPlan`], keyed by
+/// *physical* directed edges.
+#[derive(Default)]
+struct ChaosState {
+    active: bool,
+    /// `(drop, corrupt)` probabilities per directed edge.
+    rates: BTreeMap<(usize, usize), (f64, f64)>,
+    /// Outage windows per directed edge, ps relative to run start.
+    flaps: BTreeMap<(usize, usize), Vec<(Time, Time)>>,
+}
+
+impl ChaosState {
+    fn from_plan(plan: &FaultPlan, node_count: usize) -> ChaosState {
+        let mut st = ChaosState::default();
+        for f in &plan.flaps {
+            assert!(
+                f.src < node_count && f.dst < node_count,
+                "flap edge {}-{} out of range (fabric has {node_count} nodes)",
+                f.src,
+                f.dst
+            );
+            st.flaps.entry((f.src, f.dst)).or_default().push((
+                (f.down_us * 1_000_000.0) as Time, // us -> ps
+                (f.up_us * 1_000_000.0) as Time,
+            ));
+        }
+        for c in &plan.chaos {
+            assert!(
+                c.src < node_count && c.dst < node_count,
+                "loss edge {}-{} out of range (fabric has {node_count} nodes)",
+                c.src,
+                c.dst
+            );
+            st.rates.insert((c.src, c.dst), (c.drop, c.corrupt));
+        }
+        st.active = !(st.rates.is_empty() && st.flaps.is_empty());
+        st
+    }
+
+    /// If `t_rel` falls inside a down window of `edge`, the window's
+    /// end (ps relative to run start).
+    fn down_until(&self, edge: (usize, usize), t_rel: Time) -> Option<Time> {
+        self.flaps
+            .get(&edge)?
+            .iter()
+            .find(|&&(down, up)| t_rel >= down && t_rel < up)
+            .map(|&(_, up)| up)
+    }
 }
 
 /// One line of the event trace: enough to prove two runs identical and
@@ -125,12 +197,26 @@ pub trait Protocol {
 }
 
 /// The simulated cluster: nodes + per-edge link model + event clock.
+///
+/// Fault injection draws from `fault_rng`, a stream separate from the
+/// jitter `rng`, so the same seed produces bit-identical timing with
+/// and without a chaos plan on the paths the plan leaves untouched.
 pub struct Fabric {
     table: LinkTable,
     segment_bytes: usize,
     nodes: Vec<Node>,
-    clock: SimClock<Delivery>,
+    clock: SimClock<Ev>,
     rng: Pcg32,
+    fault_rng: Pcg32,
+    chaos: ChaosState,
+    report: FabricReport,
+    /// `rank_map[logical] = physical` when running a degraded
+    /// collective over a survivor subset (see
+    /// [`Fabric::for_degraded`]); `None` = identity.
+    rank_map: Option<Vec<usize>>,
+    /// Start time of the current `run` — flap windows are relative to
+    /// it, so each collective sees the plan's windows afresh.
+    run_t0: Time,
     links: BTreeMap<(usize, usize), LinkStat>,
     trace: Vec<TraceEvent>,
 }
@@ -146,6 +232,11 @@ impl Fabric {
             nodes: (0..node_count).map(Node::new).collect(),
             clock: SimClock::new(),
             rng: Pcg32::new(seed, 0xFAB),
+            fault_rng: Pcg32::new(seed, 0xFA17),
+            chaos: ChaosState::default(),
+            report: FabricReport::default(),
+            rank_map: None,
+            run_t0: 0,
             links: BTreeMap::new(),
             trace: Vec::new(),
         }
@@ -166,6 +257,39 @@ impl Fabric {
     /// `FabricConfig::link_overrides` always win.
     pub fn for_topology(cfg: &FabricConfig, topo: &dyn Topology) -> Fabric {
         Fabric::build(cfg, topo.node_count(), &topo.link_overrides(cfg))
+    }
+
+    /// Build for a degraded collective over a survivor set. The
+    /// topology is defined over *logical* ranks `0..topo.node_count()`
+    /// and `rank_map[logical]` names the physical node backing each
+    /// rank. Ports, link specs, stragglers, traffic accounting, chaos
+    /// edges, and the trace all stay physical; protocols keep speaking
+    /// logical ranks. Topology-derived link overrides (logical — e.g.
+    /// a re-elected hierarchy leader's uplinks) are translated through
+    /// the map; explicit config overrides stay physical and still win.
+    pub fn for_degraded(
+        cfg: &FabricConfig,
+        topo: &dyn Topology,
+        rank_map: Vec<usize>,
+        phys_nodes: usize,
+    ) -> Fabric {
+        assert_eq!(
+            rank_map.len(),
+            topo.node_count(),
+            "rank map must cover every logical node"
+        );
+        assert!(
+            rank_map.iter().all(|&p| p < phys_nodes),
+            "rank map names a node outside the physical fabric"
+        );
+        let translated: Vec<(usize, usize, LinkSpec)> = topo
+            .link_overrides(cfg)
+            .into_iter()
+            .map(|(a, b, spec)| (rank_map[a], rank_map[b], spec))
+            .collect();
+        let mut f = Fabric::build(cfg, phys_nodes, &translated);
+        f.rank_map = Some(rank_map);
+        f
     }
 
     fn build(
@@ -190,6 +314,7 @@ impl Fabric {
         for &(src, dst, spec) in &cfg.link_overrides {
             f.set_link(src, dst, spec);
         }
+        f.chaos = ChaosState::from_plan(&cfg.faults, node_count);
         f
     }
 
@@ -230,9 +355,46 @@ impl Fabric {
         self.clock.now() as f64 * 1e-12
     }
 
-    /// Deliveries processed so far (event-throughput denominator).
+    /// Events processed so far (deliveries plus any retransmit timers
+    /// — the event-throughput denominator).
     pub fn events(&self) -> u64 {
         self.clock.processed()
+    }
+
+    /// Fault and recovery counters accumulated across every `run` on
+    /// this fabric. All zeros when no fault fired.
+    pub fn report(&self) -> FabricReport {
+        self.report
+    }
+
+    /// Record `n` route-arounds (dead nodes the caller mapped out of a
+    /// collective). The transport cannot see membership changes — the
+    /// comm layer reports them here so one [`FabricReport`] carries
+    /// the whole story.
+    pub fn note_reroutes(&mut self, n: u64) {
+        self.report.reroutes += n;
+    }
+
+    /// Physical node behind logical rank `n`.
+    fn phys(&self, n: usize) -> usize {
+        match &self.rank_map {
+            Some(m) => m[n],
+            None => n,
+        }
+    }
+
+    /// Retransmit timeout after `attempt` previous failed tries of a
+    /// hop: the cost model's analytic per-hop bracket (serialization +
+    /// latency + worst-case jitter) as the base, with the same bounded
+    /// exponential [`Backoff`] the job scheduler uses — in ps.
+    fn rto(&self, spec: &LinkSpec, bytes: u64, attempt: u32) -> Time {
+        let hop = (spec.ser_ps(bytes) + spec.latency_ps() + spec.jitter_ps()).max(1);
+        let b = Backoff {
+            base: hop,
+            factor: 2.0,
+            max: hop.saturating_mul(64),
+        };
+        b.delay(attempt + 1)
     }
 
     /// Per-directed-link traffic accounting, deterministic order.
@@ -255,18 +417,23 @@ impl Fabric {
         self.nodes.iter().map(|n| n.sent_bytes).collect()
     }
 
-    /// Schedule a message from `src` to `dst`, not before `ready`.
-    fn send(&mut self, src: usize, dst: usize, msg: Msg, ready: Time) {
+    /// Schedule a message from logical `src` to logical `dst`, not
+    /// before `ready`. `attempt` counts prior failed transmissions of
+    /// this message on this hop (0 for a first send). Egress time and
+    /// link traffic are billed even for transmissions the chaos plan
+    /// kills — the bits were pushed onto the wire either way.
+    fn send(&mut self, src: usize, dst: usize, msg: Msg, ready: Time, attempt: u32) {
         assert!(src != dst, "self-send from node {src}");
-        let spec = *self.table.spec(src, dst);
+        let (psrc, pdst) = (self.phys(src), self.phys(dst));
+        let spec = *self.table.spec(psrc, pdst);
         let bytes = msg.payload.size_bytes();
         let ser = spec.ser_ps(bytes);
 
-        let tx_ser = self.nodes[src].scaled(ser);
-        let start_tx = ready.max(self.nodes[src].egress_free);
-        self.nodes[src].egress_free = start_tx + tx_ser;
-        self.nodes[src].sent_bytes += bytes;
-        self.nodes[src].sent_messages += 1;
+        let tx_ser = self.nodes[psrc].scaled(ser);
+        let start_tx = ready.max(self.nodes[psrc].egress_free);
+        self.nodes[psrc].egress_free = start_tx + tx_ser;
+        self.nodes[psrc].sent_bytes += bytes;
+        self.nodes[psrc].sent_messages += 1;
 
         let jitter_max = spec.jitter_ps();
         let jitter = if jitter_max > 0 {
@@ -275,50 +442,135 @@ impl Fabric {
             0
         };
         let front = start_tx + spec.latency_ps() + jitter;
+        let tx_tail = start_tx + tx_ser + spec.latency_ps() + jitter;
+
+        let stat = self.links.entry((psrc, pdst)).or_default();
+        stat.bytes += bytes;
+        stat.messages += 1;
+
+        if self.chaos.active {
+            // Link down when transmission starts: the bits die on the
+            // wire (egress spent, ingress never touched). Retry once
+            // the window ends, plus the per-hop backoff.
+            let t_rel = start_tx.saturating_sub(self.run_t0);
+            if let Some(up_rel) = self.chaos.down_until((psrc, pdst), t_rel) {
+                self.report.drops += 1;
+                self.trace.push(TraceEvent {
+                    sent: start_tx,
+                    delivered: tx_tail,
+                    src: psrc,
+                    dst: pdst,
+                    origin: msg.origin,
+                    tag: msg.tag,
+                    bytes,
+                });
+                let at = (self.run_t0 + up_rel).max(tx_tail) + self.rto(&spec, bytes, attempt);
+                self.clock.schedule(at, Ev::Retransmit { src, dst, msg, attempt });
+                return;
+            }
+            if let Some(&(p_drop, p_corrupt)) = self.chaos.rates.get(&(psrc, pdst)) {
+                let u = self.fault_rng.next_f64();
+                if u < p_drop {
+                    // Random loss: same shape as a flap drop.
+                    self.report.drops += 1;
+                    self.trace.push(TraceEvent {
+                        sent: start_tx,
+                        delivered: tx_tail,
+                        src: psrc,
+                        dst: pdst,
+                        origin: msg.origin,
+                        tag: msg.tag,
+                        bytes,
+                    });
+                    let at = tx_tail + self.rto(&spec, bytes, attempt);
+                    self.clock.schedule(at, Ev::Retransmit { src, dst, msg, attempt });
+                    return;
+                }
+                if u < p_drop + p_corrupt {
+                    // Corruption: full delivery timing — the garbage
+                    // occupies the ingress port like a real message —
+                    // but the receiver discards it on checksum.
+                    let rx_ser = self.nodes[pdst].scaled(ser);
+                    let rx_start = front.max(self.nodes[pdst].ingress_free);
+                    let delivered = (rx_start + rx_ser).max(tx_tail);
+                    self.nodes[pdst].ingress_free = delivered;
+                    self.report.corruptions += 1;
+                    self.trace.push(TraceEvent {
+                        sent: start_tx,
+                        delivered,
+                        src: psrc,
+                        dst: pdst,
+                        origin: msg.origin,
+                        tag: msg.tag,
+                        bytes,
+                    });
+                    let at = delivered + self.rto(&spec, bytes, attempt);
+                    self.clock.schedule(at, Ev::Retransmit { src, dst, msg, attempt });
+                    return;
+                }
+            }
+        }
 
         // Delivery completes when the receiver has drained the message
         // (ingress queue + rx serialization) AND the sender has pushed
         // the last bit (tx serialization + propagation) — whichever is
         // later. Uncontended equal-rate hops reduce to ser + latency.
-        let rx_ser = self.nodes[dst].scaled(ser);
-        let rx_start = front.max(self.nodes[dst].ingress_free);
-        let tx_tail = start_tx + tx_ser + spec.latency_ps() + jitter;
+        let rx_ser = self.nodes[pdst].scaled(ser);
+        let rx_start = front.max(self.nodes[pdst].ingress_free);
         let delivered = (rx_start + rx_ser).max(tx_tail);
-        self.nodes[dst].ingress_free = delivered;
-
-        let stat = self.links.entry((src, dst)).or_default();
-        stat.bytes += bytes;
-        stat.messages += 1;
+        self.nodes[pdst].ingress_free = delivered;
 
         self.trace.push(TraceEvent {
             sent: start_tx,
             delivered,
-            src,
-            dst,
+            src: psrc,
+            dst: pdst,
             origin: msg.origin,
             tag: msg.tag,
             bytes,
         });
-        self.clock.schedule(delivered, Delivery { dst, msg });
+        self.clock.schedule(delivered, Ev::Delivery { dst, msg });
     }
 
     /// Drive a protocol to completion; returns the finish time (ps).
     /// Running a second protocol on the same fabric continues the
-    /// clock (back-to-back collectives share port state).
+    /// clock (back-to-back collectives share port state). Flap windows
+    /// in the fault plan are relative to this run's start.
     pub fn run(&mut self, proto: &mut dyn Protocol) -> Time {
         let t0 = self.clock.now();
+        self.run_t0 = t0;
         for (src, dst, msg) in proto.start() {
-            self.send(src, dst, msg, t0);
+            self.send(src, dst, msg, t0, 0);
         }
-        while let Some((t, d)) = self.clock.pop() {
-            let Delivery { dst, msg } = d;
-            self.nodes[dst].recv_bytes += msg.payload.size_bytes();
-            self.nodes[dst].recv_messages += 1;
-            let outs = proto.on_deliver(dst, &msg);
-            if !outs.is_empty() {
-                let ready = t + self.nodes[dst].compute_delay();
-                for (to, m) in outs {
-                    self.send(dst, to, m, ready);
+        while let Some((t, ev)) = self.clock.pop() {
+            match ev {
+                Ev::Delivery { dst, msg } => {
+                    let pdst = self.phys(dst);
+                    self.nodes[pdst].recv_bytes += msg.payload.size_bytes();
+                    self.nodes[pdst].recv_messages += 1;
+                    let outs = proto.on_deliver(dst, &msg);
+                    if !outs.is_empty() {
+                        let ready = t + self.nodes[pdst].compute_delay();
+                        for (to, m) in outs {
+                            self.send(dst, to, m, ready, 0);
+                        }
+                    }
+                }
+                Ev::Retransmit {
+                    src,
+                    dst,
+                    msg,
+                    attempt,
+                } => {
+                    let attempt = attempt + 1;
+                    assert!(
+                        attempt <= MAX_SEND_ATTEMPTS,
+                        "link {src}->{dst} unrecoverable: \
+                         {MAX_SEND_ATTEMPTS} failed transmissions"
+                    );
+                    self.report.retries += 1;
+                    self.report.retransmitted_bytes += msg.payload.size_bytes();
+                    self.send(src, dst, msg, t, attempt);
                 }
             }
         }
@@ -327,12 +579,12 @@ impl Fabric {
 }
 
 /// Full fabric configuration: topology choice + link model + per-link
-/// overrides + gather segmentation + seeds + straggler injection.
-/// Serializes into the experiment record and parses from CLI flags
-/// (`--topology`, `--torus-dims`, `--hier-groups`, `--bandwidth-gbps`,
-/// `--latency-us`, `--jitter-us`, `--inter-rack-gbps`,
-/// `--segment-bytes`, `--link-overrides`, `--stragglers`,
-/// `--fabric-seed`).
+/// overrides + gather segmentation + seeds + straggler injection +
+/// chaos plan. Serializes into the experiment record and parses from
+/// CLI flags (`--topology`, `--torus-dims`, `--hier-groups`,
+/// `--bandwidth-gbps`, `--latency-us`, `--jitter-us`,
+/// `--inter-rack-gbps`, `--segment-bytes`, `--link-overrides`,
+/// `--stragglers`, `--fabric-seed`, `--faults`, `--fault-plan`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FabricConfig {
     pub topology: TopologyKind,
@@ -349,6 +601,10 @@ pub struct FabricConfig {
     pub inter_rack_gbps: Option<f64>,
     pub seed: u64,
     pub stragglers: Vec<Straggler>,
+    /// Fault injection plan (crashes, link flaps, loss/corruption
+    /// rates; see [`FaultPlan`]). Empty = no chaos, bit-identical to
+    /// the plain path.
+    pub faults: FaultPlan,
 }
 
 impl Default for FabricConfig {
@@ -361,6 +617,7 @@ impl Default for FabricConfig {
             inter_rack_gbps: None,
             seed: 0,
             stragglers: Vec::new(),
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -380,6 +637,8 @@ impl FabricConfig {
         "link-overrides",
         "stragglers",
         "fabric-seed",
+        "faults",
+        "fault-plan",
     ];
 
     /// Apply CLI flag overrides.
@@ -428,6 +687,20 @@ impl FabricConfig {
         if let Some(spec) = args.get("stragglers") {
             self.stragglers = Straggler::parse_list(spec)?;
         }
+        if let Some(spec) = args.get("faults") {
+            anyhow::ensure!(
+                args.get("fault-plan").is_none(),
+                "--faults and --fault-plan are mutually exclusive"
+            );
+            self.faults = FaultPlan::parse(spec)?;
+        }
+        if let Some(path) = args.get("fault-plan") {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("fault plan '{path}': {e}"))?;
+            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("fault plan '{path}': {e}"))?;
+            self.faults = FaultPlan::from_json(&j)
+                .map_err(|e| anyhow::anyhow!("fault plan '{path}': {e}"))?;
+        }
         anyhow::ensure!(
             self.link.bandwidth_gbps > 0.0,
             "--bandwidth-gbps must be positive"
@@ -462,6 +735,8 @@ impl FabricConfig {
                 if workers == 1 { "" } else { "s" }
             );
         }
+        let nodes = build_topology(self.topology, workers).node_count();
+        self.faults.validate(nodes)?;
         Ok(())
     }
 
@@ -495,6 +770,9 @@ impl FabricConfig {
                 Straggler::list_str(&self.stragglers)
             ));
         }
+        if !self.faults.is_empty() {
+            out.push_str(&format!(", faults {}", self.faults.spec_str()));
+        }
         out
     }
 
@@ -515,6 +793,7 @@ impl FabricConfig {
             ),
             ("seed", num(self.seed as f64)),
             ("stragglers", s(&Straggler::list_str(&self.stragglers))),
+            ("faults", s(&self.faults.spec_str())),
         ])
     }
 
@@ -538,6 +817,10 @@ impl FabricConfig {
             None => Vec::new(),
             Some(v) => link::parse_link_overrides(v.as_str()?, &link)?,
         };
+        let faults = match j.get("faults") {
+            None => FaultPlan::default(),
+            Some(v) => FaultPlan::parse(v.as_str()?)?,
+        };
         Ok(FabricConfig {
             topology: TopologyKind::parse(j.expect("topology")?.as_str()?)?,
             link,
@@ -546,6 +829,7 @@ impl FabricConfig {
             inter_rack_gbps,
             seed: j.expect("seed")?.as_f64()? as u64,
             stragglers: Straggler::parse_list(j.expect("stragglers")?.as_str()?)?,
+            faults,
         })
     }
 }
@@ -762,6 +1046,124 @@ mod tests {
             "jitter_us":0,"seed":0,"stragglers":""}"#;
         let cfg = FabricConfig::from_json(&Json::parse(old).unwrap()).unwrap();
         assert_eq!(cfg, FabricConfig::default());
+    }
+
+    fn chaos_cfg(spec: &str, seed: u64) -> FabricConfig {
+        FabricConfig {
+            link: LinkSpec {
+                bandwidth_gbps: 1.0,
+                latency_us: 1.0,
+                jitter_us: 0.0,
+            },
+            seed,
+            faults: FaultPlan::parse(spec).unwrap(),
+            ..FabricConfig::default()
+        }
+    }
+
+    #[test]
+    fn random_drops_are_retransmitted_and_masked() {
+        // Retransmission must mask every loss: the protocol sees one
+        // delivery no matter how many attempts the wire ate. A 0.9
+        // drop rate makes at least one loss across 8 seeds all but
+        // certain (P(none) = 0.1^8) without depending on one seed's
+        // draw sequence.
+        let mut any_dropped = false;
+        for seed in 0..8 {
+            let mut f = Fabric::for_config(&chaos_cfg("drop:0-1:0.9", seed), 2);
+            let mut p = OneShot {
+                delivered: Vec::new(),
+            };
+            let t = f.run(&mut p);
+            assert_eq!(p.delivered, vec![(1, 0)], "seed {seed}");
+            let r = f.report();
+            assert_eq!(r.retries, r.drops, "every drop retried once, seed {seed}");
+            assert_eq!(r.retransmitted_bytes, r.retries * 125, "seed {seed}");
+            assert_eq!(r.corruptions, 0, "seed {seed}");
+            if r.drops > 0 {
+                any_dropped = true;
+                assert!(t > 2_000_000, "retries must cost time, seed {seed}: {t}");
+            } else {
+                assert_eq!(t, 2_000_000, "clean run keeps exact timing, seed {seed}");
+            }
+        }
+        assert!(any_dropped, "0.9 drop rate never fired across 8 seeds");
+    }
+
+    #[test]
+    fn corruption_occupies_the_wire_then_retries() {
+        let mut any_corrupted = false;
+        for seed in 0..8 {
+            let mut f = Fabric::for_config(&chaos_cfg("corrupt:0-1:0.9", seed), 2);
+            let mut p = OneShot {
+                delivered: Vec::new(),
+            };
+            f.run(&mut p);
+            assert_eq!(p.delivered, vec![(1, 0)], "seed {seed}");
+            let r = f.report();
+            assert_eq!(r.retries, r.corruptions, "seed {seed}");
+            assert_eq!(r.drops, 0, "seed {seed}");
+            any_corrupted |= r.corruptions > 0;
+        }
+        assert!(any_corrupted, "0.9 corrupt rate never fired across 8 seeds");
+    }
+
+    #[test]
+    fn flap_window_delays_delivery_past_the_outage() {
+        // Link 0->1 is down for the first 100 us. The t = 0 attempt
+        // dies; the retransmit fires at window end + one-hop backoff
+        // (2 us) and delivers ser + latency later: 104 us exactly.
+        let mut f = Fabric::for_config(&chaos_cfg("flap:0-1@0..100", 0), 2);
+        let mut p = OneShot {
+            delivered: Vec::new(),
+        };
+        let t = f.run(&mut p);
+        assert_eq!(p.delivered, vec![(1, 0)]);
+        assert_eq!(t, 104_000_000);
+        let r = f.report();
+        assert_eq!((r.drops, r.retries), (1, 1));
+        assert_eq!(r.retransmitted_bytes, 125);
+        // Both attempts were billed on the wire.
+        assert_eq!(f.links()[&(0, 1)].messages, 2);
+        assert_eq!(f.node(0).sent_messages, 2);
+        assert_eq!(f.node(1).recv_messages, 1);
+    }
+
+    #[test]
+    fn chaos_replays_are_bit_identical() {
+        let run = || {
+            let mut f =
+                Fabric::for_config(&chaos_cfg("drop:0-1:0.5,corrupt:0-1:0.3,flap:0-1@0..3", 7), 2);
+            let mut p = OneShot {
+                delivered: Vec::new(),
+            };
+            let t = f.run(&mut p);
+            (t, f.report(), f.trace().to_vec())
+        };
+        let (t1, r1, trace1) = run();
+        let (t2, r2, trace2) = run();
+        assert_eq!(t1, t2);
+        assert_eq!(r1, r2);
+        assert_eq!(trace1, trace2);
+    }
+
+    #[test]
+    fn validate_rejects_fault_edges_outside_the_topology() {
+        let cfg = FabricConfig {
+            faults: FaultPlan::parse("drop:9-0:0.5").unwrap(),
+            ..FabricConfig::default()
+        };
+        let err = cfg.validate(4).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // A star's hub (node p) is a legal fault target even though it
+        // is not a worker.
+        let cfg = FabricConfig {
+            topology: TopologyKind::Star,
+            faults: FaultPlan::parse("drop:4-0:0.5").unwrap(),
+            ..FabricConfig::default()
+        };
+        assert!(cfg.validate(4).is_ok());
+        assert!(cfg.validate(3).is_err());
     }
 
     #[test]

@@ -169,6 +169,50 @@ pub fn build_topology(kind: TopologyKind, workers: usize) -> Box<dyn Topology> {
     }
 }
 
+/// Map a topology onto the survivors of a crash: the collective runs
+/// over the live ranks only, routed around the dead nodes. Returns the
+/// survivor topology (defined over logical ranks `0..q`), the rank map
+/// (`map[logical] = physical`), and the physical node count — the
+/// inputs [`super::Fabric::for_degraded`] needs. Ring, mesh, tree, and
+/// hierarchy re-span over the survivor set; a torus re-tiles to a
+/// near-square grid (route-around); a dead star hub hands aggregation
+/// to the lowest surviving worker (leader re-election, becoming a
+/// single-group tree). `dead` may name the star's hub (`workers`).
+pub fn degraded_topology(
+    kind: TopologyKind,
+    workers: usize,
+    dead: &[usize],
+) -> (Box<dyn Topology>, Vec<usize>, usize) {
+    let live: Vec<usize> = (0..workers).filter(|w| !dead.contains(w)).collect();
+    assert!(!live.is_empty(), "no survivors to run a collective over");
+    let q = live.len();
+    match kind {
+        TopologyKind::Star => {
+            let hub = workers;
+            let phys = workers + 1;
+            if dead.contains(&hub) {
+                let topo = build_topology(TopologyKind::Tree { branch: q }, q);
+                (topo, live, phys)
+            } else {
+                let mut map = live;
+                map.push(hub);
+                (build_topology(TopologyKind::Star, q), map, phys)
+            }
+        }
+        TopologyKind::Torus { .. } => {
+            let topo = build_topology(TopologyKind::Torus { rows: 0, cols: 0 }, q);
+            (topo, live, workers)
+        }
+        TopologyKind::Hier { groups } => {
+            // Keep the group count where possible; fewer survivors than
+            // groups collapses to one group per survivor.
+            let g = if groups == 0 { 0 } else { groups.min(q) };
+            (build_topology(TopologyKind::Hier { groups: g }, q), live, workers)
+        }
+        k => (build_topology(k, q), live, workers),
+    }
+}
+
 // ---- fully-connected mesh ----
 
 /// Every pair of workers has a direct path; collectives are one
@@ -404,6 +448,31 @@ mod tests {
         assert!(TopologyKind::Hier { groups: 4 }.validate(3).is_err());
         assert!(TopologyKind::Hier { groups: 0 }.validate(3).is_ok()); // auto
         assert!(TopologyKind::Ring.validate(0).is_err());
+    }
+
+    #[test]
+    fn degraded_topologies_respan_the_survivors() {
+        // Ring loses node 1 of 4: three survivors keep their ids.
+        let (topo, map, phys) = degraded_topology(TopologyKind::Ring, 4, &[1]);
+        assert_eq!(topo.workers(), 3);
+        assert_eq!(map, vec![0, 2, 3]);
+        assert_eq!(phys, 4);
+        // A star with a live hub keeps it as the last logical node.
+        let (topo, map, phys) = degraded_topology(TopologyKind::Star, 4, &[2]);
+        assert_eq!(topo.kind(), TopologyKind::Star);
+        assert_eq!(topo.node_count(), 4); // 3 workers + hub
+        assert_eq!(map, vec![0, 1, 3, 4]);
+        assert_eq!(phys, 5);
+        // A dead hub hands aggregation to the lowest surviving worker.
+        let (topo, map, _) = degraded_topology(TopologyKind::Star, 4, &[4]);
+        assert_eq!(topo.kind(), TopologyKind::Tree { branch: 4 });
+        assert_eq!(map, vec![0, 1, 2, 3]);
+        // A torus re-tiles near-square over the survivors.
+        let (topo, _, _) = degraded_topology(TopologyKind::Torus { rows: 2, cols: 3 }, 6, &[5]);
+        assert_eq!(topo.workers(), 5);
+        // Hierarchy clamps its group count to the survivor count.
+        let (topo, _, _) = degraded_topology(TopologyKind::Hier { groups: 3 }, 4, &[0, 2]);
+        assert_eq!(topo.kind(), TopologyKind::Hier { groups: 2 });
     }
 
     #[test]

@@ -7,287 +7,48 @@
 //! member → leader → other leaders → their members (segment-wise when
 //! the fabric configures gather segmentation), so cross-group traffic
 //! crosses each leader pair exactly once per block — the bandwidth
-//! hierarchy a flat ring or mesh cannot express. For the
-//! group-count-parameterized variant with *slow inter-group uplinks*
-//! see [`super::hierarchy`].
+//! hierarchy a flat ring or mesh cannot express. The protocol itself
+//! lives in `fabric::groups`, shared with the group-count-
+//! parameterized variant (see [`super::hierarchy`]) that adds *slow
+//! inter-group uplinks*.
 //!
 //! Degenerate branches recover the other topologies: `b = 1` is a full
 //! mesh over all workers; `b ≥ p` is a single star with worker 0 as
 //! hub.
 
-use super::collectives::{split_all, traffic_from, GatherState, SimGather, SimReduce};
+use super::collectives::{traffic_from, SimGather, SimReduce};
+use super::groups::{GroupGather, GroupReduce, GroupSpans};
 use super::topology::{Topology, TopologyKind};
-use super::{Fabric, Msg, Payload, Protocol};
-
-/// Member block/vector travelling up to its leader.
-const TAG_UP: u8 = 0;
-/// Leader-to-leader exchange.
-const TAG_XCHG: u8 = 1;
-/// Leader fan-out down to its members.
-const TAG_DOWN: u8 = 2;
+use super::Fabric;
 
 pub struct Tree {
     p: usize,
     branch: usize,
+    spans: GroupSpans,
 }
 
 impl Tree {
     pub fn new(workers: usize, branch: usize) -> Tree {
         assert!(workers > 0, "topology needs at least one worker");
         assert!(branch >= 1, "tree branch must be >= 1");
-        Tree { p: workers, branch }
+        Tree {
+            p: workers,
+            branch,
+            spans: GroupSpans::from_branch(workers, branch),
+        }
     }
 
     fn leader_of(&self, w: usize) -> usize {
-        (w / self.branch) * self.branch
-    }
-
-    fn is_leader(&self, w: usize) -> bool {
-        w % self.branch == 0
+        self.spans.leader(self.spans.group_of(w))
     }
 
     fn leaders(&self) -> Vec<usize> {
-        (0..self.p).step_by(self.branch).collect()
+        self.spans.leaders()
     }
 
     /// Members of `leader`'s group, excluding the leader itself.
     fn members(&self, leader: usize) -> Vec<usize> {
-        (leader + 1..(leader + self.branch).min(self.p)).collect()
-    }
-}
-
-struct TreeGather<'t> {
-    t: &'t Tree,
-    segs: Vec<Vec<Vec<u8>>>,
-    state: GatherState,
-}
-
-impl TreeGather<'_> {
-    fn msg(&self, origin: usize, seg: u32, hop: u32, tag: u8, payload: &Payload) -> Msg {
-        Msg {
-            origin,
-            seg,
-            hop,
-            tag,
-            payload: payload.clone(),
-        }
-    }
-}
-
-impl Protocol for TreeGather<'_> {
-    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
-        let mut out = Vec::new();
-        for w in 0..self.t.p {
-            for (si, sg) in self.segs[w].iter().enumerate() {
-                let si = si as u32;
-                let payload = Payload::Bytes(sg.clone());
-                if self.t.is_leader(w) {
-                    for l in self.t.leaders() {
-                        if l != w {
-                            out.push((w, l, self.msg(w, si, 1, TAG_XCHG, &payload)));
-                        }
-                    }
-                    for m in self.t.members(w) {
-                        out.push((w, m, self.msg(w, si, 1, TAG_DOWN, &payload)));
-                    }
-                } else {
-                    out.push((w, self.t.leader_of(w), self.msg(w, si, 1, TAG_UP, &payload)));
-                }
-            }
-        }
-        out
-    }
-
-    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
-        let Payload::Bytes(b) = &msg.payload else {
-            unreachable!("gather protocol only moves bytes")
-        };
-        self.state.store(node, msg.origin, msg.seg as usize, b);
-        if !self.t.is_leader(node) {
-            return Vec::new();
-        }
-        let mut out = Vec::new();
-        match msg.tag {
-            TAG_UP => {
-                // A member segment: cross to the other leaders and to
-                // the rest of this group.
-                for l in self.t.leaders() {
-                    if l != node {
-                        out.push((
-                            l,
-                            self.msg(msg.origin, msg.seg, msg.hop + 1, TAG_XCHG, &msg.payload),
-                        ));
-                    }
-                }
-                for m in self.t.members(node) {
-                    if m != msg.origin {
-                        out.push((
-                            m,
-                            self.msg(msg.origin, msg.seg, msg.hop + 1, TAG_DOWN, &msg.payload),
-                        ));
-                    }
-                }
-            }
-            TAG_XCHG => {
-                // Another group's segment: fan down to this group.
-                for m in self.t.members(node) {
-                    out.push((
-                        m,
-                        self.msg(msg.origin, msg.seg, msg.hop + 1, TAG_DOWN, &msg.payload),
-                    ));
-                }
-            }
-            other => unreachable!("leader received unexpected tag {other}"),
-        }
-        out
-    }
-}
-
-struct TreeReduce<'t> {
-    t: &'t Tree,
-    n: usize,
-    inputs: Vec<Vec<f32>>,
-    /// Member vectors buffered at leaders, by worker id.
-    up: Vec<Option<Vec<f32>>>,
-    /// Group partials buffered at every leader, by leader id.
-    partials: Vec<Vec<Option<Vec<f32>>>>,
-    /// Final sums as seen by each worker.
-    totals: Vec<Option<Vec<f32>>>,
-}
-
-impl TreeReduce<'_> {
-    /// Sum this leader's group (leader + members, ascending id).
-    fn group_partial(&self, leader: usize) -> Vec<f32> {
-        let mut sum = self.inputs[leader].clone();
-        for m in self.t.members(leader) {
-            let v = self.up[m].as_ref().expect("member vector missing");
-            for (k, x) in v.iter().enumerate() {
-                sum[k] += x;
-            }
-        }
-        sum
-    }
-
-    /// Once a leader holds every group partial, the grand total
-    /// (ascending leader order) and the fan-out sends.
-    fn try_finish(&mut self, leader: usize, hop: u32) -> Vec<(usize, Msg)> {
-        let leaders = self.t.leaders();
-        if leaders.iter().any(|&l| self.partials[leader][l].is_none()) {
-            return Vec::new();
-        }
-        let mut total = vec![0.0f32; self.n];
-        for &l in &leaders {
-            let v = self.partials[leader][l].as_ref().unwrap();
-            for (k, x) in v.iter().enumerate() {
-                total[k] += x;
-            }
-        }
-        self.totals[leader] = Some(total.clone());
-        let payload = Payload::F32(total);
-        self.t
-            .members(leader)
-            .into_iter()
-            .map(|m| {
-                (
-                    m,
-                    Msg {
-                        origin: leader,
-                        seg: 0,
-                        hop,
-                        tag: TAG_DOWN,
-                        payload: payload.clone(),
-                    },
-                )
-            })
-            .collect()
-    }
-
-    /// Leader's own group is complete: record the partial, exchange it,
-    /// and possibly finish (single-leader trees finish immediately).
-    fn group_ready(&mut self, leader: usize, hop: u32) -> Vec<(usize, Msg)> {
-        let partial = self.group_partial(leader);
-        self.partials[leader][leader] = Some(partial.clone());
-        let payload = Payload::F32(partial);
-        let mut out: Vec<(usize, Msg)> = self
-            .t
-            .leaders()
-            .into_iter()
-            .filter(|&l| l != leader)
-            .map(|l| {
-                (
-                    l,
-                    Msg {
-                        origin: leader,
-                        seg: 0,
-                        hop,
-                        tag: TAG_XCHG,
-                        payload: payload.clone(),
-                    },
-                )
-            })
-            .collect();
-        out.extend(self.try_finish(leader, hop + 1));
-        out
-    }
-}
-
-impl Protocol for TreeReduce<'_> {
-    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
-        let mut out = Vec::new();
-        for w in 0..self.t.p {
-            if !self.t.is_leader(w) {
-                out.push((
-                    w,
-                    self.t.leader_of(w),
-                    Msg {
-                        origin: w,
-                        seg: 0,
-                        hop: 1,
-                        tag: TAG_UP,
-                        payload: Payload::F32(self.inputs[w].clone()),
-                    },
-                ));
-            }
-        }
-        // Leaders whose whole group is themselves are ready at t = 0.
-        for l in self.t.leaders() {
-            if self.t.members(l).is_empty() {
-                for (dst, msg) in self.group_ready(l, 1) {
-                    out.push((l, dst, msg));
-                }
-            }
-        }
-        out
-    }
-
-    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
-        let Payload::F32(v) = &msg.payload else {
-            unreachable!("reduce protocol only moves f32 vectors")
-        };
-        match msg.tag {
-            TAG_UP => {
-                self.up[msg.origin] = Some(v.clone());
-                let complete = self
-                    .t
-                    .members(node)
-                    .iter()
-                    .all(|&m| self.up[m].is_some());
-                if complete {
-                    self.group_ready(node, msg.hop + 1)
-                } else {
-                    Vec::new()
-                }
-            }
-            TAG_XCHG => {
-                self.partials[node][msg.origin] = Some(v.clone());
-                self.try_finish(node, msg.hop + 1)
-            }
-            TAG_DOWN => {
-                self.totals[node] = Some(v.clone());
-                Vec::new()
-            }
-            other => unreachable!("unknown tree reduce tag {other}"),
-        }
+        self.spans.members(self.spans.group_of(leader))
     }
 }
 
@@ -321,14 +82,10 @@ impl Topology for Tree {
     fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
         assert_eq!(inputs.len(), self.p, "one input message per worker");
         let seg = fabric.segment_bytes();
-        let mut proto = TreeGather {
-            t: self,
-            segs: split_all(inputs, seg),
-            state: GatherState::new(inputs, seg),
-        };
+        let mut proto = GroupGather::new(&self.spans, inputs, seg);
         let time_ps = if self.p > 1 { fabric.run(&mut proto) } else { 0 };
         SimGather {
-            gathered: proto.state.into_gathered(),
+            gathered: proto.into_gathered(),
             traffic: traffic_from(fabric, self.gather_rounds()),
             time_ps,
             events: fabric.events(),
@@ -339,23 +96,12 @@ impl Topology for Tree {
         assert_eq!(inputs.len(), self.p);
         let n = inputs[0].len();
         assert!(inputs.iter().all(|v| v.len() == n), "length mismatch");
-        let mut proto = TreeReduce {
-            t: self,
-            n,
-            inputs: inputs.to_vec(),
-            up: vec![None; self.p],
-            partials: vec![vec![None; self.p]; self.p],
-            totals: vec![None; self.p],
-        };
+        let mut proto = GroupReduce::new(&self.spans, inputs);
         let time_ps = if self.p > 1 { fabric.run(&mut proto) } else { 0 };
         let reduced: Vec<Vec<f32>> = if self.p == 1 {
             vec![inputs[0].clone()]
         } else {
-            proto
-                .totals
-                .iter()
-                .map(|slot| slot.clone().expect("tree reduce under-delivered"))
-                .collect()
+            proto.into_totals()
         };
         SimReduce {
             reduced,

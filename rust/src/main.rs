@@ -9,6 +9,7 @@
 //! repro fig3   [--out fig3.csv]          # scatter data from both tables
 //! repro costmodel                         # Section-5 (A5) analysis
 //! repro fabric-sweep                      # simulated cluster sweep (F1)
+//! repro chaos-sweep                       # fault-injection sweep (chaos fabric)
 //! repro inspect                           # artifact manifest summary
 //! ```
 
@@ -17,7 +18,7 @@ use anyhow::Result;
 use vgc::compress::CodecSpec;
 use vgc::config::TrainConfig;
 use vgc::coordinator::Trainer;
-use vgc::experiments::{self, BenchCodecsOpts, FabricSweepOpts};
+use vgc::experiments::{self, BenchCodecsOpts, ChaosSweepOpts, FabricSweepOpts};
 use vgc::fabric::{build_topology, FabricConfig, Straggler, TopologyKind};
 use vgc::runtime::{Client, Manifest};
 use vgc::service::http::{http_request, http_stream};
@@ -49,6 +50,8 @@ USAGE:
                   [--inter-rack-gbps G] [--segment-bytes N]
                   [--link-overrides SRC-DST:GBPS[:LAT[:JIT]],..]
                   [--stragglers NODE:SLOW,..] [--fabric-seed S]
+                  [--faults SPEC | --fault-plan FILE.json]
+                  [--on-crash renorm|flush-rejoin]
   repro table1    [--optimizers adam,momentum] [--steps N] [--out FILE.json]
   repro table2    [--optimizers adam,momentum] [--steps N] [--out FILE.json]
   repro fig3      [--steps N] [--out FILE.csv]
@@ -60,6 +63,12 @@ USAGE:
                   [--segment-bytes N] [--codecs SPEC+SPEC+..]
                   [--n PARAMS] [--latency-us L] [--jitter-us J]
                   [--stragglers NODE:SLOW,..] [--seed S] [--warmup K]
+                  [--out FILE.json] [--md FILE.md]
+  repro chaos-sweep
+                  [--topologies ring,star,hier:2,..] [--workers P]
+                  [--scenarios SPEC+SPEC+..]  (fault specs; 'none' = control)
+                  [--codecs SPEC+SPEC+..] [--n PARAMS] [--steps K]
+                  [--bandwidth-gbps G] [--latency-us L] [--seed S]
                   [--out FILE.json] [--md FILE.md]
   repro bench-codecs
                   [--n PARAMS] [--group SIZE] [--workers P]
@@ -83,12 +92,14 @@ Codec SPECs: none | vgc:alpha=A[,zeta=Z] | strom:tau=T |
 LR SCHEDs:   const:LR | step:LR,FACTOR,EVERY | warmup:LR,STEPS
 Topologies:  ring | full | star | tree[:branch] | torus[:RxC] | hier[:groups]
              (see docs/TOPOLOGIES.md for cost formulas and guidance)
+Fault SPECs: crash:N@S[+D] | flap:A-B@T1..T2 | drop:A-B:R | corrupt:A-B:R
+             (comma-separated; see docs/FAULTS.md for semantics)
 ";
 
 const TRAIN_FLAGS: &[&str] = &[
     "model", "codec", "optimizer", "lr", "steps", "seed", "weight-decay",
     "train-size", "test-size", "signal", "eval-every", "log-every",
-    "verify-sync", "codec-threads", "loss-curve", "artifacts",
+    "verify-sync", "codec-threads", "loss-curve", "artifacts", "on-crash",
 ];
 
 /// Train accepts its own flags plus the fabric overrides — built at
@@ -116,6 +127,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "fabric-sweep" => cmd_fabric_sweep(&args),
+        "chaos-sweep" => cmd_chaos_sweep(&args),
         "bench-codecs" => cmd_bench_codecs(&args),
         "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
@@ -258,6 +270,57 @@ fn cmd_fabric_sweep(args: &Args) -> Result<()> {
     }
     if let Some(path) = args.get("out") {
         std::fs::write(path, experiments::fabric_sweep_json(&rows).to_string())?;
+        println!("\nresults written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_chaos_sweep(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "topologies", "workers", "scenarios", "codecs", "n", "steps",
+        "bandwidth-gbps", "latency-us", "seed", "out", "md",
+    ])?;
+    let mut opts = ChaosSweepOpts::default();
+    let topologies = args
+        .list("topologies")
+        .iter()
+        .map(|t| TopologyKind::parse(t))
+        .collect::<Result<Vec<_>>>()?;
+    if !topologies.is_empty() {
+        opts.topologies = topologies;
+    }
+    opts.workers = args.parse_or("workers", opts.workers)?;
+    // Fault specs contain commas (crash:1@2,drop:0-1:0.3), so the
+    // scenario list separator is '+', matching the codec convention.
+    if let Some(spec) = args.get("scenarios") {
+        opts.scenarios = spec
+            .split('+')
+            .map(|c| c.trim().to_string())
+            .filter(|c| !c.is_empty())
+            .collect();
+    }
+    if let Some(spec) = args.get("codecs") {
+        opts.codecs = spec
+            .split('+')
+            .filter(|c| !c.trim().is_empty())
+            .map(|c| CodecSpec::parse(c.trim()))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    opts.n_params = args.parse_or("n", opts.n_params)?;
+    opts.steps = args.parse_or("steps", opts.steps)?;
+    opts.bandwidth_gbps = args.parse_or("bandwidth-gbps", opts.bandwidth_gbps)?;
+    opts.latency_us = args.parse_or("latency-us", opts.latency_us)?;
+    opts.seed = args.parse_or("seed", opts.seed)?;
+
+    let rows = experiments::chaos_sweep(&opts)?;
+    let md = experiments::chaos_sweep_markdown(&opts, &rows);
+    print!("{md}");
+    if let Some(path) = args.get("md") {
+        std::fs::write(path, &md)?;
+        println!("\nmarkdown written to {path}");
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, experiments::chaos_sweep_json(&rows).to_string())?;
         println!("\nresults written to {path}");
     }
     Ok(())

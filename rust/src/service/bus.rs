@@ -128,6 +128,20 @@ pub enum Event {
         delay_ms: u64,
         error: String,
     },
+    /// The fault plan fired inside a training job (crash or rejoin).
+    Fault {
+        job: u64,
+        step: u64,
+        kind: String,
+        node: usize,
+    },
+    /// A training step completed over a reduced membership.
+    Degraded {
+        job: u64,
+        step: u64,
+        live: usize,
+        total: usize,
+    },
     /// Terminal transition; `summary` is the run summary on success.
     JobFinished {
         job: u64,
@@ -147,6 +161,8 @@ impl Event {
             | Event::JobStarted { job, .. }
             | Event::JobProgress { job, .. }
             | Event::JobRetry { job, .. }
+            | Event::Fault { job, .. }
+            | Event::Degraded { job, .. }
             | Event::JobFinished { job, .. } => Some(*job),
             Event::Drain => None,
         }
@@ -200,6 +216,30 @@ impl Event {
                 ("attempt", num(*attempt as f64)),
                 ("delay_ms", num(*delay_ms as f64)),
                 ("error", s(error)),
+            ]),
+            Event::Fault {
+                job,
+                step,
+                kind,
+                node,
+            } => obj(vec![
+                ("event", s("fault")),
+                ("job", num(*job as f64)),
+                ("step", num(*step as f64)),
+                ("kind", s(kind)),
+                ("node", num(*node as f64)),
+            ]),
+            Event::Degraded {
+                job,
+                step,
+                live,
+                total,
+            } => obj(vec![
+                ("event", s("degraded")),
+                ("job", num(*job as f64)),
+                ("step", num(*step as f64)),
+                ("live", num(*live as f64)),
+                ("total", num(*total as f64)),
             ]),
             Event::JobFinished {
                 job,
@@ -282,5 +322,30 @@ mod tests {
         assert_eq!(j.get("error"), Some(&Json::Null));
         assert!(!Event::Drain.is_terminal_for(3));
         assert_eq!(Event::Drain.job(), None);
+
+        let fault = Event::Fault {
+            job: 5,
+            step: 12,
+            kind: "crash".into(),
+            node: 2,
+        };
+        assert_eq!(fault.job(), Some(5));
+        assert!(!fault.is_terminal_for(5));
+        let j = fault.to_json();
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "fault");
+        assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "crash");
+        assert_eq!(j.get("node").unwrap().as_usize().unwrap(), 2);
+
+        let deg = Event::Degraded {
+            job: 5,
+            step: 12,
+            live: 3,
+            total: 4,
+        };
+        assert_eq!(deg.job(), Some(5));
+        let j = deg.to_json();
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "degraded");
+        assert_eq!(j.get("live").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("total").unwrap().as_usize().unwrap(), 4);
     }
 }

@@ -313,10 +313,29 @@ fn run_train(ctx: &ExecCtx, cfg: &TrainConfig, jctx: &JobCtx) -> Result<Json> {
     let progress_every = if cfg.log_every > 0 { cfg.log_every } else { 10 };
     let mut trainer = Trainer::with_engine(&client, &manifest, cfg, ctx.engine.clone())?;
     let finished = trainer.run_with(true, &mut |ev| {
-        if let RunEvent::Step { step, loss, .. } = ev {
-            if step % progress_every == 0 {
-                jctx.progress(step, total, &format!("loss {loss:.4}"));
+        match ev {
+            RunEvent::Step { step, loss, .. } => {
+                if step % progress_every == 0 {
+                    jctx.progress(step, total, &format!("loss {loss:.4}"));
+                }
             }
+            RunEvent::Fault { step, kind, node } => {
+                jctx.publish(Event::Fault {
+                    job: jctx.id,
+                    step,
+                    kind: kind.to_string(),
+                    node,
+                });
+            }
+            RunEvent::Degraded { step, live, total } => {
+                jctx.publish(Event::Degraded {
+                    job: jctx.id,
+                    step,
+                    live,
+                    total,
+                });
+            }
+            RunEvent::Eval { .. } => {}
         }
         !jctx.cancelled()
     })?;
@@ -341,6 +360,7 @@ fn run_train(ctx: &ExecCtx, cfg: &TrainConfig, jctx: &JobCtx) -> Result<Json> {
         ("bits_ratio", num_or_null(m.bits_ratio())),
         ("residual_l1", num_or_null(trainer.residual_l1())),
         ("sim_comm_ps", num(trainer.sim_comm_ps as f64)),
+        ("fault_report", trainer.fault_report.to_json()),
         (
             "params_fnv64",
             s(&format!("{:016x}", fnv64_f32(&trainer.params))),

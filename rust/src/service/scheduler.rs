@@ -26,6 +26,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::util::backoff::Backoff;
 use crate::util::json::{num, obj, s, Json};
 
 use super::bus::{Event, EventBus};
@@ -85,10 +86,15 @@ impl Default for RetryPolicy {
 impl RetryPolicy {
     /// Delay before re-attempt after `failures` failed attempts
     /// (`failures` counts from 1): `base · factor^(failures−1)`, capped.
+    /// Delegates to [`Backoff`] — the same clamping rules the fabric's
+    /// collective retransmit path uses.
     pub fn delay_ms(&self, failures: u32) -> u64 {
-        let exp = failures.saturating_sub(1).min(63);
-        let raw = self.base_ms as f64 * self.factor.powi(exp as i32);
-        (raw as u64).min(self.max_ms).max(self.base_ms.min(self.max_ms))
+        Backoff {
+            base: self.base_ms,
+            factor: self.factor,
+            max: self.max_ms,
+        }
+        .delay(failures)
     }
 }
 
@@ -124,6 +130,12 @@ impl JobCtx {
             bail!("cancelled at step boundary");
         }
         Ok(())
+    }
+
+    /// Publish an arbitrary event on the daemon bus (fault/degraded
+    /// notifications from inside an executor).
+    pub fn publish(&self, event: Event) {
+        self.bus.publish(event);
     }
 
     /// Publish a live progress event (step metrics, sweep cells, …).

@@ -1,0 +1,57 @@
+//! Bounded exponential backoff, shared by the job scheduler's retry
+//! policy (milliseconds) and the fabric's collective retransmit path
+//! (picoseconds). One implementation, one set of clamping rules: delay
+//! after `failures` failed attempts is `base · factor^(failures−1)`,
+//! capped at `max` and floored at `min(base, max)`.
+
+/// Unit-agnostic bounded exponential backoff. `base` and `max` share
+/// whatever unit the caller uses (ms for the scheduler, ps for the
+/// fabric).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Backoff {
+    pub base: u64,
+    pub factor: f64,
+    pub max: u64,
+}
+
+impl Backoff {
+    /// Delay before the next attempt after `failures` failed attempts
+    /// (`failures` counts from 1).
+    pub fn delay(&self, failures: u32) -> u64 {
+        let exp = failures.saturating_sub(1).min(63);
+        let raw = self.base as f64 * self.factor.powi(exp as i32);
+        (raw as u64).min(self.max).max(self.base.min(self.max))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delay_grows_geometrically_and_caps() {
+        let b = Backoff {
+            base: 100,
+            factor: 2.0,
+            max: 450,
+        };
+        assert_eq!(b.delay(1), 100);
+        assert_eq!(b.delay(2), 200);
+        assert_eq!(b.delay(3), 400);
+        assert_eq!(b.delay(4), 450); // capped
+        assert_eq!(b.delay(63), 450); // no overflow
+        assert_eq!(b.delay(0), 100); // clamped to the floor
+    }
+
+    #[test]
+    fn floor_is_min_of_base_and_max() {
+        // A max below base floors at max, not base.
+        let b = Backoff {
+            base: 1000,
+            factor: 2.0,
+            max: 10,
+        };
+        assert_eq!(b.delay(1), 10);
+        assert_eq!(b.delay(5), 10);
+    }
+}

@@ -2,6 +2,7 @@
 //! small numeric helpers.
 
 pub mod alloc;
+pub mod backoff;
 pub mod cli;
 pub mod json;
 pub mod rng;

@@ -1,0 +1,266 @@
+//! Chaos-fabric integration properties:
+//!
+//! * a zero-rate (or absent) fault plan is bit-identical to no plan at
+//!   all, for every topology — gathered bytes, timing, and counters;
+//! * `(seed, plan)` replays are deterministic: same gathered matrix,
+//!   same completion time, same `FabricReport`;
+//! * link faults (drops, corruption, flaps) are *masked*: retransmits
+//!   recover the exact bytes, only timing and counters move;
+//! * training under `--on-crash flush-rejoin` is bit-identical to the
+//!   fault-free run (worker crashes are masked from the math; the
+//!   recovery cost is billed to simulated time);
+//! * training under `--on-crash renorm` with a permanent crash
+//!   measurably diverges and reports reroutes;
+//! * `RunEvent::Fault` / `RunEvent::Degraded` fire at the right steps.
+//!
+//! The fabric-level tests run everywhere; the trainer tests skip when
+//! artifacts are not built (same convention as training_integration).
+
+use vgc::comm::allgatherv::allgatherv;
+use vgc::compress::CodecSpec;
+use vgc::config::{CrashPolicy, TrainConfig};
+use vgc::coordinator::{RunEvent, Trainer};
+use vgc::fabric::{FabricConfig, FaultPlan, TopologyKind};
+use vgc::runtime::{Client, Manifest};
+
+const ALL_TOPOLOGIES: [TopologyKind; 6] = [
+    TopologyKind::Ring,
+    TopologyKind::Full,
+    TopologyKind::Star,
+    TopologyKind::Tree { branch: 2 },
+    TopologyKind::Torus { rows: 2, cols: 2 },
+    TopologyKind::Hier { groups: 2 },
+];
+
+fn msgs(p: usize, base: usize) -> Vec<Vec<u8>> {
+    (0..p)
+        .map(|i| {
+            (0..base + 17 * i)
+                .map(|j| ((i * 131 + j) % 251) as u8)
+                .collect()
+        })
+        .collect()
+}
+
+fn cfg_for(kind: TopologyKind, spec: &str, seed: u64) -> FabricConfig {
+    FabricConfig {
+        topology: kind,
+        seed,
+        faults: FaultPlan::parse(spec).expect("spec parses"),
+        ..FabricConfig::default()
+    }
+}
+
+#[test]
+fn silent_plan_is_bit_identical_to_no_plan() {
+    // Plans that are armed but never fire must not perturb the
+    // simulation at all: the fault RNG is a separate stream, crashes
+    // are inert at the transport layer, and a flap window far past the
+    // gather's completion is never entered.
+    let inputs = msgs(4, 24);
+    // The empty plan; membership faults (inert at the transport
+    // layer); a flap window opening ~9 ms in when the gather ends in
+    // microseconds.
+    let silent_specs = ["", "crash:3@100", "flap:0-1@9000..10000"];
+    for kind in ALL_TOPOLOGIES {
+        let clean = allgatherv(
+            &FabricConfig {
+                topology: kind,
+                ..FabricConfig::default()
+            },
+            &inputs,
+        );
+        for spec in silent_specs {
+            let silent = allgatherv(&cfg_for(kind, spec, 0), &inputs);
+            assert_eq!(silent.gathered, clean.gathered, "{kind:?} '{spec}'");
+            assert_eq!(silent.time_ps, clean.time_ps, "{kind:?} '{spec}'");
+            assert_eq!(silent.traffic, clean.traffic, "{kind:?} '{spec}'");
+            assert!(silent.report.is_clean(), "{kind:?} '{spec}'");
+        }
+    }
+}
+
+#[test]
+fn seed_plan_replays_are_deterministic() {
+    let inputs = msgs(4, 40);
+    for kind in ALL_TOPOLOGIES {
+        for seed in [0u64, 7, 1234] {
+            let spec = "drop:0-1:0.4,corrupt:1-0:0.3,flap:0-1@0..5";
+            let a = allgatherv(&cfg_for(kind, spec, seed), &inputs);
+            let b = allgatherv(&cfg_for(kind, spec, seed), &inputs);
+            assert_eq!(a.gathered, b.gathered, "{kind:?} seed {seed}");
+            assert_eq!(a.time_ps, b.time_ps, "{kind:?} seed {seed}");
+            assert_eq!(a.report, b.report, "{kind:?} seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn link_faults_are_masked_on_every_topology() {
+    // Per-topology edges chosen to sit on gather routes; whichever
+    // fire, the gathered bytes must be exactly the fault-free bytes.
+    let inputs = msgs(4, 64);
+    let specs: [(TopologyKind, &str); 6] = [
+        (TopologyKind::Ring, "drop:0-1:0.6,corrupt:1-2:0.5"),
+        (TopologyKind::Full, "drop:0-1:0.6,corrupt:1-0:0.5"),
+        (TopologyKind::Star, "drop:0-4:0.6,corrupt:4-1:0.5"),
+        (TopologyKind::Tree { branch: 2 }, "drop:1-0:0.6,flap:0-1@0..20"),
+        (TopologyKind::Torus { rows: 2, cols: 2 }, "drop:0-1:0.6,corrupt:1-0:0.5"),
+        (TopologyKind::Hier { groups: 2 }, "drop:2-0:0.6,flap:0-2@0..20"),
+    ];
+    let mut fired = false;
+    for (kind, spec) in specs {
+        let clean = allgatherv(
+            &FabricConfig {
+                topology: kind,
+                ..FabricConfig::default()
+            },
+            &inputs,
+        );
+        for seed in 0..4u64 {
+            let res = allgatherv(&cfg_for(kind, spec, seed), &inputs);
+            assert_eq!(
+                res.gathered, clean.gathered,
+                "{kind:?} seed {seed}: faults leaked into the bytes"
+            );
+            assert!(res.time_ps >= clean.time_ps, "{kind:?} seed {seed}");
+            assert_eq!(
+                res.report.retries,
+                res.report.drops + res.report.corruptions,
+                "{kind:?} seed {seed}: every loss retransmits exactly once"
+            );
+            fired |= !res.report.is_clean();
+        }
+    }
+    assert!(fired, "no fault fired across any topology/seed");
+}
+
+// ---- trainer-level properties (need built artifacts) ----
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(dir).expect("manifest parses"))
+}
+
+fn mlp_cfg(steps: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::defaults("mlp");
+    cfg.codec = CodecSpec::Vgc {
+        alpha: 1.5,
+        zeta: 0.999,
+    };
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.log_every = 0;
+    cfg
+}
+
+#[test]
+fn flush_rejoin_crash_is_bit_identical_but_billed() {
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+
+    let mut clean = Trainer::new(&client, &man, mlp_cfg(10)).unwrap();
+    if clean.workers() < 2 {
+        eprintln!("SKIP: single-worker model has no membership to degrade");
+        return;
+    }
+    clean.run(true).unwrap();
+
+    let mut cfg = mlp_cfg(10);
+    cfg.on_crash = CrashPolicy::FlushRejoin;
+    cfg.fabric.faults = FaultPlan::parse("crash:1@3+2").unwrap();
+    let mut faulted = Trainer::new(&client, &man, cfg).unwrap();
+    faulted.run(true).unwrap();
+
+    assert_eq!(
+        clean.params, faulted.params,
+        "flush-rejoin must mask the crash from the training math"
+    );
+    assert!(
+        faulted.sim_comm_ps > clean.sim_comm_ps,
+        "rejoin state transfer must be billed to simulated time \
+         ({} !> {})",
+        faulted.sim_comm_ps,
+        clean.sim_comm_ps
+    );
+    assert!(faulted.fault_report.is_clean());
+}
+
+#[test]
+fn renorm_permanent_crash_measurably_diverges() {
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+
+    let mut clean = Trainer::new(&client, &man, mlp_cfg(10)).unwrap();
+    if clean.workers() < 2 {
+        eprintln!("SKIP: single-worker model has no membership to degrade");
+        return;
+    }
+    clean.run(true).unwrap();
+
+    let mut cfg = mlp_cfg(10);
+    cfg.fabric.faults = FaultPlan::parse("crash:1@3").unwrap();
+    let mut faulted = Trainer::new(&client, &man, cfg).unwrap();
+    faulted.run(true).unwrap();
+
+    assert_ne!(
+        clean.params, faulted.params,
+        "renorm over survivors is a different estimator — params must move"
+    );
+    assert!(faulted.params.iter().all(|p| p.is_finite()));
+    assert!(
+        faulted.fault_report.reroutes > 0,
+        "degraded gathers must report reroutes"
+    );
+}
+
+#[test]
+fn flush_rejoin_rejects_permanent_worker_crashes() {
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    let probe = Trainer::new(&client, &man, mlp_cfg(2)).unwrap();
+    if probe.workers() < 2 {
+        return;
+    }
+    let mut cfg = mlp_cfg(5);
+    cfg.on_crash = CrashPolicy::FlushRejoin;
+    cfg.fabric.faults = FaultPlan::parse("crash:1@3").unwrap();
+    let err = match Trainer::new(&client, &man, cfg) {
+        Ok(_) => panic!("permanent worker crash must be rejected under flush-rejoin"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("flush-rejoin"), "{err}");
+}
+
+#[test]
+fn fault_events_fire_at_plan_steps() {
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    let mut cfg = mlp_cfg(8);
+    cfg.fabric.faults = FaultPlan::parse("crash:1@3+2").unwrap();
+    let mut t = Trainer::new(&client, &man, cfg).unwrap();
+    if t.workers() < 2 {
+        return;
+    }
+    let mut faults: Vec<(u64, String, usize)> = Vec::new();
+    let mut degraded: Vec<(u64, usize, usize)> = Vec::new();
+    t.run_with(true, &mut |ev| {
+        match ev {
+            RunEvent::Fault { step, kind, node } => faults.push((step, kind.to_string(), node)),
+            RunEvent::Degraded { step, live, total } => degraded.push((step, live, total)),
+            _ => {}
+        }
+        true
+    })
+    .unwrap();
+    assert_eq!(
+        faults,
+        vec![(3, "crash".to_string(), 1), (5, "rejoin".to_string(), 1)]
+    );
+    let total = t.workers();
+    assert_eq!(degraded, vec![(3, total - 1, total), (4, total - 1, total)]);
+}

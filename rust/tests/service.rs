@@ -7,7 +7,9 @@
 //! - failed jobs retry with exponentially increasing backoff,
 //! - cancellation takes queued jobs instantly and running jobs at the
 //!   next step boundary,
-//! - SIGTERM drains in-flight work and persists a terminal snapshot.
+//! - SIGTERM drains in-flight work and persists a terminal snapshot,
+//! - a train job with a fault plan forwards `fault` / `degraded`
+//!   NDJSON events and a `fault_report` summary (needs artifacts).
 
 use std::io::{BufRead, BufReader};
 use std::path::PathBuf;
@@ -46,6 +48,11 @@ fn nget(j: &Json, key: &str) -> u64 {
 
 fn is_terminal(state: &str) -> bool {
     matches!(state, "succeeded" | "failed" | "cancelled")
+}
+
+/// True when the NDJSON line's `event` field equals `want`.
+fn event_is(e: &Json, want: &str) -> bool {
+    e.get("event").and_then(|v| v.as_str().ok()) == Some(want)
 }
 
 /// A `repro serve` child on an ephemeral port. Stdout is consumed by a
@@ -439,4 +446,67 @@ fn train_job_over_http_matches_in_process_run() {
     let fnv = format!("{:016x}", vgc::service::fnv64_f32(&trainer.params));
     assert_eq!(sget(&result, "params_fnv64"), fnv, "daemon train diverged from in-process");
     assert_eq!(nget(&result, "steps"), trainer.step_count());
+}
+
+#[test]
+fn train_job_streams_fault_and_degraded_events() {
+    if !have_artifacts() {
+        eprintln!("skipping: no compiled artifacts (run tools/compile_models.py)");
+        return;
+    }
+    let client = match vgc::runtime::Client::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping: no CPU client: {e:#}");
+            return;
+        }
+    };
+
+    let mut cfg = vgc::config::TrainConfig::defaults("mlp");
+    cfg.codec = vgc::compress::CodecSpec::parse("vgc:alpha=1.5").unwrap();
+    cfg.steps = 8;
+    cfg.codec_threads = 1;
+    cfg.fabric.faults = vgc::fabric::FaultPlan::parse("crash:1@3+2").unwrap();
+
+    // The crash scenario needs a second worker to lose; probe the
+    // model's parallelism in-process before spending a daemon boot.
+    let manifest = vgc::runtime::Manifest::load("artifacts").unwrap();
+    let probe = vgc::coordinator::Trainer::new(&client, &manifest, cfg.clone()).unwrap();
+    if probe.workers() < 2 {
+        eprintln!("skipping: single-worker model has no membership to degrade");
+        return;
+    }
+    let total = probe.workers() as u64;
+
+    let spec = cfg.to_json().to_string();
+    let d = DaemonProc::spawn(&["--codec-threads", "1"]);
+    let id = submit(&d.addr, &format!(r#"{{"job":"train","spec":{spec}}}"#));
+    let snap = wait_terminal(&d.addr, id, Duration::from_secs(300));
+    assert_eq!(sget(&snap, "state"), "succeeded", "train: {:?}", snap.get("error"));
+
+    // The bus replays a terminal job's full history, so streaming
+    // after completion still sees every fault event in order.
+    let events = stream_to_end(&d.addr, id);
+    d.shutdown();
+
+    let faults: Vec<(u64, String, u64)> = events
+        .iter()
+        .filter(|e| event_is(e, "fault"))
+        .map(|e| (nget(e, "step"), sget(e, "kind").to_string(), nget(e, "node")))
+        .collect();
+    assert_eq!(
+        faults,
+        vec![(3, "crash".to_string(), 1), (5, "rejoin".to_string(), 1)],
+        "fault NDJSON events must mirror the plan"
+    );
+    let degraded: Vec<(u64, u64, u64)> = events
+        .iter()
+        .filter(|e| event_is(e, "degraded"))
+        .map(|e| (nget(e, "step"), nget(e, "live"), nget(e, "total")))
+        .collect();
+    assert_eq!(degraded, vec![(3, total - 1, total), (4, total - 1, total)]);
+
+    let result = snap.get("result").expect("train result");
+    let report = result.get("fault_report").expect("summary fault_report");
+    assert!(nget(report, "reroutes") > 0, "degraded gathers must be counted as reroutes");
 }
