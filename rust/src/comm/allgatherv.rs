@@ -18,6 +18,7 @@
 //! rounds, byte- and bit-identical to the pre-fabric lockstep
 //! implementation.
 
+use super::pipeline::{self, OverlapSchedule};
 use super::Traffic;
 use crate::fabric::{build_topology, degraded_topology, Fabric, FabricConfig, FabricReport, Time};
 
@@ -89,6 +90,102 @@ pub fn allgatherv_faulty(cfg: &FabricConfig, inputs: &[Vec<u8>], dead: &[usize])
 /// fabric config: uniform GigE links, no segmentation).
 pub fn ring_allgatherv(inputs: &[Vec<u8>]) -> GatherResult {
     allgatherv(&FabricConfig::default(), inputs)
+}
+
+/// Result of an overlapped multi-bucket allgatherv: the fully
+/// reassembled messages (bit-identical to one phased [`allgatherv`]
+/// over the same inputs) plus the pipeline timing accounting.
+pub struct OverlappedGather {
+    /// `gathered[dst][src]`: bucket slices concatenated in bucket
+    /// index order — byte-identical to `src`'s original message.
+    pub gathered: Vec<Vec<Vec<u8>>>,
+    /// Overlapped/phased/ideal step accounting (comm durations come
+    /// from the event clock; readiness from the compute model).
+    pub schedule: OverlapSchedule,
+    pub traffic: Traffic,
+    pub report: FabricReport,
+    /// Effective gather segment (pinned `segment_bytes`, else the BDP
+    /// of the slowest link in this fabric's table).
+    pub segment_bytes: usize,
+    /// Buckets actually gathered, after sub-segment coalescing.
+    pub buckets: usize,
+    pub events: u64,
+}
+
+/// Async multi-gather front: gather each worker's message as a train
+/// of per-bucket slices on one shared fabric, releasing bucket `k`
+/// onto the wire at its encode-ready time (`pipeline::ready_times`
+/// over `grad_ps`/`encode_ps`) while earlier buckets may still be in
+/// flight from the port-state point of view (the event clock and
+/// egress/ingress free times carry across bucket runs).
+///
+/// `weights` are the dense per-bucket byte weights in gather order
+/// ([`pipeline::bucket_weights`]); each worker's message is sliced
+/// proportionally ([`pipeline::split_by_weights`]) after adjacent
+/// sub-segment buckets are coalesced once, globally, against the
+/// largest message ([`pipeline::merge_weights`]) — so every worker
+/// cuts at the same bucket boundaries and concatenation in bucket
+/// order reproduces every message exactly. Decode order is therefore
+/// fixed by bucket index, never by completion order.
+pub fn allgatherv_overlapped(
+    cfg: &FabricConfig,
+    inputs: &[Vec<u8>],
+    weights: &[u64],
+    grad_ps: Time,
+    encode_ps: Time,
+) -> OverlappedGather {
+    let p = inputs.len();
+    assert!(p > 0, "allgatherv needs at least one node");
+    assert!(!weights.is_empty(), "need at least one bucket");
+    let topo = build_topology(cfg.topology, p);
+    let mut fabric = Fabric::for_topology(cfg, &*topo);
+    let seg = pipeline::effective_segment_bytes(cfg.segment_bytes, fabric.link_table());
+    fabric.set_segment_bytes(seg);
+
+    let max_len = inputs.iter().map(Vec::len).max().unwrap_or(0);
+    let merged = pipeline::merge_weights(weights, max_len, seg);
+    let ready = pipeline::ready_times(&merged, grad_ps, encode_ps);
+    let cuts: Vec<Vec<usize>> = inputs
+        .iter()
+        .map(|m| pipeline::split_by_weights(m.len(), &merged))
+        .collect();
+
+    let mut gathered: Vec<Vec<Vec<u8>>> = vec![vec![Vec::new(); p]; p];
+    let mut comm = Vec::with_capacity(merged.len());
+    let mut offsets = vec![0usize; p];
+    let mut traffic = Traffic::default();
+    let mut events = 0;
+    for (k, &ready_k) in ready.iter().enumerate() {
+        let slices: Vec<Vec<u8>> = inputs
+            .iter()
+            .enumerate()
+            .map(|(w, m)| m[offsets[w]..offsets[w] + cuts[w][k]].to_vec())
+            .collect();
+        for (off, c) in offsets.iter_mut().zip(&cuts) {
+            *off += c[k];
+        }
+        fabric.advance_to(ready_k);
+        let start = fabric.now();
+        let sim = topo.allgatherv(&mut fabric, &slices);
+        comm.push(sim.time_ps - start);
+        for (drow, srow) in gathered.iter_mut().zip(&sim.gathered) {
+            for (dmsg, smsg) in drow.iter_mut().zip(srow) {
+                dmsg.extend_from_slice(smsg);
+            }
+        }
+        // Fabric counters are cumulative across runs: keep the last.
+        traffic = sim.traffic;
+        events = sim.events;
+    }
+    OverlappedGather {
+        gathered,
+        schedule: pipeline::schedule(&ready, &comm),
+        traffic,
+        report: fabric.report(),
+        segment_bytes: seg,
+        buckets: merged.len(),
+        events,
+    }
 }
 
 #[cfg(test)]
@@ -222,6 +319,66 @@ mod tests {
                 assert_eq!(res.gathered[dst][src], inputs[src], "{dst}<-{src}");
             }
         }
+    }
+
+    #[test]
+    fn overlapped_gather_reassembles_bit_identically() {
+        // Across topologies and bucket plans, the reassembled matrix
+        // must equal the phased gather's bytes exactly — that is the
+        // property the trainer's bit-identity rides on.
+        let inputs = msgs(&[700, 0, 333, 1024]);
+        let phased = ring_allgatherv(&inputs);
+        for kind in [
+            TopologyKind::Ring,
+            TopologyKind::Star,
+            TopologyKind::Torus { rows: 2, cols: 2 },
+            TopologyKind::Hier { groups: 2 },
+        ] {
+            for weights in [vec![1024u64], vec![512, 512], vec![1, 7, 3, 1, 9]] {
+                let cfg = FabricConfig {
+                    topology: kind,
+                    segment_bytes: 64,
+                    ..FabricConfig::default()
+                };
+                let res = allgatherv_overlapped(&cfg, &inputs, &weights, 1_000_000, 500_000);
+                assert_eq!(res.gathered, phased.gathered, "{kind:?} {weights:?}");
+                assert!(res.schedule.overlapped_ps <= res.schedule.phased_ps);
+                assert!(res.buckets >= 1);
+                assert_eq!(res.segment_bytes, 64, "pinned segment wins");
+            }
+        }
+        // Unpinned: the segment comes from the table's BDP (GigE).
+        let res = allgatherv_overlapped(
+            &FabricConfig::default(),
+            &inputs,
+            &[512, 512],
+            0,
+            0,
+        );
+        assert_eq!(res.segment_bytes, 12_500);
+        assert_eq!(res.gathered, phased.gathered);
+    }
+
+    #[test]
+    fn overlapped_gather_timing_matches_the_schedule_model() {
+        // With zero readiness the overlapped span is pure wire time,
+        // and with huge readiness the wire is fully hidden behind it.
+        let inputs = msgs(&[4096, 4096, 4096, 4096]);
+        let cfg = FabricConfig {
+            segment_bytes: 1024,
+            ..FabricConfig::default()
+        };
+        let eager = allgatherv_overlapped(&cfg, &inputs, &[2048, 2048], 0, 0);
+        assert_eq!(eager.schedule.overlapped_ps, eager.schedule.comm_busy_ps);
+        assert_eq!(eager.schedule.overlapped_ps, eager.schedule.phased_ps);
+        let late: Time = 10 * eager.schedule.comm_busy_ps;
+        let gated = allgatherv_overlapped(&cfg, &inputs, &[2048, 2048], late, 0);
+        assert_eq!(gated.schedule.cpu_ps, late);
+        assert!(gated.schedule.overlapped_ps < gated.schedule.phased_ps);
+        // Identical per-bucket wire costs in both schedules.
+        assert_eq!(gated.schedule.comm_busy_ps, eager.schedule.comm_busy_ps);
+        // Traffic is schedule-invariant and matches the phased gather.
+        assert_eq!(gated.traffic.total_bytes(), eager.traffic.total_bytes());
     }
 
     #[test]

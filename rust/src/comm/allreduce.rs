@@ -9,13 +9,81 @@
 //! bytes per node stay ≈ 2·(p−1)·N·s/p — exactly the paper's `T_r`
 //! bandwidth term.
 
+use super::pipeline::{self, OverlapSchedule};
 use super::Traffic;
-use crate::fabric::{build_topology, Fabric, FabricConfig, TopologyKind};
+use crate::fabric::{build_topology, Fabric, FabricConfig, Time, TopologyKind};
 
 /// Result: every node's reduced vector plus traffic accounting.
 pub struct ReduceResult {
     pub reduced: Vec<Vec<f32>>,
     pub traffic: Traffic,
+}
+
+/// Result of an overlapped bucketed allreduce (the dense baseline's
+/// counterpart to `allgatherv::allgatherv_overlapped`).
+pub struct OverlappedReduce {
+    /// Per-bucket reductions concatenated in bucket order. Note the
+    /// *sums* are taken per bucket, so chunk boundaries (and thus
+    /// float rounding) can differ from a whole-vector allreduce —
+    /// this front is the sweep's timing baseline, not a bit-parity
+    /// path (the codec pipeline has its own bit-identity guarantee).
+    pub reduced: Vec<Vec<f32>>,
+    pub schedule: OverlapSchedule,
+    pub traffic: Traffic,
+    pub segment_bytes: usize,
+    pub buckets: usize,
+}
+
+/// Bucketed, overlapped allreduce on the configured topology: bucket
+/// `k`'s reduce enters the wire at its gradient-ready time (backprop
+/// producing buckets in gather order at a uniform rate over
+/// `grad_ps`), on one shared fabric so port state carries across
+/// buckets. This gives the dense baseline the same segmented-overlap
+/// treatment as the compressed pipeline, keeping phased-vs-overlapped
+/// comparisons honest.
+pub fn allreduce_overlapped(
+    cfg: &FabricConfig,
+    inputs: &[Vec<f32>],
+    weights: &[u64],
+    grad_ps: Time,
+) -> OverlappedReduce {
+    let p = inputs.len();
+    assert!(p > 0, "allreduce needs at least one node");
+    assert!(!weights.is_empty(), "need at least one bucket");
+    let n = inputs[0].len();
+    assert!(inputs.iter().all(|v| v.len() == n), "length mismatch");
+    let topo = build_topology(cfg.topology, p);
+    let mut fabric = Fabric::for_topology(cfg, &*topo);
+    let seg = pipeline::effective_segment_bytes(cfg.segment_bytes, fabric.link_table());
+    fabric.set_segment_bytes(seg);
+
+    let merged = pipeline::merge_weights(weights, n * 4, seg);
+    let param_cuts = pipeline::split_by_weights(n, &merged);
+    let ready = pipeline::ready_times(&merged, grad_ps, 0);
+
+    let mut reduced: Vec<Vec<f32>> = vec![Vec::with_capacity(n); p];
+    let mut comm = Vec::with_capacity(merged.len());
+    let mut traffic = Traffic::default();
+    let mut off = 0usize;
+    for (&cut, &ready_k) in param_cuts.iter().zip(&ready) {
+        let slices: Vec<Vec<f32>> = inputs.iter().map(|v| v[off..off + cut].to_vec()).collect();
+        off += cut;
+        fabric.advance_to(ready_k);
+        let start = fabric.now();
+        let sim = topo.allreduce(&mut fabric, &slices);
+        comm.push(sim.time_ps - start);
+        for (out, part) in reduced.iter_mut().zip(&sim.reduced) {
+            out.extend_from_slice(part);
+        }
+        traffic = sim.traffic; // cumulative across runs: keep the last
+    }
+    OverlappedReduce {
+        reduced,
+        schedule: pipeline::schedule(&ready, &comm),
+        traffic,
+        segment_bytes: seg,
+        buckets: merged.len(),
+    }
 }
 
 /// Elementwise-sum ring allreduce over per-node vectors (equal length).
@@ -93,6 +161,33 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn overlapped_reduce_sums_every_bucket() {
+        let p = 4;
+        let n = 1000;
+        let inputs: Vec<Vec<f32>> = (0..p)
+            .map(|i| (0..n).map(|j| (i * n + j) as f32).collect())
+            .collect();
+        let cfg = FabricConfig::default();
+        let res = allreduce_overlapped(&cfg, &inputs, &[1000, 1000, 2000], 0);
+        for node in 0..p {
+            assert_eq!(res.reduced[node].len(), n, "node {node}");
+            for j in 0..n {
+                let want: f32 = (0..p).map(|i| (i * n + j) as f32).sum();
+                assert_eq!(res.reduced[node][j], want, "node {node} j={j}");
+            }
+        }
+        assert!(res.buckets >= 1);
+        assert_eq!(res.segment_bytes, 12_500); // GigE BDP fallback
+        assert!(res.schedule.overlapped_ps <= res.schedule.phased_ps);
+        // Gating on a long compute hides the wire behind backprop.
+        let late = 10 * res.schedule.comm_busy_ps;
+        let gated = allreduce_overlapped(&cfg, &inputs, &[1000, 1000, 2000], late);
+        assert_eq!(gated.schedule.cpu_ps, late);
+        assert!(gated.schedule.overlapped_ps >= late);
+        assert!(gated.schedule.overlapped_ps <= gated.schedule.phased_ps);
     }
 
     #[test]

@@ -413,6 +413,32 @@ impl CostModel {
     }
 }
 
+/// Pipelined step-time bound for an overlapped bucketed step with `b`
+/// equal buckets: `max(T_compute, T_comm) + min(T_compute, T_comm)/b`.
+/// The `min/b` term is the fill/drain tail — the first bucket's share
+/// of the hidden side before the pipeline is primed (comm-bound: the
+/// wire idles for one bucket of compute; compute-bound: one bucket of
+/// wire drains after the last gradient). `b = 1` degenerates to the
+/// phased sum; `b → ∞` converges to the ideal `max`. The event-clock
+/// pipeline (`comm::pipeline::schedule`) should land between this
+/// bound and the ideal on uniform buckets.
+pub fn pipelined_step_s(compute_s: f64, comm_s: f64, buckets: usize) -> f64 {
+    assert!(buckets >= 1, "a pipeline needs at least one bucket");
+    compute_s.max(comm_s) + compute_s.min(comm_s) / buckets as f64
+}
+
+/// Overlap efficiency of an achieved step time against the ideal
+/// `max(T_compute, T_comm)`: 1.0 = perfect overlap; the ROADMAP
+/// target ("within ~10% of the max") is ≥ 0.9.
+pub fn overlap_efficiency(compute_s: f64, comm_s: f64, achieved_s: f64) -> f64 {
+    let ideal = compute_s.max(comm_s);
+    if achieved_s <= 0.0 {
+        1.0
+    } else {
+        ideal / achieved_s
+    }
+}
+
 /// One row of the A5 speedup table.
 #[derive(Debug, Clone)]
 pub struct SpeedupRow {
@@ -461,6 +487,28 @@ mod tests {
         );
         m.m_bits = 64; // "if we set m small enough"
         m
+    }
+
+    #[test]
+    fn pipelined_bound_brackets_sum_and_max() {
+        let (tc, tm) = (3.0e-3, 7.0e-3);
+        // One bucket is the phased sum; more buckets approach the max.
+        assert!((pipelined_step_s(tc, tm, 1) - (tc + tm)).abs() < 1e-12);
+        let mut prev = f64::INFINITY;
+        for b in 1..=64 {
+            let t = pipelined_step_s(tc, tm, b);
+            assert!(t <= prev, "bound must shrink with buckets");
+            assert!(t >= tc.max(tm), "never below the ideal max");
+            prev = t;
+        }
+        assert!(pipelined_step_s(tc, tm, 1000) < tc.max(tm) * 1.001);
+        // Symmetric in its arguments.
+        assert_eq!(pipelined_step_s(tc, tm, 8), pipelined_step_s(tm, tc, 8));
+        // Efficiency: phased execution of a balanced step is ~0.5,
+        // ideal is 1.0, and a degenerate zero denominator stays sane.
+        assert!((overlap_efficiency(5.0, 5.0, 10.0) - 0.5).abs() < 1e-12);
+        assert_eq!(overlap_efficiency(5.0, 5.0, 5.0), 1.0);
+        assert_eq!(overlap_efficiency(1.0, 1.0, 0.0), 1.0);
     }
 
     #[test]

@@ -20,6 +20,7 @@
 pub mod allgatherv;
 pub mod allreduce;
 pub mod costmodel;
+pub mod pipeline;
 
 /// Per-collective traffic accounting.
 #[derive(Debug, Clone, Default, PartialEq)]

@@ -1,0 +1,522 @@
+//! Bucketed comm/compute overlap: tensor fusion, BDP segment sizing,
+//! and the pipeline schedule arithmetic.
+//!
+//! The phased trainer runs encode → gather → decode as strict
+//! sequential phases, so a step costs the *sum* of compute and
+//! communication. This module supplies the three pieces that turn the
+//! step into a pipeline whose cost approaches their *max*:
+//!
+//! 1. **Bucket formation** ([`form_buckets`]): layer groups are fused
+//!    into buckets by greedy fill in *reverse* layer order — backprop
+//!    produces the last layer's gradients first, so the model tail is
+//!    bucket 0 and can enter the wire while earlier layers are still
+//!    computing (ACP-SGD-style tensor fusion, ~MB thresholds).
+//! 2. **Segment sizing** ([`bdp_segment_bytes`]): the gather pipeline
+//!    segment defaults to the bandwidth-delay product of the slowest
+//!    link the fabric's [`LinkTable`] can resolve, so one segment keeps
+//!    the worst wire busy for a full round trip. A pinned
+//!    `--segment-bytes` always wins ([`effective_segment_bytes`]).
+//! 3. **Schedule arithmetic** ([`schedule`]): given per-bucket
+//!    readiness times (compute + encode) and per-bucket gather
+//!    durations measured on the event clock, the max-plus recurrence
+//!    yields the overlapped finish, the phased finish, and the ideal
+//!    `max(T_compute, T_comm)` bound — with `overlapped ≤ phased`
+//!    guaranteed structurally (same durations, earlier starts).
+//!
+//! Correctness never rides on the schedule: buckets are byte slices of
+//! the *same* encoded messages the phased path sends, reassembled in
+//! bucket-index order before decode (`comm::allgatherv::
+//! allgatherv_overlapped`), so trained parameters are bit-identical to
+//! the phased path for every codec by construction.
+//!
+//! ```
+//! use vgc::comm::pipeline::{form_buckets, bucket_weights, schedule};
+//! use vgc::model::Layout;
+//!
+//! // 4 groups of 256 params (1 KiB dense each), fused at a 2 KiB
+//! // threshold: two buckets, and bucket 0 is the model *tail*.
+//! let layout = Layout::uniform(1024, 256);
+//! let buckets = form_buckets(&layout, 2048);
+//! assert_eq!(buckets.len(), 2);
+//! assert_eq!(buckets[0].params, 512..1024); // last layers first
+//! assert_eq!(buckets[1].params, 0..512);
+//!
+//! // Overlap hides the shorter side: 2 buckets ready at 10/20 µs,
+//! // each needing 30 µs of wire, finish at 70 µs — not the phased
+//! // 20 + 60 = 80 µs.
+//! let w = bucket_weights(&buckets);
+//! assert_eq!(w, vec![2048, 2048]);
+//! let sched = schedule(&[10, 20], &[30, 30]);
+//! assert_eq!(sched.overlapped_ps, 70);
+//! assert_eq!(sched.phased_ps, 80);
+//! assert_eq!(sched.ideal_ps(), 60); // max(compute 20, comm 60)
+//! ```
+//!
+//! ```
+//! use vgc::comm::pipeline::bdp_segment_bytes;
+//! use vgc::fabric::{LinkSpec, LinkTable};
+//!
+//! // GigE: 1 Gb/s × 2·50 µs RTT = 100 kbit in flight = 12.5 kB.
+//! let table = LinkTable::uniform(LinkSpec::gige());
+//! assert_eq!(bdp_segment_bytes(&table), 12_500);
+//! ```
+
+use std::ops::Range;
+
+use crate::fabric::{LinkTable, Time};
+use crate::model::Layout;
+
+/// Smallest BDP segment ever returned: below this, per-segment framing
+/// events dominate the simulation for no pipelining benefit.
+pub const MIN_SEGMENT_BYTES: usize = 64;
+
+/// One fused layer-group bucket: a contiguous span of layout groups
+/// and the contiguous parameter range they cover. Bucket index 0 is
+/// the **last** span of the model (reverse layer order — the gather
+/// order), so `groups`/`params` of successive buckets walk backward
+/// through the layout.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bucket {
+    /// Indices into `layout.groups()`, forward orientation.
+    pub groups: Range<usize>,
+    /// Parameter index range the groups cover, forward orientation.
+    pub params: Range<usize>,
+}
+
+impl Bucket {
+    /// Dense f32 footprint of this bucket, bytes.
+    pub fn dense_bytes(&self) -> u64 {
+        self.params.len() as u64 * 4
+    }
+}
+
+/// Fuse layout groups into buckets by greedy fill in reverse layer
+/// order: walk groups from the last to the first, closing a bucket
+/// once its dense footprint reaches `bucket_bytes`. `bucket_bytes = 0`
+/// disables fusion (one bucket spanning the whole model — the phased
+/// layout). Every group lands in exactly one bucket and the buckets'
+/// parameter ranges tile `0..layout.n()` back to front.
+pub fn form_buckets(layout: &Layout, bucket_bytes: usize) -> Vec<Bucket> {
+    let groups = layout.groups();
+    if groups.is_empty() {
+        return Vec::new();
+    }
+    if bucket_bytes == 0 {
+        return vec![Bucket {
+            groups: 0..groups.len(),
+            params: 0..layout.n(),
+        }];
+    }
+    let mut out = Vec::new();
+    let mut hi = groups.len(); // exclusive group bound of the open bucket
+    let mut acc = 0u64; // dense bytes accumulated in the open bucket
+    for gi in (0..groups.len()).rev() {
+        acc += groups[gi].len as u64 * 4;
+        if acc >= bucket_bytes as u64 {
+            out.push(span_bucket(layout, gi..hi));
+            hi = gi;
+            acc = 0;
+        }
+    }
+    if hi > 0 {
+        out.push(span_bucket(layout, 0..hi));
+    }
+    out
+}
+
+fn span_bucket(layout: &Layout, groups: Range<usize>) -> Bucket {
+    let g = layout.groups();
+    let lo = g[groups.start].offset;
+    let last = &g[groups.end - 1];
+    Bucket {
+        params: lo..last.offset + last.len,
+        groups,
+    }
+}
+
+/// Per-bucket dense byte weights, in bucket (gather) order. These
+/// weight both the compute/encode readiness model and the
+/// proportional slicing of encoded messages.
+pub fn bucket_weights(buckets: &[Bucket]) -> Vec<u64> {
+    buckets.iter().map(Bucket::dense_bytes).collect()
+}
+
+/// Bandwidth-delay product of the slowest link `table` can resolve,
+/// in bytes (floor, clamped to [`MIN_SEGMENT_BYTES`]): bandwidth ×
+/// one round trip (2 × latency). One such segment keeps the worst
+/// wire in the fabric busy while its acknowledgement-equivalent — the
+/// next pipeline stage's forward — is still in flight.
+pub fn bdp_segment_bytes(table: &LinkTable) -> usize {
+    let worst = table.slowest_spec();
+    let bits = worst.bandwidth_gbps * 1e9 * (2.0 * worst.latency_us * 1e-6);
+    ((bits / 8.0) as usize).max(MIN_SEGMENT_BYTES)
+}
+
+/// The gather segment size the pipeline should use: a pinned
+/// `--segment-bytes` (`pinned > 0`) wins; otherwise the BDP of the
+/// slowest link ([`bdp_segment_bytes`]).
+pub fn effective_segment_bytes(pinned: usize, table: &LinkTable) -> usize {
+    if pinned > 0 {
+        pinned
+    } else {
+        bdp_segment_bytes(table)
+    }
+}
+
+/// Coalesce adjacent bucket weights until each bucket's share of a
+/// `max_len`-byte message is at least `min_bytes` (normally the
+/// segment size — a bucket smaller than one segment only adds
+/// per-bucket latency rounds without pipelining anything). The merge
+/// is decided once from the *largest* worker message so every worker
+/// slices at the same bucket boundaries. A short tail merges into the
+/// previous bucket. Never returns an empty plan for non-empty input.
+pub fn merge_weights(weights: &[u64], max_len: usize, min_bytes: usize) -> Vec<u64> {
+    let total: u64 = weights.iter().sum();
+    if weights.is_empty() || total == 0 {
+        return vec![total.max(1); usize::from(!weights.is_empty())];
+    }
+    let mut out: Vec<u64> = Vec::new();
+    let mut acc = 0u64;
+    for &w in weights {
+        acc += w;
+        // share of the largest message this merged bucket would get
+        let share = (max_len as u128 * acc as u128 / total as u128) as usize;
+        if share >= min_bytes {
+            out.push(acc);
+            acc = 0;
+        }
+    }
+    if acc > 0 {
+        match out.last_mut() {
+            Some(last) => *last += acc,
+            None => out.push(acc),
+        }
+    }
+    out
+}
+
+/// Split a `len`-byte message into one slice per weight, proportional
+/// with exact total: cut points are `len · cum_weight / total`
+/// (integer floor), so slices are non-negative, ordered, and always
+/// sum to `len` — concatenating the slices in bucket order reproduces
+/// the message byte for byte.
+pub fn split_by_weights(len: usize, weights: &[u64]) -> Vec<usize> {
+    let total: u64 = weights.iter().sum();
+    if weights.is_empty() {
+        return Vec::new();
+    }
+    if total == 0 {
+        // Degenerate all-zero weights: everything in the last slice.
+        let mut out = vec![0; weights.len()];
+        *out.last_mut().unwrap() = len;
+        return out;
+    }
+    let mut out = Vec::with_capacity(weights.len());
+    let mut cum = 0u64;
+    let mut prev_cut = 0usize;
+    for &w in weights {
+        cum += w;
+        let cut = (len as u128 * cum as u128 / total as u128) as usize;
+        out.push(cut - prev_cut);
+        prev_cut = cut;
+    }
+    debug_assert_eq!(out.iter().sum::<usize>(), len);
+    out
+}
+
+/// Per-bucket encode-finish times (ps) under the pipelined compute
+/// model: backprop produces gradients in bucket order at a uniform
+/// rate (`grad_ps` total, split by weight), and one encoder drains
+/// buckets in order (`encode_ps` total, split by weight), starting
+/// each bucket as soon as its gradients exist and the previous encode
+/// finished. `ready[k]` is when bucket `k` may enter the wire; the
+/// last entry is the step's total compute+encode span.
+pub fn ready_times(weights: &[u64], grad_ps: Time, encode_ps: Time) -> Vec<Time> {
+    let total: u64 = weights.iter().sum::<u64>().max(1);
+    let mut out = Vec::with_capacity(weights.len());
+    let mut cum = 0u64;
+    let mut enc_prev = 0 as Time;
+    let mut fin = 0 as Time;
+    for &w in weights {
+        cum += w;
+        let grad_ready = (grad_ps as u128 * cum as u128 / total as u128) as Time;
+        let enc_cum = (encode_ps as u128 * cum as u128 / total as u128) as Time;
+        fin = fin.max(grad_ready) + (enc_cum - enc_prev);
+        enc_prev = enc_cum;
+        out.push(fin);
+    }
+    out
+}
+
+/// The two step-time accountings the sweep and trainer report, built
+/// from one set of per-bucket gather durations (see [`schedule`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OverlapSchedule {
+    /// Absolute finish time of each bucket's gather, overlapped.
+    pub bucket_done_ps: Vec<Time>,
+    /// Overlapped step span: last gather finish (compute hidden
+    /// behind communication up to the fill/drain tails).
+    pub overlapped_ps: Time,
+    /// Phased step span: all compute+encode, then all communication.
+    pub phased_ps: Time,
+    /// Pure wire time (sum of per-bucket gather durations).
+    pub comm_busy_ps: Time,
+    /// Compute + encode span (the last readiness time).
+    pub cpu_ps: Time,
+}
+
+impl OverlapSchedule {
+    /// The un-achievable lower bound: perfect overlap with zero
+    /// fill/drain, `max(T_compute, T_comm)`.
+    pub fn ideal_ps(&self) -> Time {
+        self.cpu_ps.max(self.comm_busy_ps)
+    }
+
+    /// Overlap efficiency: `ideal / overlapped` ∈ (0, 1]. 1.0 means
+    /// the step costs exactly `max(compute, comm)`; the ROADMAP
+    /// target ("within ~10% of the max") is ≥ 0.9.
+    pub fn efficiency(&self) -> f64 {
+        if self.overlapped_ps == 0 {
+            1.0
+        } else {
+            self.ideal_ps() as f64 / self.overlapped_ps as f64
+        }
+    }
+
+    /// Phased-over-overlapped speedup (≥ 1 by construction).
+    pub fn speedup(&self) -> f64 {
+        if self.overlapped_ps == 0 {
+            1.0
+        } else {
+            self.phased_ps as f64 / self.overlapped_ps as f64
+        }
+    }
+}
+
+/// Max-plus pipeline recurrence: bucket `k`'s gather starts at
+/// `max(ready[k], previous gather finish)` and takes `comm[k]`.
+/// Phased runs the same durations after *all* compute+encode
+/// (`ready.last()`), so `overlapped_ps ≤ phased_ps` always — the
+/// overlapped schedule only moves starts earlier against identical
+/// per-bucket costs.
+///
+/// ```
+/// use vgc::comm::pipeline::schedule;
+/// // Comm-bound: 3 buckets ready early, the wire never starves.
+/// let s = schedule(&[5, 10, 15], &[100, 100, 100]);
+/// assert_eq!(s.overlapped_ps, 305); // fill 5, then 300 of wire
+/// assert_eq!(s.phased_ps, 315);
+/// assert!(s.efficiency() > 0.98);
+/// ```
+pub fn schedule(ready_ps: &[Time], comm_ps: &[Time]) -> OverlapSchedule {
+    assert_eq!(
+        ready_ps.len(),
+        comm_ps.len(),
+        "one readiness time per bucket"
+    );
+    let mut done = Vec::with_capacity(comm_ps.len());
+    let mut fin = 0 as Time;
+    let mut busy = 0 as Time;
+    for (&r, &c) in ready_ps.iter().zip(comm_ps) {
+        fin = fin.max(r) + c;
+        busy += c;
+        done.push(fin);
+    }
+    let cpu = ready_ps.last().copied().unwrap_or(0);
+    OverlapSchedule {
+        overlapped_ps: fin,
+        phased_ps: cpu + busy,
+        comm_busy_ps: busy,
+        cpu_ps: cpu,
+        bucket_done_ps: done,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::LinkSpec;
+    use crate::testkit;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn buckets_tile_the_layout_back_to_front() {
+        let layout = Layout::uniform(1000, 128); // 8 groups, last short
+        for bucket_bytes in [0usize, 1, 256, 1024, 4096, 1 << 20] {
+            let buckets = form_buckets(&layout, bucket_bytes);
+            assert!(!buckets.is_empty());
+            // Walk back to front: bucket 0 must end at n, the last
+            // bucket must start at 0, spans must abut.
+            assert_eq!(buckets[0].params.end, 1000, "bytes={bucket_bytes}");
+            assert_eq!(buckets.last().unwrap().params.start, 0);
+            assert_eq!(buckets[0].groups.end, layout.n_groups());
+            for w in buckets.windows(2) {
+                assert_eq!(w[1].params.end, w[0].params.start);
+                assert_eq!(w[1].groups.end, w[0].groups.start);
+            }
+            let total: usize = buckets.iter().map(|b| b.params.len()).sum();
+            assert_eq!(total, 1000);
+            // Threshold respected: every bucket but the head of the
+            // model reaches the fill target.
+            if bucket_bytes > 0 {
+                for b in &buckets[..buckets.len() - 1] {
+                    assert!(b.dense_bytes() >= bucket_bytes as u64);
+                }
+            }
+        }
+        // Degenerate 1-byte threshold: every group its own bucket.
+        assert_eq!(form_buckets(&layout, 1).len(), layout.n_groups());
+        // No fusion: one bucket over everything.
+        let all = form_buckets(&layout, 0);
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].params, 0..1000);
+    }
+
+    #[test]
+    fn bdp_tracks_the_slowest_link() {
+        let mut t = LinkTable::uniform(LinkSpec::infiniband());
+        assert_eq!(bdp_segment_bytes(&t), 50_000); // 100 Gb/s × 4 µs RTT
+        t.set(0, 1, LinkSpec::gige());
+        assert_eq!(bdp_segment_bytes(&t), 12_500); // 1 Gb/s × 100 µs RTT
+        let zero = LinkTable::uniform(LinkSpec {
+            bandwidth_gbps: 1.0,
+            latency_us: 0.0,
+            jitter_us: 0.0,
+        });
+        assert_eq!(bdp_segment_bytes(&zero), MIN_SEGMENT_BYTES);
+        // Pinning wins; auto falls back to BDP.
+        assert_eq!(effective_segment_bytes(4096, &t), 4096);
+        assert_eq!(effective_segment_bytes(0, &t), 12_500);
+    }
+
+    #[test]
+    fn split_is_exact_and_ordered() {
+        testkit::for_all(
+            "split_by_weights exactness",
+            |rng: &mut Pcg32| {
+                let b = testkit::usize_in(rng, 1, 9);
+                let weights: Vec<u64> =
+                    (0..b).map(|_| testkit::usize_in(rng, 0, 5000) as u64).collect();
+                let len = testkit::usize_in(rng, 0, 100_000);
+                (len, weights)
+            },
+            |(len, weights)| {
+                let slices = split_by_weights(*len, weights);
+                if slices.len() != weights.len() {
+                    return Err("slice count".into());
+                }
+                if slices.iter().sum::<usize>() != *len {
+                    return Err(format!("sum {} != len {len}", slices.iter().sum::<usize>()));
+                }
+                Ok(())
+            },
+        );
+        assert_eq!(split_by_weights(10, &[1, 1]), vec![5, 5]);
+        assert_eq!(split_by_weights(0, &[3, 7]), vec![0, 0]);
+        assert_eq!(split_by_weights(10, &[0, 0]), vec![0, 10]);
+        assert!(split_by_weights(10, &[]).is_empty());
+    }
+
+    #[test]
+    fn merge_collapses_sub_segment_buckets() {
+        // 4 × 1 KiB buckets of a 4 KiB message, 2 KiB segment: pairs.
+        assert_eq!(merge_weights(&[1024; 4], 4096, 2048), vec![2048, 2048]);
+        // Message far smaller than the segment: one bucket.
+        assert_eq!(merge_weights(&[1024; 4], 100, 2048), vec![4096]);
+        // Segment already smaller than every share: untouched.
+        assert_eq!(merge_weights(&[1024; 4], 4096, 1), vec![1024; 4]);
+        // Short tail folds backward.
+        assert_eq!(merge_weights(&[4096, 4096, 64], 8256, 2048), vec![4096, 4160]);
+        // Weight is conserved in every case.
+        testkit::for_all(
+            "merge_weights conservation",
+            |rng: &mut Pcg32| {
+                let b = testkit::usize_in(rng, 1, 9);
+                let weights: Vec<u64> =
+                    (0..b).map(|_| testkit::usize_in(rng, 1, 5000) as u64).collect();
+                let max_len = testkit::usize_in(rng, 0, 20_000);
+                let min_bytes = testkit::usize_in(rng, 1, 8192);
+                (weights, max_len, min_bytes)
+            },
+            |(weights, max_len, min_bytes)| {
+                let merged = merge_weights(weights, *max_len, *min_bytes);
+                if merged.is_empty() {
+                    return Err("empty plan".into());
+                }
+                if merged.iter().sum::<u64>() != weights.iter().sum::<u64>() {
+                    return Err("weight not conserved".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn ready_times_honor_both_producers() {
+        // Pure backprop: readiness is the cumulative gradient time.
+        assert_eq!(ready_times(&[1, 1], 100, 0), vec![50, 100]);
+        // Pure encode: a single serial encoder drains in order.
+        assert_eq!(ready_times(&[1, 1], 0, 100), vec![50, 100]);
+        // Both: encode of bucket 1 waits for its gradients, then
+        // costs its share.
+        assert_eq!(ready_times(&[1, 1], 100, 100), vec![100, 200]);
+        // The last readiness is always the full compute+encode span.
+        assert_eq!(*ready_times(&[3, 2, 5], 997, 301).last().unwrap(), 997 + 301);
+        assert!(ready_times(&[], 10, 10).is_empty());
+    }
+
+    #[test]
+    fn schedule_overlapped_never_exceeds_phased() {
+        testkit::for_all(
+            "overlap bounds",
+            |rng: &mut Pcg32| {
+                let b = testkit::usize_in(rng, 1, 8);
+                let weights: Vec<u64> =
+                    (0..b).map(|_| testkit::usize_in(rng, 1, 1000) as u64).collect();
+                let grad = testkit::usize_in(rng, 0, 1_000_000) as Time;
+                let enc = testkit::usize_in(rng, 0, 1_000_000) as Time;
+                let comm: Vec<Time> = (0..b)
+                    .map(|_| testkit::usize_in(rng, 0, 1_000_000) as Time)
+                    .collect();
+                (weights, grad, enc, comm)
+            },
+            |(weights, grad, enc, comm)| {
+                let ready = ready_times(weights, *grad, *enc);
+                let s = schedule(&ready, comm);
+                if s.overlapped_ps > s.phased_ps {
+                    return Err(format!("{} > {}", s.overlapped_ps, s.phased_ps));
+                }
+                if s.overlapped_ps < s.ideal_ps() {
+                    return Err("below the ideal bound".into());
+                }
+                if !(s.efficiency() > 0.0 && s.efficiency() <= 1.0) {
+                    return Err(format!("efficiency {}", s.efficiency()));
+                }
+                if s.speedup() < 1.0 {
+                    return Err("speedup < 1".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn schedule_hides_the_shorter_side() {
+        // Comm-bound: compute fully hidden behind the wire after fill.
+        let ready = ready_times(&[1; 4], 400, 0);
+        let s = schedule(&ready, &[1000; 4]);
+        assert_eq!(s.overlapped_ps, 100 + 4000); // fill + wire
+        assert_eq!(s.phased_ps, 400 + 4000);
+        assert_eq!(s.ideal_ps(), 4000);
+        // Compute-bound: wire fully hidden except the last drain.
+        let ready = ready_times(&[1; 4], 4000, 0);
+        let s = schedule(&ready, &[100; 4]);
+        assert_eq!(s.overlapped_ps, 4000 + 100);
+        assert_eq!(s.ideal_ps(), 4000);
+        // Single bucket degenerates to the phased sum.
+        let s = schedule(&[500], &[700]);
+        assert_eq!(s.overlapped_ps, 1200);
+        assert_eq!(s.phased_ps, 1200);
+        assert_eq!(s.speedup(), 1.0);
+    }
+}

@@ -77,6 +77,15 @@ pub struct TrainConfig {
     pub fabric: FabricConfig,
     /// Degradation policy when the fault plan kills a worker.
     pub on_crash: CrashPolicy,
+    /// Tensor-fusion threshold for the bucketed comm pipeline, dense
+    /// bytes (`--bucket-bytes`; 0 = one bucket spanning the model).
+    /// Buckets fill greedily in reverse layer order — see
+    /// docs/PIPELINE.md.
+    pub bucket_bytes: usize,
+    /// Schedule bucket gathers overlapped with compute/encode on the
+    /// fabric's event clock (`--overlap`). Trained parameters are
+    /// bit-identical either way; only the simulated step time moves.
+    pub overlap: bool,
 }
 
 impl TrainConfig {
@@ -110,6 +119,8 @@ impl TrainConfig {
             codec_threads: 0,
             fabric: FabricConfig::default(),
             on_crash: CrashPolicy::Renorm,
+            bucket_bytes: 0,
+            overlap: false,
         }
     }
 
@@ -148,6 +159,10 @@ impl TrainConfig {
         if let Some(p) = args.get("on-crash") {
             self.on_crash = CrashPolicy::parse(p)?;
         }
+        self.bucket_bytes = args.parse_or("bucket-bytes", self.bucket_bytes)?;
+        if args.has("overlap") {
+            self.overlap = true;
+        }
         self.fabric = self.fabric.override_from(args)?;
         Ok(self)
     }
@@ -167,6 +182,8 @@ impl TrainConfig {
             ("signal", num(self.signal as f64)),
             ("codec_threads", num(self.codec_threads as f64)),
             ("on_crash", s(self.on_crash.label())),
+            ("bucket_bytes", num(self.bucket_bytes as f64)),
+            ("overlap", Json::Bool(self.overlap)),
             ("fabric", self.fabric.to_json()),
         ])
     }
@@ -191,6 +208,13 @@ impl TrainConfig {
         // Absent in configs recorded before crash policies existed.
         if let Some(p) = j.get("on_crash") {
             cfg.on_crash = CrashPolicy::parse(p.as_str()?)?;
+        }
+        // Absent in configs recorded before the overlap pipeline.
+        if let Some(b) = j.get("bucket_bytes") {
+            cfg.bucket_bytes = b.as_usize()?;
+        }
+        if let Some(Json::Bool(o)) = j.get("overlap") {
+            cfg.overlap = *o;
         }
         // Absent in configs recorded before the fabric existed.
         if let Some(f) = j.get("fabric") {
@@ -351,6 +375,30 @@ mod tests {
         for p in [CrashPolicy::Renorm, CrashPolicy::FlushRejoin] {
             assert_eq!(CrashPolicy::parse(p.label()).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn pipeline_flags_and_json_roundtrip() {
+        let raw: Vec<String> = ["--bucket-bytes", "65536", "--overlap"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&raw, &["overlap"]).unwrap();
+        let cfg = TrainConfig::defaults("mlp").override_from(&args).unwrap();
+        assert_eq!(cfg.bucket_bytes, 65536);
+        assert!(cfg.overlap);
+        let back =
+            TrainConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.bucket_bytes, 65536);
+        assert!(back.overlap);
+        // Configs recorded before the pipeline existed still load.
+        let legacy = TrainConfig::defaults("mlp").to_json().to_string();
+        let stripped = legacy
+            .replace("\"bucket_bytes\":0,", "")
+            .replace("\"overlap\":false,", "");
+        let old = TrainConfig::from_json(&Json::parse(&stripped).unwrap()).unwrap();
+        assert_eq!(old.bucket_bytes, 0);
+        assert!(!old.overlap);
     }
 
     #[test]

@@ -16,6 +16,17 @@
 //!    applies it locally (Sec. 4.3). The fabric's simulated step time
 //!    accumulates in [`Trainer::sim_comm_ps`] for the run summary.
 //!
+//! With `--bucket-bytes`/`--overlap` step (3) runs through the
+//! bucketed pipeline front ([`crate::comm::pipeline`]): parameters
+//! fuse into buckets in reverse layer order, each worker's encoded
+//! message is sliced proportionally to the dense bucket weights, and
+//! bucket *k*'s gather enters the wire at its gradient-ready time so
+//! communication hides behind the rest of backprop and encode. The
+//! concatenated slices reproduce every message byte-for-byte, so
+//! decode — and therefore training math — is bit-identical to the
+//! phased path; only the simulated clock changes
+//! ([`Trainer::sim_overlap_ps`] vs [`Trainer::sim_phased_ps`]).
+//!
 //! All workers apply identical updates from identical gathered bytes,
 //! so one parameter vector represents them all; `verify_sync`
 //! cross-decodes from two workers' gathered views to prove it.
@@ -26,7 +37,8 @@
 use anyhow::Result;
 
 use super::worker::WorkerState;
-use crate::comm::allgatherv::{allgatherv, allgatherv_faulty};
+use crate::comm::allgatherv::{allgatherv, allgatherv_faulty, allgatherv_overlapped};
+use crate::comm::pipeline;
 use crate::compress::{shared_engine, Aggregation, Codec, SharedEngine};
 use crate::config::{CrashPolicy, TrainConfig};
 use crate::data::shard::Shard;
@@ -65,6 +77,11 @@ pub enum RunEvent<'a> {
         step: u64,
         loss: f32,
         lr: f32,
+        /// Cumulative compression ratio so far (dense bits / sent bits).
+        comp_ratio: f64,
+        /// Simulated span of this step (compute + encode + comm;
+        /// overlapped when the bucketed pipeline is on), ps.
+        sim_step_ps: u64,
     },
     Eval {
         record: &'a EvalRecord,
@@ -97,7 +114,20 @@ pub struct Trainer<'c> {
     pub phases: PhaseTimes,
     /// Accumulated fabric-simulated comm time across steps, ps — the
     /// step-communication wall-clock the configured topology predicts.
+    /// With the bucketed pipeline on this counts wire-busy time only
+    /// (the span comm actually occupies, excluding overlap-hidden
+    /// compute); the legacy phased path is unchanged.
     pub sim_comm_ps: u64,
+    /// Simulated span of the most recent step (compute + encode +
+    /// comm; overlapped when the bucketed pipeline is on), ps.
+    pub sim_step_ps: u64,
+    /// Accumulated phased (no-overlap) step span across steps, ps —
+    /// what the run would have cost serializing compute before comm.
+    pub sim_phased_ps: u64,
+    /// Accumulated (possibly overlapped) step span across steps, ps.
+    /// Equals `sim_phased_ps` when the pipeline is off; never exceeds
+    /// it when on.
+    pub sim_overlap_ps: u64,
     /// Accumulated fault/recovery counters across steps (all zero on a
     /// fault-free run).
     pub fault_report: FabricReport,
@@ -109,6 +139,11 @@ pub struct Trainer<'c> {
     /// output is bit-identical at any width, so sharing never changes
     /// results.
     engine: SharedEngine,
+    /// Per-bucket dense-byte weights from `--bucket-bytes` tensor
+    /// fusion (reverse layer order; a single bucket when 0). Encoded
+    /// messages are sliced proportionally to these for the overlapped
+    /// gather, so bucket boundaries never touch message bytes.
+    bucket_weights: Vec<u64>,
     // Reused step buffers (hot path: no per-step allocation).
     xs_f32: Vec<f32>,
     xs_i32: Vec<i32>,
@@ -209,13 +244,19 @@ impl<'c> Trainer<'c> {
         let n = entry.n_params;
         let b = entry.batch;
         let elems = entry.sample_elems();
+        let bucket_weights =
+            pipeline::bucket_weights(&pipeline::form_buckets(&layout, cfg.bucket_bytes));
         Ok(Trainer {
             engine,
+            bucket_weights,
             rt,
             layout,
             metrics: RunMetrics::new(n, p),
             phases: PhaseTimes::default(),
             sim_comm_ps: 0,
+            sim_step_ps: 0,
+            sim_phased_ps: 0,
+            sim_overlap_ps: 0,
             fault_report: FabricReport::default(),
             workers,
             optimizer,
@@ -341,7 +382,8 @@ impl<'c> Trainer<'c> {
             Dtype::F32 => self.rt.step(&self.params, Some(&self.xs_f32), None, &self.ys)?,
             Dtype::I32 => self.rt.step(&self.params, None, Some(&self.xs_i32), &self.ys)?,
         };
-        self.phases.compute_s += t0.elapsed().as_secs_f64();
+        let grad_s = t0.elapsed().as_secs_f64();
+        self.phases.compute_s += grad_s;
 
         // (2) Encode per worker — fanned out across workers (and
         // group-aligned shards) when `--codec-threads` > 1; the engine
@@ -393,18 +435,52 @@ impl<'c> Trainer<'c> {
                 msgs.push(msg.bytes);
             }
         }
-        self.phases.encode_s += t1.elapsed().as_secs_f64();
+        let encode_s = t1.elapsed().as_secs_f64();
+        self.phases.encode_s += encode_s;
 
         // (3) Communicate: byte-accurate allgatherv over the configured
-        // fabric topology, then decode.
+        // fabric topology, then decode. With `--bucket-bytes` or
+        // `--overlap` the gather runs through the bucketed pipeline
+        // front: the same message bytes travel, sliced into fused
+        // buckets that enter the wire at their gradient-ready times
+        // (measured compute/encode wall-clock mapped onto the fabric's
+        // event clock), so decode input stays bit-identical while the
+        // simulated clock hides comm behind compute. Degraded steps
+        // fall back to the phased faulty gather, whose empty-slot
+        // semantics the pipeline front doesn't model.
         let t2 = std::time::Instant::now();
-        let gathered = if parallel {
-            allgatherv_faulty(&self.cfg.fabric, engine.messages(), &dead_gather)
+        let pipelined =
+            (self.cfg.bucket_bytes > 0 || self.cfg.overlap) && dead_gather.is_empty();
+        let grad_ps = (grad_s * 1e12) as u64;
+        let encode_ps = (encode_s * 1e12) as u64;
+        let gathered: Vec<Vec<Vec<u8>>> = if pipelined {
+            let inputs: &[Vec<u8>] = if parallel { engine.messages() } else { &msgs };
+            let ov = allgatherv_overlapped(
+                &self.cfg.fabric,
+                inputs,
+                &self.bucket_weights,
+                grad_ps,
+                encode_ps,
+            );
+            self.sim_comm_ps += ov.schedule.comm_busy_ps;
+            self.sim_step_ps = ov.schedule.overlapped_ps;
+            self.sim_phased_ps += ov.schedule.phased_ps;
+            self.sim_overlap_ps += ov.schedule.overlapped_ps;
+            self.fault_report.absorb(&ov.report);
+            ov.gathered
         } else {
-            allgatherv_faulty(&self.cfg.fabric, &msgs, &dead_gather)
+            let res = if parallel {
+                allgatherv_faulty(&self.cfg.fabric, engine.messages(), &dead_gather)
+            } else {
+                allgatherv_faulty(&self.cfg.fabric, &msgs, &dead_gather)
+            };
+            self.sim_comm_ps += res.time_ps;
+            self.sim_step_ps = grad_ps + encode_ps + res.time_ps;
+            self.sim_phased_ps += self.sim_step_ps;
+            self.sim_overlap_ps += self.sim_step_ps;
+            self.fault_report.absorb(&res.report);
+            res.gathered
         };
-        self.sim_comm_ps += gathered.time_ps;
-        self.fault_report.absorb(&gathered.report);
         let live = e.workers - dead_workers.len();
         anyhow::ensure!(live > 0, "no surviving workers at step {}", self.step);
         // The decoding representative must be a survivor (worker 0 on
@@ -417,14 +493,10 @@ impl<'c> Trainer<'c> {
             // reduce disjoint index ranges in message order — bit-equal
             // to the serial loop below (verify_sync cross-checks it
             // against a serial decode every step when enabled).
-            engine.decode_all(
-                &*self.workers[0].codec,
-                &gathered.gathered[0],
-                &mut self.update,
-            )?;
+            engine.decode_all(&*self.workers[0].codec, &gathered[0], &mut self.update)?;
         } else {
             self.update.iter_mut().for_each(|u| *u = 0.0);
-            for src_msg in &gathered.gathered[decoder] {
+            for src_msg in &gathered[decoder] {
                 if src_msg.is_empty() {
                     continue; // a dead worker's slot
                 }
@@ -447,7 +519,7 @@ impl<'c> Trainer<'c> {
                 .rev()
                 .find(|w| !dead_workers.contains(w))
                 .expect("live > 1 guarantees a second survivor");
-            for src_msg in &gathered.gathered[last] {
+            for src_msg in &gathered[last] {
                 if src_msg.is_empty() {
                     continue;
                 }
@@ -634,7 +706,13 @@ impl<'c> Trainer<'c> {
                     return Ok(false);
                 }
             }
-            if !observe(RunEvent::Step { step: s, loss, lr }) {
+            if !observe(RunEvent::Step {
+                step: s,
+                loss,
+                lr,
+                comp_ratio: self.metrics.compression_ratio(),
+                sim_step_ps: self.sim_step_ps,
+            }) {
                 return Ok(false);
             }
         }

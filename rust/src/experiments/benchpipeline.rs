@@ -1,0 +1,277 @@
+//! `repro bench-pipeline` — phased vs overlapped step-time benchmark.
+//!
+//! Drives the bucketed overlap pipeline (`comm::pipeline`) over a
+//! small topology × codec grid and reports, per cell, the phased step
+//! span (compute + encode + comm serialized), the overlapped span the
+//! schedule achieves, the ideal `max(compute, comm)` floor, and the
+//! resulting overlap efficiency. A thin reshaping of
+//! [`fabric_sweep`](super::fabric_sweep) with `overlap` forced on, so
+//! the numbers are exactly the sweep's `--overlap` columns.
+//!
+//! Emits a markdown table and, with `--json`, a `BENCH_pipeline.json`
+//! record so the pipeline's win is tracked across PRs.
+
+use crate::compress::CodecSpec;
+use crate::config::codec_str;
+use crate::fabric::TopologyKind;
+use crate::util::json::{num, obj, s, Json};
+
+use super::{fabric_sweep, validate_sweep, FabricSweepOpts};
+
+#[derive(Debug, Clone)]
+pub struct BenchPipelineOpts {
+    pub topologies: Vec<TopologyKind>,
+    pub workers: usize,
+    pub bandwidth_gbps: f64,
+    pub codecs: Vec<CodecSpec>,
+    /// Synthetic gradient dimension.
+    pub n_params: usize,
+    /// Tensor-fusion threshold, bytes.
+    pub bucket_bytes: usize,
+    /// Pinned gather segment size, bytes (0 = BDP-derived).
+    pub segment_bytes: usize,
+    /// Synthetic backprop cost, ns/param.
+    pub compute_ns_per_param: f64,
+    /// Synthetic serial-encode cost, ns/param.
+    pub encode_ns_per_param: f64,
+    pub seed: u64,
+}
+
+impl Default for BenchPipelineOpts {
+    fn default() -> Self {
+        BenchPipelineOpts {
+            topologies: vec![
+                TopologyKind::Ring,
+                TopologyKind::Torus { rows: 0, cols: 0 },
+                TopologyKind::Hier { groups: 2 },
+            ],
+            workers: 8,
+            bandwidth_gbps: 1.0,
+            codecs: vec![
+                CodecSpec::None,
+                CodecSpec::Vgc {
+                    alpha: 2.0,
+                    zeta: 0.999,
+                },
+                CodecSpec::Strom { tau: 0.01 },
+            ],
+            n_params: 65_536,
+            bucket_bytes: 65_536,
+            segment_bytes: 0,
+            compute_ns_per_param: 50.0,
+            encode_ns_per_param: 10.0,
+            seed: 0,
+        }
+    }
+}
+
+impl BenchPipelineOpts {
+    /// The equivalent fabric sweep: one worker count, one bandwidth,
+    /// overlap on. Keeping this mapping total means every bench cell
+    /// is reproducible as a `fabric-sweep --overlap` row.
+    pub fn to_sweep(&self) -> FabricSweepOpts {
+        FabricSweepOpts {
+            topologies: self.topologies.clone(),
+            workers: vec![self.workers],
+            bandwidths_gbps: vec![self.bandwidth_gbps],
+            codecs: self.codecs.clone(),
+            n_params: self.n_params,
+            segment_bytes: self.segment_bytes,
+            seed: self.seed,
+            overlap: true,
+            bucket_bytes: self.bucket_bytes,
+            compute_ns_per_param: self.compute_ns_per_param,
+            encode_ns_per_param: self.encode_ns_per_param,
+            ..FabricSweepOpts::default()
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchPipelineRow {
+    pub topology: String,
+    pub codec: String,
+    /// Compute + encode + comm fully serialized, ms.
+    pub phased_ms: f64,
+    /// The overlapped schedule's achieved step span, ms.
+    pub overlap_ms: f64,
+    /// The pipelining floor `max(compute, comm)`, ms.
+    pub ideal_ms: f64,
+    /// `ideal_ms / overlap_ms` — 1.0 is perfect hiding.
+    pub overlap_eff: f64,
+    /// `phased_ms / overlap_ms` — the end-to-end win of overlapping.
+    pub speedup: f64,
+    /// Bucket count after BDP coalescing.
+    pub buckets: usize,
+    /// The dense f32 allreduce baseline under the same schedule, ms.
+    pub dense_overlap_ms: f64,
+}
+
+/// Run the benchmark grid (topologies × codecs).
+pub fn bench_pipeline(opts: &BenchPipelineOpts) -> anyhow::Result<Vec<BenchPipelineRow>> {
+    let sweep = opts.to_sweep();
+    validate_sweep(&sweep)?;
+    let rows = fabric_sweep(&sweep);
+    Ok(rows
+        .iter()
+        .map(|r| {
+            let phased = r.phased_ms.expect("overlap sweep rows carry phased_ms");
+            let over = r.overlap_ms.expect("overlap sweep rows carry overlap_ms");
+            let eff = r.overlap_eff.expect("overlap sweep rows carry overlap_eff");
+            BenchPipelineRow {
+                topology: r.topology.clone(),
+                codec: r.codec.clone(),
+                phased_ms: phased,
+                overlap_ms: over,
+                ideal_ms: eff * over,
+                overlap_eff: eff,
+                speedup: if over > 0.0 { phased / over } else { 1.0 },
+                buckets: r.buckets.expect("overlap sweep rows carry buckets"),
+                dense_overlap_ms: r
+                    .dense_overlap_ms
+                    .expect("overlap sweep rows carry dense_overlap_ms"),
+            }
+        })
+        .collect())
+}
+
+pub fn bench_pipeline_markdown(opts: &BenchPipelineOpts, rows: &[BenchPipelineRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "# pipeline bench — N={} p={} {} Gbps, bucket {} B, compute {} ns/param, encode {} ns/param\n\n",
+        opts.n_params,
+        opts.workers,
+        opts.bandwidth_gbps,
+        opts.bucket_bytes,
+        opts.compute_ns_per_param,
+        opts.encode_ns_per_param,
+    ));
+    out.push_str(
+        "| topology | codec | phased | overlapped | ideal | overlap eff | speedup \
+         | buckets | dense overlap |\n",
+    );
+    out.push_str("|---|---|---|---|---|---|---|---|---|\n");
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {:.3} ms | {:.3} ms | {:.3} ms | {:.3} | {:.2}x | {} | {:.3} ms |\n",
+            r.topology,
+            r.codec,
+            r.phased_ms,
+            r.overlap_ms,
+            r.ideal_ms,
+            r.overlap_eff,
+            r.speedup,
+            r.buckets,
+            r.dense_overlap_ms,
+        ));
+    }
+    out
+}
+
+pub fn bench_pipeline_json(opts: &BenchPipelineOpts, rows: &[BenchPipelineRow]) -> Json {
+    let worst_eff = rows
+        .iter()
+        .map(|r| r.overlap_eff)
+        .fold(f64::INFINITY, f64::min);
+    obj(vec![
+        ("bench", s("pipeline")),
+        ("n_params", num(opts.n_params as f64)),
+        ("workers", num(opts.workers as f64)),
+        ("bandwidth_gbps", num(opts.bandwidth_gbps)),
+        ("bucket_bytes", num(opts.bucket_bytes as f64)),
+        ("compute_ns_per_param", num(opts.compute_ns_per_param)),
+        ("encode_ns_per_param", num(opts.encode_ns_per_param)),
+        (
+            "worst_overlap_eff",
+            if worst_eff.is_finite() {
+                num(worst_eff)
+            } else {
+                Json::Null
+            },
+        ),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("topology", s(&r.topology)),
+                            ("codec", s(&r.codec)),
+                            ("phased_ms", num(r.phased_ms)),
+                            ("overlap_ms", num(r.overlap_ms)),
+                            ("ideal_ms", num(r.ideal_ms)),
+                            ("overlap_eff", num(r.overlap_eff)),
+                            ("speedup", num(r.speedup)),
+                            ("buckets", num(r.buckets as f64)),
+                            ("dense_overlap_ms", num(r.dense_overlap_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_rows_reshape_the_overlap_sweep() {
+        let opts = BenchPipelineOpts {
+            topologies: vec![TopologyKind::Ring, TopologyKind::Star],
+            workers: 4,
+            codecs: vec![
+                CodecSpec::None,
+                CodecSpec::Vgc {
+                    alpha: 2.0,
+                    zeta: 0.999,
+                },
+            ],
+            n_params: 4096,
+            bucket_bytes: 4096,
+            ..BenchPipelineOpts::default()
+        };
+        let rows = bench_pipeline(&opts).unwrap();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(
+                r.overlap_ms <= r.phased_ms + 1e-9,
+                "{} {}: overlapped {} > phased {}",
+                r.topology,
+                r.codec,
+                r.overlap_ms,
+                r.phased_ms
+            );
+            assert!(r.ideal_ms <= r.overlap_ms + 1e-9);
+            assert!(r.speedup >= 1.0 - 1e-9);
+            assert!(r.buckets >= 1);
+            let label = codec_str(
+                opts.codecs
+                    .iter()
+                    .find(|c| codec_str(c) == r.codec)
+                    .expect("row codec comes from the opts grid"),
+            );
+            assert_eq!(label, r.codec);
+        }
+        let md = bench_pipeline_markdown(&opts, &rows);
+        assert!(md.contains("overlap eff"), "{md}");
+        assert_eq!(
+            md.lines().filter(|l| l.starts_with("| ")).count(),
+            1 + rows.len()
+        );
+        let j = bench_pipeline_json(&opts, &rows).to_string();
+        let back = Json::parse(&j).unwrap();
+        assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), 4);
+        assert!(back.get("worst_overlap_eff").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn invalid_grids_are_rejected() {
+        let opts = BenchPipelineOpts {
+            codecs: Vec::new(),
+            ..BenchPipelineOpts::default()
+        };
+        assert!(bench_pipeline(&opts).is_err());
+    }
+}

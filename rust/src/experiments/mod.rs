@@ -11,14 +11,21 @@
 //!   optionally with segmented gather pipelining.
 //! * [`benchcodecs`] — §Perf codec-engine throughput sweep
 //!   (`repro bench-codecs`, serial vs parallel, `BENCH_codecs.json`).
+//! * [`benchpipeline`] — phased vs overlapped step-time bench over the
+//!   bucketed pipeline (`repro bench-pipeline`, `BENCH_pipeline.json`).
 //! * [`chaos`] — fault-injection sweep over the chaos fabric
 //!   (`repro chaos-sweep`, masking/divergence/inflation per scenario).
 
 pub mod benchcodecs;
+pub mod benchpipeline;
 pub mod chaos;
 
 pub use benchcodecs::{
     bench_codecs, bench_codecs_json, bench_codecs_markdown, BenchCodecsOpts, BenchCodecsRow,
+};
+pub use benchpipeline::{
+    bench_pipeline, bench_pipeline_json, bench_pipeline_markdown, BenchPipelineOpts,
+    BenchPipelineRow,
 };
 pub use chaos::{
     chaos_sweep, chaos_sweep_json, chaos_sweep_markdown, validate_chaos, ChaosSweepOpts,
@@ -27,10 +34,13 @@ pub use chaos::{
 
 use anyhow::Result;
 
+use crate::comm::allgatherv::allgatherv_overlapped;
+use crate::comm::allreduce::allreduce_overlapped;
 use crate::comm::costmodel::{
     hier_gatherv_bytes_per_node, ring_gatherv_bytes_per_node, speedup_series,
     torus_gatherv_bytes_per_node, CostModel, LinkModel,
 };
+use crate::comm::pipeline;
 use crate::compress::CodecSpec;
 use crate::config::{codec_str, TrainConfig};
 use crate::coordinator::Trainer;
@@ -273,6 +283,19 @@ pub struct FabricSweepOpts {
     /// Codec warmup steps before the measured message (residual state
     /// makes step-0 messages unrepresentative).
     pub warmup_steps: u32,
+    /// Run every cell through the bucketed overlap pipeline as well
+    /// (`repro fabric-sweep --overlap`): adds phased-vs-overlapped
+    /// step spans, overlap efficiency, and bucket counts per row, and
+    /// gives the dense allreduce baseline the same treatment.
+    pub overlap: bool,
+    /// Tensor-fusion threshold for overlap cells, bytes (`--bucket-bytes`).
+    pub bucket_bytes: usize,
+    /// Synthetic backprop cost feeding bucket-ready times, ns/param
+    /// (`--compute-ns`); the overlap columns measure how much of the
+    /// wire hides behind this compute span.
+    pub compute_ns_per_param: f64,
+    /// Synthetic serial-encoder cost, ns/param (`--encode-ns`).
+    pub encode_ns_per_param: f64,
 }
 
 impl Default for FabricSweepOpts {
@@ -304,6 +327,10 @@ impl Default for FabricSweepOpts {
             stragglers: Vec::new(),
             seed: 0,
             warmup_steps: 2,
+            overlap: false,
+            bucket_bytes: 65_536,
+            compute_ns_per_param: 50.0,
+            encode_ns_per_param: 10.0,
         }
     }
 }
@@ -337,6 +364,10 @@ impl FabricSweepOpts {
             ("stragglers", s(&Straggler::list_str(&self.stragglers))),
             ("seed", num(self.seed as f64)),
             ("warmup_steps", num(self.warmup_steps as f64)),
+            ("overlap", Json::Bool(self.overlap)),
+            ("bucket_bytes", num(self.bucket_bytes as f64)),
+            ("compute_ns_per_param", num(self.compute_ns_per_param)),
+            ("encode_ns_per_param", num(self.encode_ns_per_param)),
         ])
     }
 
@@ -401,6 +432,18 @@ impl FabricSweepOpts {
         if let Some(v) = j.get("warmup_steps") {
             o.warmup_steps = v.as_usize()? as u32;
         }
+        if let Some(Json::Bool(b)) = j.get("overlap") {
+            o.overlap = *b;
+        }
+        if let Some(v) = j.get("bucket_bytes") {
+            o.bucket_bytes = v.as_usize()?;
+        }
+        if let Some(v) = j.get("compute_ns_per_param") {
+            o.compute_ns_per_param = v.as_f64()?;
+        }
+        if let Some(v) = j.get("encode_ns_per_param") {
+            o.encode_ns_per_param = v.as_f64()?;
+        }
         Ok(o)
     }
 }
@@ -422,6 +465,10 @@ pub fn validate_sweep(opts: &FabricSweepOpts) -> Result<()> {
     anyhow::ensure!(
         opts.inter_rack_gbps.iter().all(|g| *g > 0.0),
         "inter-rack-gbps values must be positive"
+    );
+    anyhow::ensure!(
+        opts.compute_ns_per_param >= 0.0 && opts.encode_ns_per_param >= 0.0,
+        "compute-ns and encode-ns must be non-negative"
     );
     // Every swept cell must be a valid fabric config for every worker
     // count: pinned torus dims must factor each p, and an uplink axis
@@ -486,6 +533,19 @@ pub struct FabricSweepRow {
     pub events: u64,
     /// Ring only: the paper's analytic `T_v` bound for these messages.
     pub analytic_ms: Option<f64>,
+    /// Overlap cells only: phased step span (compute + encode + comm
+    /// serialized), ms.
+    pub phased_ms: Option<f64>,
+    /// Overlap cells only: overlapped step span (comm hidden behind
+    /// compute where the schedule allows), ms.
+    pub overlap_ms: Option<f64>,
+    /// Overlap cells only: ideal `max(compute, comm)` over achieved.
+    pub overlap_eff: Option<f64>,
+    /// Overlap cells only: bucket count after BDP coalescing.
+    pub buckets: Option<usize>,
+    /// Overlap cells only: the dense f32 allreduce baseline run through
+    /// the same bucketed overlap schedule, ms.
+    pub dense_overlap_ms: Option<f64>,
 }
 
 /// The deterministic per-worker gradient stream the sweep feeds every
@@ -543,6 +603,17 @@ fn analytic_gatherv_bytes(kind: TopologyKind, sizes: &[u64]) -> Option<Vec<u64>>
 /// `inter_rack_gbps` bandwidth-skew axis.
 pub fn fabric_sweep(opts: &FabricSweepOpts) -> Vec<FabricSweepRow> {
     let mut rows = Vec::new();
+    // Overlap cells share one bucket plan (the layout is the sweep's
+    // synthetic gradient, identical across cells) and one synthetic
+    // compute/encode span derived from the per-param costs.
+    let bucket_weights = if opts.overlap {
+        let layout = Layout::uniform(opts.n_params, 256);
+        pipeline::bucket_weights(&pipeline::form_buckets(&layout, opts.bucket_bytes))
+    } else {
+        Vec::new()
+    };
+    let grad_ps = (opts.n_params as f64 * opts.compute_ns_per_param * 1e3) as u64;
+    let encode_ps = (opts.n_params as f64 * opts.encode_ns_per_param * 1e3) as u64;
     for &p in &opts.workers {
         // The gradient stream is codec-independent, so encode once per
         // codec and reuse one dense baseline per (topology, bandwidth).
@@ -593,6 +664,16 @@ pub fn fabric_sweep(opts: &FabricSweepOpts) -> Vec<FabricSweepRow> {
                     let mut reduce_fabric = Fabric::for_topology(&cfg, &*topo);
                     let dense = topo.allreduce(&mut reduce_fabric, &final_grads);
                     let dense_ms = dense.time_secs() * 1e3;
+                    // The dense baseline gets the same segmented-overlap
+                    // treatment (bucketed, gated on gradient readiness,
+                    // no encode stage), keeping comparisons honest.
+                    let dense_overlap_ms = if opts.overlap {
+                        let ov =
+                            allreduce_overlapped(&cfg, &final_grads, &bucket_weights, grad_ps);
+                        Some(ov.schedule.overlapped_ps as f64 * 1e-9)
+                    } else {
+                        None
+                    };
 
                     for (label, msgs, sizes, wire_per_worker) in &encoded {
                         let mut gather_fabric = Fabric::for_topology(&cfg, &*topo);
@@ -617,6 +698,24 @@ pub fn fabric_sweep(opts: &FabricSweepOpts) -> Vec<FabricSweepRow> {
                             None
                         };
 
+                        let (phased_ms, overlap_ms, overlap_eff, buckets) = if opts.overlap {
+                            let ov = allgatherv_overlapped(
+                                &cfg,
+                                msgs,
+                                &bucket_weights,
+                                grad_ps,
+                                encode_ps,
+                            );
+                            (
+                                Some(ov.schedule.phased_ps as f64 * 1e-9),
+                                Some(ov.schedule.overlapped_ps as f64 * 1e-9),
+                                Some(ov.schedule.efficiency()),
+                                Some(ov.buckets),
+                            )
+                        } else {
+                            (None, None, None, None)
+                        };
+
                         let sim_ms = gather.time_secs() * 1e3;
                         rows.push(FabricSweepRow {
                             topology: resolved.label(),
@@ -632,6 +731,11 @@ pub fn fabric_sweep(opts: &FabricSweepOpts) -> Vec<FabricSweepRow> {
                             speedup: if sim_ms > 0.0 { dense_ms / sim_ms } else { 0.0 },
                             events: gather.events,
                             analytic_ms,
+                            phased_ms,
+                            overlap_ms,
+                            overlap_eff,
+                            buckets,
+                            dense_overlap_ms,
                         });
                     }
                 }
@@ -660,6 +764,45 @@ pub fn fabric_sweep_markdown(opts: &FabricSweepOpts, rows: &[FabricSweepRow]) ->
             format!(", stragglers {}", Straggler::list_str(&opts.stragglers))
         }
     ));
+    if opts.overlap {
+        // The overlap report swaps the raw-gather bookkeeping columns
+        // for the pipeline's phased-vs-overlapped comparison.
+        out.push_str(
+            "| topology | p | Gbps | uplink | codec | wire/worker | phased \
+             | overlapped | overlap eff | buckets | dense overlap | speedup |\n",
+        );
+        out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+        for r in rows {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {:.2}x |\n",
+                r.topology,
+                r.workers,
+                r.bandwidth_gbps,
+                r.inter_rack_gbps
+                    .map(|g| format!("{g}"))
+                    .unwrap_or_else(|| "-".into()),
+                r.codec,
+                human_bytes(r.wire_bytes_per_worker),
+                r.phased_ms
+                    .map(|v| format!("{v:.3} ms"))
+                    .unwrap_or_else(|| "-".into()),
+                r.overlap_ms
+                    .map(|v| format!("{v:.3} ms"))
+                    .unwrap_or_else(|| "-".into()),
+                r.overlap_eff
+                    .map(|v| format!("{v:.3}"))
+                    .unwrap_or_else(|| "-".into()),
+                r.buckets
+                    .map(|v| format!("{v}"))
+                    .unwrap_or_else(|| "-".into()),
+                r.dense_overlap_ms
+                    .map(|v| format!("{v:.3} ms"))
+                    .unwrap_or_else(|| "-".into()),
+                r.speedup,
+            ));
+        }
+        return out;
+    }
     out.push_str(
         "| topology | p | Gbps | uplink | codec | wire/worker | sim gatherv \
          | dense allreduce | speedup | analytic T_v | max link | events |\n",
@@ -723,6 +866,20 @@ pub fn fabric_sweep_json(rows: &[FabricSweepRow]) -> Json {
                     (
                         "analytic_ms",
                         r.analytic_ms.map(num).unwrap_or(Json::Null),
+                    ),
+                    ("phased_ms", r.phased_ms.map(num).unwrap_or(Json::Null)),
+                    ("overlap_ms", r.overlap_ms.map(num).unwrap_or(Json::Null)),
+                    (
+                        "overlap_eff",
+                        r.overlap_eff.map(num).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "buckets",
+                        r.buckets.map(|b| num(b as f64)).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "dense_overlap_ms",
+                        r.dense_overlap_ms.map(num).unwrap_or(Json::Null),
                     ),
                 ])
             })
@@ -850,6 +1007,63 @@ mod tests {
             .iter()
             .filter(|r| r.topology.starts_with("torus"))
             .all(|r| r.inter_rack_gbps.is_none()));
+    }
+
+    #[test]
+    fn overlap_sweep_hides_comm_behind_compute() {
+        let opts = FabricSweepOpts {
+            topologies: vec![
+                TopologyKind::Ring,
+                TopologyKind::Torus { rows: 0, cols: 0 },
+                TopologyKind::Hier { groups: 2 },
+            ],
+            workers: vec![8],
+            bandwidths_gbps: vec![1.0],
+            codecs: vec![
+                CodecSpec::None,
+                CodecSpec::Vgc {
+                    alpha: 2.0,
+                    zeta: 0.999,
+                },
+            ],
+            overlap: true,
+            ..FabricSweepOpts::default()
+        };
+        let rows = fabric_sweep(&opts);
+        assert_eq!(rows.len(), 6);
+        let md = fabric_sweep_markdown(&opts, &rows);
+        assert!(md.contains("overlap eff"), "{md}");
+        assert_eq!(md.lines().filter(|l| l.starts_with("| ")).count(), 1 + rows.len());
+        for r in &rows {
+            let phased = r.phased_ms.expect("overlap rows carry phased_ms");
+            let over = r.overlap_ms.expect("overlap rows carry overlap_ms");
+            assert!(
+                over <= phased + 1e-9,
+                "{} {}: overlapped {over} > phased {phased}",
+                r.topology,
+                r.codec
+            );
+            assert!(r.buckets.unwrap() >= 1);
+            assert!(r.dense_overlap_ms.unwrap() > 0.0);
+            let eff = r.overlap_eff.unwrap();
+            assert!(eff > 0.0 && eff <= 1.0 + 1e-9, "eff {eff}");
+            // Acceptance: for dense-size messages the overlapped step
+            // lands within ~10% of the ideal max(compute, comm) on
+            // every topology at default bandwidths.
+            if r.codec == "none" {
+                assert!(eff >= 0.9, "{} eff {eff} < 0.9", r.topology);
+            }
+        }
+        // With overlap off the pipeline columns stay unset.
+        let plain = fabric_sweep(&FabricSweepOpts {
+            overlap: false,
+            ..opts
+        });
+        assert!(plain.iter().all(|r| r.phased_ms.is_none()
+            && r.overlap_ms.is_none()
+            && r.overlap_eff.is_none()
+            && r.buckets.is_none()
+            && r.dense_overlap_ms.is_none()));
     }
 
     #[test]

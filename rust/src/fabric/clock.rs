@@ -99,6 +99,18 @@ impl<E> SimClock<E> {
         self.heap.push(Entry { at, seq, ev });
     }
 
+    /// Jump `now` forward to `t` (no-op if `t` is in the past). Only
+    /// legal while the queue is idle — advancing over pending events
+    /// would deliver them late and break causality.
+    pub fn advance_to(&mut self, t: Time) {
+        assert!(
+            self.heap.is_empty(),
+            "advance_to with {} events pending",
+            self.heap.len()
+        );
+        self.now = self.now.max(t);
+    }
+
     /// Pop the earliest event, advancing `now` to its timestamp.
     pub fn pop(&mut self) -> Option<(Time, E)> {
         let e = self.heap.pop()?;
@@ -143,6 +155,25 @@ mod tests {
         let (t, _) = c.pop().unwrap();
         c.schedule(t, 1); // zero-delay follow-up is legal
         assert_eq!(c.pop(), Some((10, 1)));
+    }
+
+    #[test]
+    fn advance_to_moves_forward_only() {
+        let mut c: SimClock<()> = SimClock::new();
+        c.advance_to(100);
+        assert_eq!(c.now(), 100);
+        c.advance_to(50); // in the past: no-op
+        assert_eq!(c.now(), 100);
+        c.schedule(100, ());
+        assert_eq!(c.pop(), Some((100, ())));
+    }
+
+    #[test]
+    #[should_panic(expected = "events pending")]
+    fn advance_over_pending_events_panics() {
+        let mut c = SimClock::new();
+        c.schedule(10, ());
+        c.advance_to(20);
     }
 
     #[test]

@@ -146,6 +146,32 @@ impl LinkTable {
     pub fn max_node(&self) -> Option<usize> {
         self.overrides.keys().map(|&(s, d)| s.max(d)).max()
     }
+
+    /// Iterate the overridden directed edges and their specs, in
+    /// deterministic `(src, dst)` order.
+    pub fn iter_overrides(&self) -> impl Iterator<Item = (&(usize, usize), &LinkSpec)> {
+        self.overrides.iter()
+    }
+
+    /// The slowest spec any directed edge can resolve to: lowest
+    /// bandwidth among the default and every override, breaking ties
+    /// toward the higher latency (the conservative choice for a
+    /// bandwidth-delay-product bound). This is a property of the
+    /// *table*, not of a traffic pattern — an override on an unused
+    /// edge still counts, which is the right bias for sizing pipeline
+    /// segments (a segment must survive the worst wire it could cross).
+    pub fn slowest_spec(&self) -> LinkSpec {
+        let mut worst = self.default;
+        for spec in self.overrides.values() {
+            let slower = spec.bandwidth_gbps < worst.bandwidth_gbps
+                || (spec.bandwidth_gbps == worst.bandwidth_gbps
+                    && spec.latency_us > worst.latency_us);
+            if slower {
+                worst = *spec;
+            }
+        }
+        worst
+    }
 }
 
 /// Parse a comma-separated per-link override list:
@@ -262,6 +288,25 @@ mod tests {
         t.set(2, 5, LinkSpec::gige());
         assert_eq!(t.spec(2, 5).bandwidth_gbps, 1.0);
         assert_eq!(t.overrides(), 1);
+    }
+
+    #[test]
+    fn slowest_spec_scans_default_and_overrides() {
+        let mut t = LinkTable::uniform(LinkSpec::infiniband());
+        assert_eq!(t.slowest_spec(), LinkSpec::infiniband());
+        t.set(0, 1, LinkSpec::gige());
+        assert_eq!(t.slowest_spec(), LinkSpec::gige());
+        // Equal bandwidth, higher latency wins the tie.
+        let laggy = LinkSpec {
+            latency_us: 500.0,
+            ..LinkSpec::gige()
+        };
+        t.set(1, 0, laggy);
+        assert_eq!(t.slowest_spec(), laggy);
+        // A fast override never displaces a slow default.
+        let s = LinkTable::uniform(LinkSpec::gige());
+        assert_eq!(s.slowest_spec(), LinkSpec::gige());
+        assert_eq!(t.iter_overrides().count(), 2);
     }
 
     #[test]

@@ -338,6 +338,25 @@ impl Fabric {
         self.segment_bytes
     }
 
+    /// Re-pin the gather segment size between collectives — the hook
+    /// the overlapped pipeline uses to apply a bandwidth-delay-product
+    /// segment derived from this fabric's own [`LinkTable`] (see
+    /// `comm::pipeline::bdp_segment_bytes`).
+    pub fn set_segment_bytes(&mut self, seg: usize) {
+        self.segment_bytes = seg;
+    }
+
+    /// Jump the event clock forward to absolute time `t` (no-op when
+    /// `t` has already passed). Only legal between `run`s. This is how
+    /// a scheduler releases the next collective at a compute-side
+    /// readiness time — e.g. "bucket k's encode finishes at `t`; its
+    /// gather may not start earlier" — while port state (egress/
+    /// ingress free times) carries over, so back-to-back bucket
+    /// gathers still contend for the same wires.
+    pub fn advance_to(&mut self, t: Time) {
+        self.clock.advance_to(t);
+    }
+
     pub fn node_count(&self) -> usize {
         self.nodes.len()
     }

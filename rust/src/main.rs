@@ -18,7 +18,7 @@ use anyhow::Result;
 use vgc::compress::CodecSpec;
 use vgc::config::TrainConfig;
 use vgc::coordinator::Trainer;
-use vgc::experiments::{self, BenchCodecsOpts, ChaosSweepOpts, FabricSweepOpts};
+use vgc::experiments::{self, BenchCodecsOpts, BenchPipelineOpts, ChaosSweepOpts, FabricSweepOpts};
 use vgc::fabric::{build_topology, FabricConfig, Straggler, TopologyKind};
 use vgc::runtime::{Client, Manifest};
 use vgc::service::http::{http_request, http_stream};
@@ -52,6 +52,7 @@ USAGE:
                   [--stragglers NODE:SLOW,..] [--fabric-seed S]
                   [--faults SPEC | --fault-plan FILE.json]
                   [--on-crash renorm|flush-rejoin]
+                  [--bucket-bytes N] [--overlap]  (bucketed overlap pipeline)
   repro table1    [--optimizers adam,momentum] [--steps N] [--out FILE.json]
   repro table2    [--optimizers adam,momentum] [--steps N] [--out FILE.json]
   repro fig3      [--steps N] [--out FILE.csv]
@@ -63,6 +64,8 @@ USAGE:
                   [--segment-bytes N] [--codecs SPEC+SPEC+..]
                   [--n PARAMS] [--latency-us L] [--jitter-us J]
                   [--stragglers NODE:SLOW,..] [--seed S] [--warmup K]
+                  [--overlap] [--bucket-bytes N]  (phased-vs-overlapped columns)
+                  [--compute-ns F] [--encode-ns F]  (synthetic ns/param costs)
                   [--out FILE.json] [--md FILE.md]
   repro chaos-sweep
                   [--topologies ring,star,hier:2,..] [--workers P]
@@ -74,6 +77,12 @@ USAGE:
                   [--n PARAMS] [--group SIZE] [--workers P]
                   [--threads T1,T2,..] [--codecs SPEC+SPEC+..]
                   [--alloc-steps K] [--json FILE.json]
+  repro bench-pipeline
+                  [--topologies ring,torus,hier:2,..] [--workers P]
+                  [--bandwidth-gbps G] [--codecs SPEC+SPEC+..]
+                  [--n PARAMS] [--bucket-bytes N] [--segment-bytes N]
+                  [--compute-ns F] [--encode-ns F] [--seed S]
+                  [--json FILE.json] [--md FILE.md]
   repro inspect   [--artifacts DIR]
   repro serve     --listen ADDR:PORT  (0 picks an ephemeral port)
                   [--queues name=limit,..] [--sched-threads N]
@@ -100,6 +109,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "model", "codec", "optimizer", "lr", "steps", "seed", "weight-decay",
     "train-size", "test-size", "signal", "eval-every", "log-every",
     "verify-sync", "codec-threads", "loss-curve", "artifacts", "on-crash",
+    "bucket-bytes", "overlap",
 ];
 
 /// Train accepts its own flags plus the fabric overrides — built at
@@ -115,7 +125,7 @@ fn artifacts_dir(args: &Args) -> String {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["verify-sync", "quiet", "watch"])?;
+    let args = Args::from_env(&["verify-sync", "quiet", "watch", "overlap"])?;
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("");
     match cmd {
         "train" => cmd_train(&args),
@@ -129,6 +139,7 @@ fn main() -> Result<()> {
         "fabric-sweep" => cmd_fabric_sweep(&args),
         "chaos-sweep" => cmd_chaos_sweep(&args),
         "bench-codecs" => cmd_bench_codecs(&args),
+        "bench-pipeline" => cmd_bench_pipeline(&args),
         "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
         "submit" => cmd_submit(&args),
@@ -205,6 +216,21 @@ fn cmd_train(args: &Args) -> Result<()> {
             total_ms / steps as f64,
             total_ms,
         );
+        if trainer.cfg.overlap || trainer.cfg.bucket_bytes > 0 {
+            let phased_ms = trainer.sim_phased_ps as f64 * 1e-9;
+            let overlap_ms = trainer.sim_overlap_ps as f64 * 1e-9;
+            println!(
+                "pipeline           phased {:.3} ms, overlapped {:.3} ms ({:.2}x, bucket {} B)",
+                phased_ms,
+                overlap_ms,
+                if overlap_ms > 0.0 {
+                    phased_ms / overlap_ms
+                } else {
+                    1.0
+                },
+                trainer.cfg.bucket_bytes,
+            );
+        }
     }
     if let Some(path) = args.get("loss-curve") {
         std::fs::write(path, m.loss_curve_csv())?;
@@ -217,7 +243,7 @@ fn cmd_fabric_sweep(args: &Args) -> Result<()> {
     args.check_known(&[
         "topologies", "workers", "bandwidth-gbps", "inter-rack-gbps", "segment-bytes",
         "codecs", "n", "latency-us", "jitter-us", "stragglers", "seed", "warmup",
-        "out", "md",
+        "overlap", "bucket-bytes", "compute-ns", "encode-ns", "out", "md",
     ])?;
     let mut opts = FabricSweepOpts::default();
     let topologies = args
@@ -258,6 +284,12 @@ fn cmd_fabric_sweep(args: &Args) -> Result<()> {
     }
     opts.seed = args.parse_or("seed", opts.seed)?;
     opts.warmup_steps = args.parse_or("warmup", opts.warmup_steps)?;
+    if args.has("overlap") {
+        opts.overlap = true;
+    }
+    opts.bucket_bytes = args.parse_or("bucket-bytes", opts.bucket_bytes)?;
+    opts.compute_ns_per_param = args.parse_or("compute-ns", opts.compute_ns_per_param)?;
+    opts.encode_ns_per_param = args.parse_or("encode-ns", opts.encode_ns_per_param)?;
     // Same validation the service daemon applies to HTTP submissions.
     experiments::validate_sweep(&opts)?;
 
@@ -367,6 +399,51 @@ fn cmd_bench_codecs(args: &Args) -> Result<()> {
     print!("{}", experiments::bench_codecs_markdown(&opts, &rows));
     if let Some(path) = args.get("json") {
         std::fs::write(path, experiments::bench_codecs_json(&opts, &rows).to_string())?;
+        println!("\nresults written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_bench_pipeline(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "topologies", "workers", "bandwidth-gbps", "codecs", "n", "bucket-bytes",
+        "segment-bytes", "compute-ns", "encode-ns", "seed", "json", "md",
+    ])?;
+    let mut opts = BenchPipelineOpts::default();
+    let topologies = args
+        .list("topologies")
+        .iter()
+        .map(|t| TopologyKind::parse(t))
+        .collect::<Result<Vec<_>>>()?;
+    if !topologies.is_empty() {
+        opts.topologies = topologies;
+    }
+    opts.workers = args.parse_or("workers", opts.workers)?;
+    opts.bandwidth_gbps = args.parse_or("bandwidth-gbps", opts.bandwidth_gbps)?;
+    // Codec specs contain commas, so the list separator is '+'.
+    if let Some(spec) = args.get("codecs") {
+        opts.codecs = spec
+            .split('+')
+            .filter(|c| !c.trim().is_empty())
+            .map(|c| CodecSpec::parse(c.trim()))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    opts.n_params = args.parse_or("n", opts.n_params)?;
+    opts.bucket_bytes = args.parse_or("bucket-bytes", opts.bucket_bytes)?;
+    opts.segment_bytes = args.parse_or("segment-bytes", opts.segment_bytes)?;
+    opts.compute_ns_per_param = args.parse_or("compute-ns", opts.compute_ns_per_param)?;
+    opts.encode_ns_per_param = args.parse_or("encode-ns", opts.encode_ns_per_param)?;
+    opts.seed = args.parse_or("seed", opts.seed)?;
+
+    let rows = experiments::bench_pipeline(&opts)?;
+    let md = experiments::bench_pipeline_markdown(&opts, &rows);
+    print!("{md}");
+    if let Some(path) = args.get("md") {
+        std::fs::write(path, &md)?;
+        println!("\nmarkdown written to {path}");
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, experiments::bench_pipeline_json(&opts, &rows).to_string())?;
         println!("\nresults written to {path}");
     }
     Ok(())

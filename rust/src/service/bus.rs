@@ -101,6 +101,15 @@ impl<T> Default for Bus<T> {
     }
 }
 
+/// NaN/inf have no JSON literal; metric fields encode them as null.
+fn finite_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        num(x)
+    } else {
+        Json::Null
+    }
+}
+
 /// The service's typed event vocabulary. Every variant names the job it
 /// concerns; `to_json` is the NDJSON wire shape of `/jobs/:id/events`.
 #[derive(Debug, Clone)]
@@ -120,6 +129,15 @@ pub enum Event {
         done: u64,
         total: u64,
         detail: String,
+    },
+    /// A training step completed — live per-step metrics for `train`
+    /// jobs (loss, cumulative compression ratio, simulated step span).
+    Step {
+        job: u64,
+        step: u64,
+        loss: f64,
+        comp_ratio: f64,
+        sim_step_ps: u64,
     },
     /// The attempt failed and the job re-queued with backoff.
     JobRetry {
@@ -160,6 +178,7 @@ impl Event {
             Event::JobQueued { job, .. }
             | Event::JobStarted { job, .. }
             | Event::JobProgress { job, .. }
+            | Event::Step { job, .. }
             | Event::JobRetry { job, .. }
             | Event::Fault { job, .. }
             | Event::Degraded { job, .. }
@@ -204,6 +223,20 @@ impl Event {
                 ("done", num(*done as f64)),
                 ("total", num(*total as f64)),
                 ("detail", s(detail)),
+            ]),
+            Event::Step {
+                job,
+                step,
+                loss,
+                comp_ratio,
+                sim_step_ps,
+            } => obj(vec![
+                ("event", s("step")),
+                ("job", num(*job as f64)),
+                ("step", num(*step as f64)),
+                ("loss", finite_or_null(*loss)),
+                ("comp_ratio", finite_or_null(*comp_ratio)),
+                ("sim_step_ps", num(*sim_step_ps as f64)),
             ]),
             Event::JobRetry {
                 job,
@@ -335,6 +368,22 @@ mod tests {
         assert_eq!(j.get("event").unwrap().as_str().unwrap(), "fault");
         assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "crash");
         assert_eq!(j.get("node").unwrap().as_usize().unwrap(), 2);
+
+        let step = Event::Step {
+            job: 7,
+            step: 42,
+            loss: 0.5,
+            comp_ratio: f64::NAN,
+            sim_step_ps: 1_000_000,
+        };
+        assert_eq!(step.job(), Some(7));
+        assert!(!step.is_terminal_for(7));
+        let j = step.to_json();
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "step");
+        assert_eq!(j.get("step").unwrap().as_usize().unwrap(), 42);
+        assert_eq!(j.get("loss").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(j.get("comp_ratio"), Some(&Json::Null)); // NaN -> null
+        assert_eq!(j.get("sim_step_ps").unwrap().as_usize().unwrap(), 1_000_000);
 
         let deg = Event::Degraded {
             job: 5,

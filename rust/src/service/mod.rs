@@ -314,7 +314,23 @@ fn run_train(ctx: &ExecCtx, cfg: &TrainConfig, jctx: &JobCtx) -> Result<Json> {
     let mut trainer = Trainer::with_engine(&client, &manifest, cfg, ctx.engine.clone())?;
     let finished = trainer.run_with(true, &mut |ev| {
         match ev {
-            RunEvent::Step { step, loss, .. } => {
+            RunEvent::Step {
+                step,
+                loss,
+                comp_ratio,
+                sim_step_ps,
+                ..
+            } => {
+                // Every step goes on the event stream as a typed metric
+                // line; the coarser human-readable progress keeps its
+                // log_every gating.
+                jctx.publish(Event::Step {
+                    job: jctx.id,
+                    step,
+                    loss: loss as f64,
+                    comp_ratio,
+                    sim_step_ps,
+                });
                 if step % progress_every == 0 {
                     jctx.progress(step, total, &format!("loss {loss:.4}"));
                 }
@@ -360,6 +376,8 @@ fn run_train(ctx: &ExecCtx, cfg: &TrainConfig, jctx: &JobCtx) -> Result<Json> {
         ("bits_ratio", num_or_null(m.bits_ratio())),
         ("residual_l1", num_or_null(trainer.residual_l1())),
         ("sim_comm_ps", num(trainer.sim_comm_ps as f64)),
+        ("sim_phased_ps", num(trainer.sim_phased_ps as f64)),
+        ("sim_overlap_ps", num(trainer.sim_overlap_ps as f64)),
         ("fault_report", trainer.fault_report.to_json()),
         (
             "params_fnv64",

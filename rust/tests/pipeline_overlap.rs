@@ -1,0 +1,124 @@
+//! Integration: the bucketed overlap pipeline is a pure scheduling
+//! change. For every codec, bucket size (including the 1-byte
+//! degenerate case) and topology, trained parameters must be
+//! bit-identical to the phased path, and the reported overlapped step
+//! time must never exceed the phased step time.
+
+use vgc::compress::CodecSpec;
+use vgc::config::TrainConfig;
+use vgc::coordinator::Trainer;
+use vgc::fabric::TopologyKind;
+use vgc::runtime::{Client, Manifest};
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(dir).expect("manifest parses"))
+}
+
+fn cfg(codec: CodecSpec, bucket_bytes: usize, overlap: bool) -> TrainConfig {
+    let mut cfg = TrainConfig::defaults("mlp");
+    cfg.codec = codec;
+    cfg.steps = 6;
+    cfg.eval_every = 0;
+    cfg.log_every = 0;
+    cfg.verify_sync = true;
+    cfg.bucket_bytes = bucket_bytes;
+    cfg.overlap = overlap;
+    cfg
+}
+
+struct Run {
+    params: Vec<f32>,
+    sim_phased_ps: u64,
+    sim_overlap_ps: u64,
+}
+
+fn run(client: &Client, man: &Manifest, cfg: TrainConfig) -> Run {
+    let mut t = Trainer::new(client, man, cfg).unwrap();
+    t.run(true).unwrap();
+    Run {
+        params: t.params.clone(),
+        sim_phased_ps: t.sim_phased_ps,
+        sim_overlap_ps: t.sim_overlap_ps,
+    }
+}
+
+fn all_codecs() -> Vec<CodecSpec> {
+    vec![
+        CodecSpec::None,
+        CodecSpec::Vgc { alpha: 1.5, zeta: 0.999 },
+        CodecSpec::VgcCompact { alpha: 1.5, zeta: 0.999 },
+        CodecSpec::Strom { tau: 0.001 },
+        CodecSpec::Hybrid { tau: 0.001, alpha: 2.0, zeta: 0.999 },
+        CodecSpec::Qsgd { bits: 4, bucket: 128 },
+        CodecSpec::TernGrad,
+        CodecSpec::OneBit,
+        CodecSpec::Adaptive { pi: 0.01 },
+    ]
+}
+
+#[test]
+fn bucketed_pipeline_is_bit_identical_for_every_codec() {
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    for codec in all_codecs() {
+        let label = codec.label();
+        let base = run(&client, &man, cfg(codec.clone(), 0, false));
+        // The legacy path reports the same span phased and overlapped.
+        assert_eq!(
+            base.sim_phased_ps, base.sim_overlap_ps,
+            "{label}: phased path must report equal spans"
+        );
+        // 1-byte buckets (one bucket per layer group), a realistic
+        // fusion threshold, and overlap-without-fusion (one bucket).
+        for (bytes, overlap) in [(1usize, true), (4096, true), (4096, false), (0, true)] {
+            let piped = run(&client, &man, cfg(codec.clone(), bytes, overlap));
+            assert_eq!(
+                base.params, piped.params,
+                "{label} bucket={bytes} overlap={overlap}: pipeline changed the math"
+            );
+            assert!(
+                piped.sim_overlap_ps <= piped.sim_phased_ps,
+                "{label} bucket={bytes} overlap={overlap}: overlapped {} > phased {}",
+                piped.sim_overlap_ps,
+                piped.sim_phased_ps
+            );
+        }
+    }
+}
+
+#[test]
+fn overlap_is_topology_invariant() {
+    let Some(man) = manifest() else { return };
+    let client = Client::cpu().unwrap();
+    let codecs = [
+        CodecSpec::None,
+        CodecSpec::Vgc { alpha: 1.5, zeta: 0.999 },
+    ];
+    for codec in codecs {
+        let label = codec.label();
+        let base = run(&client, &man, cfg(codec.clone(), 0, false));
+        for topology in [
+            TopologyKind::Ring,
+            TopologyKind::Star,
+            TopologyKind::Torus { rows: 0, cols: 0 },
+            TopologyKind::Hier { groups: 2 },
+        ] {
+            let mut c = cfg(codec.clone(), 2048, true);
+            c.fabric.topology = topology;
+            let piped = run(&client, &man, c);
+            assert_eq!(
+                base.params, piped.params,
+                "{label} on {topology:?}: pipeline changed the math"
+            );
+            assert!(
+                piped.sim_overlap_ps <= piped.sim_phased_ps,
+                "{label} on {topology:?}: overlapped exceeds phased"
+            );
+        }
+    }
+}

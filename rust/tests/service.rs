@@ -431,6 +431,10 @@ fn train_job_over_http_matches_in_process_run() {
     cfg.codec = vgc::compress::CodecSpec::parse("vgc:alpha=1.5").unwrap();
     cfg.steps = 5;
     cfg.codec_threads = 1;
+    // Run through the bucketed overlap pipeline: the daemon path must
+    // stay bit-identical to the in-process run with it on, too.
+    cfg.bucket_bytes = 4096;
+    cfg.overlap = true;
     let spec = cfg.to_json().to_string();
 
     let d = DaemonProc::spawn(&["--codec-threads", "1"]);
@@ -438,7 +442,21 @@ fn train_job_over_http_matches_in_process_run() {
     let snap = wait_terminal(&d.addr, id, Duration::from_secs(300));
     assert_eq!(sget(&snap, "state"), "succeeded", "train: {:?}", snap.get("error"));
     let result = snap.get("result").expect("train result");
+
+    // Live telemetry: one `step` NDJSON event per training step, each
+    // carrying loss, the cumulative compression ratio, and the
+    // simulated (overlapped) step span. The bus replays a terminal
+    // job's history, so streaming after completion sees all of them.
+    let events = stream_to_end(&d.addr, id);
     d.shutdown();
+    let steps: Vec<&Json> = events.iter().filter(|e| event_is(e, "step")).collect();
+    assert_eq!(steps.len() as u64, cfg.steps, "one step event per training step");
+    for (i, e) in steps.iter().enumerate() {
+        assert_eq!(nget(e, "step"), i as u64 + 1, "step events in order");
+        assert!(e.get("loss").unwrap().as_f64().unwrap().is_finite());
+        assert!(e.get("comp_ratio").unwrap().as_f64().unwrap() > 1.0, "vgc must compress");
+        assert!(nget(e, "sim_step_ps") > 0, "step span must be simulated");
+    }
 
     let manifest = vgc::runtime::Manifest::load("artifacts").unwrap();
     let mut trainer = vgc::coordinator::Trainer::new(&client, &manifest, cfg).unwrap();
