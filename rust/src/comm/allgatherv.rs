@@ -20,7 +20,9 @@
 
 use super::pipeline::{self, OverlapSchedule};
 use super::Traffic;
-use crate::fabric::{build_topology, degraded_topology, Fabric, FabricConfig, FabricReport, Time};
+use crate::fabric::{
+    build_topology, degraded_topology, Fabric, FabricConfig, FabricReport, FabricTelemetry, Time,
+};
 
 /// Result of one allgatherv: `gathered[dst][src]` is node `src`'s
 /// message as received by node `dst` (every row must be identical —
@@ -33,6 +35,9 @@ pub struct GatherResult {
     /// Fault/recovery counters from the fabric (all zero when the
     /// chaos plan is empty or nothing fired).
     pub report: FabricReport,
+    /// Per-link snapshot of this collective (bandwidth, bytes, fault
+    /// counters) — the feedback signal for `compress::controller`.
+    pub telemetry: FabricTelemetry,
 }
 
 /// Run an allgatherv over each node's input message on the configured
@@ -50,6 +55,7 @@ pub fn allgatherv(cfg: &FabricConfig, inputs: &[Vec<u8>]) -> GatherResult {
         traffic: sim.traffic,
         time_ps: sim.time_ps,
         report: fabric.report(),
+        telemetry: fabric.telemetry(Vec::new()),
     }
 }
 
@@ -83,6 +89,7 @@ pub fn allgatherv_faulty(cfg: &FabricConfig, inputs: &[Vec<u8>], dead: &[usize])
         traffic: sim.traffic,
         time_ps: sim.time_ps,
         report: fabric.report(),
+        telemetry: fabric.telemetry(Vec::new()),
     }
 }
 
@@ -110,6 +117,10 @@ pub struct OverlappedGather {
     /// Buckets actually gathered, after sub-segment coalescing.
     pub buckets: usize,
     pub events: u64,
+    /// Per-link snapshot including per-bucket comm times (the
+    /// schedule's comm durations in bucket order) — the feedback
+    /// signal for `compress::controller`.
+    pub telemetry: FabricTelemetry,
 }
 
 /// Async multi-gather front: gather each worker's message as a train
@@ -177,6 +188,7 @@ pub fn allgatherv_overlapped(
         traffic = sim.traffic;
         events = sim.events;
     }
+    let telemetry = fabric.telemetry(comm.clone());
     OverlappedGather {
         gathered,
         schedule: pipeline::schedule(&ready, &comm),
@@ -185,6 +197,7 @@ pub fn allgatherv_overlapped(
         segment_bytes: seg,
         buckets: merged.len(),
         events,
+        telemetry,
     }
 }
 
@@ -379,6 +392,30 @@ mod tests {
         assert_eq!(gated.schedule.comm_busy_ps, eager.schedule.comm_busy_ps);
         // Traffic is schedule-invariant and matches the phased gather.
         assert_eq!(gated.traffic.total_bytes(), eager.traffic.total_bytes());
+    }
+
+    #[test]
+    fn gather_results_carry_link_telemetry() {
+        let inputs = msgs(&[64, 128, 32, 96]);
+        let res = ring_allgatherv(&inputs);
+        assert!(!res.telemetry.links.is_empty());
+        assert_eq!(res.telemetry.total_bytes(), res.traffic.total_bytes());
+        assert_eq!(res.telemetry.elapsed_ps, res.time_ps);
+        assert!(res.telemetry.bucket_comm_ps.is_empty(), "unbucketed");
+        // Uniform ring: no slow link class.
+        assert_eq!(res.telemetry.uplink_byte_fraction(), 0.0);
+
+        // Overlapped on an oversubscribed hier fabric: per-bucket comm
+        // times ride along and the uplink share is positive.
+        let cfg = FabricConfig {
+            topology: TopologyKind::Hier { groups: 2 },
+            segment_bytes: 64,
+            ..FabricConfig::default()
+        };
+        let ov = allgatherv_overlapped(&cfg, &inputs, &[512, 512], 1_000_000, 500_000);
+        assert_eq!(ov.telemetry.bucket_comm_ps.len(), ov.buckets);
+        assert!(ov.telemetry.uplink_byte_fraction() > 0.0, "hier uplinks carry bytes");
+        assert!(ov.telemetry.uplink_byte_fraction() < 1.0);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 use super::encode::{ByteReader, ByteWriter};
 use super::engine::{DecodeBuf, EncodeStats};
-use super::{Aggregation, Codec};
+use super::{Aggregation, Codec, KnobState};
 use crate::util::threadpool::{split_ranges, Task, ThreadPool};
 
 /// Per-shard reusable encode scratch (pooled encode).
@@ -198,6 +198,26 @@ impl Codec for AdaptiveCodec {
 
     fn residual_l1(&self) -> f64 {
         self.r.iter().map(|x| x.abs() as f64).sum()
+    }
+
+    fn knob(&self) -> Option<KnobState> {
+        // Lowering π sends fewer elements ⇒ tighter compression
+        // (tighten_up = false: the tighten bound is `lo`).
+        Some(KnobState {
+            name: "pi",
+            value: self.pi,
+            lo: (self.pi * 0.1).max(1e-4),
+            hi: 1.0,
+            tighten_up: false,
+        })
+    }
+
+    fn set_knob(&mut self, value: f32) -> bool {
+        if !(value > 0.0 && value <= 1.0) {
+            return false;
+        }
+        self.pi = value;
+        true
     }
 }
 

@@ -1,0 +1,345 @@
+//! Closed-loop per-bucket compression controller (ROADMAP item 2).
+//!
+//! The paper fixes the variance-decay ζ for the whole run, but the
+//! right compression level depends on where a gradient travels:
+//! a bucket whose bytes cross a 10:1-oversubscribed hier uplink should
+//! tighten while intra-rack buckets relax (GraVAC / Accordion tune the
+//! factor online from similar signals — see PAPERS.md).
+//!
+//! [`KnobController`] closes the loop over the signals the stack
+//! already produces: per-bucket comm time from the overlap schedule
+//! ([`crate::comm::pipeline::OverlapSchedule`]), link-class byte
+//! shares from [`crate::fabric::FabricTelemetry`], and the codec's
+//! wire gain ([`super::engine::EncodeStats::gain`]).
+//!
+//! Control law (deterministic, replayable):
+//!
+//! ```text
+//! pressure_k = comm_k / (cpu / K) · (1 + w_up · uplink_frac) · class_k
+//! err_k      = pressure_k − target
+//! |err_k| ≤ hysteresis            → hold (dead band)
+//! else  u_k += rate · sign(err_k) · min(|err_k|, 1) + dither
+//! u_k ∈ [0, 1];  knob_k = KnobState::at_tightness(initial, u_k)
+//! ```
+//!
+//! `u_k = 0` maps to the codec's *initial* knob value, so a controller
+//! that never sees pressure above target leaves the run bit-identical
+//! to static. The dither is a tiny seeded Pcg32 perturbation (≤ rate/8)
+//! that breaks plateau lock-step between buckets; same seed + same
+//! telemetry sequence ⇒ same knob trajectory (property-tested).
+
+use super::KnobState;
+use crate::util::rng::Pcg32;
+
+/// Tightening stops once the measured wire gain exceeds this ceiling —
+/// past ~4096× the payload is a handful of elements and further
+/// starvation only hurts convergence.
+pub const GAIN_CEILING: f64 = 4096.0;
+
+/// Controller tuning; all fields have conservative defaults.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControllerConfig {
+    /// Pressure target: 1.0 = each bucket's comm exactly fills its
+    /// fair share of the compute budget (fully hidden overlap).
+    pub target: f64,
+    /// Max |Δu| per observation (bounded step size).
+    pub rate: f32,
+    /// Dead band around `target` — no adjustment inside it.
+    pub hysteresis: f64,
+    /// Extra pressure per unit of uplink byte fraction (hier fabrics:
+    /// bytes crossing slow leader↔leader links count double at 1.0).
+    pub uplink_weight: f64,
+    /// Seed for the dither stream (replayable).
+    pub seed: u64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> ControllerConfig {
+        ControllerConfig {
+            target: 1.0,
+            rate: 0.05,
+            hysteresis: 0.15,
+            uplink_weight: 1.0,
+            seed: 0xADA9,
+        }
+    }
+}
+
+/// One knob adjustment decided by [`KnobController::observe`].
+///
+/// `lo..hi` is the bucket's global element range: apply with
+/// [`super::Codec::set_knob_range`] when the codec supports ranged
+/// knobs, else fall back to a scalar [`super::Codec::set_knob`] with
+/// the comm-share-weighted mean of the per-bucket values.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KnobUpdate {
+    pub bucket: usize,
+    pub lo: usize,
+    pub hi: usize,
+    pub name: &'static str,
+    pub value: f32,
+    /// Tightness coordinate u ∈ [0, 1] after the step.
+    pub tightness: f32,
+}
+
+/// Deterministic per-bucket feedback controller over one codec knob.
+pub struct KnobController {
+    cfg: ControllerConfig,
+    knob: KnobState,
+    initial: f32,
+    /// Per-bucket global element ranges (from `form_buckets`).
+    buckets: Vec<(usize, usize)>,
+    /// Per-bucket link-class pressure multiplier (default 1.0).
+    class: Vec<f64>,
+    /// Per-bucket tightness coordinate u ∈ [0, 1].
+    u: Vec<f32>,
+    rng: Pcg32,
+}
+
+impl KnobController {
+    /// `knob` is the codec's initial [`KnobState`] (u = 0 anchor);
+    /// `buckets` are the global element ranges of the overlap buckets.
+    pub fn new(
+        cfg: ControllerConfig,
+        knob: KnobState,
+        buckets: Vec<(usize, usize)>,
+    ) -> KnobController {
+        let n = buckets.len();
+        let rng = Pcg32::new(cfg.seed ^ 0xADA7_717E, 0x17);
+        KnobController {
+            cfg,
+            initial: knob.value,
+            knob,
+            buckets,
+            class: vec![1.0; n],
+            u: vec![0.0; n],
+            rng,
+        }
+    }
+
+    /// Per-link-class override: multiply bucket `b`'s pressure by `w`
+    /// (e.g. > 1 for buckets whose bytes are uplink-heavy on a hier
+    /// fabric). Out-of-range buckets are ignored.
+    pub fn set_class_weight(&mut self, bucket: usize, w: f64) {
+        if let Some(c) = self.class.get_mut(bucket) {
+            *c = w.max(0.0);
+        }
+    }
+
+    /// Current per-bucket tightness coordinates.
+    pub fn tightness(&self) -> &[f32] {
+        &self.u
+    }
+
+    /// The knob name being driven ("zeta", "pi", "tau").
+    pub fn knob_name(&self) -> &'static str {
+        self.knob.name
+    }
+
+    /// Comm-share-weighted scalar knob value — the fallback for codecs
+    /// without ranged knobs (weights = last observed comm share).
+    pub fn scalar_value(&self, bucket_comm_ps: &[u64]) -> f32 {
+        let total: u64 = bucket_comm_ps.iter().sum();
+        if total == 0 || self.u.is_empty() {
+            return self.knob.at_tightness(self.initial, mean(&self.u));
+        }
+        let mut acc = 0.0f64;
+        for (b, &u) in self.u.iter().enumerate() {
+            let w = bucket_comm_ps.get(b).copied().unwrap_or(0) as f64 / total as f64;
+            acc += w * self.knob.at_tightness(self.initial, u) as f64;
+        }
+        acc as f32
+    }
+
+    /// Feed one step's telemetry; returns the knob adjustments (empty
+    /// when every bucket is inside the dead band or already clamped).
+    ///
+    /// * `bucket_comm_ps` — per-bucket comm time (overlap schedule)
+    /// * `cpu_ps` — the step's compute budget (grad + encode time)
+    /// * `uplink_frac` — fraction of wire bytes on slow-class links
+    /// * `gain` — measured wire gain this step (dense bits / payload)
+    pub fn observe(
+        &mut self,
+        bucket_comm_ps: &[u64],
+        cpu_ps: u64,
+        uplink_frac: f64,
+        gain: f64,
+    ) -> Vec<KnobUpdate> {
+        let k = self.buckets.len();
+        if k == 0 {
+            return Vec::new();
+        }
+        let fair = (cpu_ps.max(1) as f64 / k as f64).max(1.0);
+        let up = 1.0 + self.cfg.uplink_weight * uplink_frac.clamp(0.0, 1.0);
+        let mut out = Vec::new();
+        for b in 0..k {
+            let comm = bucket_comm_ps.get(b).copied().unwrap_or(0) as f64;
+            let pressure = comm / fair * up * self.class[b];
+            let err = pressure - self.cfg.target;
+            if err.abs() <= self.cfg.hysteresis {
+                continue; // dead band
+            }
+            if err > 0.0 && gain >= GAIN_CEILING {
+                continue; // already compressing to the bone
+            }
+            let step = self.cfg.rate as f64 * err.signum() * err.abs().min(1.0);
+            let dither = (self.rng.next_f32() as f64 - 0.5) * self.cfg.rate as f64 * 0.25;
+            let next = ((self.u[b] as f64 + step + dither).clamp(0.0, 1.0)) as f32;
+            if next == self.u[b] {
+                continue; // clamped — nothing to report
+            }
+            self.u[b] = next;
+            let (lo, hi) = self.buckets[b];
+            out.push(KnobUpdate {
+                bucket: b,
+                lo,
+                hi,
+                name: self.knob.name,
+                value: self.knob.at_tightness(self.initial, next),
+                tightness: next,
+            });
+        }
+        out
+    }
+}
+
+fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f32>() / xs.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn zeta_knob() -> KnobState {
+        KnobState {
+            name: "zeta",
+            value: 0.95,
+            lo: 0.5,
+            hi: 1.0,
+            tighten_up: true,
+        }
+    }
+
+    fn two_buckets() -> Vec<(usize, usize)> {
+        vec![(0, 512), (512, 1024)]
+    }
+
+    #[test]
+    fn dead_band_holds_static() {
+        let mut c = KnobController::new(ControllerConfig::default(), zeta_knob(), two_buckets());
+        // pressure exactly on target for both buckets: cpu=2000, fair
+        // share 1000 each, comm 1000 each ⇒ err 0.
+        for _ in 0..20 {
+            let ups = c.observe(&[1000, 1000], 2000, 0.0, 10.0);
+            assert!(ups.is_empty());
+        }
+        assert_eq!(c.tightness(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn underloaded_bucket_stays_at_initial() {
+        // comm far below target relaxes — but u is already clamped at
+        // 0, so the knob never moves off the static value.
+        let mut c = KnobController::new(ControllerConfig::default(), zeta_knob(), two_buckets());
+        for _ in 0..10 {
+            let ups = c.observe(&[10, 10], 100_000, 0.0, 10.0);
+            assert!(ups.is_empty());
+        }
+        assert_eq!(c.tightness(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn overloaded_bucket_tightens_toward_bound() {
+        let mut c = KnobController::new(ControllerConfig::default(), zeta_knob(), two_buckets());
+        let mut last = 0.95f32;
+        for _ in 0..100 {
+            // bucket 0 comm-bound (5× fair share), bucket 1 idle.
+            for up in c.observe(&[5000, 0], 2000, 0.0, 10.0) {
+                assert_eq!(up.bucket, 0);
+                assert_eq!(up.name, "zeta");
+                assert!(up.value >= last - 0.02, "tightening must be monotone-ish");
+                last = up.value;
+            }
+        }
+        assert!(c.tightness()[0] > 0.5, "u0 = {}", c.tightness()[0]);
+        assert_eq!(c.tightness()[1], 0.0);
+        assert!(last > 0.95 && last <= 1.0);
+    }
+
+    #[test]
+    fn gain_ceiling_stops_tightening() {
+        let mut c = KnobController::new(ControllerConfig::default(), zeta_knob(), two_buckets());
+        let ups = c.observe(&[5000, 5000], 2000, 0.0, GAIN_CEILING + 1.0);
+        assert!(ups.is_empty());
+    }
+
+    #[test]
+    fn uplink_fraction_amplifies_pressure() {
+        let cfg = ControllerConfig::default();
+        let mut flat = KnobController::new(cfg, zeta_knob(), two_buckets());
+        let mut hier = KnobController::new(cfg, zeta_knob(), two_buckets());
+        for _ in 0..50 {
+            flat.observe(&[1200, 1200], 2000, 0.0, 10.0);
+            hier.observe(&[1200, 1200], 2000, 0.8, 10.0);
+        }
+        assert!(
+            hier.tightness()[0] > flat.tightness()[0],
+            "uplink-heavy run must tighten harder: {} vs {}",
+            hier.tightness()[0],
+            flat.tightness()[0]
+        );
+    }
+
+    #[test]
+    fn class_weight_tightens_one_bucket_independently() {
+        let mut c = KnobController::new(ControllerConfig::default(), zeta_knob(), two_buckets());
+        c.set_class_weight(1, 4.0);
+        for _ in 0..30 {
+            c.observe(&[900, 900], 2000, 0.0, 10.0);
+        }
+        // Equal comm, but bucket 1's class multiplier pushes it over
+        // target while bucket 0 stays inside the dead band.
+        assert_eq!(c.tightness()[0], 0.0);
+        assert!(c.tightness()[1] > 0.2);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let cfg = ControllerConfig {
+            seed: 77,
+            ..ControllerConfig::default()
+        };
+        let mut a = KnobController::new(cfg, zeta_knob(), two_buckets());
+        let mut b = KnobController::new(cfg, zeta_knob(), two_buckets());
+        let telemetry: Vec<(Vec<u64>, u64, f64)> = (0..40)
+            .map(|i| {
+                let c0 = 500 + (i * 137) % 3000;
+                let c1 = 200 + (i * 211) % 2500;
+                (vec![c0, c1], 2000, (i % 5) as f64 / 5.0)
+            })
+            .collect();
+        for (comm, cpu, up) in &telemetry {
+            let ua = a.observe(comm, *cpu, *up, 20.0);
+            let ub = b.observe(comm, *cpu, *up, 20.0);
+            assert_eq!(ua, ub);
+        }
+        assert_eq!(a.tightness(), b.tightness());
+    }
+
+    #[test]
+    fn scalar_fallback_is_comm_weighted() {
+        let mut c = KnobController::new(ControllerConfig::default(), zeta_knob(), two_buckets());
+        for _ in 0..60 {
+            c.observe(&[5000, 0], 2000, 0.0, 10.0);
+        }
+        // All weight on the tightened bucket ⇒ scalar ≈ its value.
+        let s = c.scalar_value(&[5000, 0]);
+        let b0 = zeta_knob().at_tightness(0.95, c.tightness()[0]);
+        assert!((s - b0).abs() < 1e-6, "s={s} b0={b0}");
+    }
+}

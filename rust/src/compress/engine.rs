@@ -71,6 +71,18 @@ pub struct EncodeStats {
     pub payload_bits: u64,
 }
 
+impl EncodeStats {
+    /// Effective wire gain of this step's message: dense f32 bits of
+    /// the full gradient over the payload bits actually sent. This is
+    /// the per-step feedback signal the adaptive controller consumes
+    /// (`n` is the gradient dimension; an empty message reports the
+    /// full dense gain rather than dividing by zero).
+    pub fn gain(&self, n: usize) -> f64 {
+        let dense_bits = n as u64 * 32;
+        dense_bits as f64 / self.payload_bits.max(1) as f64
+    }
+}
+
 /// Reusable decoded-message buffer: the `(index, value)` contribution
 /// entries of one wire message, in message order.
 ///

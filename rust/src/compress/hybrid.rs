@@ -16,7 +16,7 @@
 
 use super::encode::{pack_sign_index, unpack_sign_index, ByteReader, ByteWriter};
 use super::engine::{DecodeBuf, EncodeStats};
-use super::{Aggregation, Codec};
+use super::{Aggregation, Codec, KnobState};
 use crate::model::Layout;
 use crate::util::threadpool::{split_ranges, Task, ThreadPool};
 
@@ -185,6 +185,28 @@ impl Codec for HybridCodec {
 
     fn residual_l1(&self) -> f64 {
         self.r.iter().map(|x| x.abs() as f64).sum()
+    }
+
+    fn knob(&self) -> Option<KnobState> {
+        // ζ scalar only: the Alg.-2 kernel decays v elementwise inside
+        // the send loop, so a per-range lookup there would cost the hot
+        // path — set_knob_range stays unsupported (returns false) and
+        // the controller falls back to the comm-weighted scalar.
+        Some(KnobState {
+            name: "zeta",
+            value: self.zeta,
+            lo: self.zeta.min(0.5).max(1e-3),
+            hi: 1.0,
+            tighten_up: true,
+        })
+    }
+
+    fn set_knob(&mut self, value: f32) -> bool {
+        if !(value > 0.0 && value <= 1.0) {
+            return false;
+        }
+        self.zeta = value;
+        true
     }
 }
 

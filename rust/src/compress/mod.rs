@@ -13,6 +13,7 @@
 //! baselines, and [`none::NoCompression`].
 
 pub mod adaptive;
+pub mod controller;
 pub mod encode;
 pub mod engine;
 pub mod hybrid;
@@ -25,6 +26,7 @@ pub mod strom;
 pub mod terngrad;
 pub mod vgc;
 
+pub use controller::{ControllerConfig, KnobController, KnobUpdate};
 pub use engine::{shared_engine, CodecEngine, DecodeBuf, EncodeStats, SharedEngine};
 
 use crate::model::Layout;
@@ -62,6 +64,38 @@ pub struct Message {
 impl Message {
     pub fn wire_bits(&self) -> u64 {
         self.bytes.len() as u64 * 8
+    }
+}
+
+/// A tunable codec's single compression knob: which parameter it is,
+/// its current value, the closed range it may move in, and which
+/// direction *tightens* (sends fewer elements). The knob is the
+/// surface the closed-loop controller ([`controller::KnobController`])
+/// drives: ζ for the variance codecs, τ for Strom, π for the
+/// adaptive-threshold baseline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KnobState {
+    /// Knob identifier, e.g. `"zeta"`, `"tau"`, `"pi"`.
+    pub name: &'static str,
+    /// Current (global/scalar) value.
+    pub value: f32,
+    /// Lower bound of the admissible range.
+    pub lo: f32,
+    /// Upper bound of the admissible range.
+    pub hi: f32,
+    /// `true` if raising the value tightens compression (ζ, τ);
+    /// `false` if lowering does (π).
+    pub tighten_up: bool,
+}
+
+impl KnobState {
+    /// The value at tightness coordinate `u ∈ [0, 1]`, interpolating
+    /// from the *current* value (`u = 0`) to the max-tighten bound
+    /// (`u = 1`). Keeps `u = 0` exactly the static configuration.
+    pub fn at_tightness(&self, initial: f32, u: f32) -> f32 {
+        let bound = if self.tighten_up { self.hi } else { self.lo };
+        let u = u.clamp(0.0, 1.0);
+        (initial + u * (bound - initial)).clamp(self.lo, self.hi)
     }
 }
 
@@ -148,6 +182,31 @@ pub trait Codec: Send + Sync {
     /// return 0.
     fn residual_l1(&self) -> f64 {
         0.0
+    }
+
+    /// The codec's tunable knob, if it has one. Non-tunable codecs
+    /// (none, qsgd, terngrad, onebit) return `None` and behave exactly
+    /// as before the Tunable surface existed.
+    fn knob(&self) -> Option<KnobState> {
+        None
+    }
+
+    /// Set the (global) knob value; returns `false` if the codec has
+    /// no knob. Values are clamped to the knob's `[lo, hi]` range by
+    /// the implementation. Takes effect at the *next* encode, so all
+    /// workers' codecs must be updated together between steps to keep
+    /// decode (which may read the knob, e.g. Strom's τ) consistent.
+    fn set_knob(&mut self, _value: f32) -> bool {
+        false
+    }
+
+    /// Set the knob for one contiguous element range `[lo, hi)` only —
+    /// the per-bucket surface. Codecs whose knob cannot vary per
+    /// element range return `false` (the controller then falls back to
+    /// a comm-share-weighted scalar `set_knob`). An empty override set
+    /// must leave behavior bit-identical to the scalar path.
+    fn set_knob_range(&mut self, _lo: usize, _hi: usize, _value: f32) -> bool {
+        false
     }
 }
 

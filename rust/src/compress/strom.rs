@@ -12,7 +12,7 @@
 
 use super::encode::{pack_sign_index, unpack_sign_index, ByteReader, ByteWriter};
 use super::engine::{DecodeBuf, EncodeStats};
-use super::{Aggregation, Codec};
+use super::{Aggregation, Codec, KnobState};
 use crate::util::threadpool::{split_ranges, Task, ThreadPool};
 
 /// Per-shard reusable encode scratch (pooled encode).
@@ -150,6 +150,27 @@ impl Codec for StromCodec {
 
     fn residual_l1(&self) -> f64 {
         self.r.iter().map(|x| x.abs() as f64).sum()
+    }
+
+    fn knob(&self) -> Option<KnobState> {
+        // Raising τ sends fewer elements ⇒ tighter compression. Decode
+        // uses the same τ, so the controller must apply one value to
+        // every worker's codec between steps (the Trainer does).
+        Some(KnobState {
+            name: "tau",
+            value: self.tau,
+            lo: self.tau * 0.25,
+            hi: self.tau * 4.0,
+            tighten_up: true,
+        })
+    }
+
+    fn set_knob(&mut self, value: f32) -> bool {
+        if !(value > 0.0 && value.is_finite()) {
+            return false;
+        }
+        self.tau = value;
+        true
     }
 }
 

@@ -29,7 +29,7 @@ use super::encode::{pack_word, unpack_word, ByteReader, ByteWriter};
 use super::engine::{DecodeBuf, EncodeStats};
 use super::indexcode;
 use super::quant4;
-use super::{Aggregation, Codec};
+use super::{Aggregation, Codec, KnobState};
 use crate::model::{Layout, ParamGroup};
 use crate::util::threadpool::{Task, ThreadPool};
 
@@ -65,6 +65,10 @@ pub struct VgcCodec {
     compact_buf: Vec<u8>,
     /// Per-shard scratch for the pooled encode (lazily sized).
     shards: Vec<ShardScratch>,
+    /// Per-element-range ζ overrides `(lo, hi, ζ)` set by the adaptive
+    /// controller via [`Codec::set_knob_range`]; sorted by `lo`,
+    /// disjoint. Empty ⇒ the exact legacy whole-vector decay path.
+    zeta_ranges: Vec<(usize, usize, f32)>,
 }
 
 impl VgcCodec {
@@ -83,6 +87,7 @@ impl VgcCodec {
             codes: Vec::new(),
             compact_buf: Vec::new(),
             shards: Vec::new(),
+            zeta_ranges: Vec::new(),
         }
     }
 
@@ -148,10 +153,9 @@ impl Codec for VgcCodec {
         // Alg. 1 unsent branch: decay v. Sent elements were reset to 0
         // above, so a branchless multiply is semantically identical to
         // the algorithm's else-branch decay — and ~2× faster than the
-        // branchy form on this hot loop (§Perf L3).
-        for v in self.v.iter_mut() {
-            *v *= self.zeta;
-        }
+        // branchy form on this hot loop (§Perf L3). With no per-range ζ
+        // overrides this is the exact legacy whole-vector multiply.
+        decay_slice(&mut self.v, 0, self.zeta, &self.zeta_ranges);
 
         let flag = if self.compact { COMPACT_FLAG } else { 0 };
         w.patch_u32(0, n_groups_sent | flag);
@@ -183,9 +187,11 @@ impl Codec for VgcCodec {
             r,
             v,
             shards,
+            zeta_ranges,
             ..
         } = self;
         let (alpha, zeta, compact) = (*alpha, *zeta, *compact);
+        let zeta_ranges: &[(usize, usize, f32)] = zeta_ranges;
         let groups = layout.groups();
         let mut tasks: Vec<Task<'_>> = Vec::with_capacity(spans.len());
         let mut r_rest: &mut [f32] = r;
@@ -224,9 +230,7 @@ impl Codec for VgcCodec {
                 scratch.groups_sent = sent;
                 // ζ decay of this shard's element range (identical to
                 // the serial whole-vector pass).
-                for x in v_s.iter_mut() {
-                    *x *= zeta;
-                }
+                decay_slice(v_s, base, zeta, zeta_ranges);
             }));
         }
         pool.run(tasks);
@@ -258,6 +262,73 @@ impl Codec for VgcCodec {
 
     fn residual_l1(&self) -> f64 {
         self.r.iter().map(|x| x.abs() as f64).sum()
+    }
+
+    fn knob(&self) -> Option<KnobState> {
+        // Raising ζ toward 1 keeps the variance estimate alive longer,
+        // so fewer elements pass Eq. 3 ⇒ tighter compression.
+        Some(KnobState {
+            name: "zeta",
+            value: self.zeta,
+            lo: self.zeta.min(0.5).max(1e-3),
+            hi: 1.0,
+            tighten_up: true,
+        })
+    }
+
+    fn set_knob(&mut self, value: f32) -> bool {
+        if !(value > 0.0 && value <= 1.0) {
+            return false;
+        }
+        self.zeta = value;
+        true
+    }
+
+    fn set_knob_range(&mut self, lo: usize, hi: usize, value: f32) -> bool {
+        if !(value > 0.0 && value <= 1.0) || lo >= hi {
+            return false;
+        }
+        match self.zeta_ranges.iter_mut().find(|e| e.0 == lo && e.1 == hi) {
+            Some(entry) => entry.2 = value,
+            None => {
+                self.zeta_ranges.push((lo, hi, value));
+                self.zeta_ranges.sort_unstable_by_key(|e| e.0);
+            }
+        }
+        true
+    }
+}
+
+/// ζ-decay `v` (covering global elements `base..base + v.len()`) with
+/// per-range overrides. `ranges` is sorted by `lo` and disjoint;
+/// uncovered elements use the scalar `zeta`. With no ranges this is
+/// exactly the legacy branchless whole-vector multiply (bit-identical
+/// static path).
+fn decay_slice(v: &mut [f32], base: usize, zeta: f32, ranges: &[(usize, usize, f32)]) {
+    if ranges.is_empty() {
+        for x in v.iter_mut() {
+            *x *= zeta;
+        }
+        return;
+    }
+    let hi_all = base + v.len();
+    let mut cur = base;
+    for &(lo, hi, z) in ranges {
+        let lo = lo.max(cur).min(hi_all);
+        let hi = hi.min(hi_all).max(lo);
+        for x in v[cur - base..lo - base].iter_mut() {
+            *x *= zeta;
+        }
+        for x in v[lo - base..hi - base].iter_mut() {
+            *x *= z;
+        }
+        cur = hi;
+        if cur >= hi_all {
+            break;
+        }
+    }
+    for x in v[cur.min(hi_all) - base..].iter_mut() {
+        *x *= zeta;
     }
 }
 
@@ -585,6 +656,83 @@ mod tests {
                 assert_eq!(serial.v(), pooled.v());
             }
         }
+    }
+
+    #[test]
+    fn knob_set_to_initial_is_bit_identical() {
+        // set_knob(current ζ) must leave the stream untouched — the
+        // adaptive controller's "no adjustment" path is exactly static.
+        let n = 257;
+        let mut a = VgcCodec::new(layout(n), 1.0, 0.97);
+        let mut b = VgcCodec::new(layout(n), 1.0, 0.97);
+        let k = b.knob().expect("vgc is tunable");
+        assert_eq!(k.name, "zeta");
+        assert!(k.tighten_up);
+        assert!(b.set_knob(k.value));
+        let mut rng = Pcg32::new(21, 4);
+        for _ in 0..5 {
+            let g = testkit::gradient_vec(&mut rng, n);
+            let sq: Vec<f32> = g.iter().map(|x| x * x * 0.5).collect();
+            let ma = a.encode_step(&g, &sq);
+            let mb = b.encode_step(&g, &sq);
+            assert_eq!(ma.bytes, mb.bytes);
+        }
+        assert_eq!(a.v(), b.v());
+    }
+
+    #[test]
+    fn ranged_knob_over_full_vector_matches_global_knob() {
+        // set_knob_range(0, n, ζ') must decay byte-identically to
+        // set_knob(ζ') — same f32 multiplies, different lookup path.
+        let n = 533;
+        let mut global = VgcCodec::new(layout(n), 1.0, 0.999);
+        let mut ranged = VgcCodec::new(layout(n), 1.0, 0.999);
+        assert!(global.set_knob(0.9));
+        assert!(ranged.set_knob_range(0, n, 0.9));
+        let mut rng = Pcg32::new(33, 7);
+        for _ in 0..4 {
+            let g = testkit::gradient_vec(&mut rng, n);
+            let sq: Vec<f32> = g.iter().map(|x| x * x * 0.5).collect();
+            let mg = global.encode_step(&g, &sq);
+            let mr = ranged.encode_step(&g, &sq);
+            assert_eq!(mg.bytes, mr.bytes);
+        }
+        for i in 0..n {
+            assert_eq!(global.v()[i].to_bits(), ranged.v()[i].to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn ranged_knob_pooled_matches_serial() {
+        use crate::util::threadpool::ThreadPool;
+        let n = 533;
+        let mut serial = VgcCodec::new(layout(n), 1.0, 0.999);
+        let mut pooled = VgcCodec::new(layout(n), 1.0, 0.999);
+        // Two disjoint ranges straddling shard boundaries.
+        for c in [&mut serial, &mut pooled] {
+            assert!(c.set_knob_range(10, 200, 0.8));
+            assert!(c.set_knob_range(300, 450, 0.95));
+        }
+        let pool = ThreadPool::new(3);
+        let mut rng = Pcg32::new(41, 3);
+        for _ in 0..4 {
+            let g = testkit::gradient_vec(&mut rng, n);
+            let sq: Vec<f32> = g.iter().map(|x| x * x * 0.5).collect();
+            let ms = serial.encode_step(&g, &sq);
+            let mut pb = Vec::new();
+            pooled.encode_step_pooled(&g, &sq, &pool, &mut pb);
+            assert_eq!(ms.bytes, pb);
+        }
+        assert_eq!(serial.v(), pooled.v());
+    }
+
+    #[test]
+    fn knob_rejects_out_of_domain_values() {
+        let mut c = VgcCodec::new(layout(8), 1.0, 0.999);
+        assert!(!c.set_knob(0.0));
+        assert!(!c.set_knob(1.5));
+        assert!(!c.set_knob_range(4, 4, 0.9)); // empty range
+        assert!(c.set_knob(1.0));
     }
 
     #[test]

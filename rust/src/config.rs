@@ -86,6 +86,14 @@ pub struct TrainConfig {
     /// fabric's event clock (`--overlap`). Trained parameters are
     /// bit-identical either way; only the simulated step time moves.
     pub overlap: bool,
+    /// Close the compression loop (`--adaptive`): a per-bucket
+    /// controller (`compress::controller`) adjusts the codec's knob
+    /// (ζ/π/τ) from fabric telemetry between steps. Off = static,
+    /// bit-identical to pre-adaptive behavior.
+    pub adaptive: bool,
+    /// Controller pressure target (`--adaptive-target`; 1.0 = each
+    /// bucket's comm exactly fills its fair share of compute).
+    pub adaptive_target: f64,
 }
 
 impl TrainConfig {
@@ -121,6 +129,8 @@ impl TrainConfig {
             on_crash: CrashPolicy::Renorm,
             bucket_bytes: 0,
             overlap: false,
+            adaptive: false,
+            adaptive_target: 1.0,
         }
     }
 
@@ -163,6 +173,14 @@ impl TrainConfig {
         if args.has("overlap") {
             self.overlap = true;
         }
+        if args.has("adaptive") {
+            self.adaptive = true;
+        }
+        self.adaptive_target = args.parse_or("adaptive-target", self.adaptive_target)?;
+        anyhow::ensure!(
+            self.adaptive_target > 0.0,
+            "--adaptive-target must be positive"
+        );
         self.fabric = self.fabric.override_from(args)?;
         Ok(self)
     }
@@ -184,6 +202,8 @@ impl TrainConfig {
             ("on_crash", s(self.on_crash.label())),
             ("bucket_bytes", num(self.bucket_bytes as f64)),
             ("overlap", Json::Bool(self.overlap)),
+            ("adaptive", Json::Bool(self.adaptive)),
+            ("adaptive_target", num(self.adaptive_target)),
             ("fabric", self.fabric.to_json()),
         ])
     }
@@ -215,6 +235,13 @@ impl TrainConfig {
         }
         if let Some(Json::Bool(o)) = j.get("overlap") {
             cfg.overlap = *o;
+        }
+        // Absent in configs recorded before the adaptive controller.
+        if let Some(Json::Bool(a)) = j.get("adaptive") {
+            cfg.adaptive = *a;
+        }
+        if let Some(t) = j.get("adaptive_target") {
+            cfg.adaptive_target = t.as_f64()?;
         }
         // Absent in configs recorded before the fabric existed.
         if let Some(f) = j.get("fabric") {
@@ -399,6 +426,37 @@ mod tests {
         let old = TrainConfig::from_json(&Json::parse(&stripped).unwrap()).unwrap();
         assert_eq!(old.bucket_bytes, 0);
         assert!(!old.overlap);
+    }
+
+    #[test]
+    fn adaptive_flags_and_json_roundtrip() {
+        let raw: Vec<String> = ["--adaptive", "--adaptive-target", "1.5"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&raw, &["adaptive"]).unwrap();
+        let cfg = TrainConfig::defaults("mlp").override_from(&args).unwrap();
+        assert!(cfg.adaptive);
+        assert_eq!(cfg.adaptive_target, 1.5);
+        let back =
+            TrainConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert!(back.adaptive);
+        assert_eq!(back.adaptive_target, 1.5);
+        // Defaults: off, target 1.0.
+        let d = TrainConfig::defaults("mlp");
+        assert!(!d.adaptive);
+        assert_eq!(d.adaptive_target, 1.0);
+        // Configs recorded before the controller existed still load.
+        let legacy = d.to_json().to_string();
+        let stripped = legacy
+            .replace("\"adaptive\":false,", "")
+            .replace("\"adaptive_target\":1,", "");
+        let old = TrainConfig::from_json(&Json::parse(&stripped).unwrap()).unwrap();
+        assert!(!old.adaptive);
+        // A zero target is a config error.
+        let raw: Vec<String> = ["--adaptive-target", "0"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&raw, &[]).unwrap();
+        assert!(TrainConfig::defaults("mlp").override_from(&args).is_err());
     }
 
     #[test]

@@ -39,7 +39,11 @@ use anyhow::Result;
 use super::worker::WorkerState;
 use crate::comm::allgatherv::{allgatherv, allgatherv_faulty, allgatherv_overlapped};
 use crate::comm::pipeline;
-use crate::compress::{shared_engine, Aggregation, Codec, SharedEngine};
+use crate::compress::engine::EncodeStats;
+use crate::compress::{
+    shared_engine, Aggregation, Codec, ControllerConfig, KnobController, KnobUpdate,
+    SharedEngine,
+};
 use crate::config::{CrashPolicy, TrainConfig};
 use crate::data::shard::Shard;
 use crate::data::{ImageDataset, TokenDataset};
@@ -100,6 +104,17 @@ pub enum RunEvent<'a> {
         live: usize,
         total: usize,
     },
+    /// The adaptive controller (`--adaptive`) adjusted one bucket's
+    /// codec knob after this step.
+    Knob {
+        step: u64,
+        bucket: usize,
+        /// Knob name ("zeta", "pi", "tau").
+        name: &'static str,
+        value: f32,
+        /// Measured wire gain that step (dense bits / payload bits).
+        gain: f64,
+    },
 }
 
 pub struct Trainer<'c> {
@@ -144,6 +159,18 @@ pub struct Trainer<'c> {
     /// messages are sliced proportionally to these for the overlapped
     /// gather, so bucket boundaries never touch message bytes.
     bucket_weights: Vec<u64>,
+    /// Closed-loop knob controller (`--adaptive` with a tunable codec;
+    /// `None` = static compression, the exact legacy path).
+    controller: Option<KnobController>,
+    /// Knob adjustments made after the most recent step, drained into
+    /// [`RunEvent::Knob`] by [`Trainer::run_with`]:
+    /// `(bucket, name, value, gain)`.
+    pending_knobs: Vec<(usize, &'static str, f32, f64)>,
+    /// Latest applied ranged knob per bucket — replayed onto a codec
+    /// rebuilt after a renorm crash so knob state stays uniform.
+    applied_knobs: Vec<KnobUpdate>,
+    /// Latest applied scalar fallback knob (scalar-only codecs).
+    applied_scalar: Option<f32>,
     // Reused step buffers (hot path: no per-step allocation).
     xs_f32: Vec<f32>,
     xs_i32: Vec<i32>,
@@ -244,11 +271,36 @@ impl<'c> Trainer<'c> {
         let n = entry.n_params;
         let b = entry.batch;
         let elems = entry.sample_elems();
-        let bucket_weights =
-            pipeline::bucket_weights(&pipeline::form_buckets(&layout, cfg.bucket_bytes));
+        let buckets = pipeline::form_buckets(&layout, cfg.bucket_bytes);
+        let bucket_weights = pipeline::bucket_weights(&buckets);
+        // `--adaptive` with a non-tunable codec (qsgd/terngrad/onebit/
+        // none) degrades to the static path: there is no knob to move.
+        let controller = if cfg.adaptive {
+            workers[0].codec.knob().map(|knob| {
+                let ranges: Vec<(usize, usize)> = buckets
+                    .iter()
+                    .map(|b| (b.params.start, b.params.end))
+                    .collect();
+                KnobController::new(
+                    ControllerConfig {
+                        target: cfg.adaptive_target,
+                        seed: cfg.seed,
+                        ..ControllerConfig::default()
+                    },
+                    knob,
+                    ranges,
+                )
+            })
+        } else {
+            None
+        };
         Ok(Trainer {
             engine,
             bucket_weights,
+            controller,
+            pending_knobs: Vec::new(),
+            applied_knobs: Vec::new(),
+            applied_scalar: None,
             rt,
             layout,
             metrics: RunMetrics::new(n, p),
@@ -354,6 +406,20 @@ impl<'c> Trainer<'c> {
                         .cfg
                         .codec
                         .build(&self.layout, self.cfg.seed.wrapping_add(c.node as u64));
+                    // A rebuilt codec restarts at the static knob; replay
+                    // the controller's applied adjustments so knob state
+                    // stays uniform across the cluster (strom decode reads
+                    // τ from the codec, not the wire).
+                    if self.controller.is_some() {
+                        let codec = &mut *self.workers[c.node].codec;
+                        if let Some(v) = self.applied_scalar {
+                            codec.set_knob(v);
+                        } else {
+                            for up in &self.applied_knobs {
+                                codec.set_knob_range(up.lo, up.hi, up.value);
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -453,6 +519,12 @@ impl<'c> Trainer<'c> {
             (self.cfg.bucket_bytes > 0 || self.cfg.overlap) && dead_gather.is_empty();
         let grad_ps = (grad_s * 1e12) as u64;
         let encode_ps = (encode_s * 1e12) as u64;
+        // Per-step feedback for the adaptive controller: (per-bucket
+        // comm time, uplink byte fraction). Left `None` on static runs
+        // and on degraded steps (whose phased gather has no per-bucket
+        // clock and whose membership skews the pressure signal).
+        let adaptive = self.controller.is_some();
+        let mut step_link: Option<(Vec<u64>, f64)> = None;
         let gathered: Vec<Vec<Vec<u8>>> = if pipelined {
             let inputs: &[Vec<u8>] = if parallel { engine.messages() } else { &msgs };
             let ov = allgatherv_overlapped(
@@ -467,6 +539,12 @@ impl<'c> Trainer<'c> {
             self.sim_phased_ps += ov.schedule.phased_ps;
             self.sim_overlap_ps += ov.schedule.overlapped_ps;
             self.fault_report.absorb(&ov.report);
+            if adaptive {
+                step_link = Some((
+                    ov.telemetry.bucket_comm_ps.clone(),
+                    ov.telemetry.uplink_byte_fraction(),
+                ));
+            }
             ov.gathered
         } else {
             let res = if parallel {
@@ -479,6 +557,10 @@ impl<'c> Trainer<'c> {
             self.sim_phased_ps += self.sim_step_ps;
             self.sim_overlap_ps += self.sim_step_ps;
             self.fault_report.absorb(&res.report);
+            if adaptive && dead_gather.is_empty() {
+                step_link =
+                    Some((vec![res.time_ps], res.telemetry.uplink_byte_fraction()));
+            }
             res.gathered
         };
         let live = e.workers - dead_workers.len();
@@ -539,6 +621,59 @@ impl<'c> Trainer<'c> {
         }
         self.phases.comm_decode_s += t2.elapsed().as_secs_f64();
         drop(engine); // release the shared engine before the local math
+
+        // Closed-loop knob adjustment (`--adaptive`): feed the step's
+        // telemetry to the controller and push any knob moves onto every
+        // worker's codec so the cluster keeps one compression policy.
+        self.pending_knobs.clear();
+        if let (Some(ctl), Some((bucket_comm, uplink_frac))) =
+            (self.controller.as_mut(), step_link)
+        {
+            let comm = align_bucket_comm(&bucket_comm, &self.bucket_weights);
+            let stats = EncodeStats {
+                elements,
+                payload_bits,
+            };
+            let gain = stats.gain(e.n_params * live);
+            let updates = ctl.observe(&comm, grad_ps + encode_ps, uplink_frac, gain);
+            if !updates.is_empty() {
+                let mut ranged = true;
+                'apply: for up in &updates {
+                    for w in &mut self.workers {
+                        if !w.codec.set_knob_range(up.lo, up.hi, up.value) {
+                            // A scalar-only codec rejects before mutating,
+                            // and every worker runs the same codec type, so
+                            // nothing was applied yet.
+                            ranged = false;
+                            break 'apply;
+                        }
+                    }
+                }
+                if ranged {
+                    for up in &updates {
+                        match self
+                            .applied_knobs
+                            .iter_mut()
+                            .find(|a| a.bucket == up.bucket)
+                        {
+                            Some(a) => *a = *up,
+                            None => self.applied_knobs.push(*up),
+                        }
+                    }
+                } else {
+                    // Scalar-only codec (strom/hybrid): collapse the
+                    // per-bucket targets to a comm-share-weighted mean.
+                    let v = ctl.scalar_value(&comm);
+                    for w in &mut self.workers {
+                        w.codec.set_knob(v);
+                    }
+                    self.applied_scalar = Some(v);
+                }
+                for up in &updates {
+                    self.pending_knobs.push((up.bucket, up.name, up.value, gain));
+                }
+            }
+        }
 
         // (4) Update locally (identical on all workers).
         let t3 = std::time::Instant::now();
@@ -649,6 +784,20 @@ impl<'c> Trainer<'c> {
             let loss = self.train_step()?;
             let s = self.step;
             let lr = self.cfg.schedule.at(s - 1);
+            // Surface this step's knob moves (`--adaptive`) before the
+            // Step event so observers see cause before effect.
+            let knobs = std::mem::take(&mut self.pending_knobs);
+            for (bucket, name, value, gain) in knobs {
+                if !observe(RunEvent::Knob {
+                    step: s - 1,
+                    bucket,
+                    name,
+                    value,
+                    gain,
+                }) {
+                    return Ok(false);
+                }
+            }
             // Surface the fault plan's membership events for the step
             // just executed (step index s − 1).
             if !self.cfg.fabric.faults.is_empty() {
@@ -723,4 +872,21 @@ impl<'c> Trainer<'c> {
         }
         Ok(true)
     }
+}
+
+/// Map the overlap schedule's per-bucket comm times onto the static
+/// `form_buckets` layout the controller indexes. The scheduler may
+/// merge adjacent buckets on a given step (message-length floor), so
+/// when the counts differ the total comm time is redistributed across
+/// the static buckets proportionally to their dense-byte weights.
+fn align_bucket_comm(comm: &[u64], weights: &[u64]) -> Vec<u64> {
+    if comm.len() == weights.len() {
+        return comm.to_vec();
+    }
+    let total: u128 = comm.iter().map(|&c| c as u128).sum();
+    let wsum: u128 = weights.iter().map(|&w| w as u128).sum::<u128>().max(1);
+    weights
+        .iter()
+        .map(|&w| (total * w as u128 / wsum) as u64)
+        .collect()
 }

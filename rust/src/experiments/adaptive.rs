@@ -1,0 +1,556 @@
+//! Static-vs-adaptive compression sweep (`repro adaptive-sweep`).
+//!
+//! For every {codec × topology × inter-rack-gbps} cell the sweep runs
+//! the same multi-step encode → overlapped-gather → decode loop twice:
+//! once with the codec's knob pinned at its initial value (static, the
+//! paper's fixed-ζ regime) and once with the closed-loop
+//! [`KnobController`] driving it from fabric telemetry. Each row
+//! reports, side by side: mean wire gain, mean overlapped step time,
+//! and a divergence proxy (relative L2 between the decoded update and
+//! the dense mean gradient), plus how often and how far the controller
+//! moved the knob.
+//!
+//! Non-tunable codecs (qsgd/terngrad/onebit/none) have no knob: their
+//! adaptive pass is bit-identical to static and the row shows zero
+//! knob moves — property-tested below.
+
+use anyhow::Result;
+
+use crate::comm::allgatherv::allgatherv_overlapped;
+use crate::comm::pipeline;
+use crate::compress::engine::EncodeStats;
+use crate::compress::{Aggregation, Codec, CodecSpec, ControllerConfig, KnobController};
+use crate::config::codec_str;
+use crate::fabric::{FabricConfig, LinkSpec, TopologyKind};
+use crate::model::Layout;
+use crate::testkit;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Pcg32;
+
+/// Sweep dimensions for the static-vs-adaptive comparison.
+#[derive(Debug, Clone)]
+pub struct AdaptiveSweepOpts {
+    pub topologies: Vec<TopologyKind>,
+    pub workers: usize,
+    pub codecs: Vec<CodecSpec>,
+    /// Bandwidth-skew axis: hierarchy cells are repeated per uplink
+    /// bandwidth (Gbps). Empty = the hierarchy's 10:1 default.
+    pub inter_rack_gbps: Vec<f64>,
+    /// Synthetic gradient dimension.
+    pub n_params: usize,
+    /// Loop length per mode; the controller needs a few steps of
+    /// telemetry to settle, so keep this ≥ ~8.
+    pub steps: u64,
+    pub bandwidth_gbps: f64,
+    pub latency_us: f64,
+    /// Tensor-fusion threshold, bytes (0 = one bucket).
+    pub bucket_bytes: usize,
+    /// Controller pressure target (`--adaptive-target` equivalent).
+    pub target: f64,
+    /// Synthetic backprop cost feeding bucket-ready times, ns/param.
+    pub compute_ns_per_param: f64,
+    /// Synthetic serial-encoder cost, ns/param.
+    pub encode_ns_per_param: f64,
+    pub seed: u64,
+}
+
+impl Default for AdaptiveSweepOpts {
+    fn default() -> Self {
+        AdaptiveSweepOpts {
+            topologies: vec![TopologyKind::Ring, TopologyKind::Hier { groups: 0 }],
+            workers: 8,
+            codecs: vec![
+                CodecSpec::Vgc {
+                    alpha: 2.0,
+                    zeta: 0.999,
+                },
+                CodecSpec::Strom { tau: 0.01 },
+            ],
+            inter_rack_gbps: Vec::new(),
+            n_params: 65_536,
+            steps: 8,
+            bandwidth_gbps: 1.0,
+            latency_us: 50.0,
+            bucket_bytes: 65_536,
+            target: 1.0,
+            compute_ns_per_param: 50.0,
+            encode_ns_per_param: 10.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Sanity-check a sweep before running it (CLI entry point).
+pub fn validate_adaptive(opts: &AdaptiveSweepOpts) -> Result<()> {
+    anyhow::ensure!(!opts.topologies.is_empty(), "sweep lists no topologies");
+    anyhow::ensure!(!opts.codecs.is_empty(), "sweep lists no codecs");
+    anyhow::ensure!(opts.workers >= 2, "adaptive-sweep needs >= 2 workers");
+    anyhow::ensure!(opts.n_params > 0, "n must be positive");
+    anyhow::ensure!(opts.steps > 0, "steps must be positive");
+    anyhow::ensure!(opts.target > 0.0, "target must be positive");
+    anyhow::ensure!(opts.bandwidth_gbps > 0.0, "bandwidth-gbps must be positive");
+    anyhow::ensure!(
+        opts.inter_rack_gbps.iter().all(|g| *g > 0.0),
+        "inter-rack-gbps values must be positive"
+    );
+    anyhow::ensure!(
+        opts.compute_ns_per_param >= 0.0 && opts.encode_ns_per_param >= 0.0,
+        "compute-ns and encode-ns must be non-negative"
+    );
+    for &kind in &opts.topologies {
+        let probe = FabricConfig {
+            topology: kind,
+            inter_rack_gbps: match kind {
+                TopologyKind::Hier { .. } => opts.inter_rack_gbps.first().copied(),
+                _ => None,
+            },
+            ..FabricConfig::default()
+        };
+        probe.validate(opts.workers)?;
+    }
+    Ok(())
+}
+
+/// One cell: the static and adaptive passes of one codec on one fabric.
+#[derive(Debug, Clone)]
+pub struct AdaptiveSweepRow {
+    pub topology: TopologyKind,
+    /// Hierarchy cells only: the uplink bandwidth of this cell.
+    pub inter_rack_gbps: Option<f64>,
+    pub codec: String,
+    /// Mean wire gain (dense bits / payload bits) per mode.
+    pub static_gain: f64,
+    pub adaptive_gain: f64,
+    /// Mean overlapped step span per mode, ms.
+    pub static_step_ms: f64,
+    pub adaptive_step_ms: f64,
+    /// Mean relative L2 between the decoded update and the dense mean
+    /// gradient per mode (lower = closer to uncompressed SGD).
+    pub static_divergence: f64,
+    pub adaptive_divergence: f64,
+    /// Knob adjustments the controller made across the adaptive pass.
+    pub knob_moves: u64,
+    /// The knob's final scalar value (comm-weighted for ranged codecs);
+    /// `None` when the codec is non-tunable.
+    pub final_knob: Option<f32>,
+}
+
+/// Everything one pass of the loop accumulates.
+struct ModeResult {
+    gain: f64,
+    step_ms: f64,
+    divergence: f64,
+    knob_moves: u64,
+    final_knob: Option<f32>,
+}
+
+/// See `align_bucket_comm` in the trainer: the overlap scheduler may
+/// merge adjacent buckets, so redistribute total comm time onto the
+/// static bucket layout by dense-byte weight when the counts differ.
+fn align_comm(comm: &[u64], weights: &[u64]) -> Vec<u64> {
+    if comm.len() == weights.len() {
+        return comm.to_vec();
+    }
+    let total: u128 = comm.iter().map(|&c| c as u128).sum();
+    let wsum: u128 = weights.iter().map(|&w| w as u128).sum::<u128>().max(1);
+    weights
+        .iter()
+        .map(|&w| (total * w as u128 / wsum) as u64)
+        .collect()
+}
+
+/// Run one pass of the encode→gather→decode loop; `adaptive` selects
+/// whether the controller is in the loop. Both passes see the exact
+/// same gradient stream (seeded per worker, independent of the codec).
+fn run_mode(opts: &AdaptiveSweepOpts, cfg: &FabricConfig, spec: &CodecSpec, adaptive: bool) -> ModeResult {
+    let p = opts.workers;
+    let n = opts.n_params;
+    let layout = Layout::uniform(n, 256);
+    let buckets = pipeline::form_buckets(&layout, opts.bucket_bytes);
+    let weights = pipeline::bucket_weights(&buckets);
+    let mut codecs: Vec<Box<dyn Codec>> = (0..p)
+        .map(|w| spec.build(&layout, opts.seed.wrapping_add(w as u64)))
+        .collect();
+    let mut controller = if adaptive {
+        codecs[0].knob().map(|knob| {
+            let ranges: Vec<(usize, usize)> = buckets
+                .iter()
+                .map(|b| (b.params.start, b.params.end))
+                .collect();
+            KnobController::new(
+                ControllerConfig {
+                    target: opts.target,
+                    seed: opts.seed,
+                    ..ControllerConfig::default()
+                },
+                knob,
+                ranges,
+            )
+        })
+    } else {
+        None
+    };
+    let grad_ps = (n as f64 * opts.compute_ns_per_param * 1e3) as u64;
+    let encode_ps = (n as f64 * opts.encode_ns_per_param * 1e3) as u64;
+    let mut rngs: Vec<Pcg32> = (0..p)
+        .map(|w| Pcg32::new(opts.seed ^ 0x5EED_FAB, w as u64))
+        .collect();
+
+    let mut sum_gain = 0.0f64;
+    let mut sum_step_ps = 0u128;
+    let mut sum_div = 0.0f64;
+    let mut knob_moves = 0u64;
+    let mut final_scalar: Option<f32> = None;
+    let mut update = vec![0.0f32; n];
+    let mut dense = vec![0.0f32; n];
+    for _ in 0..opts.steps {
+        let grads: Vec<Vec<f32>> = rngs
+            .iter_mut()
+            .map(|r| testkit::gradient_vec(r, n))
+            .collect();
+        dense.iter_mut().for_each(|d| *d = 0.0);
+        for g in &grads {
+            for (d, &x) in dense.iter_mut().zip(g.iter()) {
+                *d += x;
+            }
+        }
+        let inv = 1.0 / p as f32;
+        dense.iter_mut().for_each(|d| *d *= inv);
+
+        let mut elements = 0u64;
+        let mut payload_bits = 0u64;
+        let msgs: Vec<Vec<u8>> = codecs
+            .iter_mut()
+            .zip(&grads)
+            .map(|(c, g)| {
+                let sq: Vec<f32> = g.iter().map(|x| x * x * 0.5).collect();
+                let m = c.encode_step(g, &sq);
+                elements += m.elements;
+                payload_bits += m.payload_bits;
+                m.bytes
+            })
+            .collect();
+        let ov = allgatherv_overlapped(cfg, &msgs, &weights, grad_ps, encode_ps);
+        sum_step_ps += ov.schedule.overlapped_ps as u128;
+
+        // Decode worker 0's gathered view — the update every worker
+        // applies — and compare it to the dense mean gradient.
+        update.iter_mut().for_each(|u| *u = 0.0);
+        for m in &ov.gathered[0] {
+            codecs[0]
+                .decode_into(m, &mut update)
+                .expect("self-produced message decodes");
+        }
+        if codecs[0].aggregation() == Aggregation::Mean {
+            update.iter_mut().for_each(|u| *u *= inv);
+        }
+        let mut err2 = 0.0f64;
+        let mut ref2 = 0.0f64;
+        for (u, d) in update.iter().zip(dense.iter()) {
+            let e = (*u - *d) as f64;
+            err2 += e * e;
+            ref2 += (*d as f64) * (*d as f64);
+        }
+        sum_div += (err2 / ref2.max(1e-30)).sqrt();
+
+        let stats = EncodeStats {
+            elements,
+            payload_bits,
+        };
+        let gain = stats.gain(n * p);
+        sum_gain += gain;
+
+        if let Some(ctl) = controller.as_mut() {
+            let comm = align_comm(&ov.telemetry.bucket_comm_ps, &weights);
+            let uplink = ov.telemetry.uplink_byte_fraction();
+            let ups = ctl.observe(&comm, grad_ps + encode_ps, uplink, gain);
+            if !ups.is_empty() {
+                let mut ranged = true;
+                'apply: for up in &ups {
+                    for c in codecs.iter_mut() {
+                        if !c.set_knob_range(up.lo, up.hi, up.value) {
+                            ranged = false;
+                            break 'apply;
+                        }
+                    }
+                }
+                if !ranged {
+                    let v = ctl.scalar_value(&comm);
+                    for c in codecs.iter_mut() {
+                        c.set_knob(v);
+                    }
+                }
+                knob_moves += ups.len() as u64;
+            }
+            final_scalar = Some(ctl.scalar_value(&comm));
+        }
+    }
+    let steps = opts.steps as f64;
+    ModeResult {
+        gain: sum_gain / steps,
+        step_ms: sum_step_ps as f64 * 1e-9 / steps,
+        divergence: sum_div / steps,
+        knob_moves,
+        final_knob: final_scalar,
+    }
+}
+
+/// Run the full sweep: every codec on every fabric cell, static and
+/// adaptive back to back on identical gradient streams.
+pub fn adaptive_sweep(opts: &AdaptiveSweepOpts) -> Result<Vec<AdaptiveSweepRow>> {
+    validate_adaptive(opts)?;
+    let mut rows = Vec::new();
+    for &kind in &opts.topologies {
+        // Only the hierarchy has an uplink; other topologies get a
+        // single cell with the axis unset.
+        let uplinks: Vec<Option<f64>> =
+            if matches!(kind, TopologyKind::Hier { .. }) && !opts.inter_rack_gbps.is_empty() {
+                opts.inter_rack_gbps.iter().copied().map(Some).collect()
+            } else {
+                vec![None]
+            };
+        for &uplink in &uplinks {
+            let cfg = FabricConfig {
+                topology: kind,
+                link: LinkSpec {
+                    bandwidth_gbps: opts.bandwidth_gbps,
+                    latency_us: opts.latency_us,
+                    jitter_us: 0.0,
+                },
+                inter_rack_gbps: uplink,
+                seed: opts.seed,
+                ..FabricConfig::default()
+            };
+            for spec in &opts.codecs {
+                let st = run_mode(opts, &cfg, spec, false);
+                let ad = run_mode(opts, &cfg, spec, true);
+                rows.push(AdaptiveSweepRow {
+                    topology: kind,
+                    inter_rack_gbps: uplink,
+                    codec: codec_str(spec),
+                    static_gain: st.gain,
+                    adaptive_gain: ad.gain,
+                    static_step_ms: st.step_ms,
+                    adaptive_step_ms: ad.step_ms,
+                    static_divergence: st.divergence,
+                    adaptive_divergence: ad.divergence,
+                    knob_moves: ad.knob_moves,
+                    final_knob: ad.final_knob,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Markdown table of the sweep (the `repro adaptive-sweep` report).
+pub fn adaptive_sweep_markdown(opts: &AdaptiveSweepOpts, rows: &[AdaptiveSweepRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "### adaptive sweep — N={} params, p={}, {} steps/mode, target {}, \
+         {} Gbps, bucket {} B\n\n",
+        opts.n_params,
+        opts.workers,
+        opts.steps,
+        opts.target,
+        opts.bandwidth_gbps,
+        opts.bucket_bytes,
+    ));
+    out.push_str(
+        "| topology | uplink | codec | gain static | gain adaptive | step static \
+         | step adaptive | div static | div adaptive | knob moves | final knob |\n",
+    );
+    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|\n");
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {} | {:.1}x | {:.1}x | {:.3} ms | {:.3} ms | {:.4} | {:.4} | {} | {} |\n",
+            r.topology.label(),
+            r.inter_rack_gbps
+                .map(|g| format!("{g}"))
+                .unwrap_or_else(|| "-".into()),
+            r.codec,
+            r.static_gain,
+            r.adaptive_gain,
+            r.static_step_ms,
+            r.adaptive_step_ms,
+            r.static_divergence,
+            r.adaptive_divergence,
+            r.knob_moves,
+            r.final_knob
+                .map(|v| format!("{v:.4}"))
+                .unwrap_or_else(|| "-".into()),
+        ));
+    }
+    out
+}
+
+/// Serialize sweep rows for EXPERIMENTS.md tooling.
+pub fn adaptive_sweep_json(rows: &[AdaptiveSweepRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("topology", s(&r.topology.label())),
+                    (
+                        "inter_rack_gbps",
+                        r.inter_rack_gbps.map(num).unwrap_or(Json::Null),
+                    ),
+                    ("codec", s(&r.codec)),
+                    ("static_gain", num(r.static_gain)),
+                    ("adaptive_gain", num(r.adaptive_gain)),
+                    ("static_step_ms", num(r.static_step_ms)),
+                    ("adaptive_step_ms", num(r.adaptive_step_ms)),
+                    ("static_divergence", num(r.static_divergence)),
+                    ("adaptive_divergence", num(r.adaptive_divergence)),
+                    ("knob_moves", num(r.knob_moves as f64)),
+                    (
+                        "final_knob",
+                        r.final_knob.map(|v| num(v as f64)).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> AdaptiveSweepOpts {
+        AdaptiveSweepOpts {
+            topologies: vec![TopologyKind::Hier { groups: 2 }],
+            workers: 4,
+            // A small alpha keeps the send rate (and thus the wire
+            // gain) well under the controller's GAIN_CEILING so the
+            // comm-bound cells are free to tighten.
+            codecs: vec![CodecSpec::Vgc {
+                alpha: 0.5,
+                zeta: 0.95,
+            }],
+            n_params: 4096,
+            steps: 6,
+            ..AdaptiveSweepOpts::default()
+        }
+    }
+
+    #[test]
+    fn non_tunable_codec_is_bit_identical_across_modes() {
+        let opts = AdaptiveSweepOpts {
+            codecs: vec![
+                CodecSpec::None,
+                CodecSpec::Qsgd {
+                    bits: 3,
+                    bucket: 256,
+                },
+                CodecSpec::TernGrad,
+            ],
+            ..tiny_opts()
+        };
+        let rows = adaptive_sweep(&opts).unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert_eq!(r.knob_moves, 0, "{}: no knob to move", r.codec);
+            assert!(r.final_knob.is_none());
+            assert_eq!(r.static_gain.to_bits(), r.adaptive_gain.to_bits(), "{}", r.codec);
+            assert_eq!(
+                r.static_divergence.to_bits(),
+                r.adaptive_divergence.to_bits(),
+                "{}",
+                r.codec
+            );
+            assert_eq!(
+                r.static_step_ms.to_bits(),
+                r.adaptive_step_ms.to_bits(),
+                "{}",
+                r.codec
+            );
+        }
+    }
+
+    #[test]
+    fn comm_bound_hier_cell_tightens_and_does_not_regress_step_time() {
+        // Slow uplink + cheap compute makes comm the bottleneck: the
+        // controller must tighten (knob moves > 0, gain up) and the
+        // adaptive pass must match or beat static simulated step time.
+        let opts = AdaptiveSweepOpts {
+            inter_rack_gbps: vec![0.05],
+            compute_ns_per_param: 5.0,
+            encode_ns_per_param: 1.0,
+            steps: 12,
+            ..tiny_opts()
+        };
+        let rows = adaptive_sweep(&opts).unwrap();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert!(r.knob_moves > 0, "controller never moved: {r:?}");
+        assert!(
+            r.adaptive_gain >= r.static_gain,
+            "tightening must not lower gain: {r:?}"
+        );
+        assert!(
+            r.adaptive_step_ms <= r.static_step_ms * 1.02 + 1e-6,
+            "adaptive regressed step time: {r:?}"
+        );
+        let knob = r.final_knob.expect("vgc is tunable");
+        assert!(knob >= 0.95 && knob <= 1.0, "zeta must stay in [initial, hi]: {knob}");
+    }
+
+    #[test]
+    fn underloaded_cell_stays_at_static_behavior() {
+        // Fast fabric, heavy compute: pressure stays under target, the
+        // controller holds u = 0, and both passes agree bit-for-bit.
+        let opts = AdaptiveSweepOpts {
+            topologies: vec![TopologyKind::Ring],
+            bandwidth_gbps: 100.0,
+            compute_ns_per_param: 500.0,
+            ..tiny_opts()
+        };
+        let rows = adaptive_sweep(&opts).unwrap();
+        let r = &rows[0];
+        assert_eq!(r.knob_moves, 0, "{r:?}");
+        assert_eq!(r.static_gain.to_bits(), r.adaptive_gain.to_bits());
+        assert_eq!(
+            r.static_divergence.to_bits(),
+            r.adaptive_divergence.to_bits()
+        );
+    }
+
+    #[test]
+    fn report_shapes_cover_all_rows() {
+        let opts = AdaptiveSweepOpts {
+            topologies: vec![TopologyKind::Ring, TopologyKind::Hier { groups: 2 }],
+            inter_rack_gbps: vec![1.0, 0.1],
+            ..tiny_opts()
+        };
+        let rows = adaptive_sweep(&opts).unwrap();
+        // ring × 1 cell + hier × 2 uplink cells.
+        assert_eq!(rows.len(), 3);
+        let md = adaptive_sweep_markdown(&opts, &rows);
+        assert!(md.contains("gain adaptive"), "{md}");
+        assert!(md.contains("knob moves"), "{md}");
+        assert_eq!(
+            md.lines().filter(|l| l.starts_with("| ")).count(),
+            1 + rows.len()
+        );
+        let j = adaptive_sweep_json(&rows);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.as_arr().unwrap().len(), rows.len());
+    }
+
+    #[test]
+    fn validation_rejects_bad_axes() {
+        let mut o = tiny_opts();
+        o.steps = 0;
+        assert!(validate_adaptive(&o).is_err());
+        let mut o = tiny_opts();
+        o.target = 0.0;
+        assert!(validate_adaptive(&o).is_err());
+        let mut o = tiny_opts();
+        o.workers = 1;
+        assert!(validate_adaptive(&o).is_err());
+        let mut o = tiny_opts();
+        o.inter_rack_gbps = vec![-1.0];
+        assert!(validate_adaptive(&o).is_err());
+    }
+}

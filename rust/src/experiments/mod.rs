@@ -15,11 +15,18 @@
 //!   bucketed pipeline (`repro bench-pipeline`, `BENCH_pipeline.json`).
 //! * [`chaos`] — fault-injection sweep over the chaos fabric
 //!   (`repro chaos-sweep`, masking/divergence/inflation per scenario).
+//! * [`adaptive`] — static-vs-adaptive compression comparison over the
+//!   closed-loop knob controller (`repro adaptive-sweep`).
 
+pub mod adaptive;
 pub mod benchcodecs;
 pub mod benchpipeline;
 pub mod chaos;
 
+pub use adaptive::{
+    adaptive_sweep, adaptive_sweep_json, adaptive_sweep_markdown, validate_adaptive,
+    AdaptiveSweepOpts, AdaptiveSweepRow,
+};
 pub use benchcodecs::{
     bench_codecs, bench_codecs_json, bench_codecs_markdown, BenchCodecsOpts, BenchCodecsRow,
 };

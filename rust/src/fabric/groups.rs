@@ -401,4 +401,57 @@ mod tests {
         assert_eq!(g.members(0), vec![1]);
         assert!(g.members(2).is_empty());
     }
+
+    /// Tree and hierarchy are two front-ends over this one protocol:
+    /// when their spans coincide (p=8: branch 4 ⇔ 2 balanced groups)
+    /// and the hierarchy's uplink is pinned to the base bandwidth, the
+    /// collectives must agree byte-for-byte *and* tick-for-tick.
+    #[test]
+    fn tree_and_hier_with_matching_spans_run_the_identical_protocol() {
+        use crate::fabric::hierarchy::Hierarchy;
+        use crate::fabric::tree::Tree;
+        use crate::fabric::{Fabric, FabricConfig, LinkSpec, Topology, TopologyKind};
+
+        let p = 8;
+        let tree = Tree::new(p, 4);
+        let hier = Hierarchy::new(p, 2);
+        let cfg = |kind: TopologyKind, uplink: Option<f64>| FabricConfig {
+            topology: kind,
+            link: LinkSpec {
+                bandwidth_gbps: 1.0,
+                latency_us: 1.0,
+                jitter_us: 0.0,
+            },
+            inter_rack_gbps: uplink,
+            ..FabricConfig::default()
+        };
+        // Uplink = base bandwidth neutralizes the hierarchy's only
+        // distinguishing feature (the oversubscribed leader links).
+        let tree_cfg = cfg(tree.kind(), None);
+        let hier_cfg = cfg(hier.kind(), Some(1.0));
+
+        let inputs: Vec<Vec<u8>> =
+            (0..p).map(|w| vec![w as u8 + 1; (w * 17) % 31 + 1]).collect();
+        let mut ft = Fabric::for_topology(&tree_cfg, &tree);
+        let mut fh = Fabric::for_topology(&hier_cfg, &hier);
+        let gt = tree.allgatherv(&mut ft, &inputs);
+        let gh = hier.allgatherv(&mut fh, &inputs);
+        assert_eq!(gt.gathered, gh.gathered, "gathered bytes diverged");
+        assert_eq!(gt.time_ps, gh.time_ps, "simulated clocks diverged");
+        assert_eq!(gt.traffic.rounds, gh.traffic.rounds);
+
+        let vecs: Vec<Vec<f32>> = (0..p)
+            .map(|w| (0..5).map(|k| (w * 5 + k) as f32 * 0.25).collect())
+            .collect();
+        let mut ft = Fabric::for_topology(&tree_cfg, &tree);
+        let mut fh = Fabric::for_topology(&hier_cfg, &hier);
+        let rt = tree.allreduce(&mut ft, &vecs);
+        let rh = hier.allreduce(&mut fh, &vecs);
+        for (a, b) in rt.reduced.iter().zip(rh.reduced.iter()) {
+            let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb, "reduced totals diverged bit-wise");
+        }
+        assert_eq!(rt.time_ps, rh.time_ps);
+    }
 }

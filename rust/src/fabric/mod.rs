@@ -597,6 +597,109 @@ impl Fabric {
     }
 }
 
+/// One directed link's share of a [`FabricTelemetry`] snapshot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSample {
+    pub src: usize,
+    pub dst: usize,
+    /// Bytes billed on this edge (including killed transmissions).
+    pub bytes: u64,
+    pub messages: u64,
+    /// Configured bandwidth (Gbps) from the [`LinkTable`] — the
+    /// deterministic link-class signal (uplinks are *configured* slow).
+    pub gbps: f64,
+    /// Achieved throughput over the snapshot window (Gbps): what the
+    /// link actually moved per unit time including queueing, jitter
+    /// and retransmits.
+    pub achieved_gbps: f64,
+}
+
+/// Per-step fabric feedback for the adaptive compression controller
+/// (`compress::controller`): per-link traffic + bandwidth, the fault/
+/// recovery counters, and — when the overlap pipeline produced one —
+/// per-bucket comm times. Snapshot semantics: counters are cumulative
+/// over the fabric's lifetime (one collective when the caller builds a
+/// fresh [`Fabric`] per step, which the comm layer does).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FabricTelemetry {
+    pub links: Vec<LinkSample>,
+    pub report: FabricReport,
+    /// Simulated time covered by the snapshot (ps).
+    pub elapsed_ps: Time,
+    /// Per-bucket comm time from the overlap schedule (empty for
+    /// unbucketed collectives).
+    pub bucket_comm_ps: Vec<Time>,
+}
+
+impl FabricTelemetry {
+    /// Snapshot `fabric` after a run. `bucket_comm_ps` is the overlap
+    /// schedule's per-bucket comm time (empty when unbucketed).
+    pub fn from_fabric(fabric: &Fabric, bucket_comm_ps: Vec<Time>) -> FabricTelemetry {
+        let elapsed_ps = fabric.now();
+        let links = fabric
+            .links()
+            .iter()
+            .map(|(&(src, dst), stat)| LinkSample {
+                src,
+                dst,
+                bytes: stat.bytes,
+                messages: stat.messages,
+                gbps: fabric.link_table().spec(src, dst).bandwidth_gbps,
+                // bytes·8 bits over elapsed_ps ps ⇒ Gbps = b·8000/ps.
+                achieved_gbps: if elapsed_ps > 0 {
+                    stat.bytes as f64 * 8000.0 / elapsed_ps as f64
+                } else {
+                    0.0
+                },
+            })
+            .collect();
+        FabricTelemetry {
+            links,
+            report: fabric.report(),
+            elapsed_ps,
+            bucket_comm_ps,
+        }
+    }
+
+    /// Total bytes billed across every link.
+    pub fn total_bytes(&self) -> u64 {
+        self.links.iter().map(|l| l.bytes).sum()
+    }
+
+    /// Fastest configured bandwidth among links that carried traffic.
+    pub fn max_gbps(&self) -> f64 {
+        self.links.iter().map(|l| l.gbps).fold(0.0, f64::max)
+    }
+
+    /// Fraction of wire bytes that crossed slow-class links (configured
+    /// bandwidth below half the fabric's fastest link) — on a hier
+    /// fabric with oversubscribed uplinks this is exactly the uplink
+    /// byte share. Classification uses *configured* bandwidth, so it is
+    /// deterministic across jitter seeds.
+    pub fn uplink_byte_fraction(&self) -> f64 {
+        let total = self.total_bytes();
+        if total == 0 {
+            return 0.0;
+        }
+        let cutoff = self.max_gbps() * 0.5;
+        let slow: u64 = self
+            .links
+            .iter()
+            .filter(|l| l.gbps < cutoff)
+            .map(|l| l.bytes)
+            .sum();
+        slow as f64 / total as f64
+    }
+}
+
+impl Fabric {
+    /// Telemetry snapshot of this fabric's current counters (see
+    /// [`FabricTelemetry::from_fabric`]).
+    pub fn telemetry(&self, bucket_comm_ps: Vec<Time>) -> FabricTelemetry {
+        FabricTelemetry::from_fabric(self, bucket_comm_ps)
+    }
+}
+
 /// Full fabric configuration: topology choice + link model + per-link
 /// overrides + gather segmentation + seeds + straggler injection +
 /// chaos plan. Serializes into the experiment record and parses from
@@ -1183,6 +1286,62 @@ mod tests {
         };
         assert!(cfg.validate(4).is_ok());
         assert!(cfg.validate(3).is_err());
+    }
+
+    #[test]
+    fn telemetry_snapshots_links_and_classifies_uplinks() {
+        let link = LinkSpec {
+            bandwidth_gbps: 10.0,
+            latency_us: 1.0,
+            jitter_us: 0.0,
+        };
+        let slow = LinkSpec {
+            bandwidth_gbps: 1.0, // < half of 10 ⇒ uplink class
+            ..link
+        };
+        let mut f = Fabric::for_config(
+            &FabricConfig {
+                link,
+                link_overrides: vec![(0, 1, slow)],
+                ..FabricConfig::default()
+            },
+            3,
+        );
+        // Two sends: 0->1 over the slow link, 0->2 over the fast one.
+        struct TwoSends;
+        impl Protocol for TwoSends {
+            fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+                let m = |origin| Msg {
+                    origin,
+                    seg: 0,
+                    hop: 0,
+                    tag: 0,
+                    payload: Payload::Bytes(vec![0u8; 100]),
+                };
+                vec![(0, 1, m(0)), (0, 2, m(1))]
+            }
+            fn on_deliver(&mut self, _node: usize, _msg: &Msg) -> Vec<(usize, Msg)> {
+                Vec::new()
+            }
+        }
+        f.run(&mut TwoSends);
+        let t = f.telemetry(vec![7, 9]);
+        assert_eq!(t.links.len(), 2);
+        assert_eq!(t.total_bytes(), 200);
+        assert_eq!(t.max_gbps(), 10.0);
+        assert!((t.uplink_byte_fraction() - 0.5).abs() < 1e-12);
+        assert_eq!(t.bucket_comm_ps, vec![7, 9]);
+        assert_eq!(t.elapsed_ps, f.now());
+        for l in &t.links {
+            assert!(l.achieved_gbps > 0.0);
+            assert!(l.achieved_gbps <= l.gbps + 1e-9, "{l:?}");
+        }
+        // Uniform fabric ⇒ no slow class at all.
+        let mut u = Fabric::new(link, 2, 0);
+        u.run(&mut OneShot {
+            delivered: Vec::new(),
+        });
+        assert_eq!(u.telemetry(Vec::new()).uplink_byte_fraction(), 0.0);
     }
 
     #[test]

@@ -18,7 +18,10 @@ use anyhow::Result;
 use vgc::compress::CodecSpec;
 use vgc::config::TrainConfig;
 use vgc::coordinator::Trainer;
-use vgc::experiments::{self, BenchCodecsOpts, BenchPipelineOpts, ChaosSweepOpts, FabricSweepOpts};
+use vgc::experiments::{
+    self, AdaptiveSweepOpts, BenchCodecsOpts, BenchPipelineOpts, ChaosSweepOpts,
+    FabricSweepOpts,
+};
 use vgc::fabric::{build_topology, FabricConfig, Straggler, TopologyKind};
 use vgc::runtime::{Client, Manifest};
 use vgc::service::http::{http_request, http_stream};
@@ -53,6 +56,7 @@ USAGE:
                   [--faults SPEC | --fault-plan FILE.json]
                   [--on-crash renorm|flush-rejoin]
                   [--bucket-bytes N] [--overlap]  (bucketed overlap pipeline)
+                  [--adaptive] [--adaptive-target F]  (closed-loop knob control)
   repro table1    [--optimizers adam,momentum] [--steps N] [--out FILE.json]
   repro table2    [--optimizers adam,momentum] [--steps N] [--out FILE.json]
   repro fig3      [--steps N] [--out FILE.csv]
@@ -73,6 +77,14 @@ USAGE:
                   [--codecs SPEC+SPEC+..] [--n PARAMS] [--steps K]
                   [--bandwidth-gbps G] [--latency-us L] [--seed S]
                   [--out FILE.json] [--md FILE.md]
+  repro adaptive-sweep
+                  [--topologies ring,hier:2,..] [--workers P]
+                  [--codecs SPEC+SPEC+..]  (tunable: vgc, strom, adaptive)
+                  [--inter-rack-gbps G1,G2,..]  (hier uplink skew axis)
+                  [--n PARAMS] [--steps K] [--bandwidth-gbps G]
+                  [--latency-us L] [--bucket-bytes N] [--target F]
+                  [--compute-ns F] [--encode-ns F] [--seed S]
+                  [--out FILE.json] [--md FILE.md]
   repro bench-codecs
                   [--n PARAMS] [--group SIZE] [--workers P]
                   [--threads T1,T2,..] [--codecs SPEC+SPEC+..]
@@ -92,6 +104,7 @@ USAGE:
   repro submit    --addr HOST:PORT (--spec FILE.json | --json '{..}')
                   [--watch]    (stream NDJSON events until terminal)
   repro status    --addr HOST:PORT [--job ID]
+  repro result    --addr HOST:PORT --job ID [--out FILE.json]
   repro cancel    --addr HOST:PORT --job ID
   repro shutdown  --addr HOST:PORT
 
@@ -109,7 +122,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "model", "codec", "optimizer", "lr", "steps", "seed", "weight-decay",
     "train-size", "test-size", "signal", "eval-every", "log-every",
     "verify-sync", "codec-threads", "loss-curve", "artifacts", "on-crash",
-    "bucket-bytes", "overlap",
+    "bucket-bytes", "overlap", "adaptive", "adaptive-target",
 ];
 
 /// Train accepts its own flags plus the fabric overrides — built at
@@ -125,7 +138,7 @@ fn artifacts_dir(args: &Args) -> String {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["verify-sync", "quiet", "watch", "overlap"])?;
+    let args = Args::from_env(&["verify-sync", "quiet", "watch", "overlap", "adaptive"])?;
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("");
     match cmd {
         "train" => cmd_train(&args),
@@ -138,12 +151,14 @@ fn main() -> Result<()> {
         }
         "fabric-sweep" => cmd_fabric_sweep(&args),
         "chaos-sweep" => cmd_chaos_sweep(&args),
+        "adaptive-sweep" => cmd_adaptive_sweep(&args),
         "bench-codecs" => cmd_bench_codecs(&args),
         "bench-pipeline" => cmd_bench_pipeline(&args),
         "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
         "submit" => cmd_submit(&args),
         "status" => cmd_status(&args),
+        "result" => cmd_result(&args),
         "cancel" => cmd_cancel(&args),
         "shutdown" => cmd_shutdown(&args),
         "" | "help" | "--help" => {
@@ -353,6 +368,58 @@ fn cmd_chaos_sweep(args: &Args) -> Result<()> {
     }
     if let Some(path) = args.get("out") {
         std::fs::write(path, experiments::chaos_sweep_json(&rows).to_string())?;
+        println!("\nresults written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_adaptive_sweep(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "topologies", "workers", "codecs", "inter-rack-gbps", "n", "steps",
+        "bandwidth-gbps", "latency-us", "bucket-bytes", "target", "compute-ns",
+        "encode-ns", "seed", "out", "md",
+    ])?;
+    let mut opts = AdaptiveSweepOpts::default();
+    let topologies = args
+        .list("topologies")
+        .iter()
+        .map(|t| TopologyKind::parse(t))
+        .collect::<Result<Vec<_>>>()?;
+    if !topologies.is_empty() {
+        opts.topologies = topologies;
+    }
+    opts.workers = args.parse_or("workers", opts.workers)?;
+    // Codec specs contain commas, so the list separator is '+'.
+    if let Some(spec) = args.get("codecs") {
+        opts.codecs = spec
+            .split('+')
+            .filter(|c| !c.trim().is_empty())
+            .map(|c| CodecSpec::parse(c.trim()))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    let uplinks = args.parse_list::<f64>("inter-rack-gbps")?;
+    if !uplinks.is_empty() {
+        opts.inter_rack_gbps = uplinks;
+    }
+    opts.n_params = args.parse_or("n", opts.n_params)?;
+    opts.steps = args.parse_or("steps", opts.steps)?;
+    opts.bandwidth_gbps = args.parse_or("bandwidth-gbps", opts.bandwidth_gbps)?;
+    opts.latency_us = args.parse_or("latency-us", opts.latency_us)?;
+    opts.bucket_bytes = args.parse_or("bucket-bytes", opts.bucket_bytes)?;
+    opts.target = args.parse_or("target", opts.target)?;
+    opts.compute_ns_per_param = args.parse_or("compute-ns", opts.compute_ns_per_param)?;
+    opts.encode_ns_per_param = args.parse_or("encode-ns", opts.encode_ns_per_param)?;
+    opts.seed = args.parse_or("seed", opts.seed)?;
+
+    let rows = experiments::adaptive_sweep(&opts)?;
+    let md = experiments::adaptive_sweep_markdown(&opts, &rows);
+    print!("{md}");
+    if let Some(path) = args.get("md") {
+        std::fs::write(path, &md)?;
+        println!("\nmarkdown written to {path}");
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, experiments::adaptive_sweep_json(&rows).to_string())?;
         println!("\nresults written to {path}");
     }
     Ok(())
@@ -647,6 +714,21 @@ fn cmd_status(args: &Args) -> Result<()> {
             anyhow::ensure!(code == 200, "HTTP {code}: {resp}");
             println!("{path} {resp}");
         }
+    }
+    Ok(())
+}
+
+fn cmd_result(args: &Args) -> Result<()> {
+    args.check_known(&["addr", "job", "out"])?;
+    let addr = args.require("addr")?;
+    let job = args.require("job")?;
+    let (code, resp) = http_request(addr, "GET", &format!("/jobs/{job}/result"), None)?;
+    anyhow::ensure!(code == 200, "HTTP {code}: {resp}");
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &resp)?;
+        println!("result written to {path}");
+    } else {
+        println!("{resp}");
     }
     Ok(())
 }

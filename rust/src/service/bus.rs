@@ -160,6 +160,16 @@ pub enum Event {
         live: usize,
         total: usize,
     },
+    /// The adaptive compression controller (`--adaptive`) moved one
+    /// bucket's codec knob after this step.
+    Knob {
+        job: u64,
+        step: u64,
+        bucket: usize,
+        name: &'static str,
+        value: f64,
+        gain: f64,
+    },
     /// Terminal transition; `summary` is the run summary on success.
     JobFinished {
         job: u64,
@@ -182,6 +192,7 @@ impl Event {
             | Event::JobRetry { job, .. }
             | Event::Fault { job, .. }
             | Event::Degraded { job, .. }
+            | Event::Knob { job, .. }
             | Event::JobFinished { job, .. } => Some(*job),
             Event::Drain => None,
         }
@@ -273,6 +284,22 @@ impl Event {
                 ("step", num(*step as f64)),
                 ("live", num(*live as f64)),
                 ("total", num(*total as f64)),
+            ]),
+            Event::Knob {
+                job,
+                step,
+                bucket,
+                name,
+                value,
+                gain,
+            } => obj(vec![
+                ("event", s("knob")),
+                ("job", num(*job as f64)),
+                ("step", num(*step as f64)),
+                ("bucket", num(*bucket as f64)),
+                ("name", s(name)),
+                ("value", finite_or_null(*value)),
+                ("gain", finite_or_null(*gain)),
             ]),
             Event::JobFinished {
                 job,
@@ -384,6 +411,23 @@ mod tests {
         assert_eq!(j.get("loss").unwrap().as_f64().unwrap(), 0.5);
         assert_eq!(j.get("comp_ratio"), Some(&Json::Null)); // NaN -> null
         assert_eq!(j.get("sim_step_ps").unwrap().as_usize().unwrap(), 1_000_000);
+
+        let knob = Event::Knob {
+            job: 9,
+            step: 17,
+            bucket: 2,
+            name: "zeta",
+            value: 0.97,
+            gain: 128.0,
+        };
+        assert_eq!(knob.job(), Some(9));
+        assert!(!knob.is_terminal_for(9));
+        let j = knob.to_json();
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "knob");
+        assert_eq!(j.get("bucket").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "zeta");
+        assert!((j.get("value").unwrap().as_f64().unwrap() - 0.97).abs() < 1e-9);
+        assert_eq!(j.get("gain").unwrap().as_f64().unwrap(), 128.0);
 
         let deg = Event::Degraded {
             job: 5,

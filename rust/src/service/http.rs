@@ -11,6 +11,7 @@
 //! | GET    | `/jobs`             | list all jobs                       |
 //! | GET    | `/jobs/:id`         | one job's snapshot                  |
 //! | GET    | `/jobs/:id/events`  | NDJSON event stream until terminal  |
+//! | GET    | `/jobs/:id/result`  | the finished job's result artifact  |
 //! | POST   | `/jobs/:id/cancel`  | cancel                              |
 //! | GET    | `/queues`           | queue depths                        |
 //! | GET    | `/fabric`           | shared fabric config + usage ledger |
@@ -192,6 +193,23 @@ fn handle_connection(stream: &mut TcpStream, daemon: &Daemon) -> std::io::Result
                 None => respond_json(stream, 404, &error_json("unknown job")),
             },
             Some((id, Some("events"))) => stream_events(stream, daemon, id),
+            Some((id, Some("result"))) => match daemon.scheduler().job(id) {
+                // The result artifact exists only after a successful
+                // terminal transition; 404 with distinct messages keeps
+                // "not yet" and "no such job" diagnosable client-side.
+                Some(snap) => match snap.result {
+                    Some(r) => respond_json(stream, 200, &r),
+                    None => respond_json(
+                        stream,
+                        404,
+                        &error_json(&format!(
+                            "job {id} has no result (state: {})",
+                            snap.state.label()
+                        )),
+                    ),
+                },
+                None => respond_json(stream, 404, &error_json("unknown job")),
+            },
             _ => respond_json(stream, 404, &error_json("no such route")),
         },
         ("POST", path) => match parse_job_path(path) {
@@ -369,6 +387,7 @@ mod tests {
         assert_eq!(parse_job_path("/jobs/7"), Some((7, None)));
         assert_eq!(parse_job_path("/jobs/7/events"), Some((7, Some("events"))));
         assert_eq!(parse_job_path("/jobs/7/cancel"), Some((7, Some("cancel"))));
+        assert_eq!(parse_job_path("/jobs/7/result"), Some((7, Some("result"))));
         assert_eq!(parse_job_path("/jobs/x"), None);
         assert_eq!(parse_job_path("/queues"), None);
     }

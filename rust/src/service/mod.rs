@@ -351,6 +351,22 @@ fn run_train(ctx: &ExecCtx, cfg: &TrainConfig, jctx: &JobCtx) -> Result<Json> {
                     total,
                 });
             }
+            RunEvent::Knob {
+                step,
+                bucket,
+                name,
+                value,
+                gain,
+            } => {
+                jctx.publish(Event::Knob {
+                    job: jctx.id,
+                    step,
+                    bucket,
+                    name,
+                    value: value as f64,
+                    gain,
+                });
+            }
             RunEvent::Eval { .. } => {}
         }
         !jctx.cancelled()

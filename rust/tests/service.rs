@@ -9,7 +9,9 @@
 //!   next step boundary,
 //! - SIGTERM drains in-flight work and persists a terminal snapshot,
 //! - a train job with a fault plan forwards `fault` / `degraded`
-//!   NDJSON events and a `fault_report` summary (needs artifacts).
+//!   NDJSON events and a `fault_report` summary (needs artifacts),
+//! - an `--adaptive` train job on a comm-bound hierarchy forwards the
+//!   controller's `knob` NDJSON events (needs artifacts).
 
 use std::io::{BufRead, BufReader};
 use std::path::PathBuf;
@@ -464,6 +466,64 @@ fn train_job_over_http_matches_in_process_run() {
     let fnv = format!("{:016x}", vgc::service::fnv64_f32(&trainer.params));
     assert_eq!(sget(&result, "params_fnv64"), fnv, "daemon train diverged from in-process");
     assert_eq!(nget(&result, "steps"), trainer.step_count());
+}
+
+#[test]
+fn adaptive_train_job_streams_knob_events() {
+    if !have_artifacts() {
+        eprintln!("skipping: no compiled artifacts (run tools/compile_models.py)");
+        return;
+    }
+    let client = match vgc::runtime::Client::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping: no CPU client: {e:#}");
+            return;
+        }
+    };
+
+    // Comm-bound on purpose: a 5 Mbps inter-rack uplink dwarfs any
+    // measured compute time, so the closed-loop controller must tighten
+    // and the daemon must forward its moves as `knob` NDJSON events.
+    let mut cfg = vgc::config::TrainConfig::defaults("mlp");
+    cfg.codec = vgc::compress::CodecSpec::parse("vgc:alpha=0.5").unwrap();
+    cfg.steps = 6;
+    cfg.codec_threads = 1;
+    cfg.adaptive = true;
+    cfg.fabric.topology = vgc::fabric::TopologyKind::Hier { groups: 2 };
+    cfg.fabric.inter_rack_gbps = Some(0.005);
+
+    // The hierarchy needs a second worker; probe the model's
+    // parallelism in-process before spending a daemon boot.
+    let manifest = vgc::runtime::Manifest::load("artifacts").unwrap();
+    let probe = vgc::coordinator::Trainer::new(&client, &manifest, cfg.clone()).unwrap();
+    if probe.workers() < 2 {
+        eprintln!("skipping: single-worker model has no fabric to adapt to");
+        return;
+    }
+
+    let spec = cfg.to_json().to_string();
+    let d = DaemonProc::spawn(&["--codec-threads", "1"]);
+    let id = submit(&d.addr, &format!(r#"{{"job":"train","spec":{spec}}}"#));
+    let snap = wait_terminal(&d.addr, id, Duration::from_secs(300));
+    assert_eq!(sget(&snap, "state"), "succeeded", "train: {:?}", snap.get("error"));
+
+    // The bus replays a terminal job's history, so streaming after
+    // completion still sees every knob event.
+    let events = stream_to_end(&d.addr, id);
+    d.shutdown();
+
+    let knobs: Vec<&Json> = events.iter().filter(|e| event_is(e, "knob")).collect();
+    assert!(!knobs.is_empty(), "comm-bound adaptive run emitted no knob events");
+    for e in &knobs {
+        assert_eq!(sget(e, "name"), "zeta", "vgc's knob is the variance decay");
+        let step = nget(e, "step");
+        assert!((1..=cfg.steps).contains(&step), "knob step {step} out of range");
+        let v = e.get("value").unwrap().as_f64().unwrap();
+        assert!(v > 0.0 && v <= 1.0, "zeta out of range: {v}");
+        assert!(e.get("gain").unwrap().as_f64().unwrap().is_finite());
+        let _bucket = nget(e, "bucket"); // present and unsigned
+    }
 }
 
 #[test]
