@@ -186,6 +186,104 @@ pub fn hier_gatherv_bytes_per_node(sizes: &[u64], spans: &[(usize, usize)]) -> V
     out
 }
 
+/// Analytic per-node egress bytes for the 3-D torus allgatherv
+/// (`fabric::torus3`, node `(x, y, z)` = id `z·X·Y + y·X + x`). A
+/// block born at `o` rings its x-line, is injected from every x-line
+/// node into that node's y-line, and from the whole `(x, y)` plane of
+/// `z = z_o` into the z-lines — every other node receives it exactly
+/// once, `XYZ − 1` sends per block. Node `v` forwards `o`'s block:
+///
+/// * on `o`'s x-line (`y_v = y_o, z_v = z_o`): one x-forward unless it
+///   sits on the last hop (`(x_v − x_o) mod X = X − 1`), plus one
+///   y-inject if `Y > 1` and one z-inject if `Z > 1`;
+/// * in `o`'s plane but off its x-line (`z_v = z_o, y_v ≠ y_o`): one
+///   y-forward unless on the last y-hop, plus one z-inject if `Z > 1`;
+/// * off-plane (`z_v ≠ z_o`): one z-forward unless on the last z-hop.
+///
+/// The fabric simulation must reproduce these counts exactly
+/// (property-tested in `tests/fabric_sim.rs`).
+pub fn torus3_gatherv_bytes_per_node(
+    sizes: &[u64],
+    x: usize,
+    y: usize,
+    z: usize,
+) -> Vec<u64> {
+    let p = x * y * z;
+    assert_eq!(sizes.len(), p, "one size per torus3 node");
+    let coord = |w: usize| (w % x, (w / x) % y, w / (x * y));
+    (0..p)
+        .map(|v| {
+            let (xv, yv, zv) = coord(v);
+            let mut egress = 0u64;
+            for (o, &n) in sizes.iter().enumerate() {
+                let (xo, yo, zo) = coord(o);
+                let mut sends = 0u64;
+                if zv == zo {
+                    if yv == yo {
+                        let d = (xv + x - xo) % x;
+                        if x > 1 && d < x - 1 {
+                            sends += 1;
+                        }
+                        sends += u64::from(y > 1) + u64::from(z > 1);
+                    } else {
+                        let dy = (yv + y - yo) % y;
+                        if dy < y - 1 {
+                            sends += 1;
+                        }
+                        sends += u64::from(z > 1);
+                    }
+                } else {
+                    let dz = (zv + z - zo) % z;
+                    if dz < z - 1 {
+                        sends += 1;
+                    }
+                }
+                egress += sends * n;
+            }
+            egress
+        })
+        .collect()
+}
+
+/// Analytic per-node egress bytes for the dragonfly allgatherv
+/// (`fabric::dragonfly`, contiguous `(start, len)` group spans, group
+/// `a`'s link to group `b` owned round-robin by member
+/// `start_a + (b − [b > a]) mod len_a`). A node broadcasts its own
+/// block to its `m − 1` group peers; the owner of each outbound link
+/// additionally relays its whole group's bytes over that link once
+/// and fans everything arriving on the paired inbound link to its
+/// `m − 1` peers — `p − 1` sends per block in total.
+pub fn dragonfly_gatherv_bytes_per_node(
+    sizes: &[u64],
+    spans: &[(usize, usize)],
+) -> Vec<u64> {
+    let p: usize = spans.iter().map(|&(_, l)| l).sum();
+    assert_eq!(sizes.len(), p, "one size per dragonfly worker");
+    let g = spans.len();
+    let owner = |a: usize, b: usize| -> usize {
+        let (start, len) = spans[a];
+        start + (b - usize::from(b > a)) % len
+    };
+    let group_total: Vec<u64> = spans
+        .iter()
+        .map(|&(s, l)| sizes[s..s + l].iter().sum())
+        .collect();
+    let mut out = vec![0u64; p];
+    for (a, &(start, len)) in spans.iter().enumerate() {
+        let m = (len - 1) as u64;
+        for v in start..start + len {
+            let mut egress = sizes[v] * m;
+            for b in 0..g {
+                if b != a && owner(a, b) == v {
+                    egress += group_total[a] + m * group_total[b];
+                }
+            }
+            out[v] = egress;
+        }
+    }
+    out
+}
+
 /// Completion-time bracket (seconds) for one simulated allgatherv
 /// under the fabric's cut-through port model (uniform latency `L`,
 /// zero jitter, no stragglers, unsegmented messages).
@@ -613,6 +711,58 @@ mod tests {
         // One group degenerates to a star with worker 0 as hub.
         let got = hier_gatherv_bytes_per_node(&sizes, &[(0, 4)]);
         assert_eq!(got, vec![3 * 10 + 2 * (20 + 30 + 40), 20, 30, 40]);
+    }
+
+    #[test]
+    fn torus3_gatherv_bytes_formula() {
+        // Total sends = (p−1) copies of every block, any shape.
+        for &(x, y, z) in &[(2usize, 3usize, 2usize), (2, 2, 2), (1, 3, 2), (4, 1, 2)] {
+            let p = x * y * z;
+            let sizes: Vec<u64> = (0..p).map(|w| (w as u64 + 1) * 10).collect();
+            let got = torus3_gatherv_bytes_per_node(&sizes, x, y, z);
+            assert_eq!(
+                got.iter().sum::<u64>(),
+                (p as u64 - 1) * sizes.iter().sum::<u64>(),
+                "{x}x{y}x{z}"
+            );
+        }
+        // A single plane (Z = 1) is exactly the 2-D torus with
+        // rows = Y, cols = X (same node ids, same routes).
+        let sizes: Vec<u64> = (0..12).map(|w| (w as u64 * 7) % 90 + 1).collect();
+        assert_eq!(
+            torus3_gatherv_bytes_per_node(&sizes, 4, 3, 1),
+            torus_gatherv_bytes_per_node(&sizes, 3, 4)
+        );
+        // A single line (Y = Z = 1) is exactly the ring.
+        let flat = [5u64, 9, 2, 11];
+        assert_eq!(
+            torus3_gatherv_bytes_per_node(&flat, 4, 1, 1),
+            ring_gatherv_bytes_per_node(&flat)
+        );
+        assert_eq!(torus3_gatherv_bytes_per_node(&[7], 1, 1, 1), vec![0]);
+    }
+
+    #[test]
+    fn dragonfly_gatherv_bytes_formula() {
+        // 2 groups of 2, sizes 10/20/30/40. Node 0 owns a→b (peer 1
+        // owns nothing since g−1 = 1 link round-robins from 0):
+        // bcast n0 + relay (n0+n1) + fan (m−1)(n2+n3).
+        let sizes = [10u64, 20, 30, 40];
+        let spans = [(0usize, 2usize), (2, 2)];
+        let got = dragonfly_gatherv_bytes_per_node(&sizes, &spans);
+        assert_eq!(got, vec![10 + 30 + 70, 20, 30 + 70 + 30, 40]);
+        // Total sends = (p−1) copies of every block.
+        assert_eq!(got.iter().sum::<u64>(), 3 * sizes.iter().sum::<u64>());
+        // Uneven spans keep the invariant.
+        let sizes: Vec<u64> = (0..7).map(|w| w as u64 + 1).collect();
+        let spans = [(0usize, 3usize), (3, 2), (5, 2)];
+        let got = dragonfly_gatherv_bytes_per_node(&sizes, &spans);
+        assert_eq!(got.iter().sum::<u64>(), 6 * sizes.iter().sum::<u64>());
+        // One group is a pure broadcast: every node sends m−1 copies
+        // of its own block and relays nothing.
+        let got = dragonfly_gatherv_bytes_per_node(&[10, 20, 30], &[(0, 3)]);
+        assert_eq!(got, vec![20, 40, 60]);
+        assert_eq!(dragonfly_gatherv_bytes_per_node(&[7], &[(0, 1)]), vec![0]);
     }
 
     #[test]

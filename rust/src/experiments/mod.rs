@@ -17,11 +17,14 @@
 //!   (`repro chaos-sweep`, masking/divergence/inflation per scenario).
 //! * [`adaptive`] — static-vs-adaptive compression comparison over the
 //!   closed-loop knob controller (`repro adaptive-sweep`).
+//! * [`scale`] — 256→4096-node event-loop throughput bench over
+//!   phantom gathers (`repro scale-sweep`, `BENCH_scale.json`).
 
 pub mod adaptive;
 pub mod benchcodecs;
 pub mod benchpipeline;
 pub mod chaos;
+pub mod scale;
 
 pub use adaptive::{
     adaptive_sweep, adaptive_sweep_json, adaptive_sweep_markdown, validate_adaptive,
@@ -38,14 +41,19 @@ pub use chaos::{
     chaos_sweep, chaos_sweep_json, chaos_sweep_markdown, validate_chaos, ChaosSweepOpts,
     ChaosSweepRow,
 };
+pub use scale::{
+    enforce_scale, scale_sweep, scale_sweep_json, scale_sweep_markdown, validate_scale,
+    ScaleSweepOpts, ScaleSweepRow,
+};
 
 use anyhow::Result;
 
 use crate::comm::allgatherv::allgatherv_overlapped;
 use crate::comm::allreduce::allreduce_overlapped;
 use crate::comm::costmodel::{
-    hier_gatherv_bytes_per_node, ring_gatherv_bytes_per_node, speedup_series,
-    torus_gatherv_bytes_per_node, CostModel, LinkModel,
+    dragonfly_gatherv_bytes_per_node, hier_gatherv_bytes_per_node, ring_gatherv_bytes_per_node,
+    speedup_series, torus3_gatherv_bytes_per_node, torus_gatherv_bytes_per_node, CostModel,
+    LinkModel,
 };
 use crate::comm::pipeline;
 use crate::compress::CodecSpec;
@@ -485,7 +493,9 @@ pub fn validate_sweep(opts: &FabricSweepOpts) -> Result<()> {
         let probe = FabricConfig {
             topology: kind,
             inter_rack_gbps: match kind {
-                TopologyKind::Hier { .. } => opts.inter_rack_gbps.first().copied(),
+                TopologyKind::Hier { .. } | TopologyKind::Dragonfly { .. } => {
+                    opts.inter_rack_gbps.first().copied()
+                }
                 _ => None,
             },
             ..FabricConfig::default()
@@ -590,13 +600,20 @@ fn sweep_messages(spec: &CodecSpec, grads: &[Vec<Vec<f32>>], n: usize, seed: u64
 /// Per-worker egress byte counts every topology must reproduce
 /// *exactly* (a mismatch is a fabric bug, not an experiment outcome).
 /// Star/tree/mesh have no closed form recorded here yet.
-fn analytic_gatherv_bytes(kind: TopologyKind, sizes: &[u64]) -> Option<Vec<u64>> {
+pub(crate) fn analytic_gatherv_bytes(kind: TopologyKind, sizes: &[u64]) -> Option<Vec<u64>> {
     match kind {
         TopologyKind::Ring => Some(ring_gatherv_bytes_per_node(sizes)),
         TopologyKind::Torus { rows, cols } => {
             Some(torus_gatherv_bytes_per_node(sizes, rows, cols))
         }
+        TopologyKind::Torus3 { x, y, z } => {
+            Some(torus3_gatherv_bytes_per_node(sizes, x, y, z))
+        }
         TopologyKind::Hier { groups } => Some(hier_gatherv_bytes_per_node(
+            sizes,
+            &crate::fabric::hierarchy::group_spans(sizes.len(), groups),
+        )),
+        TopologyKind::Dragonfly { groups } => Some(dragonfly_gatherv_bytes_per_node(
             sizes,
             &crate::fabric::hierarchy::group_spans(sizes.len(), groups),
         )),
@@ -640,10 +657,14 @@ pub fn fabric_sweep(opts: &FabricSweepOpts) -> Vec<FabricSweepRow> {
             })
             .collect();
         for &kind in &opts.topologies {
-            // Only the hierarchy has an uplink; other topologies get a
-            // single cell with the axis unset.
+            // Only leader/uplink topologies have an inter-group wire;
+            // other topologies get a single cell with the axis unset.
             let uplinks: Vec<Option<f64>> =
-                if matches!(kind, TopologyKind::Hier { .. }) && !opts.inter_rack_gbps.is_empty() {
+                if matches!(
+                    kind,
+                    TopologyKind::Hier { .. } | TopologyKind::Dragonfly { .. }
+                ) && !opts.inter_rack_gbps.is_empty()
+                {
                     opts.inter_rack_gbps.iter().copied().map(Some).collect()
                 } else {
                     vec![None]

@@ -1,0 +1,401 @@
+//! `repro scale-sweep` — event-loop throughput at cluster scale.
+//!
+//! Runs a phantom-payload allgatherv (`fabric::fastpath::gather_sized`)
+//! across {workers} × {topologies} and reports, per cell: simulated
+//! step wall-clock, clock events processed, host events/second, host
+//! wall-clock, peak live heap, and which engine ran (closed-form vs
+//! full event loop). Phantom payloads keep the collective's protocol,
+//! schedule, and counters bit-identical to a real-bytes run (see
+//! `docs/SCALE.md`) while allocating no message bodies — which is what
+//! makes 4096-node sweeps routine instead of a 17 GB allocation.
+//!
+//! Byte counters are hard-asserted against the analytic cost-model
+//! formulas wherever one exists (ring, torus, torus3, hier,
+//! dragonfly), so every sweep run doubles as a scale parity check.
+//! `--assert-events-per-sec` / `--assert-wall-ms-max` turn a sweep
+//! into a CI performance gate.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::fabric::{build_topology, gather_sized, Fabric, FabricConfig, LinkSpec, TopologyKind};
+use crate::util::alloc;
+use crate::util::json::{num, obj, s, Json};
+
+/// Sweep dimensions for the scale experiment.
+#[derive(Debug, Clone)]
+pub struct ScaleSweepOpts {
+    pub topologies: Vec<TopologyKind>,
+    pub workers: Vec<usize>,
+    /// Per-worker message size, bytes (phantom — sized, never
+    /// allocated).
+    pub message_bytes: u64,
+    pub bandwidth_gbps: f64,
+    pub latency_us: f64,
+    /// Uplink bandwidth for hier/dragonfly cells (Gbps); `None` keeps
+    /// each topology's oversubscribed default.
+    pub inter_rack_gbps: Option<f64>,
+    pub seed: u64,
+}
+
+impl Default for ScaleSweepOpts {
+    fn default() -> Self {
+        ScaleSweepOpts {
+            topologies: vec![
+                TopologyKind::Ring,
+                TopologyKind::Torus { rows: 0, cols: 0 },
+                TopologyKind::Torus3 { x: 0, y: 0, z: 0 },
+                TopologyKind::Hier { groups: 0 },
+                TopologyKind::Dragonfly { groups: 0 },
+            ],
+            workers: vec![256, 1024, 4096],
+            message_bytes: 16_384,
+            bandwidth_gbps: 10.0,
+            latency_us: 5.0,
+            inter_rack_gbps: None,
+            seed: 0,
+        }
+    }
+}
+
+/// Sanity-check a sweep before running it (mirrors `validate_sweep`).
+pub fn validate_scale(opts: &ScaleSweepOpts) -> Result<()> {
+    anyhow::ensure!(!opts.topologies.is_empty(), "sweep lists no topologies");
+    anyhow::ensure!(!opts.workers.is_empty(), "sweep lists no worker counts");
+    anyhow::ensure!(opts.message_bytes > 0, "message-bytes must be positive");
+    anyhow::ensure!(opts.bandwidth_gbps > 0.0, "bandwidth-gbps must be positive");
+    anyhow::ensure!(opts.latency_us >= 0.0, "latency-us must be non-negative");
+    anyhow::ensure!(
+        opts.inter_rack_gbps.map_or(true, |g| g > 0.0),
+        "inter-rack-gbps must be positive"
+    );
+    for &kind in &opts.topologies {
+        let probe = FabricConfig {
+            topology: kind,
+            inter_rack_gbps: match kind {
+                TopologyKind::Hier { .. } | TopologyKind::Dragonfly { .. } => {
+                    opts.inter_rack_gbps
+                }
+                _ => None,
+            },
+            ..FabricConfig::default()
+        };
+        for &p in &opts.workers {
+            probe.validate(p)?;
+        }
+    }
+    Ok(())
+}
+
+/// One sweep cell.
+#[derive(Debug, Clone)]
+pub struct ScaleSweepRow {
+    pub topology: String,
+    pub workers: usize,
+    /// `"closed"` or `"event"` — which engine ran the gather.
+    pub engine: String,
+    /// Simulated allgatherv wall-clock, ms.
+    pub sim_ms: f64,
+    /// Clock events (closed cells: the events the loop would have
+    /// processed, credited by `fast_forward`).
+    pub events: u64,
+    /// Host throughput: events / host wall-clock.
+    pub events_per_sec: f64,
+    /// Host wall-clock for the cell, ms.
+    pub wall_ms: f64,
+    /// Peak live heap during the cell, bytes (0 when the binary's
+    /// counting allocator is not installed, e.g. under `cargo test`).
+    pub peak_mem_bytes: u64,
+}
+
+/// Deterministic per-worker phantom sizes: `message_bytes` with a mild
+/// ±12.5% spread so skewed-size code paths are exercised at scale.
+pub fn scale_sizes(p: usize, message_bytes: u64, seed: u64) -> Vec<u64> {
+    let spread = (message_bytes / 8).max(1);
+    (0..p as u64)
+        .map(|w| {
+            let h = (w ^ seed).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 33;
+            message_bytes - spread / 2 + h % spread
+        })
+        .collect()
+}
+
+/// Run the full sweep.
+pub fn scale_sweep(opts: &ScaleSweepOpts) -> Vec<ScaleSweepRow> {
+    let mut rows = Vec::new();
+    for &p in &opts.workers {
+        let sizes = scale_sizes(p, opts.message_bytes, opts.seed);
+        for &kind in &opts.topologies {
+            let cfg = FabricConfig {
+                topology: kind,
+                link: LinkSpec {
+                    bandwidth_gbps: opts.bandwidth_gbps,
+                    latency_us: opts.latency_us,
+                    jitter_us: 0.0,
+                },
+                inter_rack_gbps: match kind {
+                    TopologyKind::Hier { .. } | TopologyKind::Dragonfly { .. } => {
+                        opts.inter_rack_gbps
+                    }
+                    _ => None,
+                },
+                seed: opts.seed,
+                ..FabricConfig::default()
+            };
+            let topo = build_topology(kind, p);
+            let resolved = topo.kind();
+            let mut fabric = Fabric::for_topology(&cfg, &*topo);
+            fabric.set_trace(false);
+
+            alloc::reset_peak();
+            let start = Instant::now();
+            let (gather, engine) = gather_sized(&*topo, &mut fabric, &sizes);
+            let wall = start.elapsed().as_secs_f64();
+            let peak_mem_bytes = alloc::peak_bytes();
+
+            // Every cell cross-checks its byte counters against the
+            // analytic model — a mismatch is a fabric bug.
+            if let Some(expect) = super::analytic_gatherv_bytes(resolved, &sizes) {
+                assert_eq!(
+                    gather.traffic.bytes_sent_per_node,
+                    expect,
+                    "{} byte accounting diverged from the analytic model (p={p})",
+                    resolved.label()
+                );
+            }
+
+            rows.push(ScaleSweepRow {
+                topology: resolved.label(),
+                workers: p,
+                engine: engine.label().to_string(),
+                sim_ms: gather.time_secs() * 1e3,
+                events: gather.events,
+                events_per_sec: gather.events as f64 / wall.max(1e-9),
+                wall_ms: wall * 1e3,
+                peak_mem_bytes,
+            });
+        }
+    }
+    rows
+}
+
+/// Enforce the CI performance gate over a finished sweep: every
+/// event-engine cell must clear the events/sec floor, and every cell
+/// must finish under the wall-clock ceiling. Closed-form cells process
+/// their events without the loop, so the throughput floor does not
+/// apply to them (they'd trivially pass anyway).
+pub fn enforce_scale(
+    rows: &[ScaleSweepRow],
+    min_events_per_sec: Option<f64>,
+    max_wall_ms: Option<f64>,
+) -> Result<()> {
+    for r in rows {
+        if let Some(floor) = min_events_per_sec {
+            anyhow::ensure!(
+                r.engine != "event" || r.events_per_sec >= floor,
+                "{} p={}: {:.0} events/sec below the {floor:.0} floor",
+                r.topology,
+                r.workers,
+                r.events_per_sec
+            );
+        }
+        if let Some(ceiling) = max_wall_ms {
+            anyhow::ensure!(
+                r.wall_ms <= ceiling,
+                "{} p={}: {:.1} ms wall-clock over the {ceiling:.1} ms ceiling",
+                r.topology,
+                r.workers,
+                r.wall_ms
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Markdown table of the sweep (the `repro scale-sweep` report).
+pub fn scale_sweep_markdown(opts: &ScaleSweepOpts, rows: &[ScaleSweepRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "### scale sweep — {} B/worker (±12.5%), {} Gbps, latency {} us{}\n\n",
+        opts.message_bytes,
+        opts.bandwidth_gbps,
+        opts.latency_us,
+        opts.inter_rack_gbps
+            .map(|g| format!(", uplink {g} Gbps"))
+            .unwrap_or_default()
+    ));
+    out.push_str("| topology | p | engine | sim step | events | events/sec | wall | peak mem |\n");
+    out.push_str("|---|---|---|---|---|---|---|---|\n");
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {} | {:.3} ms | {} | {} | {:.1} ms | {} |\n",
+            r.topology,
+            r.workers,
+            r.engine,
+            r.sim_ms,
+            r.events,
+            if r.engine == "closed" {
+                "-".to_string()
+            } else {
+                format!("{:.0}", r.events_per_sec)
+            },
+            r.wall_ms,
+            if r.peak_mem_bytes > 0 {
+                super::human_bytes(r.peak_mem_bytes as f64)
+            } else {
+                "n/a".to_string()
+            },
+        ));
+    }
+    out
+}
+
+/// Serialize the sweep for `BENCH_scale.json`.
+pub fn scale_sweep_json(opts: &ScaleSweepOpts, rows: &[ScaleSweepRow]) -> Json {
+    obj(vec![
+        ("bench", s("scale")),
+        ("message_bytes", num(opts.message_bytes as f64)),
+        ("bandwidth_gbps", num(opts.bandwidth_gbps)),
+        ("latency_us", num(opts.latency_us)),
+        (
+            "inter_rack_gbps",
+            opts.inter_rack_gbps.map(num).unwrap_or(Json::Null),
+        ),
+        ("seed", num(opts.seed as f64)),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("topology", s(&r.topology)),
+                            ("workers", num(r.workers as f64)),
+                            ("engine", s(&r.engine)),
+                            ("sim_ms", num(r.sim_ms)),
+                            ("events", num(r.events as f64)),
+                            ("events_per_sec", num(r.events_per_sec)),
+                            ("wall_ms", num(r.wall_ms)),
+                            ("peak_mem_bytes", num(r.peak_mem_bytes as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> ScaleSweepOpts {
+        ScaleSweepOpts {
+            workers: vec![8, 12],
+            message_bytes: 256,
+            ..ScaleSweepOpts::default()
+        }
+    }
+
+    #[test]
+    fn sweep_covers_the_grid_and_picks_engines() {
+        let opts = tiny_opts();
+        validate_scale(&opts).unwrap();
+        let rows = scale_sweep(&opts);
+        // 5 topologies × 2 worker counts.
+        assert_eq!(rows.len(), 10);
+        for r in &rows {
+            assert!(r.sim_ms > 0.0, "{r:?}");
+            assert!(r.events > 0, "{r:?}");
+            assert!(r.wall_ms >= 0.0);
+            // The uniform sweep fabric runs ring cells closed-form and
+            // everything else through the event loop.
+            let want = if r.topology == "ring" { "closed" } else { "event" };
+            assert_eq!(r.engine, want, "{r:?}");
+        }
+        // Every topology moves (p−1)·Σ sizes bytes in total; with the
+        // same sizes the per-cell event counts all equal p(p−1).
+        for &p in &opts.workers {
+            let cells: Vec<&ScaleSweepRow> =
+                rows.iter().filter(|r| r.workers == p).collect();
+            assert!(cells
+                .iter()
+                .all(|r| r.events == (p * (p - 1)) as u64), "{cells:?}");
+        }
+    }
+
+    #[test]
+    fn phantom_sizes_are_deterministic_and_near_nominal() {
+        let a = scale_sizes(64, 1024, 7);
+        assert_eq!(a, scale_sizes(64, 1024, 7));
+        assert_ne!(a, scale_sizes(64, 1024, 8));
+        assert!(a.iter().all(|&n| n >= 960 && n < 1088), "{a:?}");
+    }
+
+    #[test]
+    fn gate_flags_slow_cells_but_skips_closed_throughput() {
+        let rows = vec![
+            ScaleSweepRow {
+                topology: "ring".into(),
+                workers: 8,
+                engine: "closed".into(),
+                sim_ms: 1.0,
+                events: 56,
+                events_per_sec: 10.0, // irrelevant: closed-form
+                wall_ms: 5.0,
+                peak_mem_bytes: 0,
+            },
+            ScaleSweepRow {
+                topology: "hier:3".into(),
+                workers: 8,
+                engine: "event".into(),
+                sim_ms: 1.0,
+                events: 56,
+                events_per_sec: 100.0,
+                wall_ms: 5.0,
+                peak_mem_bytes: 0,
+            },
+        ];
+        enforce_scale(&rows, Some(50.0), Some(10.0)).unwrap();
+        let err = enforce_scale(&rows, Some(1000.0), None).unwrap_err();
+        assert!(err.to_string().contains("below"), "{err}");
+        let err = enforce_scale(&rows, None, Some(1.0)).unwrap_err();
+        assert!(err.to_string().contains("ceiling"), "{err}");
+    }
+
+    #[test]
+    fn report_shapes_round_trip() {
+        let opts = ScaleSweepOpts {
+            topologies: vec![TopologyKind::Ring],
+            workers: vec![4],
+            message_bytes: 64,
+            ..ScaleSweepOpts::default()
+        };
+        let rows = scale_sweep(&opts);
+        let md = scale_sweep_markdown(&opts, &rows);
+        assert!(md.contains("| topology |"), "{md}");
+        assert_eq!(md.lines().filter(|l| l.starts_with("| ")).count(), 1 + rows.len());
+        let j = scale_sweep_json(&opts, &rows);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str().unwrap(), "scale");
+        assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), 1);
+        assert!(!j.to_string().contains("placeholder"));
+    }
+
+    #[test]
+    fn validation_rejects_bad_axes() {
+        let err = validate_scale(&ScaleSweepOpts {
+            workers: vec![],
+            ..ScaleSweepOpts::default()
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("worker"), "{err}");
+        let err = validate_scale(&ScaleSweepOpts {
+            topologies: vec![TopologyKind::Torus3 { x: 2, y: 2, z: 2 }],
+            workers: vec![9],
+            ..ScaleSweepOpts::default()
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("torus3"), "{err}");
+    }
+}

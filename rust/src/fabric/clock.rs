@@ -6,9 +6,32 @@
 //! same events in the same order replay identically — the foundation
 //! of the fabric's determinism guarantee (tested in
 //! `tests/fabric_sim.rs`).
+//!
+//! # Queue design (see docs/SCALE.md)
+//!
+//! A single global `BinaryHeap` makes every schedule/pop `O(log E)` in
+//! the *total* pending event count — at 4096 nodes a mesh start phase
+//! alone holds ~16.7M pending deliveries and the heap dominates the
+//! profile. The clock therefore splits the queue:
+//!
+//! * **Lanes** ([`SimClock::schedule_lane`]): one FIFO `VecDeque` per
+//!   destination port. The fabric resolves ingress contention at
+//!   *send-call* time, so per-destination delivery times are already
+//!   nondecreasing in schedule order — within a lane, FIFO order *is*
+//!   `(at, seq)` order, and a push is `O(1)`. A small merge heap holds
+//!   exactly one head entry per non-empty lane, so a pop is
+//!   `O(log active-lanes)` instead of `O(log total-events)`.
+//! * **Overflow**: the classic global heap, used by [`SimClock::schedule`]
+//!   (retransmit timers, protocol timers, out-of-order lane pushes —
+//!   correctness never depends on a caller picking the right queue).
+//!
+//! A pop compares the lane-head heap against the overflow heap by
+//! `(at, seq)` and takes the smaller, which reproduces the single-heap
+//! pop order *exactly* — the tick-identity contract `tests/scale_parity.rs`
+//! pins.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Simulated time in picoseconds. 1 Gbps = 1 bit/ns = 1000 ps/bit, so
 /// picoseconds resolve both commodity and InfiniBand-class links; u64
@@ -47,12 +70,39 @@ impl<E> PartialEq for Entry<E> {
 
 impl<E> Eq for Entry<E> {}
 
-/// Min-heap event queue + current simulated time.
+/// One lane's front event in the merge heap (inverted ordering, like
+/// [`Entry`]). `seq` makes the ordering total, so equal-time heads pop
+/// in schedule order across lanes too.
+#[derive(PartialEq, Eq)]
+struct Head {
+    at: Time,
+    seq: u64,
+    lane: usize,
+}
+
+impl Ord for Head {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+
+impl PartialOrd for Head {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap event queue + current simulated time, with optional
+/// per-lane FIFO queues for the nondecreasing-time fast path (see the
+/// module docs).
 pub struct SimClock<E> {
     now: Time,
     seq: u64,
     processed: u64,
-    heap: BinaryHeap<Entry<E>>,
+    pending: usize,
+    overflow: BinaryHeap<Entry<E>>,
+    lanes: Vec<VecDeque<(Time, u64, E)>>,
+    heads: BinaryHeap<Head>,
 }
 
 impl<E> Default for SimClock<E> {
@@ -62,12 +112,23 @@ impl<E> Default for SimClock<E> {
 }
 
 impl<E> SimClock<E> {
+    /// A clock with no lanes — every event goes through the global
+    /// heap, the pre-scale behavior.
     pub fn new() -> SimClock<E> {
+        SimClock::with_lanes(0)
+    }
+
+    /// A clock with `lanes` FIFO lanes (the fabric uses one per node —
+    /// its per-ingress-port delivery queue).
+    pub fn with_lanes(lanes: usize) -> SimClock<E> {
         SimClock {
             now: 0,
             seq: 0,
             processed: 0,
-            heap: BinaryHeap::new(),
+            pending: 0,
+            overflow: BinaryHeap::new(),
+            lanes: (0..lanes).map(|_| VecDeque::new()).collect(),
+            heads: BinaryHeap::new(),
         }
     }
 
@@ -82,11 +143,12 @@ impl<E> SimClock<E> {
     }
 
     pub fn pending(&self) -> usize {
-        self.heap.len()
+        self.pending
     }
 
-    /// Schedule `ev` at absolute time `at`. Scheduling in the past is a
-    /// causality bug in the caller, not a recoverable condition.
+    /// Schedule `ev` at absolute time `at` on the global heap.
+    /// Scheduling in the past is a causality bug in the caller, not a
+    /// recoverable condition.
     pub fn schedule(&mut self, at: Time, ev: E) {
         assert!(
             at >= self.now,
@@ -96,7 +158,41 @@ impl<E> SimClock<E> {
         );
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Entry { at, seq, ev });
+        self.pending += 1;
+        self.overflow.push(Entry { at, seq, ev });
+    }
+
+    /// Schedule `ev` at absolute time `at` on FIFO lane `lane`. The
+    /// fast path requires `at` to be no earlier than the lane's tail
+    /// (true for per-destination deliveries, whose times the fabric
+    /// makes nondecreasing at send time); an out-of-order push falls
+    /// back to the global heap, so callers never need to prove
+    /// monotonicity — only benefit from it.
+    pub fn schedule_lane(&mut self, at: Time, lane: usize, ev: E) {
+        assert!(
+            at >= self.now,
+            "event scheduled in the past ({} < {})",
+            at,
+            self.now
+        );
+        let q = &mut self.lanes[lane];
+        if let Some(&(back_at, _, _)) = q.back() {
+            if at < back_at {
+                // Out of order for this lane: the heap keeps it exact.
+                let seq = self.seq;
+                self.seq += 1;
+                self.pending += 1;
+                self.overflow.push(Entry { at, seq, ev });
+                return;
+            }
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        self.pending += 1;
+        if q.is_empty() {
+            self.heads.push(Head { at, seq, lane });
+        }
+        q.push_back((at, seq, ev));
     }
 
     /// Jump `now` forward to `t` (no-op if `t` is in the past). Only
@@ -104,19 +200,59 @@ impl<E> SimClock<E> {
     /// would deliver them late and break causality.
     pub fn advance_to(&mut self, t: Time) {
         assert!(
-            self.heap.is_empty(),
+            self.pending == 0,
             "advance_to with {} events pending",
-            self.heap.len()
+            self.pending
         );
         self.now = self.now.max(t);
     }
 
-    /// Pop the earliest event, advancing `now` to its timestamp.
+    /// Account for `events` that a closed-form fast path resolved
+    /// without event-by-event simulation, landing the clock at `t`
+    /// (see `fabric::fastpath`). Only legal while the queue is idle —
+    /// the whole point is that nothing was pending to simulate.
+    pub fn fast_forward(&mut self, t: Time, events: u64) {
+        assert!(
+            self.pending == 0,
+            "fast_forward with {} events pending",
+            self.pending
+        );
+        self.now = self.now.max(t);
+        self.processed += events;
+    }
+
+    /// Pop the earliest event by `(at, seq)` across the lanes and the
+    /// global heap, advancing `now` to its timestamp.
     pub fn pop(&mut self) -> Option<(Time, E)> {
-        let e = self.heap.pop()?;
-        self.now = e.at;
+        let lane_key = self.heads.peek().map(|h| (h.at, h.seq));
+        let heap_key = self.overflow.peek().map(|e| (e.at, e.seq));
+        let take_lane = match (lane_key, heap_key) {
+            (None, None) => return None,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (Some(l), Some(h)) => l < h,
+        };
+        self.pending -= 1;
         self.processed += 1;
-        Some((e.at, e.ev))
+        if take_lane {
+            let h = self.heads.pop().expect("peeked head vanished");
+            let q = &mut self.lanes[h.lane];
+            let (at, seq, ev) = q.pop_front().expect("head entry for empty lane");
+            debug_assert_eq!((at, seq), (h.at, h.seq), "lane head out of sync");
+            if let Some(&(nat, nseq, _)) = q.front() {
+                self.heads.push(Head {
+                    at: nat,
+                    seq: nseq,
+                    lane: h.lane,
+                });
+            }
+            self.now = at;
+            Some((at, ev))
+        } else {
+            let e = self.overflow.pop().expect("peeked entry vanished");
+            self.now = e.at;
+            Some((e.at, e.ev))
+        }
     }
 }
 
@@ -183,5 +319,65 @@ mod tests {
         c.schedule(10, 0);
         c.pop();
         c.schedule(5, 1);
+    }
+
+    #[test]
+    fn lanes_and_heap_pop_in_global_seq_order() {
+        // The same (at, seq) stream split across two lanes and the
+        // overflow heap must pop exactly like a single heap would:
+        // time-major, insertion-order within ties.
+        let mut c = SimClock::with_lanes(2);
+        c.schedule_lane(10, 0, "l0-a");
+        c.schedule(10, "heap-a");
+        c.schedule_lane(10, 1, "l1-a");
+        c.schedule_lane(20, 0, "l0-b");
+        c.schedule(15, "heap-b");
+        c.schedule_lane(20, 1, "l1-b");
+        let order: Vec<&str> = std::iter::from_fn(|| c.pop().map(|(_, e)| e)).collect();
+        assert_eq!(
+            order,
+            vec!["l0-a", "heap-a", "l1-a", "heap-b", "l0-b", "l1-b"]
+        );
+        assert_eq!(c.pending(), 0);
+        assert_eq!(c.processed(), 6);
+    }
+
+    #[test]
+    fn out_of_order_lane_push_falls_back_to_the_heap() {
+        let mut c = SimClock::with_lanes(1);
+        c.schedule_lane(50, 0, "late");
+        c.schedule_lane(10, 0, "early"); // violates lane monotonicity
+        assert_eq!(c.pop(), Some((10, "early")));
+        assert_eq!(c.pop(), Some((50, "late")));
+        assert_eq!(c.pop(), None);
+    }
+
+    #[test]
+    fn lane_ties_break_by_insertion_order_across_lanes() {
+        let mut c = SimClock::with_lanes(3);
+        for i in 0..30u32 {
+            c.schedule_lane(7, (i % 3) as usize, i);
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| c.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..30).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fast_forward_accounts_skipped_events() {
+        let mut c: SimClock<()> = SimClock::with_lanes(4);
+        c.fast_forward(1_000, 12);
+        assert_eq!(c.now(), 1_000);
+        assert_eq!(c.processed(), 12);
+        c.fast_forward(500, 3); // time only moves forward
+        assert_eq!(c.now(), 1_000);
+        assert_eq!(c.processed(), 15);
+    }
+
+    #[test]
+    #[should_panic(expected = "events pending")]
+    fn fast_forward_over_pending_events_panics() {
+        let mut c = SimClock::with_lanes(1);
+        c.schedule_lane(10, 0, ());
+        c.fast_forward(20, 1);
     }
 }

@@ -19,12 +19,14 @@
 //! skewed per-node message sizes.
 
 use super::clock::Time;
-use super::Fabric;
+use super::{Fabric, Payload};
 use crate::comm::Traffic;
 
 /// An allgatherv outcome over any topology.
 pub struct SimGather {
     /// `gathered[dst][src]` — every row must equal the input row.
+    /// Empty for sized (phantom) gathers, which move no content
+    /// (`Topology::allgatherv_sized`).
     pub gathered: Vec<Vec<Vec<u8>>>,
     /// Per-*node* egress bytes (workers first, then any infrastructure
     /// nodes such as the parameter-server hub) + logical round count.
@@ -88,14 +90,83 @@ fn seg_count(len: usize, seg_bytes: usize) -> usize {
     }
 }
 
+/// Segment *sizes* for a message of `len` bytes — exactly the lengths
+/// [`split_message`] would produce, without materializing content.
+/// The phantom gather path relies on this mirroring being exact so a
+/// sized run bills byte-for-byte what a real run would.
+pub fn split_size(len: u64, seg_bytes: usize) -> Vec<u64> {
+    let seg = seg_bytes as u64;
+    if seg == 0 || len <= seg {
+        return vec![len];
+    }
+    let count = len.div_ceil(seg);
+    let mut out = vec![seg; count as usize];
+    *out.last_mut().expect("count >= 2") = len - (count - 1) * seg;
+    out
+}
+
+/// A gather protocol's per-worker segment payloads: real codec bytes,
+/// or phantom sizes that traverse the identical protocol/engine code
+/// while moving no content. Timing never depends on payload content
+/// (links bill sizes; jitter draws are per send in call order), so a
+/// phantom run is tick-identical to a real run of the same sizes —
+/// the tier-2 fast path `tests/scale_parity.rs` pins.
+pub enum SegPayloads {
+    Real(Vec<Vec<Vec<u8>>>),
+    Phantom(Vec<Vec<u64>>),
+}
+
+impl SegPayloads {
+    /// Real mode: split every input message into pipeline segments.
+    pub fn real(inputs: &[Vec<u8>], seg_bytes: usize) -> SegPayloads {
+        SegPayloads::Real(split_all(inputs, seg_bytes))
+    }
+
+    /// Phantom mode: per-worker segment sizes only.
+    pub fn phantom(sizes: &[u64], seg_bytes: usize) -> SegPayloads {
+        SegPayloads::Phantom(sizes.iter().map(|&n| split_size(n, seg_bytes)).collect())
+    }
+
+    /// Segments worker `w`'s message was cut into.
+    pub fn seg_count(&self, w: usize) -> usize {
+        match self {
+            SegPayloads::Real(s) => s[w].len(),
+            SegPayloads::Phantom(s) => s[w].len(),
+        }
+    }
+
+    /// The wire payload for segment `si` of worker `w`'s message.
+    pub fn payload(&self, w: usize, si: usize) -> Payload {
+        match self {
+            SegPayloads::Real(s) => Payload::Bytes(s[w][si].clone()),
+            SegPayloads::Phantom(s) => Payload::Phantom(s[w][si]),
+        }
+    }
+}
+
 /// Per-worker block bookkeeping for gather protocols: which origin
 /// segments each worker holds. Duplicate deliveries of conflicting
 /// content are protocol bugs and assert. Segments may arrive out of
 /// order (jitter reorders same-link deliveries); reassembly is by
 /// segment index, not arrival order.
+///
+/// Phantom mode ([`GatherState::sized`]) keeps only O(p) counters —
+/// received vs expected segments per worker — since there is no
+/// content to reassemble; a p×p×seg matrix of empty slots would cost
+/// hundreds of MB at 4096 nodes for bookkeeping nobody reads.
 pub struct GatherState {
+    blocks: Blocks,
+}
+
+enum Blocks {
     /// `blocks[worker][origin][seg]`.
-    blocks: Vec<Vec<Vec<Option<Vec<u8>>>>>,
+    Real(Vec<Vec<Vec<Option<Vec<u8>>>>>),
+    Phantom {
+        /// Segments worker `w` holds (own block pre-seeded).
+        received: Vec<u64>,
+        /// Total segments worker `w` must end up holding.
+        expected: Vec<u64>,
+    },
 }
 
 impl GatherState {
@@ -103,65 +174,118 @@ impl GatherState {
     pub fn new(inputs: &[Vec<u8>], seg_bytes: usize) -> GatherState {
         let p = inputs.len();
         GatherState {
-            blocks: (0..p)
-                .map(|i| {
-                    (0..p)
-                        .map(|o| {
-                            if o == i {
-                                split_message(&inputs[i], seg_bytes)
-                                    .into_iter()
-                                    .map(Some)
-                                    .collect()
-                            } else {
-                                vec![None; seg_count(inputs[o].len(), seg_bytes)]
-                            }
-                        })
-                        .collect()
-                })
-                .collect(),
+            blocks: Blocks::Real(
+                (0..p)
+                    .map(|i| {
+                        (0..p)
+                            .map(|o| {
+                                if o == i {
+                                    split_message(&inputs[i], seg_bytes)
+                                        .into_iter()
+                                        .map(Some)
+                                        .collect()
+                                } else {
+                                    vec![None; seg_count(inputs[o].len(), seg_bytes)]
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Phantom-mode bookkeeping for a sized gather: counters only.
+    pub fn sized(sizes: &[u64], seg_bytes: usize) -> GatherState {
+        let segs: Vec<u64> = sizes
+            .iter()
+            .map(|&n| seg_count(n as usize, seg_bytes) as u64)
+            .collect();
+        let total: u64 = segs.iter().sum();
+        GatherState {
+            blocks: Blocks::Phantom {
+                received: segs,
+                expected: vec![total; sizes.len()],
+            },
         }
     }
 
     /// Record that `worker` received segment `seg` of `origin`'s block.
     pub fn store(&mut self, worker: usize, origin: usize, seg: usize, bytes: &[u8]) {
-        let slot = &mut self.blocks[worker][origin][seg];
-        debug_assert!(
-            slot.is_none() || slot.as_deref() == Some(bytes),
-            "conflicting delivery of origin {origin} segment {seg} at worker {worker}"
-        );
-        if slot.is_none() {
-            *slot = Some(bytes.to_vec());
+        match &mut self.blocks {
+            Blocks::Real(blocks) => {
+                let slot = &mut blocks[worker][origin][seg];
+                debug_assert!(
+                    slot.is_none() || slot.as_deref() == Some(bytes),
+                    "conflicting delivery of origin {origin} segment {seg} at worker {worker}"
+                );
+                if slot.is_none() {
+                    *slot = Some(bytes.to_vec());
+                }
+            }
+            Blocks::Phantom { received, .. } => received[worker] += 1,
+        }
+    }
+
+    /// Record a delivery of either payload kind — the one store call
+    /// every protocol makes, so real and phantom runs execute the
+    /// identical protocol code path.
+    pub fn store_payload(&mut self, worker: usize, origin: usize, seg: usize, payload: &Payload) {
+        match payload {
+            Payload::Bytes(b) => self.store(worker, origin, seg, b),
+            Payload::Phantom(_) => match &mut self.blocks {
+                Blocks::Phantom { received, .. } => received[worker] += 1,
+                Blocks::Real(_) => {
+                    unreachable!("phantom delivery into a real-bytes gather state")
+                }
+            },
+            Payload::F32(_) => unreachable!("f32 payload in a gather protocol"),
         }
     }
 
     /// True once `worker` holds every segment of every origin.
     pub fn complete(&self, worker: usize) -> bool {
-        self.blocks[worker].iter().flatten().all(|b| b.is_some())
+        match &self.blocks {
+            Blocks::Real(blocks) => blocks[worker].iter().flatten().all(|b| b.is_some()),
+            Blocks::Phantom { received, expected } => received[worker] >= expected[worker],
+        }
     }
 
     /// Consume into the `gathered[dst][src]` matrix, concatenating
     /// segments in index order; panics if any segment never arrived
-    /// (the protocol under-delivered).
+    /// (the protocol under-delivered). Phantom mode yields an empty
+    /// matrix after asserting every worker completed.
     pub fn into_gathered(self) -> Vec<Vec<Vec<u8>>> {
-        self.blocks
-            .into_iter()
-            .enumerate()
-            .map(|(w, row)| {
-                row.into_iter()
-                    .enumerate()
-                    .map(|(o, segs)| {
-                        let mut msg = Vec::new();
-                        for (si, b) in segs.into_iter().enumerate() {
-                            let seg = b.unwrap_or_else(|| {
-                                panic!("worker {w} never received origin {o} segment {si}")
-                            });
-                            msg.extend_from_slice(&seg);
-                        }
-                        msg
-                    })
-                    .collect()
-            })
-            .collect()
+        match self.blocks {
+            Blocks::Real(blocks) => blocks
+                .into_iter()
+                .enumerate()
+                .map(|(w, row)| {
+                    row.into_iter()
+                        .enumerate()
+                        .map(|(o, segs)| {
+                            let mut msg = Vec::new();
+                            for (si, b) in segs.into_iter().enumerate() {
+                                let seg = b.unwrap_or_else(|| {
+                                    panic!("worker {w} never received origin {o} segment {si}")
+                                });
+                                msg.extend_from_slice(&seg);
+                            }
+                            msg
+                        })
+                        .collect()
+                })
+                .collect(),
+            Blocks::Phantom { received, expected } => {
+                for (w, (r, e)) in received.iter().zip(&expected).enumerate() {
+                    assert!(
+                        r >= e,
+                        "worker {w} received {r} of {e} expected segments"
+                    );
+                }
+                Vec::new()
+            }
+        }
     }
 }
 
@@ -237,6 +361,80 @@ mod tests {
                 assert_eq!(g[dst][src], inputs[src], "dst={dst} src={src}");
             }
         }
+    }
+
+    #[test]
+    fn split_size_mirrors_split_message_exactly() {
+        for (len, seg) in [
+            (0usize, 0usize),
+            (0, 4),
+            (3, 0),
+            (3, 3),
+            (3, 2),
+            (7, 3),
+            (4096, 512),
+            (4097, 512),
+            (1, 9),
+        ] {
+            let msg: Vec<u8> = (0..len).map(|i| i as u8).collect();
+            let real: Vec<u64> = split_message(&msg, seg)
+                .iter()
+                .map(|s| s.len() as u64)
+                .collect();
+            assert_eq!(split_size(len as u64, seg), real, "len={len} seg={seg}");
+        }
+    }
+
+    #[test]
+    fn seg_payloads_agree_across_modes() {
+        let inputs = vec![vec![1u8; 7], vec![2u8; 3], vec![]];
+        let sizes: Vec<u64> = inputs.iter().map(|m| m.len() as u64).collect();
+        for seg in [0usize, 2, 4, 16] {
+            let real = SegPayloads::real(&inputs, seg);
+            let phantom = SegPayloads::phantom(&sizes, seg);
+            for w in 0..inputs.len() {
+                assert_eq!(real.seg_count(w), phantom.seg_count(w), "w={w} seg={seg}");
+                for si in 0..real.seg_count(w) {
+                    assert_eq!(
+                        real.payload(w, si).size_bytes(),
+                        phantom.payload(w, si).size_bytes(),
+                        "w={w} si={si} seg={seg}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn phantom_state_counts_to_completion() {
+        let sizes = [5u64, 7, 0];
+        let mut gs = GatherState::sized(&sizes, 3);
+        // Worker 0 holds its own 2 segments of 8 expected
+        // (2 + 3 + 1 segment counts + own... totals per worker: 6).
+        assert!(!gs.complete(0));
+        gs.store_payload(0, 1, 0, &Payload::Phantom(3));
+        gs.store_payload(0, 1, 1, &Payload::Phantom(3));
+        gs.store_payload(0, 1, 2, &Payload::Phantom(1));
+        assert!(!gs.complete(0));
+        gs.store_payload(0, 2, 0, &Payload::Phantom(0));
+        assert!(gs.complete(0));
+        assert!(!gs.complete(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "received")]
+    fn incomplete_phantom_gather_panics_on_assembly() {
+        let gs = GatherState::sized(&[4, 4], 0);
+        let _ = gs.into_gathered();
+    }
+
+    #[test]
+    fn complete_phantom_gather_yields_empty_matrix() {
+        let mut gs = GatherState::sized(&[4, 4], 0);
+        gs.store_payload(0, 1, 0, &Payload::Phantom(4));
+        gs.store_payload(1, 0, 0, &Payload::Phantom(4));
+        assert!(gs.complete(0) && gs.complete(1));
+        assert!(gs.into_gathered().is_empty());
     }
 
     #[test]

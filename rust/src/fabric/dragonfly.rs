@@ -1,0 +1,460 @@
+//! Dragonfly topology: groups with all-to-all *global* links, one
+//! per group pair, owned by distinct members so the global traffic
+//! spreads across the group's NICs instead of funneling through its
+//! leader (the Cray Slingshot / Aries wiring).
+//!
+//! Workers partition into `g` contiguous balanced groups (the same
+//! spans as [`super::hierarchy`]). For every ordered group pair
+//! `(a, b)` one member of `a` — [`Dragonfly::owner`]`(a, b)`, chosen
+//! round-robin so ownership balances — terminates the global link to
+//! group `b`. Allgatherv routes each block in ≤ 3 hops:
+//!
+//! 1. **local broadcast** — the origin sends its block to every peer
+//!    in its group;
+//! 2. **global crossing** — each member that owns a link `(a, b)`
+//!    forwards every group-`a` block (its own included) to the peer
+//!    owner `(b, a)`, so each block crosses each group pair exactly
+//!    once;
+//! 3. **remote broadcast** — the receiving owner fans the block to
+//!    the rest of its group.
+//!
+//! Total sends per block is the `p − 1` optimum. Allreduce delegates
+//! to the shared leader-based [`super::groups::GroupReduce`] (group
+//! aggregates cross leader links once per pair), so the global-link
+//! overrides also cover the leader pairs. Like `hier`, the uplinks
+//! resolve to `FabricConfig::inter_rack_gbps` (default: base
+//! bandwidth / 10).
+//!
+//! `dragonfly` (no count) picks `≈ √p` groups
+//! ([`super::hierarchy::auto_groups`]); `dragonfly:<g>` pins it.
+
+use super::collectives::{traffic_from, GatherState, SegPayloads, SimGather, SimReduce};
+use super::groups::{GroupReduce, GroupSpans};
+use super::hierarchy::{auto_groups, group_spans, DEFAULT_OVERSUBSCRIPTION};
+use super::topology::{Topology, TopologyKind};
+use super::{Fabric, FabricConfig, LinkSpec, Msg, Protocol};
+use std::collections::BTreeMap;
+
+/// Block broadcast within a group (local or remote side).
+const TAG_BCAST: u8 = 0;
+/// Block crossing a global inter-group link.
+const TAG_GLOBAL: u8 = 1;
+
+pub struct Dragonfly {
+    p: usize,
+    spans: GroupSpans,
+}
+
+impl Dragonfly {
+    /// `groups` of 0 means "auto" (`≈ √p`, see
+    /// [`super::hierarchy::auto_groups`]).
+    pub fn new(workers: usize, groups: usize) -> Dragonfly {
+        assert!(workers > 0, "topology needs at least one worker");
+        let g = if groups == 0 {
+            auto_groups(workers)
+        } else {
+            groups
+        };
+        assert!(
+            g >= 1 && g <= workers,
+            "dragonfly wants {g} groups but only {workers} workers"
+        );
+        Dragonfly {
+            p: workers,
+            spans: GroupSpans::from_spans(workers, group_spans(workers, g)),
+        }
+    }
+
+    fn groups(&self) -> usize {
+        self.spans.groups()
+    }
+
+    /// All workers of group `g` (leader included).
+    fn span_nodes(&self, g: usize) -> std::ops::Range<usize> {
+        let (start, len) = self.spans.span(g);
+        start..start + len
+    }
+
+    /// The member of group `a` that terminates the global link to
+    /// group `b` (`a != b`): round-robin over `a`'s members so each
+    /// NIC owns `⌈(g−1)/m_a⌉` links at most.
+    fn owner(&self, a: usize, b: usize) -> usize {
+        debug_assert_ne!(a, b, "no global link within a group");
+        let (start, len) = self.spans.span(a);
+        start + (b - usize::from(b > a)) % len
+    }
+
+    /// Drive one gather (real or phantom payloads) through the event
+    /// loop — both `allgatherv` flavors run this identical code.
+    fn run_gather(&self, fabric: &mut Fabric, segs: SegPayloads, state: GatherState) -> SimGather {
+        let mut proto = DragonflyGather {
+            d: self,
+            segs,
+            state,
+        };
+        let time_ps = if self.p > 1 { fabric.run(&mut proto) } else { 0 };
+        SimGather {
+            gathered: proto.state.into_gathered(),
+            traffic: traffic_from(fabric, self.gather_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+}
+
+struct DragonflyGather<'d> {
+    d: &'d Dragonfly,
+    segs: SegPayloads,
+    state: GatherState,
+}
+
+impl DragonflyGather<'_> {
+    /// The global crossings `node` owes for a group-`a` block: one
+    /// send per group pair it owns, to the peer owner on the far side.
+    fn global_sends(&self, node: usize, a: usize, msg: &Msg, hop: u32) -> Vec<(usize, Msg)> {
+        (0..self.d.groups())
+            .filter(|&b| b != a && self.d.owner(a, b) == node)
+            .map(|b| {
+                (
+                    self.d.owner(b, a),
+                    Msg {
+                        origin: msg.origin,
+                        seg: msg.seg,
+                        hop,
+                        tag: TAG_GLOBAL,
+                        payload: msg.payload.clone(),
+                    },
+                )
+            })
+            .collect()
+    }
+}
+
+impl Protocol for DragonflyGather<'_> {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        let mut out = Vec::new();
+        for w in 0..self.d.p {
+            let a = self.d.spans.group_of(w);
+            for si in 0..self.segs.seg_count(w) {
+                let msg = Msg {
+                    origin: w,
+                    seg: si as u32,
+                    hop: 1,
+                    tag: TAG_BCAST,
+                    payload: self.segs.payload(w, si),
+                };
+                for v in self.d.span_nodes(a) {
+                    if v != w {
+                        out.push((w, v, msg.clone()));
+                    }
+                }
+                for (dst, global) in self.global_sends(w, a, &msg, 1) {
+                    out.push((w, dst, global));
+                }
+            }
+        }
+        out
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        self.state
+            .store_payload(node, msg.origin, msg.seg as usize, &msg.payload);
+        let a = self.d.spans.group_of(node);
+        match msg.tag {
+            TAG_BCAST => {
+                // A same-group origin's block: cross every global link
+                // this node owns. Remote-origin broadcasts terminate.
+                if self.d.spans.group_of(msg.origin) == a {
+                    self.global_sends(node, a, msg, msg.hop + 1)
+                } else {
+                    Vec::new()
+                }
+            }
+            TAG_GLOBAL => {
+                // Landed on the far-side owner: fan to the rest of the
+                // group.
+                self.d
+                    .span_nodes(a)
+                    .filter(|&v| v != node)
+                    .map(|v| {
+                        (
+                            v,
+                            Msg {
+                                origin: msg.origin,
+                                seg: msg.seg,
+                                hop: msg.hop + 1,
+                                tag: TAG_BCAST,
+                                payload: msg.payload.clone(),
+                            },
+                        )
+                    })
+                    .collect()
+            }
+            other => unreachable!("unknown dragonfly gather tag {other}"),
+        }
+    }
+}
+
+impl Topology for Dragonfly {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Dragonfly {
+            groups: self.groups(),
+        }
+    }
+
+    fn workers(&self) -> usize {
+        self.p
+    }
+
+    fn link_overrides(&self, cfg: &FabricConfig) -> Vec<(usize, usize, LinkSpec)> {
+        if self.groups() < 2 {
+            return Vec::new();
+        }
+        let uplink = LinkSpec {
+            bandwidth_gbps: cfg
+                .inter_rack_gbps
+                .unwrap_or(cfg.link.bandwidth_gbps / DEFAULT_OVERSUBSCRIPTION),
+            ..cfg.link
+        };
+        // Gather crosses owner↔owner links; reduce (GroupReduce)
+        // crosses leader↔leader links. Both are inter-group wires, so
+        // both get the uplink spec; the map dedups overlaps (a leader
+        // often owns links too).
+        let mut edges: BTreeMap<(usize, usize), LinkSpec> = BTreeMap::new();
+        for a in 0..self.groups() {
+            for b in 0..self.groups() {
+                if a != b {
+                    edges.insert((self.owner(a, b), self.owner(b, a)), uplink);
+                    edges.insert((self.spans.leader(a), self.spans.leader(b)), uplink);
+                }
+            }
+        }
+        edges.into_iter().map(|((s, d), l)| (s, d, l)).collect()
+    }
+
+    fn gather_rounds(&self) -> u32 {
+        if self.p > 1 {
+            3
+        } else {
+            0
+        }
+    }
+
+    fn reduce_rounds(&self) -> u32 {
+        if self.p > 1 {
+            3
+        } else {
+            0
+        }
+    }
+
+    fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
+        assert_eq!(inputs.len(), self.p, "one input message per worker");
+        let seg = fabric.segment_bytes();
+        self.run_gather(
+            fabric,
+            SegPayloads::real(inputs, seg),
+            GatherState::new(inputs, seg),
+        )
+    }
+
+    fn allgatherv_sized(&self, fabric: &mut Fabric, sizes: &[u64]) -> SimGather {
+        assert_eq!(sizes.len(), self.p, "one size per worker");
+        let seg = fabric.segment_bytes();
+        self.run_gather(
+            fabric,
+            SegPayloads::phantom(sizes, seg),
+            GatherState::sized(sizes, seg),
+        )
+    }
+
+    fn allreduce(&self, fabric: &mut Fabric, inputs: &[Vec<f32>]) -> SimReduce {
+        assert_eq!(inputs.len(), self.p);
+        let n = inputs[0].len();
+        assert!(inputs.iter().all(|v| v.len() == n), "length mismatch");
+        let mut proto = GroupReduce::new(&self.spans, inputs);
+        let time_ps = if self.p > 1 { fabric.run(&mut proto) } else { 0 };
+        let reduced: Vec<Vec<f32>> = if self.p == 1 {
+            vec![inputs[0].clone()]
+        } else {
+            proto.into_totals()
+        };
+        SimReduce {
+            reduced,
+            traffic: traffic_from(fabric, self.reduce_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::FabricConfig;
+
+    fn fast_cfg() -> FabricConfig {
+        FabricConfig {
+            link: LinkSpec {
+                bandwidth_gbps: 1.0,
+                latency_us: 1.0,
+                jitter_us: 0.0,
+            },
+            topology: TopologyKind::Dragonfly { groups: 0 },
+            ..FabricConfig::default()
+        }
+    }
+
+    fn fabric_for(topo: &Dragonfly, cfg: &FabricConfig) -> Fabric {
+        Fabric::for_topology(cfg, topo)
+    }
+
+    #[test]
+    fn ownership_round_robins_and_balances() {
+        // 9 workers, 3 groups of 3: group 0 = {0,1,2}.
+        let d = Dragonfly::new(9, 3);
+        assert_eq!(d.owner(0, 1), 0);
+        assert_eq!(d.owner(0, 2), 1);
+        assert_eq!(d.owner(1, 0), 3);
+        assert_eq!(d.owner(1, 2), 4);
+        assert_eq!(d.owner(2, 0), 6);
+        assert_eq!(d.owner(2, 1), 7);
+        // Single-member groups own every link.
+        let d = Dragonfly::new(3, 3);
+        assert_eq!(d.owner(0, 1), 0);
+        assert_eq!(d.owner(0, 2), 0);
+        assert_eq!(d.owner(2, 1), 2);
+    }
+
+    #[test]
+    fn gather_delivers_for_awkward_shapes() {
+        for (p, g) in [
+            (7usize, 3usize),
+            (8, 2),
+            (9, 3),
+            (5, 5),
+            (5, 1),
+            (2, 2),
+            (1, 1),
+        ] {
+            let inputs: Vec<Vec<u8>> =
+                (0..p).map(|w| vec![w as u8 + 1; (w * 11) % 23 + 1]).collect();
+            let topo = Dragonfly::new(p, g);
+            let mut f = fabric_for(&topo, &fast_cfg());
+            let res = topo.allgatherv(&mut f, &inputs);
+            for dst in 0..p {
+                for src in 0..p {
+                    assert_eq!(
+                        res.gathered[dst][src], inputs[src],
+                        "p={p} g={g} dst={dst} src={src}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_block_traffic_is_p_minus_1_sends() {
+        for (p, g) in [(9usize, 3usize), (8, 2), (7, 3), (6, 1)] {
+            let inputs: Vec<Vec<u8>> = (0..p).map(|_| vec![9u8; 10]).collect();
+            let topo = Dragonfly::new(p, g);
+            let mut f = fabric_for(&topo, &fast_cfg());
+            let res = topo.allgatherv(&mut f, &inputs);
+            assert_eq!(
+                res.traffic.total_bytes(),
+                (p * (p - 1) * 10) as u64,
+                "p={p} g={g}"
+            );
+            assert_eq!(res.events as usize, p * (p - 1), "p={p} g={g}");
+        }
+    }
+
+    #[test]
+    fn global_links_cross_each_group_pair_once_per_block() {
+        // 9 workers, 3 groups. Block 1 (member of group 0) crosses the
+        // 0→1 global link (owner 0 → owner 3) exactly once.
+        let inputs: Vec<Vec<u8>> = (0..9).map(|w| vec![w as u8; 100]).collect();
+        let topo = Dragonfly::new(9, 3);
+        let mut f = fabric_for(&topo, &fast_cfg());
+        let res = topo.allgatherv(&mut f, &inputs);
+        assert_eq!(res.traffic.rounds, 3);
+        // owner(0,1)=0 → owner(1,0)=3 carries all 3 group-0 blocks.
+        assert_eq!(f.links()[&(0, 3)].messages, 3);
+        // owner(0,2)=1 → owner(2,0)=6 likewise.
+        assert_eq!(f.links()[&(1, 6)].messages, 3);
+    }
+
+    #[test]
+    fn uplink_overrides_cover_owner_and_leader_pairs() {
+        let topo = Dragonfly::new(9, 3);
+        let cfg = FabricConfig {
+            inter_rack_gbps: Some(0.25),
+            ..fast_cfg()
+        };
+        let ov = topo.link_overrides(&cfg);
+        assert!(ov.iter().all(|&(_, _, l)| l.bandwidth_gbps == 0.25));
+        let f = fabric_for(&topo, &cfg);
+        // Owner pair for (0,2): 1 → 6.
+        assert_eq!(f.link_table().spec(1, 6).bandwidth_gbps, 0.25);
+        // Leader pair 0 → 3 (also the (0,1) owner pair).
+        assert_eq!(f.link_table().spec(0, 3).bandwidth_gbps, 0.25);
+        // Intra-group links stay at base bandwidth.
+        assert_eq!(f.link_table().spec(0, 1).bandwidth_gbps, 1.0);
+        // Default uplink: 10:1 oversubscription.
+        let f = fabric_for(&topo, &fast_cfg());
+        assert_eq!(f.link_table().spec(0, 3).bandwidth_gbps, 0.1);
+        // Single group ⇒ no overrides.
+        assert!(Dragonfly::new(4, 1).link_overrides(&fast_cfg()).is_empty());
+    }
+
+    #[test]
+    fn reduce_matches_sum_for_awkward_shapes() {
+        for (p, g) in [(7usize, 3usize), (9, 3), (5, 5), (5, 1), (1, 1)] {
+            let inputs: Vec<Vec<f32>> = (0..p)
+                .map(|w| (0..6).map(|k| (w * 6 + k) as f32 * 0.5).collect())
+                .collect();
+            let topo = Dragonfly::new(p, g);
+            let mut f = fabric_for(&topo, &fast_cfg());
+            let res = topo.allreduce(&mut f, &inputs);
+            for k in 0..6 {
+                let want: f32 = inputs.iter().map(|v| v[k]).sum();
+                for node in 0..p {
+                    let got = res.reduced[node][k];
+                    assert!(
+                        (got - want).abs() < 1e-3,
+                        "p={p} g={g} node={node} k={k}: {got} != {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spreading_ownership_beats_the_leader_funnel() {
+        // Same spans, same uplink bandwidth: hier funnels every
+        // cross-group block through the two leaders' NICs; dragonfly
+        // spreads the crossings over the members. With a slow uplink
+        // the dragonfly gather must finish no later.
+        use crate::fabric::hierarchy::Hierarchy;
+        let p = 12;
+        let inputs: Vec<Vec<u8>> = (0..p).map(|_| vec![6u8; 10_000]).collect();
+        let drag = Dragonfly::new(p, 4);
+        let hier = Hierarchy::new(p, 4);
+        let cfg = FabricConfig {
+            inter_rack_gbps: Some(0.05),
+            ..fast_cfg()
+        };
+        let mut fd = fabric_for(&drag, &cfg);
+        let td = drag.allgatherv(&mut fd, &inputs).time_ps;
+        let hier_cfg = FabricConfig {
+            topology: TopologyKind::Hier { groups: 4 },
+            ..cfg
+        };
+        let mut fh = Fabric::for_topology(&hier_cfg, &hier);
+        let th = hier.allgatherv(&mut fh, &inputs).time_ps;
+        assert!(
+            td <= th,
+            "dragonfly {td} ps slower than hier's leader funnel {th} ps"
+        );
+    }
+}

@@ -1,0 +1,290 @@
+//! Closed-form fast path for uniform gather phases.
+//!
+//! A "uniform phase" — every link at the default spec, no jitter, no
+//! chaos plan, no stragglers, no segmentation, no degraded rank map,
+//! trace recording off ([`Fabric::full_loop_reason`] returns `None`)
+//! — makes every hop's timing a pure function of (egress-free,
+//! ingress-free, ready), which is exactly what
+//! `Fabric::wire_fast` computes. For the topologies whose send
+//! schedule is statically known (ring and full mesh), the whole
+//! collective can then be *replayed* send-by-send in dependency order
+//! without scheduling a single clock event: identical port-state
+//! arithmetic in identical per-port order produces bit-identical
+//! traffic counters and a tick-identical finish time (property-tested
+//! in `tests/scale_parity.rs`), at a fraction of the event loop's
+//! constant factor.
+//!
+//! Why dependency-order replay is exact: the engine reads and updates
+//! both port cursors at *send-call* time, and each ring/mesh port is
+//! touched by exactly one sender whose sends occur in round order in
+//! both schemes — so per-port operation sequences coincide even
+//! though the event loop interleaves rounds across nodes. Topologies
+//! with data-dependent schedules (leader fan-outs keyed on arrival
+//! completion) and any non-uniform phase fall back to the full event
+//! loop via [`Topology::allgatherv_sized`] — same results, full
+//! generality. Forcing the event loop for a parity check is just
+//! calling `allgatherv_sized` directly.
+
+use super::collectives::{traffic_from, SimGather};
+use super::topology::{Topology, TopologyKind};
+use super::Fabric;
+
+/// Which tier actually ran a sized gather.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Closed-form replay — no clock events scheduled.
+    Closed,
+    /// The full event loop.
+    Event,
+}
+
+impl Engine {
+    /// Stable lowercase name for reports (`BENCH_scale.json`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Engine::Closed => "closed",
+            Engine::Event => "event",
+        }
+    }
+}
+
+/// Run a sized (phantom-payload) allgatherv through the fastest exact
+/// engine: the closed-form tier when the fabric is a uniform phase and
+/// the topology's schedule is statically known, the event loop
+/// otherwise. Results are identical either way — the engine choice is
+/// an optimization, never an approximation.
+pub fn gather_sized(
+    topo: &dyn Topology,
+    fabric: &mut Fabric,
+    sizes: &[u64],
+) -> (SimGather, Engine) {
+    assert_eq!(
+        sizes.len(),
+        topo.workers(),
+        "one size per worker for a sized gather"
+    );
+    if fabric.full_loop_reason().is_none() {
+        match topo.kind() {
+            TopologyKind::Ring => {
+                return (closed_ring(fabric, sizes, topo.gather_rounds()), Engine::Closed)
+            }
+            TopologyKind::Full => {
+                return (closed_mesh(fabric, sizes, topo.gather_rounds()), Engine::Closed)
+            }
+            _ => {}
+        }
+    }
+    (topo.allgatherv_sized(fabric, sizes), Engine::Event)
+}
+
+/// Ring circulation replayed round-major: round 0 sends every block
+/// one hop right at `t0`; round `k` forwards the block each node
+/// received in round `k − 1` the moment it landed. Per-node port
+/// cursors see the same operation sequence as the event loop.
+fn closed_ring(fabric: &mut Fabric, sizes: &[u64], rounds: u32) -> SimGather {
+    let p = sizes.len();
+    if p < 2 {
+        return SimGather {
+            gathered: Vec::new(),
+            traffic: traffic_from(fabric, rounds),
+            time_ps: 0,
+            events: fabric.events(),
+        };
+    }
+    let t0 = fabric.now();
+    let mut finish = t0;
+    // arr[v]: when the block v forwards next round became available
+    // at v (round 0: its own block, ready at t0).
+    let mut arr = vec![t0; p];
+    let mut next = vec![t0; p];
+    for k in 0..p - 1 {
+        for (v, &ready) in arr.iter().enumerate() {
+            // v forwards the block that originated k hops behind it.
+            let origin = (v + p - k) % p;
+            let d = fabric.wire_fast(v, (v + 1) % p, sizes[origin], ready);
+            next[(v + 1) % p] = d;
+            finish = finish.max(d);
+        }
+        std::mem::swap(&mut arr, &mut next);
+    }
+    let events = (p * (p - 1)) as u64;
+    fabric.fast_forward(finish, events);
+    SimGather {
+        gathered: Vec::new(),
+        traffic: traffic_from(fabric, rounds),
+        time_ps: fabric.now(),
+        events: fabric.events(),
+    }
+}
+
+/// Full-mesh gather replayed in `start()` order (sender-major): every
+/// send is ready at `t0`; contention is purely the sender's egress and
+/// the receiver's ingress cursors.
+fn closed_mesh(fabric: &mut Fabric, sizes: &[u64], rounds: u32) -> SimGather {
+    let p = sizes.len();
+    let t0 = fabric.now();
+    let mut finish = t0;
+    let mut events = 0u64;
+    for w in 0..p {
+        for v in 0..p {
+            if v != w {
+                let d = fabric.wire_fast(w, v, sizes[w], t0);
+                finish = finish.max(d);
+                events += 1;
+            }
+        }
+    }
+    fabric.fast_forward(finish, events);
+    SimGather {
+        gathered: Vec::new(),
+        traffic: traffic_from(fabric, rounds),
+        time_ps: fabric.now(),
+        events: fabric.events(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::topology::{build_topology, FullMesh};
+    use crate::fabric::{FabricConfig, LinkSpec};
+
+    fn quiet_cfg() -> FabricConfig {
+        FabricConfig {
+            link: LinkSpec {
+                bandwidth_gbps: 1.0,
+                latency_us: 1.0,
+                jitter_us: 0.0,
+            },
+            ..FabricConfig::default()
+        }
+    }
+
+    fn quiet_fabric(nodes: usize) -> Fabric {
+        let mut f = Fabric::for_config(&quiet_cfg(), nodes);
+        f.set_trace(false);
+        f
+    }
+
+    fn sizes_for(p: usize) -> Vec<u64> {
+        (0..p).map(|w| ((w * 37) % 900 + 100) as u64).collect()
+    }
+
+    #[test]
+    fn closed_ring_is_tick_identical_to_the_event_loop() {
+        for p in [2usize, 3, 5, 8, 13] {
+            let topo = build_topology(TopologyKind::Ring, p);
+            let sizes = sizes_for(p);
+            let mut fc = quiet_fabric(p);
+            let (closed, engine) = gather_sized(&*topo, &mut fc, &sizes);
+            assert_eq!(engine, Engine::Closed, "p={p}");
+            let mut fe = quiet_fabric(p);
+            let event = topo.allgatherv_sized(&mut fe, &sizes);
+            assert_eq!(closed.time_ps, event.time_ps, "p={p} clocks diverged");
+            assert_eq!(closed.events, event.events, "p={p}");
+            assert_eq!(
+                closed.traffic.bytes_sent_per_node, event.traffic.bytes_sent_per_node,
+                "p={p}"
+            );
+            assert_eq!(fc.now(), fe.now(), "p={p} fabric clocks diverged");
+        }
+    }
+
+    #[test]
+    fn closed_mesh_is_tick_identical_to_the_event_loop() {
+        for p in [1usize, 2, 4, 7] {
+            let topo = FullMesh::new(p);
+            let sizes = sizes_for(p);
+            let mut fc = quiet_fabric(p);
+            let (closed, engine) = gather_sized(&topo, &mut fc, &sizes);
+            assert_eq!(engine, Engine::Closed, "p={p}");
+            let mut fe = quiet_fabric(p);
+            let event = topo.allgatherv_sized(&mut fe, &sizes);
+            assert_eq!(closed.time_ps, event.time_ps, "p={p} clocks diverged");
+            assert_eq!(closed.events, event.events, "p={p}");
+            assert_eq!(
+                closed.traffic.bytes_sent_per_node, event.traffic.bytes_sent_per_node,
+                "p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_uniform_phases_fall_back_to_the_event_loop() {
+        let topo = build_topology(TopologyKind::Ring, 4);
+        let sizes = sizes_for(4);
+
+        // Trace recording forces the full loop.
+        let mut f = Fabric::for_config(&quiet_cfg(), 4);
+        assert!(f.full_loop_reason().is_some());
+        let (_, engine) = gather_sized(&*topo, &mut f, &sizes);
+        assert_eq!(engine, Engine::Event);
+
+        // One overridden link forces the full loop.
+        let mut f = Fabric::for_config(
+            &FabricConfig {
+                link_overrides: vec![(
+                    0,
+                    1,
+                    LinkSpec {
+                        bandwidth_gbps: 0.5,
+                        latency_us: 1.0,
+                        jitter_us: 0.0,
+                    },
+                )],
+                ..quiet_cfg()
+            },
+            4,
+        );
+        f.set_trace(false);
+        assert!(f.full_loop_reason().is_some());
+        let (_, engine) = gather_sized(&*topo, &mut f, &sizes);
+        assert_eq!(engine, Engine::Event);
+
+        // Jitter forces the full loop.
+        let mut f = Fabric::for_config(
+            &FabricConfig {
+                link: LinkSpec {
+                    bandwidth_gbps: 1.0,
+                    latency_us: 1.0,
+                    jitter_us: 0.5,
+                },
+                ..FabricConfig::default()
+            },
+            4,
+        );
+        f.set_trace(false);
+        assert!(f.full_loop_reason().is_some());
+        let (_, engine) = gather_sized(&*topo, &mut f, &sizes);
+        assert_eq!(engine, Engine::Event);
+    }
+
+    #[test]
+    fn leader_topologies_always_use_the_event_loop() {
+        let topo = build_topology(TopologyKind::Hier { groups: 2 }, 6);
+        let mut f = quiet_fabric(6);
+        let (res, engine) = gather_sized(&*topo, &mut f, &sizes_for(6));
+        assert_eq!(engine, Engine::Event);
+        assert!(res.events > 0, "event loop actually ran");
+    }
+
+    #[test]
+    fn closed_runs_leave_the_clock_continuable() {
+        // Two back-to-back closed gathers share port state exactly like
+        // two event-loop runs on one fabric.
+        let topo = build_topology(TopologyKind::Ring, 4);
+        let sizes = sizes_for(4);
+        let mut fc = quiet_fabric(4);
+        gather_sized(&*topo, &mut fc, &sizes);
+        let (second_closed, engine) = gather_sized(&*topo, &mut fc, &sizes);
+        assert_eq!(engine, Engine::Closed);
+        let mut fe = quiet_fabric(4);
+        topo.allgatherv_sized(&mut fe, &sizes);
+        let second_event = topo.allgatherv_sized(&mut fe, &sizes);
+        assert_eq!(second_closed.time_ps, second_event.time_ps);
+        assert_eq!(
+            second_closed.traffic.bytes_sent_per_node,
+            second_event.traffic.bytes_sent_per_node
+        );
+    }
+}

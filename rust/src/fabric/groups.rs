@@ -11,7 +11,7 @@
 //! crash is simply rebuilding the spans over the survivor set, where
 //! the lowest surviving id of each span leads.
 
-use super::collectives::{split_all, GatherState};
+use super::collectives::{GatherState, SegPayloads};
 use super::{Msg, Payload, Protocol};
 
 /// Member block/vector travelling up to its group leader.
@@ -96,6 +96,12 @@ impl GroupSpans {
         let (s, l) = self.spans[g];
         (s + 1..s + l).collect()
     }
+
+    /// Group `g`'s `(start, len)` span — allocation-free, for callers
+    /// on a per-delivery hot path.
+    pub fn span(&self, g: usize) -> (usize, usize) {
+        self.spans[g]
+    }
 }
 
 /// The three-phase leader-based allgatherv: members up, leaders
@@ -103,7 +109,7 @@ impl GroupSpans {
 /// gather segmentation).
 pub struct GroupGather<'g> {
     g: &'g GroupSpans,
-    segs: Vec<Vec<Vec<u8>>>,
+    segs: SegPayloads,
     state: GatherState,
 }
 
@@ -111,8 +117,17 @@ impl<'g> GroupGather<'g> {
     pub fn new(g: &'g GroupSpans, inputs: &[Vec<u8>], seg: usize) -> GroupGather<'g> {
         GroupGather {
             g,
-            segs: split_all(inputs, seg),
+            segs: SegPayloads::real(inputs, seg),
             state: GatherState::new(inputs, seg),
+        }
+    }
+
+    /// Phantom-payload variant: identical protocol, sizes only.
+    pub fn sized(g: &'g GroupSpans, sizes: &[u64], seg: usize) -> GroupGather<'g> {
+        GroupGather {
+            g,
+            segs: SegPayloads::phantom(sizes, seg),
+            state: GatherState::sized(sizes, seg),
         }
     }
 
@@ -136,9 +151,9 @@ impl Protocol for GroupGather<'_> {
         let mut out = Vec::new();
         for w in 0..self.g.workers() {
             let grp = self.g.group_of(w);
-            for (si, sg) in self.segs[w].iter().enumerate() {
+            for si in 0..self.segs.seg_count(w) {
+                let payload = self.segs.payload(w, si);
                 let si = si as u32;
-                let payload = Payload::Bytes(sg.clone());
                 if self.g.is_leader(w) {
                     for l in self.g.leaders() {
                         if l != w {
@@ -157,10 +172,8 @@ impl Protocol for GroupGather<'_> {
     }
 
     fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
-        let Payload::Bytes(b) = &msg.payload else {
-            unreachable!("gather protocol only moves bytes")
-        };
-        self.state.store(node, msg.origin, msg.seg as usize, b);
+        self.state
+            .store_payload(node, msg.origin, msg.seg as usize, &msg.payload);
         if !self.g.is_leader(node) {
             return Vec::new();
         }

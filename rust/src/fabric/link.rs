@@ -102,6 +102,13 @@ impl LinkSpec {
     pub fn jitter_ps(&self) -> Time {
         (self.jitter_us * PS_PER_US).round() as Time
     }
+
+    /// Whether sends on this link draw from the jitter RNG — the
+    /// per-link predicate behind the fabric's closed-form fast-path
+    /// eligibility check (`Fabric::full_loop_reason`).
+    pub fn has_jitter(&self) -> bool {
+        self.jitter_ps() > 0
+    }
 }
 
 /// A directed-edge link resolver: one uniform default spec plus sparse
@@ -140,6 +147,13 @@ impl LinkTable {
     /// Number of overridden directed edges.
     pub fn overrides(&self) -> usize {
         self.overrides.len()
+    }
+
+    /// Whether every directed edge resolves to the same spec — a
+    /// precondition for the closed-form fast path, which replays one
+    /// uniform link arithmetic for all hops.
+    pub fn is_uniform(&self) -> bool {
+        self.overrides.is_empty()
     }
 
     /// Largest node id named by an override, if any (for range checks).
@@ -246,6 +260,12 @@ mod tests {
         assert_eq!(l.ser_ps(1_000_000), 8_000_000_000);
         assert_eq!(l.latency_ps(), 50_000_000);
         assert_eq!(l.jitter_ps(), 0);
+        assert!(!l.has_jitter());
+        assert!(LinkSpec {
+            jitter_us: 0.5,
+            ..l
+        }
+        .has_jitter());
     }
 
     #[test]
@@ -278,7 +298,9 @@ mod tests {
         let mut t = LinkTable::uniform(LinkSpec::gige());
         assert_eq!(t.overrides(), 0);
         assert_eq!(t.max_node(), None);
+        assert!(t.is_uniform());
         t.set(2, 5, LinkSpec::infiniband());
+        assert!(!t.is_uniform());
         assert_eq!(t.spec(2, 5).bandwidth_gbps, 100.0);
         assert_eq!(t.spec(5, 2).bandwidth_gbps, 1.0);
         assert_eq!(t.spec(0, 1).latency_us, 50.0);

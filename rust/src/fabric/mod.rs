@@ -46,6 +46,8 @@
 
 pub mod clock;
 pub mod collectives;
+pub mod dragonfly;
+pub mod fastpath;
 pub mod faults;
 pub mod groups;
 pub mod hierarchy;
@@ -55,12 +57,14 @@ pub mod ring;
 pub mod star;
 pub mod topology;
 pub mod torus;
+pub mod torus3;
 pub mod tree;
 
 use std::collections::BTreeMap;
 
 pub use clock::{SimClock, Time};
 pub use collectives::{SimGather, SimReduce};
+pub use fastpath::{gather_sized, Engine};
 pub use faults::{FabricReport, FaultPlan};
 pub use link::{LinkSpec, LinkStat, LinkTable};
 pub use node::{Node, NodePerf, Straggler};
@@ -78,12 +82,17 @@ use crate::util::rng::Pcg32;
 /// that cannot make progress.
 const MAX_SEND_ATTEMPTS: u32 = 1_000;
 
-/// Message payloads: wire bytes (codec messages) or f32 vectors
-/// (dense allreduce partials). Sizes are what the links bill for.
+/// Message payloads: wire bytes (codec messages), f32 vectors (dense
+/// allreduce partials), or sized-but-contentless phantoms (the
+/// scale-sweep fast tier — see `Topology::allgatherv_sized`). Sizes
+/// are what the links bill for; timing never depends on content, so a
+/// phantom of `n` bytes traverses the engine tick-identically to any
+/// real `n`-byte message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Payload {
     Bytes(Vec<u8>),
     F32(Vec<f32>),
+    Phantom(u64),
 }
 
 impl Payload {
@@ -91,6 +100,7 @@ impl Payload {
         match self {
             Payload::Bytes(b) => b.len() as u64,
             Payload::F32(v) => v.len() as u64 * 4,
+            Payload::Phantom(b) => *b,
         }
     }
 }
@@ -111,18 +121,54 @@ pub struct Msg {
 /// Events in the clock queue: a successful delivery handed to the
 /// protocol, or a retransmit timer for a message the chaos plan
 /// dropped or corrupted in flight. `dst`/`src` are logical ranks (see
-/// [`Fabric::for_degraded`]).
+/// [`Fabric::for_degraded`]). The message itself lives in the
+/// [`MsgArena`] — queue entries stay small and `Msg` moves exactly
+/// once per hop instead of rippling through every heap sift.
 enum Ev {
     Delivery {
         dst: usize,
-        msg: Msg,
+        slot: u32,
     },
     Retransmit {
         src: usize,
         dst: usize,
-        msg: Msg,
+        slot: u32,
         attempt: u32,
     },
+}
+
+/// Slab of in-flight [`Msg`] state, indexed by the `slot` ids queue
+/// events carry. Slots are recycled through a free list, so steady
+/// state holds exactly the in-flight message count regardless of how
+/// many events a collective schedules over its lifetime.
+#[derive(Default)]
+struct MsgArena {
+    slots: Vec<Option<Msg>>,
+    free: Vec<u32>,
+}
+
+impl MsgArena {
+    fn put(&mut self, msg: Msg) -> u32 {
+        match self.free.pop() {
+            Some(i) => {
+                self.slots[i as usize] = Some(msg);
+                i
+            }
+            None => {
+                assert!(self.slots.len() < u32::MAX as usize, "message arena overflow");
+                self.slots.push(Some(msg));
+                (self.slots.len() - 1) as u32
+            }
+        }
+    }
+
+    fn take(&mut self, slot: u32) -> Msg {
+        let msg = self.slots[slot as usize]
+            .take()
+            .expect("empty message arena slot");
+        self.free.push(slot);
+        msg
+    }
 }
 
 /// Transport-level fault state compiled from a [`FaultPlan`], keyed by
@@ -219,6 +265,11 @@ pub struct Fabric {
     run_t0: Time,
     links: BTreeMap<(usize, usize), LinkStat>,
     trace: Vec<TraceEvent>,
+    /// Trace recording toggle (default on — replay tests depend on
+    /// it). Large-scale sweeps turn it off: at 4096 nodes one gather
+    /// records ~17M trace lines (~1 GB) nobody reads.
+    trace_enabled: bool,
+    arena: MsgArena,
 }
 
 impl Fabric {
@@ -230,7 +281,11 @@ impl Fabric {
             table: LinkTable::uniform(link),
             segment_bytes: 0,
             nodes: (0..node_count).map(Node::new).collect(),
-            clock: SimClock::new(),
+            // One delivery lane per ingress port: the fabric resolves
+            // ingress contention at send time, so per-port delivery
+            // times are nondecreasing in schedule order and qualify
+            // for the clock's O(1) FIFO lanes.
+            clock: SimClock::with_lanes(node_count),
             rng: Pcg32::new(seed, 0xFAB),
             fault_rng: Pcg32::new(seed, 0xFA17),
             chaos: ChaosState::default(),
@@ -239,6 +294,8 @@ impl Fabric {
             run_t0: 0,
             links: BTreeMap::new(),
             trace: Vec::new(),
+            trace_enabled: true,
+            arena: MsgArena::default(),
         }
     }
 
@@ -426,9 +483,97 @@ impl Fabric {
         self.links.values().map(|l| l.bytes).max().unwrap_or(0)
     }
 
-    /// The recorded event trace (send order).
+    /// The recorded event trace (send order). Empty when recording is
+    /// disabled ([`Fabric::set_trace`]).
     pub fn trace(&self) -> &[TraceEvent] {
         &self.trace
+    }
+
+    /// Toggle trace recording (default on). Scale sweeps turn it off —
+    /// a 4096-node gather would record ~17M lines nobody reads — and
+    /// the closed-form fast path *requires* it off, since skipping the
+    /// event loop cannot reproduce per-send trace lines.
+    pub fn set_trace(&mut self, on: bool) {
+        self.trace_enabled = on;
+    }
+
+    /// Whether trace recording is on.
+    pub fn trace_enabled(&self) -> bool {
+        self.trace_enabled
+    }
+
+    /// Why the *closed-form* fast path may not replace the event loop
+    /// on this fabric, or `None` when a uniform phase qualifies (see
+    /// `fabric::fastpath` and docs/SCALE.md): the closed tier replays
+    /// one uniform, jitter-free, fault-free link arithmetic, so any
+    /// feature that makes a hop's timing depend on per-send state it
+    /// does not model forces the full loop.
+    pub fn full_loop_reason(&self) -> Option<&'static str> {
+        if self.clock.pending() > 0 {
+            return Some("events already pending on the clock");
+        }
+        if self.chaos.active {
+            return Some("chaos plan active (drops/corruption/flaps)");
+        }
+        if self.trace_enabled {
+            return Some("trace recording enabled");
+        }
+        if self.segment_bytes != 0 {
+            return Some("gather segmentation enabled");
+        }
+        if self.rank_map.is_some() {
+            return Some("degraded rank map in effect");
+        }
+        if !self.table.is_uniform() {
+            return Some("per-link overrides present");
+        }
+        if self.table.default_spec().has_jitter() {
+            return Some("link jitter draws from the RNG");
+        }
+        if self
+            .nodes
+            .iter()
+            .any(|n| n.perf.slowdown != 1.0 || n.perf.compute_ps > 0)
+        {
+            return Some("straggler or compute-delay node profiles");
+        }
+        None
+    }
+
+    /// One uniform-phase hop resolved closed-form: the exact `send`
+    /// arithmetic for the eligible case (uniform links, no jitter, no
+    /// chaos, no stragglers — guaranteed by [`Fabric::full_loop_reason`])
+    /// with delivery-side accounting billed immediately, since no pop
+    /// will happen. Returns the delivery completion time.
+    pub(super) fn wire_fast(&mut self, src: usize, dst: usize, bytes: u64, ready: Time) -> Time {
+        debug_assert!(src != dst, "self-send from node {src}");
+        let spec = *self.table.default_spec();
+        let ser = spec.ser_ps(bytes);
+
+        let start_tx = ready.max(self.nodes[src].egress_free);
+        self.nodes[src].egress_free = start_tx + ser;
+        self.nodes[src].sent_bytes += bytes;
+        self.nodes[src].sent_messages += 1;
+
+        let front = start_tx + spec.latency_ps();
+        let tx_tail = start_tx + ser + spec.latency_ps();
+
+        let stat = self.links.entry((src, dst)).or_default();
+        stat.bytes += bytes;
+        stat.messages += 1;
+
+        let rx_start = front.max(self.nodes[dst].ingress_free);
+        let delivered = (rx_start + ser).max(tx_tail);
+        self.nodes[dst].ingress_free = delivered;
+        self.nodes[dst].recv_bytes += bytes;
+        self.nodes[dst].recv_messages += 1;
+        delivered
+    }
+
+    /// Land the clock at `t` crediting `events` closed-form-resolved
+    /// events (see [`SimClock::fast_forward`]).
+    pub(super) fn fast_forward(&mut self, t: Time, events: u64) {
+        self.clock.fast_forward(t, events);
     }
 
     /// Bytes each node pushed onto its egress port.
@@ -474,24 +619,7 @@ impl Fabric {
             let t_rel = start_tx.saturating_sub(self.run_t0);
             if let Some(up_rel) = self.chaos.down_until((psrc, pdst), t_rel) {
                 self.report.drops += 1;
-                self.trace.push(TraceEvent {
-                    sent: start_tx,
-                    delivered: tx_tail,
-                    src: psrc,
-                    dst: pdst,
-                    origin: msg.origin,
-                    tag: msg.tag,
-                    bytes,
-                });
-                let at = (self.run_t0 + up_rel).max(tx_tail) + self.rto(&spec, bytes, attempt);
-                self.clock.schedule(at, Ev::Retransmit { src, dst, msg, attempt });
-                return;
-            }
-            if let Some(&(p_drop, p_corrupt)) = self.chaos.rates.get(&(psrc, pdst)) {
-                let u = self.fault_rng.next_f64();
-                if u < p_drop {
-                    // Random loss: same shape as a flap drop.
-                    self.report.drops += 1;
+                if self.trace_enabled {
                     self.trace.push(TraceEvent {
                         sent: start_tx,
                         delivered: tx_tail,
@@ -501,8 +629,31 @@ impl Fabric {
                         tag: msg.tag,
                         bytes,
                     });
+                }
+                let at = (self.run_t0 + up_rel).max(tx_tail) + self.rto(&spec, bytes, attempt);
+                let slot = self.arena.put(msg);
+                self.clock.schedule(at, Ev::Retransmit { src, dst, slot, attempt });
+                return;
+            }
+            if let Some(&(p_drop, p_corrupt)) = self.chaos.rates.get(&(psrc, pdst)) {
+                let u = self.fault_rng.next_f64();
+                if u < p_drop {
+                    // Random loss: same shape as a flap drop.
+                    self.report.drops += 1;
+                    if self.trace_enabled {
+                        self.trace.push(TraceEvent {
+                            sent: start_tx,
+                            delivered: tx_tail,
+                            src: psrc,
+                            dst: pdst,
+                            origin: msg.origin,
+                            tag: msg.tag,
+                            bytes,
+                        });
+                    }
                     let at = tx_tail + self.rto(&spec, bytes, attempt);
-                    self.clock.schedule(at, Ev::Retransmit { src, dst, msg, attempt });
+                    let slot = self.arena.put(msg);
+                    self.clock.schedule(at, Ev::Retransmit { src, dst, slot, attempt });
                     return;
                 }
                 if u < p_drop + p_corrupt {
@@ -514,17 +665,20 @@ impl Fabric {
                     let delivered = (rx_start + rx_ser).max(tx_tail);
                     self.nodes[pdst].ingress_free = delivered;
                     self.report.corruptions += 1;
-                    self.trace.push(TraceEvent {
-                        sent: start_tx,
-                        delivered,
-                        src: psrc,
-                        dst: pdst,
-                        origin: msg.origin,
-                        tag: msg.tag,
-                        bytes,
-                    });
+                    if self.trace_enabled {
+                        self.trace.push(TraceEvent {
+                            sent: start_tx,
+                            delivered,
+                            src: psrc,
+                            dst: pdst,
+                            origin: msg.origin,
+                            tag: msg.tag,
+                            bytes,
+                        });
+                    }
                     let at = delivered + self.rto(&spec, bytes, attempt);
-                    self.clock.schedule(at, Ev::Retransmit { src, dst, msg, attempt });
+                    let slot = self.arena.put(msg);
+                    self.clock.schedule(at, Ev::Retransmit { src, dst, slot, attempt });
                     return;
                 }
             }
@@ -539,16 +693,23 @@ impl Fabric {
         let delivered = (rx_start + rx_ser).max(tx_tail);
         self.nodes[pdst].ingress_free = delivered;
 
-        self.trace.push(TraceEvent {
-            sent: start_tx,
-            delivered,
-            src: psrc,
-            dst: pdst,
-            origin: msg.origin,
-            tag: msg.tag,
-            bytes,
-        });
-        self.clock.schedule(delivered, Ev::Delivery { dst, msg });
+        if self.trace_enabled {
+            self.trace.push(TraceEvent {
+                sent: start_tx,
+                delivered,
+                src: psrc,
+                dst: pdst,
+                origin: msg.origin,
+                tag: msg.tag,
+                bytes,
+            });
+        }
+        let slot = self.arena.put(msg);
+        // Per-ingress-port delivery times are nondecreasing in send
+        // order (ingress_free was just advanced to `delivered`), so
+        // the physical destination's FIFO lane preserves exact
+        // (time, seq) pop order at O(1) per push.
+        self.clock.schedule_lane(delivered, pdst, Ev::Delivery { dst, slot });
     }
 
     /// Drive a protocol to completion; returns the finish time (ps).
@@ -563,7 +724,8 @@ impl Fabric {
         }
         while let Some((t, ev)) = self.clock.pop() {
             match ev {
-                Ev::Delivery { dst, msg } => {
+                Ev::Delivery { dst, slot } => {
+                    let msg = self.arena.take(slot);
                     let pdst = self.phys(dst);
                     self.nodes[pdst].recv_bytes += msg.payload.size_bytes();
                     self.nodes[pdst].recv_messages += 1;
@@ -578,9 +740,10 @@ impl Fabric {
                 Ev::Retransmit {
                     src,
                     dst,
-                    msg,
+                    slot,
                     attempt,
                 } => {
+                    let msg = self.arena.take(slot);
                     let attempt = attempt + 1;
                     assert!(
                         attempt <= MAX_SEND_ATTEMPTS,
@@ -718,8 +881,8 @@ pub struct FabricConfig {
     /// cost model's block size `m` to make the simulated ring converge
     /// to the pipelined `T_v` bound for skewed message sizes.
     pub segment_bytes: usize,
-    /// Inter-group uplink bandwidth for the `hier` topology, Gbps
-    /// (`None` = a 10:1 oversubscribed default).
+    /// Inter-group uplink bandwidth for the `hier` and `dragonfly`
+    /// topologies, Gbps (`None` = a 10:1 oversubscribed default).
     pub inter_rack_gbps: Option<f64>,
     pub seed: u64,
     pub stragglers: Vec<Straggler>,
@@ -792,8 +955,11 @@ impl FabricConfig {
         self.link.jitter_us = args.parse_or("jitter-us", self.link.jitter_us)?;
         if let Some(g) = args.get("inter-rack-gbps") {
             anyhow::ensure!(
-                matches!(self.topology, TopologyKind::Hier { .. }),
-                "--inter-rack-gbps only applies to --topology hier"
+                matches!(
+                    self.topology,
+                    TopologyKind::Hier { .. } | TopologyKind::Dragonfly { .. }
+                ),
+                "--inter-rack-gbps only applies to --topology hier or dragonfly"
             );
             let gbps: f64 = g
                 .parse()
@@ -842,18 +1008,21 @@ impl FabricConfig {
         self.topology.validate(workers)?;
         if let Some(gbps) = self.inter_rack_gbps {
             let groups = match self.topology {
-                TopologyKind::Hier { groups: 0 } => hierarchy::auto_groups(workers),
-                TopologyKind::Hier { groups } => groups,
+                TopologyKind::Hier { groups: 0 } | TopologyKind::Dragonfly { groups: 0 } => {
+                    hierarchy::auto_groups(workers)
+                }
+                TopologyKind::Hier { groups } | TopologyKind::Dragonfly { groups } => groups,
                 _ => anyhow::bail!(
-                    "inter-rack uplink ({gbps} Gbps) only applies to the hier topology, \
-                     not {}",
+                    "inter-rack uplink ({gbps} Gbps) only applies to the hier and \
+                     dragonfly topologies, not {}",
                     self.topology.label()
                 ),
             };
             anyhow::ensure!(
                 groups >= 2,
                 "inter-rack uplink ({gbps} Gbps) has no inter-group link to apply: \
-                 hier resolves to a single group for {workers} worker{}",
+                 {} resolves to a single group for {workers} worker{}",
+                self.topology.label(),
                 if workers == 1 { "" } else { "s" }
             );
         }

@@ -17,7 +17,9 @@
 //! emerges from the event clock (pipelined hops, stragglers, jitter)
 //! instead of a closed-form bound.
 
-use super::collectives::{chunk_range, split_all, traffic_from, GatherState, SimGather, SimReduce};
+use super::collectives::{
+    chunk_range, traffic_from, GatherState, SegPayloads, SimGather, SimReduce,
+};
 use super::topology::{Topology, TopologyKind};
 use super::{Fabric, Msg, Payload, Protocol};
 use crate::comm::Traffic;
@@ -41,11 +43,28 @@ impl Ring {
     fn right(&self, i: usize) -> usize {
         (i + 1) % self.p
     }
+
+    /// Drive one gather (real or phantom payloads) through the event
+    /// loop — both `allgatherv` flavors run this identical code.
+    fn run_gather(&self, fabric: &mut Fabric, segs: SegPayloads, state: GatherState) -> SimGather {
+        let mut proto = RingGather {
+            p: self.p,
+            segs,
+            state,
+        };
+        let time_ps = if self.p > 1 { fabric.run(&mut proto) } else { 0 };
+        SimGather {
+            gathered: proto.state.into_gathered(),
+            traffic: traffic_from(fabric, self.gather_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
 }
 
 struct RingGather {
     p: usize,
-    segs: Vec<Vec<Vec<u8>>>,
+    segs: SegPayloads,
     state: GatherState,
 }
 
@@ -53,7 +72,7 @@ impl Protocol for RingGather {
     fn start(&mut self) -> Vec<(usize, usize, Msg)> {
         let mut out = Vec::new();
         for w in 0..self.p {
-            for (si, sg) in self.segs[w].iter().enumerate() {
+            for si in 0..self.segs.seg_count(w) {
                 out.push((
                     w,
                     (w + 1) % self.p,
@@ -62,7 +81,7 @@ impl Protocol for RingGather {
                         seg: si as u32,
                         hop: 1,
                         tag: TAG_GATHER,
-                        payload: Payload::Bytes(sg.clone()),
+                        payload: self.segs.payload(w, si),
                     },
                 ));
             }
@@ -71,10 +90,8 @@ impl Protocol for RingGather {
     }
 
     fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
-        let Payload::Bytes(b) = &msg.payload else {
-            unreachable!("gather protocol only moves bytes")
-        };
-        self.state.store(node, msg.origin, msg.seg as usize, b);
+        self.state
+            .store_payload(node, msg.origin, msg.seg as usize, &msg.payload);
         // Forward everything except the block that completes this
         // node's set — exactly p−1 egress blocks per node, the same
         // Σ_j n_j − n_(i+1) accounting as the lockstep ring (the split
@@ -210,18 +227,21 @@ impl Topology for Ring {
     fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
         assert_eq!(inputs.len(), self.p, "one input message per worker");
         let seg = fabric.segment_bytes();
-        let mut proto = RingGather {
-            p: self.p,
-            segs: split_all(inputs, seg),
-            state: GatherState::new(inputs, seg),
-        };
-        let time_ps = if self.p > 1 { fabric.run(&mut proto) } else { 0 };
-        SimGather {
-            gathered: proto.state.into_gathered(),
-            traffic: traffic_from(fabric, self.gather_rounds()),
-            time_ps,
-            events: fabric.events(),
-        }
+        self.run_gather(
+            fabric,
+            SegPayloads::real(inputs, seg),
+            GatherState::new(inputs, seg),
+        )
+    }
+
+    fn allgatherv_sized(&self, fabric: &mut Fabric, sizes: &[u64]) -> SimGather {
+        assert_eq!(sizes.len(), self.p, "one size per worker");
+        let seg = fabric.segment_bytes();
+        self.run_gather(
+            fabric,
+            SegPayloads::phantom(sizes, seg),
+            GatherState::sized(sizes, seg),
+        )
     }
 
     fn allreduce(&self, fabric: &mut Fabric, inputs: &[Vec<f32>]) -> SimReduce {

@@ -10,7 +10,7 @@
 //! fan-out — the classic PS bottleneck the sweep quantifies against
 //! the ring.
 
-use super::collectives::{split_all, traffic_from, GatherState, SimGather, SimReduce};
+use super::collectives::{traffic_from, GatherState, SegPayloads, SimGather, SimReduce};
 use super::topology::{Topology, TopologyKind};
 use super::{Fabric, Msg, Payload, Protocol};
 
@@ -32,12 +32,30 @@ impl Star {
     fn hub(&self) -> usize {
         self.p
     }
+
+    /// Drive one gather (real or phantom payloads) through the event
+    /// loop — both `allgatherv` flavors run this identical code.
+    fn run_gather(&self, fabric: &mut Fabric, segs: SegPayloads, state: GatherState) -> SimGather {
+        let mut proto = StarGather {
+            p: self.p,
+            hub: self.hub(),
+            segs,
+            state,
+        };
+        let time_ps = fabric.run(&mut proto);
+        SimGather {
+            gathered: proto.state.into_gathered(),
+            traffic: traffic_from(fabric, self.gather_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
 }
 
 struct StarGather {
     p: usize,
     hub: usize,
-    segs: Vec<Vec<Vec<u8>>>,
+    segs: SegPayloads,
     state: GatherState,
 }
 
@@ -48,7 +66,7 @@ impl Protocol for StarGather {
         }
         let mut out = Vec::new();
         for w in 0..self.p {
-            for (si, sg) in self.segs[w].iter().enumerate() {
+            for si in 0..self.segs.seg_count(w) {
                 out.push((
                     w,
                     self.hub,
@@ -57,7 +75,7 @@ impl Protocol for StarGather {
                         seg: si as u32,
                         hop: 1,
                         tag: TAG_UP,
-                        payload: Payload::Bytes(sg.clone()),
+                        payload: self.segs.payload(w, si),
                     },
                 ));
             }
@@ -84,10 +102,8 @@ impl Protocol for StarGather {
                 })
                 .collect()
         } else {
-            let Payload::Bytes(b) = &msg.payload else {
-                unreachable!("gather protocol only moves bytes")
-            };
-            self.state.store(node, msg.origin, msg.seg as usize, b);
+            self.state
+                .store_payload(node, msg.origin, msg.seg as usize, &msg.payload);
             Vec::new()
         }
     }
@@ -189,19 +205,21 @@ impl Topology for Star {
     fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
         assert_eq!(inputs.len(), self.p, "one input message per worker");
         let seg = fabric.segment_bytes();
-        let mut proto = StarGather {
-            p: self.p,
-            hub: self.hub(),
-            segs: split_all(inputs, seg),
-            state: GatherState::new(inputs, seg),
-        };
-        let time_ps = fabric.run(&mut proto);
-        SimGather {
-            gathered: proto.state.into_gathered(),
-            traffic: traffic_from(fabric, self.gather_rounds()),
-            time_ps,
-            events: fabric.events(),
-        }
+        self.run_gather(
+            fabric,
+            SegPayloads::real(inputs, seg),
+            GatherState::new(inputs, seg),
+        )
+    }
+
+    fn allgatherv_sized(&self, fabric: &mut Fabric, sizes: &[u64]) -> SimGather {
+        assert_eq!(sizes.len(), self.p, "one size per worker");
+        let seg = fabric.segment_bytes();
+        self.run_gather(
+            fabric,
+            SegPayloads::phantom(sizes, seg),
+            GatherState::sized(sizes, seg),
+        )
     }
 
     fn allreduce(&self, fabric: &mut Fabric, inputs: &[Vec<f32>]) -> SimReduce {

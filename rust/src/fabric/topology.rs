@@ -12,7 +12,7 @@
 //! upper bound. See docs/TOPOLOGIES.md for per-topology cost formulas
 //! and when-to-use guidance.
 
-use super::collectives::{split_all, traffic_from, GatherState, SimGather, SimReduce};
+use super::collectives::{traffic_from, GatherState, SegPayloads, SimGather, SimReduce};
 use super::{Fabric, FabricConfig, LinkSpec, Msg, Payload, Protocol};
 
 /// Topology selector, parsed from `--topology`.
@@ -28,11 +28,14 @@ pub enum TopologyKind {
     Star,
     Tree { branch: usize },
     Torus { rows: usize, cols: usize },
+    Torus3 { x: usize, y: usize, z: usize },
     Hier { groups: usize },
+    Dragonfly { groups: usize },
 }
 
 /// Every accepted `--topology` form, for error messages and usage.
-pub const TOPOLOGY_FORMS: &str = "ring|full|star|tree[:branch]|torus[:RxC]|hier[:groups]";
+pub const TOPOLOGY_FORMS: &str =
+    "ring|full|star|tree[:branch]|torus[:RxC]|torus3[:XxYxZ]|hier[:groups]|dragonfly[:groups]";
 
 /// Parse a `RxC` torus dimension spec (e.g. `4x2`).
 pub fn parse_dims(s: &str) -> anyhow::Result<(usize, usize)> {
@@ -49,6 +52,27 @@ pub fn parse_dims(s: &str) -> anyhow::Result<(usize, usize)> {
         .map_err(|e| anyhow::anyhow!("torus cols '{c}': {e}"))?;
     anyhow::ensure!(rows >= 1 && cols >= 1, "torus dims must be >= 1 (got {s})");
     Ok((rows, cols))
+}
+
+/// Parse a `XxYxZ` 3-D torus dimension spec (e.g. `4x4x2`).
+pub fn parse_dims3(s: &str) -> anyhow::Result<(usize, usize, usize)> {
+    let parts: Vec<&str> = s.split('x').collect();
+    anyhow::ensure!(
+        parts.len() == 3,
+        "torus3 dims '{s}': want XxYxZ (e.g. 4x4x2)"
+    );
+    let mut dims = [0usize; 3];
+    for (i, part) in parts.iter().enumerate() {
+        dims[i] = part
+            .trim()
+            .parse()
+            .map_err(|e| anyhow::anyhow!("torus3 dim '{part}': {e}"))?;
+    }
+    anyhow::ensure!(
+        dims.iter().all(|&d| d >= 1),
+        "torus3 dims must be >= 1 (got {s})"
+    );
+    Ok((dims[0], dims[1], dims[2]))
 }
 
 impl TopologyKind {
@@ -77,6 +101,11 @@ impl TopologyKind {
                 let (rows, cols) = parse_dims(d)?;
                 Ok(TopologyKind::Torus { rows, cols })
             }
+            ("torus3", None) => Ok(TopologyKind::Torus3 { x: 0, y: 0, z: 0 }),
+            ("torus3", Some(d)) => {
+                let (x, y, z) = parse_dims3(d)?;
+                Ok(TopologyKind::Torus3 { x, y, z })
+            }
             ("hier", None) => Ok(TopologyKind::Hier { groups: 0 }),
             ("hier", Some(g)) => {
                 let groups: usize = g
@@ -84,6 +113,14 @@ impl TopologyKind {
                     .map_err(|e| anyhow::anyhow!("hier groups '{g}': {e}"))?;
                 anyhow::ensure!(groups >= 1, "hier groups must be >= 1");
                 Ok(TopologyKind::Hier { groups })
+            }
+            ("dragonfly", None) => Ok(TopologyKind::Dragonfly { groups: 0 }),
+            ("dragonfly", Some(g)) => {
+                let groups: usize = g
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("dragonfly groups '{g}': {e}"))?;
+                anyhow::ensure!(groups >= 1, "dragonfly groups must be >= 1");
+                Ok(TopologyKind::Dragonfly { groups })
             }
             _ => anyhow::bail!("unknown topology '{s}' ({TOPOLOGY_FORMS})"),
         }
@@ -98,8 +135,12 @@ impl TopologyKind {
             TopologyKind::Tree { branch } => format!("tree:{branch}"),
             TopologyKind::Torus { rows: 0, cols: 0 } => "torus".into(),
             TopologyKind::Torus { rows, cols } => format!("torus:{rows}x{cols}"),
+            TopologyKind::Torus3 { x: 0, y: 0, z: 0 } => "torus3".into(),
+            TopologyKind::Torus3 { x, y, z } => format!("torus3:{x}x{y}x{z}"),
             TopologyKind::Hier { groups: 0 } => "hier".into(),
             TopologyKind::Hier { groups } => format!("hier:{groups}"),
+            TopologyKind::Dragonfly { groups: 0 } => "dragonfly".into(),
+            TopologyKind::Dragonfly { groups } => format!("dragonfly:{groups}"),
         }
     }
 
@@ -115,10 +156,23 @@ impl TopologyKind {
                     rows * cols
                 );
             }
+            TopologyKind::Torus3 { x, y, z } if x > 0 && y > 0 && z > 0 => {
+                anyhow::ensure!(
+                    x * y * z == workers,
+                    "torus3 {x}x{y}x{z} needs {} workers, got {workers}",
+                    x * y * z
+                );
+            }
             TopologyKind::Hier { groups } if groups > 0 => {
                 anyhow::ensure!(
                     groups <= workers,
                     "hier wants {groups} groups but only {workers} workers"
+                );
+            }
+            TopologyKind::Dragonfly { groups } if groups > 0 => {
+                anyhow::ensure!(
+                    groups <= workers,
+                    "dragonfly wants {groups} groups but only {workers} workers"
                 );
             }
             _ => {}
@@ -149,6 +203,13 @@ pub trait Topology {
     fn reduce_rounds(&self) -> u32;
     /// Every worker ends holding every worker's byte message.
     fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather;
+    /// Sizes-only gather: the identical protocol and event schedule as
+    /// [`Topology::allgatherv`], but payloads are phantom byte counts —
+    /// no content is materialized, so a 4096-node sweep costs O(p)
+    /// memory instead of O(p²·bytes). `gathered` comes back empty;
+    /// traffic, timing, and event counts are exactly those of a real
+    /// run with these message sizes.
+    fn allgatherv_sized(&self, fabric: &mut Fabric, sizes: &[u64]) -> SimGather;
     /// Every worker ends holding the elementwise sum of all inputs.
     fn allreduce(&self, fabric: &mut Fabric, inputs: &[Vec<f32>]) -> SimReduce;
 }
@@ -163,8 +224,12 @@ pub fn build_topology(kind: TopologyKind, workers: usize) -> Box<dyn Topology> {
         TopologyKind::Torus { rows, cols } => {
             Box::new(super::torus::Torus::new(workers, rows, cols))
         }
+        TopologyKind::Torus3 { x, y, z } => Box::new(super::torus3::Torus3::new(workers, x, y, z)),
         TopologyKind::Hier { groups } => {
             Box::new(super::hierarchy::Hierarchy::new(workers, groups))
+        }
+        TopologyKind::Dragonfly { groups } => {
+            Box::new(super::dragonfly::Dragonfly::new(workers, groups))
         }
     }
 }
@@ -203,11 +268,23 @@ pub fn degraded_topology(
             let topo = build_topology(TopologyKind::Torus { rows: 0, cols: 0 }, q);
             (topo, live, workers)
         }
+        TopologyKind::Torus3 { .. } => {
+            let topo = build_topology(TopologyKind::Torus3 { x: 0, y: 0, z: 0 }, q);
+            (topo, live, workers)
+        }
         TopologyKind::Hier { groups } => {
             // Keep the group count where possible; fewer survivors than
             // groups collapses to one group per survivor.
             let g = if groups == 0 { 0 } else { groups.min(q) };
             (build_topology(TopologyKind::Hier { groups: g }, q), live, workers)
+        }
+        TopologyKind::Dragonfly { groups } => {
+            let g = if groups == 0 { 0 } else { groups.min(q) };
+            (
+                build_topology(TopologyKind::Dragonfly { groups: g }, q),
+                live,
+                workers,
+            )
         }
         k => (build_topology(k, q), live, workers),
     }
@@ -228,11 +305,28 @@ impl FullMesh {
         assert!(workers > 0, "topology needs at least one worker");
         FullMesh { p: workers }
     }
+
+    /// Drive one gather (real or phantom payloads) through the event
+    /// loop — both `allgatherv` flavors run this identical code.
+    fn run_gather(&self, fabric: &mut Fabric, segs: SegPayloads, state: GatherState) -> SimGather {
+        let mut proto = MeshGather {
+            p: self.p,
+            segs,
+            state,
+        };
+        let time_ps = fabric.run(&mut proto);
+        SimGather {
+            gathered: proto.state.into_gathered(),
+            traffic: traffic_from(fabric, self.gather_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
 }
 
 struct MeshGather {
     p: usize,
-    segs: Vec<Vec<Vec<u8>>>,
+    segs: SegPayloads,
     state: GatherState,
 }
 
@@ -242,7 +336,7 @@ impl Protocol for MeshGather {
         for w in 0..self.p {
             for v in 0..self.p {
                 if v != w {
-                    for (si, sg) in self.segs[w].iter().enumerate() {
+                    for si in 0..self.segs.seg_count(w) {
                         out.push((
                             w,
                             v,
@@ -251,7 +345,7 @@ impl Protocol for MeshGather {
                                 seg: si as u32,
                                 hop: 0,
                                 tag: 0,
-                                payload: Payload::Bytes(sg.clone()),
+                                payload: self.segs.payload(w, si),
                             },
                         ));
                     }
@@ -262,9 +356,8 @@ impl Protocol for MeshGather {
     }
 
     fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
-        if let Payload::Bytes(b) = &msg.payload {
-            self.state.store(node, msg.origin, msg.seg as usize, b);
-        }
+        self.state
+            .store_payload(node, msg.origin, msg.seg as usize, &msg.payload);
         Vec::new()
     }
 }
@@ -326,18 +419,21 @@ impl Topology for FullMesh {
     fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
         assert_eq!(inputs.len(), self.p, "one input message per worker");
         let seg = fabric.segment_bytes();
-        let mut proto = MeshGather {
-            p: self.p,
-            segs: split_all(inputs, seg),
-            state: GatherState::new(inputs, seg),
-        };
-        let time_ps = fabric.run(&mut proto);
-        SimGather {
-            gathered: proto.state.into_gathered(),
-            traffic: traffic_from(fabric, self.gather_rounds()),
-            time_ps,
-            events: fabric.events(),
-        }
+        self.run_gather(
+            fabric,
+            SegPayloads::real(inputs, seg),
+            GatherState::new(inputs, seg),
+        )
+    }
+
+    fn allgatherv_sized(&self, fabric: &mut Fabric, sizes: &[u64]) -> SimGather {
+        assert_eq!(sizes.len(), self.p, "one size per worker");
+        let seg = fabric.segment_bytes();
+        self.run_gather(
+            fabric,
+            SegPayloads::phantom(sizes, seg),
+            GatherState::sized(sizes, seg),
+        )
     }
 
     fn allreduce(&self, fabric: &mut Fabric, inputs: &[Vec<f32>]) -> SimReduce {
@@ -407,8 +503,12 @@ mod tests {
             TopologyKind::Tree { branch: 8 },
             TopologyKind::Torus { rows: 0, cols: 0 },
             TopologyKind::Torus { rows: 4, cols: 2 },
+            TopologyKind::Torus3 { x: 0, y: 0, z: 0 },
+            TopologyKind::Torus3 { x: 4, y: 2, z: 2 },
             TopologyKind::Hier { groups: 0 },
             TopologyKind::Hier { groups: 3 },
+            TopologyKind::Dragonfly { groups: 0 },
+            TopologyKind::Dragonfly { groups: 4 },
         ] {
             assert_eq!(TopologyKind::parse(&k.label()).unwrap(), k);
         }
@@ -429,13 +529,16 @@ mod tests {
         assert!(TopologyKind::parse("tree:0").is_err());
         assert!(TopologyKind::parse("torus:0x2").is_err());
         assert!(TopologyKind::parse("torus:4").is_err());
+        assert!(TopologyKind::parse("torus3:4x4").is_err());
+        assert!(TopologyKind::parse("torus3:0x2x2").is_err());
         assert!(TopologyKind::parse("hier:0").is_err());
+        assert!(TopologyKind::parse("dragonfly:0").is_err());
     }
 
     #[test]
     fn parse_errors_enumerate_the_accepted_set() {
         let err = TopologyKind::parse("moebius").unwrap_err().to_string();
-        for form in ["ring", "full", "star", "tree", "torus", "hier"] {
+        for form in ["ring", "full", "star", "tree", "torus", "torus3", "hier", "dragonfly"] {
             assert!(err.contains(form), "'{form}' missing from: {err}");
         }
     }
@@ -447,6 +550,11 @@ mod tests {
         assert!(TopologyKind::Torus { rows: 0, cols: 0 }.validate(7).is_ok()); // auto
         assert!(TopologyKind::Hier { groups: 4 }.validate(3).is_err());
         assert!(TopologyKind::Hier { groups: 0 }.validate(3).is_ok()); // auto
+        assert!(TopologyKind::Torus3 { x: 2, y: 2, z: 2 }.validate(8).is_ok());
+        assert!(TopologyKind::Torus3 { x: 2, y: 2, z: 2 }.validate(9).is_err());
+        assert!(TopologyKind::Torus3 { x: 0, y: 0, z: 0 }.validate(9).is_ok()); // auto
+        assert!(TopologyKind::Dragonfly { groups: 4 }.validate(3).is_err());
+        assert!(TopologyKind::Dragonfly { groups: 0 }.validate(3).is_ok()); // auto
         assert!(TopologyKind::Ring.validate(0).is_err());
     }
 
@@ -473,6 +581,13 @@ mod tests {
         // Hierarchy clamps its group count to the survivor count.
         let (topo, _, _) = degraded_topology(TopologyKind::Hier { groups: 3 }, 4, &[0, 2]);
         assert_eq!(topo.kind(), TopologyKind::Hier { groups: 2 });
+        // A 3-D torus re-tiles over the survivors like the 2-D one.
+        let (topo, _, _) =
+            degraded_topology(TopologyKind::Torus3 { x: 2, y: 2, z: 2 }, 8, &[7]);
+        assert_eq!(topo.workers(), 7);
+        // Dragonfly clamps its group count like hier.
+        let (topo, _, _) = degraded_topology(TopologyKind::Dragonfly { groups: 3 }, 4, &[0, 2]);
+        assert_eq!(topo.kind(), TopologyKind::Dragonfly { groups: 2 });
     }
 
     #[test]

@@ -38,7 +38,7 @@
 //! assert_eq!(out.gathered[5][0], inputs[0]);
 //! ```
 
-use super::collectives::{split_all, traffic_from, GatherState, SimGather, SimReduce};
+use super::collectives::{traffic_from, GatherState, SegPayloads, SimGather, SimReduce};
 use super::topology::{Topology, TopologyKind};
 use super::{Fabric, Msg, Payload, Protocol};
 use crate::comm::Traffic;
@@ -106,11 +106,28 @@ impl Torus {
     fn down(&self, w: usize) -> usize {
         ((self.row_of(w) + 1) % self.rows) * self.cols + self.col_of(w)
     }
+
+    /// Drive one gather (real or phantom payloads) through the event
+    /// loop — both `allgatherv` flavors run this identical code.
+    fn run_gather(&self, fabric: &mut Fabric, segs: SegPayloads, state: GatherState) -> SimGather {
+        let mut proto = TorusGather {
+            t: self,
+            segs,
+            state,
+        };
+        let time_ps = if self.p() > 1 { fabric.run(&mut proto) } else { 0 };
+        SimGather {
+            gathered: proto.state.into_gathered(),
+            traffic: traffic_from(fabric, self.gather_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
 }
 
 struct TorusGather<'t> {
     t: &'t Torus,
-    segs: Vec<Vec<Vec<u8>>>,
+    segs: SegPayloads,
     state: GatherState,
 }
 
@@ -118,8 +135,8 @@ impl Protocol for TorusGather<'_> {
     fn start(&mut self) -> Vec<(usize, usize, Msg)> {
         let mut out = Vec::new();
         for w in 0..self.t.p() {
-            for (si, sg) in self.segs[w].iter().enumerate() {
-                let payload = Payload::Bytes(sg.clone());
+            for si in 0..self.segs.seg_count(w) {
+                let payload = self.segs.payload(w, si);
                 if self.t.cols > 1 {
                     out.push((
                         w,
@@ -152,10 +169,8 @@ impl Protocol for TorusGather<'_> {
     }
 
     fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
-        let Payload::Bytes(b) = &msg.payload else {
-            unreachable!("gather protocol only moves bytes")
-        };
-        self.state.store(node, msg.origin, msg.seg as usize, b);
+        self.state
+            .store_payload(node, msg.origin, msg.seg as usize, &msg.payload);
         let mut out = Vec::new();
         match msg.tag {
             TAG_ROW => {
@@ -334,18 +349,21 @@ impl Topology for Torus {
     fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
         assert_eq!(inputs.len(), self.p(), "one input message per worker");
         let seg = fabric.segment_bytes();
-        let mut proto = TorusGather {
-            t: self,
-            segs: split_all(inputs, seg),
-            state: GatherState::new(inputs, seg),
-        };
-        let time_ps = if self.p() > 1 { fabric.run(&mut proto) } else { 0 };
-        SimGather {
-            gathered: proto.state.into_gathered(),
-            traffic: traffic_from(fabric, self.gather_rounds()),
-            time_ps,
-            events: fabric.events(),
-        }
+        self.run_gather(
+            fabric,
+            SegPayloads::real(inputs, seg),
+            GatherState::new(inputs, seg),
+        )
+    }
+
+    fn allgatherv_sized(&self, fabric: &mut Fabric, sizes: &[u64]) -> SimGather {
+        assert_eq!(sizes.len(), self.p(), "one size per worker");
+        let seg = fabric.segment_bytes();
+        self.run_gather(
+            fabric,
+            SegPayloads::phantom(sizes, seg),
+            GatherState::sized(sizes, seg),
+        )
     }
 
     fn allreduce(&self, fabric: &mut Fabric, inputs: &[Vec<f32>]) -> SimReduce {

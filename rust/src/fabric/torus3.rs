@@ -1,0 +1,616 @@
+//! 3-D torus topology: an `X × Y × Z` wraparound grid, the fabric of
+//! TPU-v4-class pods and HPC machines like the K computer.
+//!
+//! Node `(x, y, z)` is id `z·X·Y + y·X + x`. Allgatherv generalizes
+//! the 2-D torus's two pipelined ring phases to three: the origin
+//! circulates its block along its **x-line** (`X − 1` hops), every
+//! node holding the block injects it down its **y-line** (`Y − 1`
+//! hops), and every node of the resulting z-plane injects it along
+//! its **z-line** (`Z − 1` hops). Each block is delivered exactly
+//! `XYZ − 1` times — the flat ring's per-block optimum — while the
+//! longest route shrinks to `(X−1) + (Y−1) + (Z−1)` hops. Phases
+//! overlap per block and per segment exactly as in the 2-D torus; a
+//! `Z = 1` torus3 runs the *identical* event schedule as the
+//! corresponding 2-D `torus` (asserted tick-for-tick in the tests).
+//!
+//! Allreduce is dimension-wise: exchange within the x-line and sum in
+//! ascending x order, exchange the line-sums within the y-line (sum
+//! ascending y), then the plane-sums along z (sum ascending z) —
+//! `(X−1) + (Y−1) + (Z−1)` vector sends per node.
+//!
+//! `torus3` (no dims) picks a near-cubic factorization
+//! ([`auto_dims3`]); `torus3:XxYxZ` pins the shape and requires
+//! `X·Y·Z` workers.
+
+use super::collectives::{traffic_from, GatherState, SegPayloads, SimGather, SimReduce};
+use super::topology::{Topology, TopologyKind};
+use super::torus::auto_dims;
+use super::{Fabric, Msg, Payload, Protocol};
+use crate::comm::Traffic;
+
+/// Block circulating along the origin's x-line.
+const TAG_X: u8 = 0;
+/// Block circulating down a y-line.
+const TAG_Y: u8 = 1;
+/// Block circulating along a z-line.
+const TAG_Z: u8 = 2;
+
+/// A near-cubic `x × y × z = p` factorization: `x` is the largest
+/// divisor of `p` not exceeding `∛p`, and the remainder splits
+/// near-square ([`auto_dims`]). Primes degenerate to `1 × 1 × p`
+/// (a ring); `p = 4096` gives `16 × 16 × 16`.
+pub fn auto_dims3(p: usize) -> (usize, usize, usize) {
+    assert!(p > 0, "topology needs at least one worker");
+    let mut x = (p as f64).cbrt().round() as usize;
+    x = x.min(p).max(1);
+    while x > 1 && p % x != 0 {
+        x -= 1;
+    }
+    let (y, z) = auto_dims(p / x);
+    (x, y, z)
+}
+
+pub struct Torus3 {
+    x: usize,
+    y: usize,
+    z: usize,
+}
+
+impl Torus3 {
+    /// Dims of 0 mean "auto" (see [`auto_dims3`]); explicit dims must
+    /// factor the worker count exactly.
+    pub fn new(workers: usize, x: usize, y: usize, z: usize) -> Torus3 {
+        assert!(workers > 0, "topology needs at least one worker");
+        let (x, y, z) = if x == 0 || y == 0 || z == 0 {
+            auto_dims3(workers)
+        } else {
+            (x, y, z)
+        };
+        assert_eq!(
+            x * y * z,
+            workers,
+            "torus3 {x}x{y}x{z} needs {} workers, got {workers}",
+            x * y * z
+        );
+        Torus3 { x, y, z }
+    }
+
+    fn p(&self) -> usize {
+        self.x * self.y * self.z
+    }
+
+    fn x_of(&self, w: usize) -> usize {
+        w % self.x
+    }
+
+    fn y_of(&self, w: usize) -> usize {
+        (w / self.x) % self.y
+    }
+
+    fn z_of(&self, w: usize) -> usize {
+        w / (self.x * self.y)
+    }
+
+    fn id(&self, x: usize, y: usize, z: usize) -> usize {
+        z * self.x * self.y + y * self.x + x
+    }
+
+    /// Next neighbour along the x-line (wraps).
+    fn xnext(&self, w: usize) -> usize {
+        self.id((self.x_of(w) + 1) % self.x, self.y_of(w), self.z_of(w))
+    }
+
+    /// Next neighbour along the y-line (wraps).
+    fn ynext(&self, w: usize) -> usize {
+        self.id(self.x_of(w), (self.y_of(w) + 1) % self.y, self.z_of(w))
+    }
+
+    /// Next neighbour along the z-line (wraps).
+    fn znext(&self, w: usize) -> usize {
+        self.id(self.x_of(w), self.y_of(w), (self.z_of(w) + 1) % self.z)
+    }
+
+    /// Drive one gather (real or phantom payloads) through the event
+    /// loop — both `allgatherv` flavors run this identical code.
+    fn run_gather(&self, fabric: &mut Fabric, segs: SegPayloads, state: GatherState) -> SimGather {
+        let mut proto = Torus3Gather {
+            t: self,
+            segs,
+            state,
+        };
+        let time_ps = if self.p() > 1 { fabric.run(&mut proto) } else { 0 };
+        SimGather {
+            gathered: proto.state.into_gathered(),
+            traffic: traffic_from(fabric, self.gather_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+}
+
+struct Torus3Gather<'t> {
+    t: &'t Torus3,
+    segs: SegPayloads,
+    state: GatherState,
+}
+
+impl Protocol for Torus3Gather<'_> {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        let mut out = Vec::new();
+        for w in 0..self.t.p() {
+            for si in 0..self.segs.seg_count(w) {
+                let payload = self.segs.payload(w, si);
+                if self.t.x > 1 {
+                    out.push((
+                        w,
+                        self.t.xnext(w),
+                        Msg {
+                            origin: w,
+                            seg: si as u32,
+                            hop: 1,
+                            tag: TAG_X,
+                            payload: payload.clone(),
+                        },
+                    ));
+                }
+                if self.t.y > 1 {
+                    out.push((
+                        w,
+                        self.t.ynext(w),
+                        Msg {
+                            origin: w,
+                            seg: si as u32,
+                            hop: 1,
+                            tag: TAG_Y,
+                            payload: payload.clone(),
+                        },
+                    ));
+                }
+                if self.t.z > 1 {
+                    out.push((
+                        w,
+                        self.t.znext(w),
+                        Msg {
+                            origin: w,
+                            seg: si as u32,
+                            hop: 1,
+                            tag: TAG_Z,
+                            payload,
+                        },
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        self.state
+            .store_payload(node, msg.origin, msg.seg as usize, &msg.payload);
+        let fwd = |dst: usize, hop: u32, tag: u8| {
+            (
+                dst,
+                Msg {
+                    origin: msg.origin,
+                    seg: msg.seg,
+                    hop,
+                    tag,
+                    payload: msg.payload.clone(),
+                },
+            )
+        };
+        let mut out = Vec::new();
+        match msg.tag {
+            TAG_X => {
+                // Keep the x circulation going…
+                if msg.hop < (self.t.x - 1) as u32 {
+                    out.push(fwd(self.t.xnext(node), msg.hop + 1, TAG_X));
+                }
+                // …and inject the block into this node's y- and z-lines.
+                if self.t.y > 1 {
+                    out.push(fwd(self.t.ynext(node), 1, TAG_Y));
+                }
+                if self.t.z > 1 {
+                    out.push(fwd(self.t.znext(node), 1, TAG_Z));
+                }
+            }
+            TAG_Y => {
+                if msg.hop < (self.t.y - 1) as u32 {
+                    out.push(fwd(self.t.ynext(node), msg.hop + 1, TAG_Y));
+                }
+                if self.t.z > 1 {
+                    out.push(fwd(self.t.znext(node), 1, TAG_Z));
+                }
+            }
+            TAG_Z => {
+                if msg.hop < (self.t.z - 1) as u32 {
+                    out.push(fwd(self.t.znext(node), msg.hop + 1, TAG_Z));
+                }
+            }
+            other => unreachable!("unknown torus3 gather tag {other}"),
+        }
+        out
+    }
+}
+
+struct Torus3Reduce<'t> {
+    t: &'t Torus3,
+    inputs: Vec<Vec<f32>>,
+    /// X-phase vectors at each node, by x index of the sender.
+    x_got: Vec<Vec<Option<Vec<f32>>>>,
+    /// Y-phase line-sums at each node, by y index of the sender.
+    y_got: Vec<Vec<Option<Vec<f32>>>>,
+    /// Z-phase plane-sums at each node, by z index of the sender.
+    z_got: Vec<Vec<Option<Vec<f32>>>>,
+}
+
+impl Torus3Reduce<'_> {
+    fn sum_slots(slots: &[Option<Vec<f32>>], n: usize) -> Vec<f32> {
+        let mut sum = vec![0.0f32; n];
+        for slot in slots {
+            let v = slot.as_ref().expect("reduce vector missing");
+            for (k, x) in v.iter().enumerate() {
+                sum[k] += x;
+            }
+        }
+        sum
+    }
+
+    /// The x phase finished at `node`: record its line-sum and fan it
+    /// down the y-line; a `Y = 1` line cascades straight to z.
+    fn x_ready(&mut self, node: usize, hop: u32) -> Vec<(usize, Msg)> {
+        let n = self.inputs[node].len();
+        let sum = Self::sum_slots(&self.x_got[node], n);
+        let y = self.t.y_of(node);
+        self.y_got[node][y] = Some(sum.clone());
+        let payload = Payload::F32(sum);
+        let mut out: Vec<(usize, Msg)> = (0..self.t.y)
+            .filter(|&y2| y2 != y)
+            .map(|y2| {
+                (
+                    self.t.id(self.t.x_of(node), y2, self.t.z_of(node)),
+                    Msg {
+                        origin: node,
+                        seg: 0,
+                        hop,
+                        tag: TAG_Y,
+                        payload: payload.clone(),
+                    },
+                )
+            })
+            .collect();
+        if self.y_got[node].iter().all(|s| s.is_some()) {
+            out.extend(self.y_ready(node, hop + 1));
+        }
+        out
+    }
+
+    /// The y phase finished at `node`: record its plane-sum and fan it
+    /// along the z-line.
+    fn y_ready(&mut self, node: usize, hop: u32) -> Vec<(usize, Msg)> {
+        let n = self.inputs[node].len();
+        let sum = Self::sum_slots(&self.y_got[node], n);
+        let z = self.t.z_of(node);
+        self.z_got[node][z] = Some(sum.clone());
+        let payload = Payload::F32(sum);
+        (0..self.t.z)
+            .filter(|&z2| z2 != z)
+            .map(|z2| {
+                (
+                    self.t.id(self.t.x_of(node), self.t.y_of(node), z2),
+                    Msg {
+                        origin: node,
+                        seg: 0,
+                        hop,
+                        tag: TAG_Z,
+                        payload: payload.clone(),
+                    },
+                )
+            })
+            .collect()
+    }
+}
+
+impl Protocol for Torus3Reduce<'_> {
+    fn start(&mut self) -> Vec<(usize, usize, Msg)> {
+        let mut out = Vec::new();
+        for w in 0..self.t.p() {
+            let payload = Payload::F32(self.inputs[w].clone());
+            for x2 in 0..self.t.x {
+                let peer = self.t.id(x2, self.t.y_of(w), self.t.z_of(w));
+                if peer != w {
+                    out.push((
+                        w,
+                        peer,
+                        Msg {
+                            origin: w,
+                            seg: 0,
+                            hop: 1,
+                            tag: TAG_X,
+                            payload: payload.clone(),
+                        },
+                    ));
+                }
+            }
+        }
+        // Single-node x-lines are complete at t = 0.
+        if self.t.x == 1 {
+            for w in 0..self.t.p() {
+                for (dst, msg) in self.x_ready(w, 1) {
+                    out.push((w, dst, msg));
+                }
+            }
+        }
+        out
+    }
+
+    fn on_deliver(&mut self, node: usize, msg: &Msg) -> Vec<(usize, Msg)> {
+        let Payload::F32(v) = &msg.payload else {
+            unreachable!("reduce protocol only moves f32 vectors")
+        };
+        match msg.tag {
+            TAG_X => {
+                self.x_got[node][self.t.x_of(msg.origin)] = Some(v.clone());
+                if self.x_got[node].iter().all(|s| s.is_some()) {
+                    self.x_ready(node, msg.hop + 1)
+                } else {
+                    Vec::new()
+                }
+            }
+            TAG_Y => {
+                self.y_got[node][self.t.y_of(msg.origin)] = Some(v.clone());
+                if self.y_got[node].iter().all(|s| s.is_some()) {
+                    self.y_ready(node, msg.hop + 1)
+                } else {
+                    Vec::new()
+                }
+            }
+            TAG_Z => {
+                self.z_got[node][self.t.z_of(msg.origin)] = Some(v.clone());
+                Vec::new()
+            }
+            other => unreachable!("unknown torus3 reduce tag {other}"),
+        }
+    }
+}
+
+impl Topology for Torus3 {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Torus3 {
+            x: self.x,
+            y: self.y,
+            z: self.z,
+        }
+    }
+
+    fn workers(&self) -> usize {
+        self.p()
+    }
+
+    fn gather_rounds(&self) -> u32 {
+        (self.x - 1 + self.y - 1 + self.z - 1) as u32
+    }
+
+    fn reduce_rounds(&self) -> u32 {
+        u32::from(self.x > 1) + u32::from(self.y > 1) + u32::from(self.z > 1)
+    }
+
+    fn allgatherv(&self, fabric: &mut Fabric, inputs: &[Vec<u8>]) -> SimGather {
+        assert_eq!(inputs.len(), self.p(), "one input message per worker");
+        let seg = fabric.segment_bytes();
+        self.run_gather(
+            fabric,
+            SegPayloads::real(inputs, seg),
+            GatherState::new(inputs, seg),
+        )
+    }
+
+    fn allgatherv_sized(&self, fabric: &mut Fabric, sizes: &[u64]) -> SimGather {
+        assert_eq!(sizes.len(), self.p(), "one size per worker");
+        let seg = fabric.segment_bytes();
+        self.run_gather(
+            fabric,
+            SegPayloads::phantom(sizes, seg),
+            GatherState::sized(sizes, seg),
+        )
+    }
+
+    fn allreduce(&self, fabric: &mut Fabric, inputs: &[Vec<f32>]) -> SimReduce {
+        assert_eq!(inputs.len(), self.p());
+        let n = inputs[0].len();
+        assert!(inputs.iter().all(|v| v.len() == n), "length mismatch");
+        if self.p() == 1 {
+            return SimReduce {
+                reduced: vec![inputs[0].clone()],
+                traffic: Traffic {
+                    bytes_sent_per_node: vec![0],
+                    rounds: 0,
+                },
+                time_ps: 0,
+                events: 0,
+            };
+        }
+        let mut proto = Torus3Reduce {
+            t: self,
+            inputs: inputs.to_vec(),
+            x_got: (0..self.p())
+                .map(|w| {
+                    let mut line = vec![None; self.x];
+                    line[self.x_of(w)] = Some(inputs[w].clone());
+                    line
+                })
+                .collect(),
+            y_got: vec![vec![None; self.y]; self.p()],
+            z_got: vec![vec![None; self.z]; self.p()],
+        };
+        let time_ps = fabric.run(&mut proto);
+        let reduced: Vec<Vec<f32>> = proto
+            .z_got
+            .iter()
+            .map(|slots| Torus3Reduce::sum_slots(slots, n))
+            .collect();
+        SimReduce {
+            reduced,
+            traffic: traffic_from(fabric, self.reduce_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::torus::Torus;
+    use crate::fabric::{FabricConfig, LinkSpec};
+
+    fn fabric(nodes: usize) -> Fabric {
+        Fabric::for_config(
+            &FabricConfig {
+                link: LinkSpec {
+                    bandwidth_gbps: 1.0,
+                    latency_us: 1.0,
+                    jitter_us: 0.0,
+                },
+                ..FabricConfig::default()
+            },
+            nodes,
+        )
+    }
+
+    #[test]
+    fn auto_dims3_prefers_cubic() {
+        assert_eq!(auto_dims3(1), (1, 1, 1));
+        assert_eq!(auto_dims3(8), (2, 2, 2));
+        assert_eq!(auto_dims3(12), (2, 2, 3));
+        assert_eq!(auto_dims3(64), (4, 4, 4));
+        assert_eq!(auto_dims3(4096), (16, 16, 16));
+        assert_eq!(auto_dims3(7), (1, 1, 7)); // prime ⇒ ring
+    }
+
+    #[test]
+    #[should_panic(expected = "needs 8 workers")]
+    fn explicit_dims_must_factor_workers() {
+        Torus3::new(9, 2, 2, 2);
+    }
+
+    #[test]
+    fn coordinate_math_round_trips() {
+        let t = Torus3::new(24, 2, 3, 4);
+        for w in 0..24 {
+            assert_eq!(t.id(t.x_of(w), t.y_of(w), t.z_of(w)), w);
+        }
+        assert_eq!(t.xnext(1), 0); // x wrap
+        assert_eq!(t.ynext(4), 0); // y wrap
+        assert_eq!(t.znext(18), 0); // z wrap
+    }
+
+    #[test]
+    fn gather_delivers_for_awkward_shapes() {
+        for (x, y, z) in [
+            (1usize, 1usize, 1usize),
+            (1, 1, 5),
+            (5, 1, 1),
+            (2, 2, 2),
+            (2, 3, 2),
+            (1, 3, 2),
+        ] {
+            let p = x * y * z;
+            let inputs: Vec<Vec<u8>> =
+                (0..p).map(|w| vec![w as u8 + 1; (w * 17) % 31 + 1]).collect();
+            let topo = Torus3::new(p, x, y, z);
+            let mut f = fabric(topo.node_count());
+            let res = topo.allgatherv(&mut f, &inputs);
+            for dst in 0..p {
+                for src in 0..p {
+                    assert_eq!(
+                        res.gathered[dst][src], inputs[src],
+                        "{x}x{y}x{z} dst={dst} src={src}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_block_traffic_is_p_minus_1_sends() {
+        let (x, y, z) = (2, 3, 2);
+        let p = x * y * z;
+        let inputs: Vec<Vec<u8>> = (0..p).map(|_| vec![9u8; 10]).collect();
+        let topo = Torus3::new(p, x, y, z);
+        let mut f = fabric(topo.node_count());
+        let res = topo.allgatherv(&mut f, &inputs);
+        assert_eq!(res.traffic.total_bytes(), (p * (p - 1) * 10) as u64);
+        assert_eq!(res.events as usize, p * (p - 1));
+        assert_eq!(res.traffic.rounds, (x - 1 + y - 1 + z - 1) as u32);
+    }
+
+    #[test]
+    fn reduce_matches_sum_for_awkward_shapes() {
+        for (x, y, z) in [
+            (1usize, 1usize, 1usize),
+            (1, 4, 1),
+            (4, 1, 1),
+            (1, 1, 4),
+            (2, 2, 2),
+            (2, 3, 2),
+        ] {
+            let p = x * y * z;
+            let inputs: Vec<Vec<f32>> = (0..p)
+                .map(|w| (0..5).map(|k| (w * 5 + k) as f32 * 0.25).collect())
+                .collect();
+            let topo = Torus3::new(p, x, y, z);
+            let mut f = fabric(topo.node_count());
+            let res = topo.allreduce(&mut f, &inputs);
+            for k in 0..5 {
+                let want: f32 = inputs.iter().map(|v| v[k]).sum();
+                for node in 0..p {
+                    let got = res.reduced[node][k];
+                    assert!(
+                        (got - want).abs() < 1e-3,
+                        "{x}x{y}x{z} node={node} k={k}: {got} != {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// A `Z = 1` torus3 is the 2-D torus with `X = cols`, `Y = rows`
+    /// under the identity id mapping — same sends in the same order,
+    /// so bytes, traffic, events, AND the simulated clock must agree
+    /// exactly.
+    #[test]
+    fn z1_torus3_is_tick_identical_to_the_2d_torus() {
+        let (rows, cols) = (3, 4);
+        let p = rows * cols;
+        let inputs: Vec<Vec<u8>> =
+            (0..p).map(|w| vec![w as u8 + 1; (w * 13) % 41 + 1]).collect();
+        let t2 = Torus::new(p, rows, cols);
+        let t3 = Torus3::new(p, cols, rows, 1);
+        let mut f2 = fabric(p);
+        let mut f3 = fabric(p);
+        let g2 = t2.allgatherv(&mut f2, &inputs);
+        let g3 = t3.allgatherv(&mut f3, &inputs);
+        assert_eq!(g2.gathered, g3.gathered, "gathered bytes diverged");
+        assert_eq!(g2.time_ps, g3.time_ps, "simulated clocks diverged");
+        assert_eq!(g2.events, g3.events);
+        assert_eq!(
+            g2.traffic.bytes_sent_per_node,
+            g3.traffic.bytes_sent_per_node
+        );
+
+        let vecs: Vec<Vec<f32>> = (0..p)
+            .map(|w| (0..5).map(|k| (w * 5 + k) as f32 * 0.25).collect())
+            .collect();
+        let mut f2 = fabric(p);
+        let mut f3 = fabric(p);
+        let r2 = t2.allreduce(&mut f2, &vecs);
+        let r3 = t3.allreduce(&mut f3, &vecs);
+        for (a, b) in r2.reduced.iter().zip(r3.reduced.iter()) {
+            let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ab, bb, "reduced totals diverged bit-wise");
+        }
+        assert_eq!(r2.time_ps, r3.time_ps);
+    }
+}

@@ -92,6 +92,19 @@ impl Topology for Tree {
         }
     }
 
+    fn allgatherv_sized(&self, fabric: &mut Fabric, sizes: &[u64]) -> SimGather {
+        assert_eq!(sizes.len(), self.p, "one size per worker");
+        let seg = fabric.segment_bytes();
+        let mut proto = GroupGather::sized(&self.spans, sizes, seg);
+        let time_ps = if self.p > 1 { fabric.run(&mut proto) } else { 0 };
+        SimGather {
+            gathered: proto.into_gathered(),
+            traffic: traffic_from(fabric, self.gather_rounds()),
+            time_ps,
+            events: fabric.events(),
+        }
+    }
+
     fn allreduce(&self, fabric: &mut Fabric, inputs: &[Vec<f32>]) -> SimReduce {
         assert_eq!(inputs.len(), self.p);
         let n = inputs[0].len();

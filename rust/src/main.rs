@@ -9,6 +9,7 @@
 //! repro fig3   [--out fig3.csv]          # scatter data from both tables
 //! repro costmodel                         # Section-5 (A5) analysis
 //! repro fabric-sweep                      # simulated cluster sweep (F1)
+//! repro scale-sweep                       # 256→4096-node event-loop bench
 //! repro chaos-sweep                       # fault-injection sweep (chaos fabric)
 //! repro inspect                           # artifact manifest summary
 //! ```
@@ -20,7 +21,7 @@ use vgc::config::TrainConfig;
 use vgc::coordinator::Trainer;
 use vgc::experiments::{
     self, AdaptiveSweepOpts, BenchCodecsOpts, BenchPipelineOpts, ChaosSweepOpts,
-    FabricSweepOpts,
+    FabricSweepOpts, ScaleSweepOpts,
 };
 use vgc::fabric::{build_topology, FabricConfig, Straggler, TopologyKind};
 use vgc::runtime::{Client, Manifest};
@@ -85,6 +86,13 @@ USAGE:
                   [--latency-us L] [--bucket-bytes N] [--target F]
                   [--compute-ns F] [--encode-ns F] [--seed S]
                   [--out FILE.json] [--md FILE.md]
+  repro scale-sweep
+                  [--topologies ring,torus,torus3,hier,dragonfly,..]
+                  [--workers 256,1024,4096] [--message-bytes N]
+                  [--bandwidth-gbps G] [--latency-us L]
+                  [--inter-rack-gbps G]  (hier/dragonfly uplink)
+                  [--seed S] [--assert-events-per-sec F]
+                  [--assert-wall-ms-max F] [--out FILE.json] [--md FILE.md]
   repro bench-codecs
                   [--n PARAMS] [--group SIZE] [--workers P]
                   [--threads T1,T2,..] [--codecs SPEC+SPEC+..]
@@ -112,8 +120,10 @@ Codec SPECs: none | vgc:alpha=A[,zeta=Z] | strom:tau=T |
              hybrid:tau=T,alpha=A | qsgd:bits=B,d=D | terngrad
              (fabric-sweep separates codec specs with '+')
 LR SCHEDs:   const:LR | step:LR,FACTOR,EVERY | warmup:LR,STEPS
-Topologies:  ring | full | star | tree[:branch] | torus[:RxC] | hier[:groups]
-             (see docs/TOPOLOGIES.md for cost formulas and guidance)
+Topologies:  ring | full | star | tree[:branch] | torus[:RxC] |
+             torus3[:XxYxZ] | hier[:groups] | dragonfly[:groups]
+             (see docs/TOPOLOGIES.md for cost formulas and guidance,
+              docs/SCALE.md for 4096-node sweeps)
 Fault SPECs: crash:N@S[+D] | flap:A-B@T1..T2 | drop:A-B:R | corrupt:A-B:R
              (comma-separated; see docs/FAULTS.md for semantics)
 ";
@@ -150,6 +160,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "fabric-sweep" => cmd_fabric_sweep(&args),
+        "scale-sweep" => cmd_scale_sweep(&args),
         "chaos-sweep" => cmd_chaos_sweep(&args),
         "adaptive-sweep" => cmd_adaptive_sweep(&args),
         "bench-codecs" => cmd_bench_codecs(&args),
@@ -319,6 +330,59 @@ fn cmd_fabric_sweep(args: &Args) -> Result<()> {
         std::fs::write(path, experiments::fabric_sweep_json(&rows).to_string())?;
         println!("\nresults written to {path}");
     }
+    Ok(())
+}
+
+fn cmd_scale_sweep(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "topologies", "workers", "message-bytes", "bandwidth-gbps", "latency-us",
+        "inter-rack-gbps", "seed", "assert-events-per-sec", "assert-wall-ms-max",
+        "out", "md",
+    ])?;
+    let mut opts = ScaleSweepOpts::default();
+    let topologies = args
+        .list("topologies")
+        .iter()
+        .map(|t| TopologyKind::parse(t))
+        .collect::<Result<Vec<_>>>()?;
+    if !topologies.is_empty() {
+        opts.topologies = topologies;
+    }
+    let workers = args.parse_list::<usize>("workers")?;
+    if !workers.is_empty() {
+        opts.workers = workers;
+    }
+    opts.message_bytes = args.parse_or("message-bytes", opts.message_bytes)?;
+    opts.bandwidth_gbps = args.parse_or("bandwidth-gbps", opts.bandwidth_gbps)?;
+    opts.latency_us = args.parse_or("latency-us", opts.latency_us)?;
+    if args.has("inter-rack-gbps") {
+        opts.inter_rack_gbps = Some(args.parse_or("inter-rack-gbps", 1.0f64)?);
+    }
+    opts.seed = args.parse_or("seed", opts.seed)?;
+    experiments::validate_scale(&opts)?;
+
+    let rows = experiments::scale_sweep(&opts);
+    let md = experiments::scale_sweep_markdown(&opts, &rows);
+    print!("{md}");
+    if let Some(path) = args.get("md") {
+        std::fs::write(path, &md)?;
+        println!("\nmarkdown written to {path}");
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, experiments::scale_sweep_json(&opts, &rows).to_string())?;
+        println!("\nresults written to {path}");
+    }
+    // CI gate: fail loudly after the report is printed/written so the
+    // offending numbers are always visible in the log.
+    let floor = match args.get("assert-events-per-sec") {
+        Some(_) => Some(args.parse_or("assert-events-per-sec", 0.0f64)?),
+        None => None,
+    };
+    let ceiling = match args.get("assert-wall-ms-max") {
+        Some(_) => Some(args.parse_or("assert-wall-ms-max", 0.0f64)?),
+        None => None,
+    };
+    experiments::enforce_scale(&rows, floor, ceiling)?;
     Ok(())
 }
 

@@ -1,5 +1,5 @@
 //! Counting global allocator — the §Perf zero-allocation contract's
-//! measuring stick.
+//! measuring stick, plus live/peak byte tracking for the scale sweep.
 //!
 //! Binaries (and the `alloc_steady` integration test) opt in with
 //!
@@ -9,22 +9,34 @@
 //! ```
 //!
 //! after which [`allocations`] reports the cumulative number of heap
-//! allocation events (alloc / alloc_zeroed / realloc) process-wide.
-//! `repro bench-codecs` samples the counter around steady-state codec
-//! steps to *record* each path's allocation behavior (the legacy
-//! serial path allocates per message by design; the engine's reused
-//! buffers do not). The zero-allocation proof for the reworked kernels
-//! themselves lives in `tests/alloc_steady.rs`, which drives
+//! allocation events (alloc / alloc_zeroed / realloc) process-wide,
+//! and [`live_bytes`]/[`peak_bytes`] the current and high-water heap
+//! footprint. `repro bench-codecs` samples the event counter around
+//! steady-state codec steps to *record* each path's allocation
+//! behavior (the legacy serial path allocates per message by design;
+//! the engine's reused buffers do not); `repro scale-sweep` samples
+//! the peak counter around each simulated cell to report peak memory.
+//! The zero-allocation proof for the reworked kernels themselves lives
+//! in `tests/alloc_steady.rs`, which drives
 //! `encode_step_into`/`decode_entries` directly. When the counter was
-//! never installed it stays 0 and the bench reports allocation counts
-//! as unavailable.
+//! never installed everything stays 0 and the reports mark the numbers
+//! unavailable.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+static LIVE_BYTES: AtomicU64 = AtomicU64::new(0);
+static PEAK_BYTES: AtomicU64 = AtomicU64::new(0);
 
-/// Thin wrapper over [`System`] that counts allocation events.
+/// Record `size` freshly allocated bytes and bump the high-water mark.
+fn credit(size: usize) {
+    let live = LIVE_BYTES.fetch_add(size as u64, Ordering::Relaxed) + size as u64;
+    PEAK_BYTES.fetch_max(live, Ordering::Relaxed);
+}
+
+/// Thin wrapper over [`System`] that counts allocation events and
+/// tracks live/peak bytes.
 pub struct CountingAlloc;
 
 impl CountingAlloc {
@@ -42,20 +54,34 @@ impl Default for CountingAlloc {
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            credit(layout.size());
+        }
+        p
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            credit(layout.size());
+        }
+        p
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            LIVE_BYTES.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+            credit(new_size);
+        }
+        p
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE_BYTES.fetch_sub(layout.size() as u64, Ordering::Relaxed);
         System.dealloc(ptr, layout)
     }
 }
@@ -64,6 +90,23 @@ unsafe impl GlobalAlloc for CountingAlloc {
 /// allocator is not installed as `#[global_allocator]`).
 pub fn allocations() -> u64 {
     ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Bytes currently allocated (0 when the counter is not installed).
+pub fn live_bytes() -> u64 {
+    LIVE_BYTES.load(Ordering::Relaxed)
+}
+
+/// High-water heap footprint since process start or the last
+/// [`reset_peak`] (0 when the counter is not installed).
+pub fn peak_bytes() -> u64 {
+    PEAK_BYTES.load(Ordering::Relaxed)
+}
+
+/// Re-arm the high-water mark at the current live footprint, so a
+/// caller can attribute a peak to one phase (per scale-sweep cell).
+pub fn reset_peak() {
+    PEAK_BYTES.store(LIVE_BYTES.load(Ordering::Relaxed), Ordering::Relaxed);
 }
 
 /// True once any allocation has been observed — i.e. the counting

@@ -16,9 +16,20 @@
 //!   port-work brackets (`costmodel::star_gather_time_bounds` et al.)
 //!   for random sizes, branches, group counts, and uplink rates;
 //! * the trainer-facing `comm::allgatherv` front honors the configured
-//!   topology (same bytes, topology-shaped timing).
+//!   topology (same bytes, topology-shaped timing);
+//! * the analytic-vs-sim crosscheck holds at scale: 1024- and
+//!   2048-node ring/torus/hier gathers (phantom payloads) match the
+//!   closed-form byte counts exactly, the ring lands inside an
+//!   asserted fraction of the cost model's `T_v`, and the hierarchy
+//!   stays inside its port-work bracket;
+//! * `SimClock` tie-breaking is deterministic at 10⁵⁺ pending events —
+//!   the lane queues, the overflow heap, and any mix of the two pop
+//!   the same (time, insertion-order) stream;
+//! * a 1024-node hierarchy survives a crashed node through
+//!   `allgatherv_faulty` (route-around, masked bit-identity) and runs
+//!   `allgatherv_overlapped` with overlapped ≤ phased.
 
-use vgc::comm::allgatherv::{allgatherv, ring_allgatherv};
+use vgc::comm::allgatherv::{allgatherv, allgatherv_faulty, allgatherv_overlapped, ring_allgatherv};
 use vgc::comm::costmodel::{
     hier_gather_time_bounds, hier_gatherv_bytes_per_node, ring_gatherv_bytes_per_node,
     star_gather_time_bounds, torus_gatherv_bytes_per_node, tree_gather_time_bounds, CostModel,
@@ -26,7 +37,8 @@ use vgc::comm::costmodel::{
 };
 use vgc::fabric::hierarchy::group_spans;
 use vgc::fabric::{
-    build_topology, Fabric, FabricConfig, LinkSpec, Straggler, TopologyKind, TraceEvent,
+    build_topology, gather_sized, Engine, Fabric, FabricConfig, LinkSpec, SimClock, Straggler,
+    TopologyKind, TraceEvent,
 };
 use vgc::testkit;
 use vgc::util::rng::Pcg32;
@@ -534,4 +546,234 @@ fn comm_front_and_fabric_ring_agree_bit_for_bit() {
     let sim = topo.allgatherv(&mut fabric, &inputs);
     assert_eq!(front.gathered, sim.gathered);
     assert_eq!(front.traffic, sim.traffic);
+}
+
+// ---------------------------------------------------------------------------
+// Scale crosschecks: the analytic-vs-sim agreement that the small-p
+// property tests establish must survive to the worker counts the
+// `repro scale-sweep` actually runs. Phantom payloads keep these
+// debug-build-fast; docs/SCALE.md walks through why they are exact.
+// ---------------------------------------------------------------------------
+
+/// Uniform 8 KiB phantom gather on the default GigE fabric, trace off.
+fn scale_fabric(kind: TopologyKind, p: usize) -> (Box<dyn vgc::fabric::Topology>, Fabric) {
+    let cfg = FabricConfig {
+        topology: kind,
+        ..FabricConfig::default()
+    };
+    let topo = build_topology(kind, p);
+    let mut fabric = Fabric::for_topology(&cfg, &*topo);
+    fabric.set_trace(false);
+    (topo, fabric)
+}
+
+#[test]
+fn ring_crosscheck_holds_at_1024_and_2048_nodes() {
+    // `FabricConfig::default()` is GigE (1 Gb/s, 50 µs) — the same link
+    // `LinkModel::gige()` models, so `T_v` is directly comparable. The
+    // simulated ring gather pipelines rounds, so it beats the analytic
+    // `T_v` (which charges the full blocked-transfer sum) but can never
+    // be faster than half of it at this message size.
+    for p in [1024usize, 2048] {
+        let sizes = vec![8_192u64; p];
+        let (topo, mut fabric) = scale_fabric(TopologyKind::Ring, p);
+        let (sim, engine) = gather_sized(&*topo, &mut fabric, &sizes);
+        assert_eq!(engine, Engine::Closed, "p={p}: uniform ring should run closed");
+        assert_eq!(
+            sim.traffic.bytes_sent_per_node,
+            ring_gatherv_bytes_per_node(&sizes),
+            "p={p}: ring bytes diverged from analytic"
+        );
+        assert_eq!(sim.events, (p * (p - 1)) as u64, "p={p}: delivery count");
+
+        let model = CostModel::new(p, 1_000_000, LinkModel::gige());
+        let bits: Vec<u64> = sizes.iter().map(|b| b * 8).collect();
+        let analytic_s = model.t_allgatherv_bits(&bits);
+        let ratio = sim.time_secs() / analytic_s;
+        assert!(
+            (0.5..=1.0 + 1e-9).contains(&ratio),
+            "p={p}: sim {} s vs analytic {} s (ratio {ratio})",
+            sim.time_secs(),
+            analytic_s
+        );
+    }
+}
+
+#[test]
+fn torus_and_hier_crosschecks_hold_at_1024_and_2048_nodes() {
+    for p in [1024usize, 2048] {
+        let sizes = vec![8_192u64; p];
+
+        let (topo, mut fabric) = scale_fabric(TopologyKind::Torus { rows: 0, cols: 0 }, p);
+        let (rows, cols) = match topo.kind() {
+            TopologyKind::Torus { rows, cols } => (rows, cols),
+            other => panic!("torus resolved to {other:?}"),
+        };
+        let sim = topo.allgatherv_sized(&mut fabric, &sizes);
+        assert_eq!(
+            sim.traffic.bytes_sent_per_node,
+            torus_gatherv_bytes_per_node(&sizes, rows, cols),
+            "torus {rows}x{cols}: bytes diverged from analytic"
+        );
+        assert_eq!(sim.events, (p * (p - 1)) as u64, "torus p={p}: delivery count");
+
+        let cfg = FabricConfig {
+            topology: TopologyKind::Hier { groups: 0 },
+            inter_rack_gbps: Some(0.5),
+            ..FabricConfig::default()
+        };
+        let topo = build_topology(cfg.topology, p);
+        let groups = match topo.kind() {
+            TopologyKind::Hier { groups } => groups,
+            other => panic!("hier resolved to {other:?}"),
+        };
+        let spans = group_spans(p, groups);
+        let mut fabric = Fabric::for_topology(&cfg, &*topo);
+        fabric.set_trace(false);
+        let sim = topo.allgatherv_sized(&mut fabric, &sizes);
+        assert_eq!(
+            sim.traffic.bytes_sent_per_node,
+            hier_gatherv_bytes_per_node(&sizes, &spans),
+            "hier p={p} g={groups}: bytes diverged from analytic"
+        );
+        assert_eq!(sim.events, (p * (p - 1)) as u64, "hier p={p}: delivery count");
+
+        let link = cfg.link.to_cost_model();
+        let uplink = LinkModel {
+            beta: 1e-9 / 0.5,
+            latency: link.latency,
+        };
+        let bound = hier_gather_time_bounds(&link, &uplink, &sizes, &spans);
+        assert!(
+            bound.brackets(sim.time_secs()),
+            "hier p={p} g={groups}: simulated {} s outside [{}, {}] s",
+            sim.time_secs(),
+            bound.lower_s,
+            bound.upper_s
+        );
+    }
+}
+
+/// The event queue's tie-break contract: events popping at the same
+/// tick come out in insertion order, no matter which internal queue
+/// (per-lane FIFO, overflow heap, or a mix) absorbed the schedule call.
+/// 120 000 pending events with times drawn from a tiny range force
+/// massive tie populations through both paths.
+#[test]
+fn simclock_tiebreak_is_deterministic_across_queue_paths() {
+    const N: u32 = 120_000;
+    const LANES: usize = 64;
+    let mut rng = Pcg32::new(97, 3);
+    let schedule: Vec<(u64, u32)> = (0..N)
+        .map(|id| ((rng.next_u32() % 256) as u64, id))
+        .collect();
+
+    let mut heap_only: SimClock<u32> = SimClock::new();
+    let mut lanes_only: SimClock<u32> = SimClock::with_lanes(LANES);
+    let mut mixed: SimClock<u32> = SimClock::with_lanes(LANES);
+    for &(at, id) in &schedule {
+        heap_only.schedule(at, id);
+        lanes_only.schedule_lane(at, id as usize % LANES, id);
+        if id % 2 == 0 {
+            mixed.schedule_lane(at, id as usize % LANES, id);
+        } else {
+            mixed.schedule(at, id);
+        }
+    }
+    assert_eq!(heap_only.pending(), N as usize);
+    assert_eq!(lanes_only.pending(), N as usize);
+
+    let drain = |clock: &mut SimClock<u32>| -> Vec<(u64, u32)> {
+        let mut out = Vec::with_capacity(N as usize);
+        while let Some(ev) = clock.pop() {
+            out.push(ev);
+        }
+        out
+    };
+    let reference = drain(&mut heap_only);
+    assert_eq!(reference.len(), N as usize);
+    assert!(
+        reference.windows(2).all(|w| w[0].0 <= w[1].0),
+        "pop times must be nondecreasing"
+    );
+    assert_eq!(
+        drain(&mut lanes_only),
+        reference,
+        "lane queues reordered tied events"
+    );
+    assert_eq!(
+        drain(&mut mixed),
+        reference,
+        "mixing lane and heap scheduling reordered tied events"
+    );
+    assert_eq!(heap_only.processed(), N as u64);
+}
+
+/// A 1024-node hierarchy loses a worker mid-fleet: the collective
+/// routes around it and every surviving pair still exchanges exact
+/// bytes, with the dead worker's rows/columns masked out.
+#[test]
+fn hier_1024_routes_around_a_crashed_node() {
+    let p = 1024usize;
+    let dead = 137usize;
+    let inputs: Vec<Vec<u8>> = (0..p)
+        .map(|w| {
+            let len = 16 + (w * 7) % 49;
+            (0..len).map(|i| (w * 31 + i) as u8).collect()
+        })
+        .collect();
+    let cfg = FabricConfig {
+        topology: TopologyKind::Hier { groups: 16 },
+        ..FabricConfig::default()
+    };
+    let res = allgatherv_faulty(&cfg, &inputs, &[dead]);
+    assert_eq!(res.report.reroutes, 1, "one node loss, one route-around");
+    assert!(res.time_ps > 0);
+    for dst in 0..p {
+        for src in 0..p {
+            if dst == dead || src == dead {
+                assert!(
+                    res.gathered[dst][src].is_empty(),
+                    "dead node {dead} left bytes at [{dst}][{src}]"
+                );
+            } else {
+                assert_eq!(
+                    res.gathered[dst][src], inputs[src],
+                    "corrupt at dst={dst} src={src}"
+                );
+            }
+        }
+    }
+}
+
+/// The overlap pipeline at fleet scale: a 1024-node hierarchy gathers
+/// two buckets bit-exactly, and hiding communication behind compute
+/// never costs more than the phased schedule it replaces.
+#[test]
+fn hier_1024_overlapped_gather_beats_phased() {
+    let p = 1024usize;
+    let inputs: Vec<Vec<u8>> = (0..p)
+        .map(|w| (0..64).map(|i| (w * 13 + i) as u8).collect())
+        .collect();
+    let cfg = FabricConfig {
+        topology: TopologyKind::Hier { groups: 16 },
+        segment_bytes: 32,
+        ..FabricConfig::default()
+    };
+    let res = allgatherv_overlapped(&cfg, &inputs, &[1, 1], 40_000_000, 10_000_000);
+    assert!(res.buckets >= 2, "two weights should survive coalescing");
+    assert!(
+        res.schedule.overlapped_ps <= res.schedule.phased_ps,
+        "overlap regressed: {} > {}",
+        res.schedule.overlapped_ps,
+        res.schedule.phased_ps
+    );
+    for dst in [0usize, 1, 511, p - 1] {
+        for src in 0..p {
+            assert_eq!(
+                res.gathered[dst][src], inputs[src],
+                "corrupt at dst={dst} src={src}"
+            );
+        }
+    }
 }

@@ -1,0 +1,269 @@
+//! Scale-tier parity: every fast path the 4096-node sweep relies on is
+//! pinned bit- and tick-identical to the reference event loop here, at
+//! sizes small enough to run the reference.
+//!
+//! Two fast tiers exist (docs/SCALE.md):
+//!
+//! * **phantom payloads** — `allgatherv_sized` runs the identical
+//!   protocol/engine code with sized-but-bodyless messages. Pinned
+//!   against real-bytes `allgatherv` for every topology, codec-shaped
+//!   size distributions, segmentation, jitter, and stragglers: same
+//!   event clock, same event count, same per-node/per-link byte
+//!   counters.
+//! * **closed-form replay** — `gather_sized` skips the event loop
+//!   entirely for ring/full-mesh on uniform fabrics. Pinned
+//!   tick-identical to the event loop, and pinned to *disengage* the
+//!   moment the fabric stops being uniform (one jittered link).
+
+use vgc::compress::CodecSpec;
+use vgc::fabric::{
+    build_topology, gather_sized, Engine, Fabric, FabricConfig, LinkSpec, Straggler,
+    TopologyKind,
+};
+use vgc::model::Layout;
+use vgc::testkit;
+use vgc::util::rng::Pcg32;
+
+fn all_kinds() -> Vec<TopologyKind> {
+    vec![
+        TopologyKind::Ring,
+        TopologyKind::Full,
+        TopologyKind::Star,
+        TopologyKind::Tree { branch: 3 },
+        TopologyKind::Torus { rows: 0, cols: 0 },
+        TopologyKind::Torus3 { x: 0, y: 0, z: 0 },
+        TopologyKind::Hier { groups: 0 },
+        TopologyKind::Hier { groups: 2 },
+        TopologyKind::Dragonfly { groups: 0 },
+        TopologyKind::Dragonfly { groups: 3 },
+    ]
+}
+
+/// Per-worker wire messages from a real codec pass — the size
+/// distributions the sweeps actually gather (dense, sparse, skewed).
+fn codec_messages(spec: &CodecSpec, p: usize, n: usize, seed: u64) -> Vec<Vec<u8>> {
+    let layout = Layout::uniform(n, 64);
+    (0..p)
+        .map(|w| {
+            let mut rng = Pcg32::new(seed, w as u64);
+            let g = testkit::gradient_vec(&mut rng, n);
+            let sq: Vec<f32> = g.iter().map(|x| x * x * 0.5).collect();
+            let mut codec = spec.build(&layout, seed.wrapping_add(w as u64));
+            codec.encode_step(&g, &sq).bytes
+        })
+        .collect()
+}
+
+fn codec_sample() -> Vec<CodecSpec> {
+    vec![
+        CodecSpec::None,
+        CodecSpec::Vgc {
+            alpha: 2.0,
+            zeta: 0.999,
+        },
+        CodecSpec::Strom { tau: 0.01 },
+    ]
+}
+
+/// Phantom (sized) gathers must be indistinguishable from real-bytes
+/// gathers in every observable except the payload matrix: identical
+/// event clock, event count, and byte counters — across every
+/// topology, codec-shaped sizes, segmentation, jitter, stragglers.
+#[test]
+fn phantom_gathers_are_tick_identical_to_real_gathers() {
+    testkit::for_all(
+        "phantom == real (clock, events, traffic)",
+        |rng: &mut Pcg32| {
+            let p = testkit::usize_in(rng, 2, 9);
+            let codec = codec_sample()[testkit::usize_in(rng, 0, 2)].clone();
+            let seg = [0usize, 7][testkit::usize_in(rng, 0, 1)];
+            let jitter = [0.0f64, 15.0][testkit::usize_in(rng, 0, 1)];
+            let seed = testkit::usize_in(rng, 0, 10_000) as u64;
+            (p, codec, seg, jitter, seed)
+        },
+        |(p, codec, seg, jitter, seed)| {
+            let msgs = codec_messages(codec, *p, 256, *seed);
+            let sizes: Vec<u64> = msgs.iter().map(|m| m.len() as u64).collect();
+            for kind in all_kinds() {
+                if kind.validate(*p).is_err() {
+                    continue;
+                }
+                let cfg = FabricConfig {
+                    topology: kind,
+                    link: LinkSpec {
+                        bandwidth_gbps: 1.0,
+                        latency_us: 10.0,
+                        jitter_us: *jitter,
+                    },
+                    segment_bytes: *seg,
+                    seed: *seed,
+                    stragglers: vec![Straggler {
+                        node: 1,
+                        slowdown: 2.0,
+                    }],
+                    ..FabricConfig::default()
+                };
+                let topo = build_topology(kind, *p);
+                let mut real_fabric = Fabric::for_topology(&cfg, &*topo);
+                let real = topo.allgatherv(&mut real_fabric, &msgs);
+                let mut ghost_fabric = Fabric::for_topology(&cfg, &*topo);
+                let ghost = topo.allgatherv_sized(&mut ghost_fabric, &sizes);
+
+                let label = kind.label();
+                if ghost.time_ps != real.time_ps {
+                    return Err(format!(
+                        "{label}: phantom clock {} != real {}",
+                        ghost.time_ps, real.time_ps
+                    ));
+                }
+                if ghost.events != real.events {
+                    return Err(format!(
+                        "{label}: phantom events {} != real {}",
+                        ghost.events, real.events
+                    ));
+                }
+                if ghost.traffic != real.traffic {
+                    return Err(format!("{label}: traffic counters diverged"));
+                }
+                if !ghost.gathered.is_empty() {
+                    return Err(format!("{label}: phantom materialized payloads"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The closed-form replay must be tick-identical to the event loop for
+/// every codec-shaped size distribution — and bit-identical in every
+/// traffic counter, which is what the scale sweep asserts at 4096.
+#[test]
+fn closed_replay_is_tick_identical_for_ring_and_mesh() {
+    testkit::for_all(
+        "closed == event loop (ring, full)",
+        |rng: &mut Pcg32| {
+            let p = testkit::usize_in(rng, 2, 11);
+            let codec = codec_sample()[testkit::usize_in(rng, 0, 2)].clone();
+            let seed = testkit::usize_in(rng, 0, 10_000) as u64;
+            (p, codec, seed)
+        },
+        |(p, codec, seed)| {
+            let sizes: Vec<u64> = codec_messages(codec, *p, 256, *seed)
+                .iter()
+                .map(|m| m.len() as u64)
+                .collect();
+            for kind in [TopologyKind::Ring, TopologyKind::Full] {
+                let cfg = FabricConfig {
+                    topology: kind,
+                    seed: *seed,
+                    ..FabricConfig::default()
+                };
+                let topo = build_topology(kind, *p);
+
+                let mut closed_fabric = Fabric::for_topology(&cfg, &*topo);
+                closed_fabric.set_trace(false);
+                let (closed, engine) = gather_sized(&*topo, &mut closed_fabric, &sizes);
+                if engine != Engine::Closed {
+                    return Err(format!(
+                        "{}: uniform fabric fell back to the event loop: {:?}",
+                        kind.label(),
+                        closed_fabric.full_loop_reason()
+                    ));
+                }
+
+                let mut event_fabric = Fabric::for_topology(&cfg, &*topo);
+                let event = topo.allgatherv_sized(&mut event_fabric, &sizes);
+
+                let label = kind.label();
+                if closed.time_ps != event.time_ps {
+                    return Err(format!(
+                        "{label}: closed clock {} != event {}",
+                        closed.time_ps, event.time_ps
+                    ));
+                }
+                if closed.events != event.events {
+                    return Err(format!(
+                        "{label}: closed events {} != event {}",
+                        closed.events, event.events
+                    ));
+                }
+                if closed.traffic != event.traffic {
+                    return Err(format!("{label}: traffic counters diverged"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The fallback boundary: a single non-default link disengages the
+/// closed tier, and the event loop it falls back to produces the same
+/// counters it always did.
+#[test]
+fn one_jittered_link_disengages_the_closed_tier() {
+    let sizes: Vec<u64> = (0..6u64).map(|w| 100 + w * 31).collect();
+    let uniform = FabricConfig::default();
+    let jittered = FabricConfig {
+        link_overrides: vec![(
+            2,
+            3,
+            LinkSpec {
+                bandwidth_gbps: uniform.link.bandwidth_gbps,
+                latency_us: uniform.link.latency_us,
+                jitter_us: 25.0,
+            },
+        )],
+        ..FabricConfig::default()
+    };
+    let topo = build_topology(TopologyKind::Ring, 6);
+
+    let mut f = Fabric::for_topology(&uniform, &*topo);
+    f.set_trace(false);
+    let (_, engine) = gather_sized(&*topo, &mut f, &sizes);
+    assert_eq!(engine, Engine::Closed, "uniform fabric should run closed");
+
+    let mut f = Fabric::for_topology(&jittered, &*topo);
+    f.set_trace(false);
+    assert!(
+        f.full_loop_reason().is_some(),
+        "an overridden link must force the full loop"
+    );
+    let (fell_back, engine) = gather_sized(&*topo, &mut f, &sizes);
+    assert_eq!(engine, Engine::Event);
+    // The fallback is the ordinary event loop — identical to calling it
+    // directly on an identically-configured fabric.
+    let mut f2 = Fabric::for_topology(&jittered, &*topo);
+    f2.set_trace(false);
+    let direct = topo.allgatherv_sized(&mut f2, &sizes);
+    assert_eq!(fell_back.time_ps, direct.time_ps);
+    assert_eq!(fell_back.events, direct.events);
+    assert_eq!(fell_back.traffic, direct.traffic);
+}
+
+/// A single-plane 3-D torus is the same machine as the 2-D torus: same
+/// node ids, same send schedule, same bytes, same clock — end to end
+/// through real payloads.
+#[test]
+fn single_plane_torus3_matches_the_2d_torus_end_to_end() {
+    let mut rng = Pcg32::new(31, 7);
+    let p = 12;
+    let msgs: Vec<Vec<u8>> = (0..p)
+        .map(|_| {
+            let len = testkit::usize_in(&mut rng, 0, 200);
+            (0..len).map(|_| rng.next_u32() as u8).collect()
+        })
+        .collect();
+    // 2-D torus rows=3, cols=4 lays out id = r·4 + c; the 3-D torus
+    // with X=4, Y=3, Z=1 lays out id = y·4 + x — identical grids.
+    let t2 = build_topology(TopologyKind::Torus { rows: 3, cols: 4 }, p);
+    let t3 = build_topology(TopologyKind::Torus3 { x: 4, y: 3, z: 1 }, p);
+    let cfg = FabricConfig::default();
+    let mut f2 = Fabric::for_topology(&cfg, &*t2);
+    let g2 = t2.allgatherv(&mut f2, &msgs);
+    let mut f3 = Fabric::for_topology(&cfg, &*t3);
+    let g3 = t3.allgatherv(&mut f3, &msgs);
+    assert_eq!(g3.gathered, g2.gathered, "payloads diverged");
+    assert_eq!(g3.time_ps, g2.time_ps, "clocks diverged");
+    assert_eq!(g3.events, g2.events);
+    assert_eq!(g3.traffic, g2.traffic);
+}
